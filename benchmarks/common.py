@@ -1,0 +1,157 @@
+"""Shared benchmark infrastructure.
+
+All figure benchmarks run on the CPU testbed: a verifier/drafter pair
+trained on the same Markov corpus (the laptop-scale analogue of
+llama-2-7b / llama-68m on web text — see serving/testbed.py). Latency
+profiles (Fig. 5 curves) are MEASURED on this runtime and feed the engine's
+objective, exactly as the paper profiles its GPUs. Results are written as
+JSON under benchmarks/results/.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.egt import DraftSpec, egt_spec, template_spec
+from repro.core.engine import (EngineConfig, SpeculativeEngine,
+                               generate_autoregressive)
+from repro.core.objective import LatencyProfile
+from repro.core import static_trees
+from repro.data.pipeline import MarkovSource
+from repro.serving.testbed import Testbed, TestbedSpec, build_testbed
+
+RESULTS = os.path.join(os.path.dirname(__file__), "results")
+
+# the three "datasets": Markov sources at different entropies, standing in
+# for C4 / Wikipedia / CNN-Daily (which differ exactly in drafter/verifier
+# agreement — the quantity that matters to speculation). 0.03 gives ~0.97
+# rank-0 acceptance (easy), 0.5/1.5 progressively harder.
+DATASETS = {"c4": 0.03, "wiki": 0.5, "cnndm": 1.5}
+
+
+def save(name: str, payload: Dict) -> str:
+    os.makedirs(RESULTS, exist_ok=True)
+    path = os.path.join(RESULTS, f"{name}.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1, default=float)
+    return path
+
+
+def load(name: str) -> Optional[Dict]:
+    path = os.path.join(RESULTS, f"{name}.json")
+    if os.path.exists(path):
+        with open(path) as f:
+            return json.load(f)
+    return None
+
+
+_TB: Dict[float, Testbed] = {}
+
+
+def testbed(concentration: float = 0.03) -> Testbed:
+    # train_steps matches the test fixture so the on-disk cache is shared
+    if concentration not in _TB:
+        _TB[concentration] = build_testbed(
+            TestbedSpec(train_steps=160, concentration=concentration))
+    return _TB[concentration]
+
+
+def prompts_for(tb: Testbed, B: int = 2, S: int = 16, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    src = MarkovSource(vocab=tb.spec.vocab,
+                       concentration=tb.data_cfg.concentration,
+                       seed=tb.data_cfg.seed)
+    toks = src.sample_fast(rng, B, S)
+    return jnp.asarray(toks), jnp.full((B,), S, jnp.int32)
+
+
+def make_engine(tb: Testbed, profile: Optional[LatencyProfile] = None,
+                **cfg_kw) -> SpeculativeEngine:
+    return SpeculativeEngine(tb.drafter, tb.d_params, tb.verifier,
+                             tb.v_params, profile=profile,
+                             config=EngineConfig(**cfg_kw))
+
+
+# ------------------------------------------------------- latency profiling --
+def measure_profile(tb: Testbed, widths=(1, 2, 4, 8, 16, 32, 64),
+                    repeat: int = 3, cache_name: str = "profile") -> LatencyProfile:
+    """Measure T_verify(W) and T_draft(W) on this runtime (the Fig. 5 pass)."""
+    cached = load(cache_name)
+    if cached is not None:
+        return LatencyProfile(**cached)
+    from repro.models.cache import init_cache
+
+    def bench_model(model, params) -> List[float]:
+        times = []
+        B, L = 2, 256
+        prompt, lengths = prompts_for(tb)
+        cache = init_cache(model.cfg, B, L)
+        _, cache, _ = model.prefill(params, prompt, lengths, cache)
+        for w in widths:
+            toks = jnp.zeros((B, w), jnp.int32)
+            deps = jnp.broadcast_to(jnp.arange(w)[None], (B, w)).astype(jnp.int32)
+            mask = jnp.tril(jnp.ones((w, w), bool))[None].repeat(B, 0)
+            fn = jax.jit(lambda p, t, d, m, c: model.tree_verify(p, t, d, m, c))
+            fn(params, toks, deps, mask, cache)[0].block_until_ready()
+            ts = []
+            for _ in range(repeat):
+                t0 = time.perf_counter()
+                fn(params, toks, deps, mask, cache)[0].block_until_ready()
+                ts.append(time.perf_counter() - t0)
+            times.append(float(np.median(ts)))
+        return times
+
+    v_times = bench_model(tb.verifier, tb.v_params)
+    d_times = bench_model(tb.drafter, tb.d_params)
+    prof = LatencyProfile(list(widths), v_times, list(widths), d_times,
+                          step_overhead=min(d_times) * 0.2)
+    save(cache_name, prof.__dict__)
+    return prof
+
+
+# ------------------------------------------------------------ structures ---
+def structure_spec(kind: str, *, depth: int = 4, width: int = 4,
+                   budget: int = 16, rank_accept=None
+                   ) -> Tuple[DraftSpec, int]:
+    """Build (DraftSpec, default verify width) for a named tree structure."""
+    if kind == "egt":
+        return egt_spec(depth, width), budget
+    if kind == "chain":
+        p, r = static_trees.chain(depth)
+        return template_spec(p, r), min(budget, depth + 1)
+    if kind.startswith("kary"):
+        k = int(kind[4:] or 2)
+        p, r = static_trees.kary(k, depth)
+        return template_spec(p, r), min(budget, len(p))
+    if kind == "sequoia":
+        assert rank_accept is not None
+        p, r = static_trees.sequoia(rank_accept, budget, max_depth=depth)
+        return template_spec(p, r), len(p)
+    raise ValueError(kind)
+
+
+def run_generate(eng: SpeculativeEngine, prompt, lengths, max_new: int,
+                 spec=None, verify_v=None, warm: bool = True) -> Dict:
+    """Generate and report steady-state TPOT (compile excluded via warmup)."""
+    if warm:
+        eng.generate(prompt, lengths, max(4, max_new // 8), spec=spec,
+                     verify_v=verify_v)
+    seq, stats = eng.generate(prompt, lengths, max_new, spec=spec,
+                              verify_v=verify_v)
+    s = stats.summary()
+    s["tpot_ms"] = 1e3 * s["time_s"] / max(s["tokens"], 1)
+    return s
+
+
+def ar_baseline(tb: Testbed, prompt, lengths, max_new: int) -> Dict:
+    # warm
+    generate_autoregressive(tb.verifier, tb.v_params, prompt, lengths, 4)
+    _, info = generate_autoregressive(tb.verifier, tb.v_params, prompt,
+                                      lengths, max_new)
+    return info

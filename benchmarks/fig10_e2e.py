@@ -1,0 +1,68 @@
+"""Fig. 10 analogue: end-to-end per-token latency (TPOT) across systems and
+datasets.
+
+Systems (each = tree algorithm × runtime treatment, per Table 1):
+  ar          — plain autoregressive decoding (the denominator).
+  specinfer   — static k-ary tree, STAGED host runtime (uncompiled control
+                flow: the paper finds SpecInfer's runtime is its bottleneck).
+  sequoia     — dataset-profiled static tree, compiled staged-device runtime
+                (Sequoia uses TorchInductor but keeps per-stage dispatch).
+  vllm-spec   — sequence (chain) speculation, fully compiled fused runtime.
+  yggdrasil   — EGT + latency objective + pruning + fused megastep.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks import common
+from repro.core import static_trees
+
+
+def run(quick: bool = True):
+    max_new = 48 if quick else 128
+    B = 2
+    rows = []
+    for ds, conc in common.DATASETS.items():
+        tb = common.testbed(conc)
+        prof = common.measure_profile(tb, cache_name=f"profile_{ds}")
+        prompt, lengths = common.prompts_for(tb, B=B)
+        ra = static_trees.measure_rank_accept(
+            tb.drafter, tb.d_params, tb.verifier, tb.v_params,
+            prompt, lengths, k=4, iters=16)
+
+        ar = common.ar_baseline(tb, prompt, lengths, max_new)
+        rows.append({"dataset": ds, "system": "ar",
+                     "tpot_ms": ar["tpot_ms"], "aal": 1.0})
+
+        def bench(name, spec, v, plan, **cfg):
+            eng = common.make_engine(tb, profile=prof, plan=plan, **cfg)
+            s = common.run_generate(eng, prompt, lengths, max_new,
+                                    spec=spec, verify_v=v)
+            rows.append({"dataset": ds, "system": name,
+                         "tpot_ms": s["tpot_ms"], "aal": s["aal"]})
+
+        spec, v = common.structure_spec("kary2", depth=3)
+        bench("specinfer", spec, v, "staged")
+        spec, v = common.structure_spec("sequoia", budget=12, depth=6,
+                                        rank_accept=ra)
+        bench("sequoia", spec, v, "staged_device")
+        spec, v = common.structure_spec("chain", depth=4)
+        bench("vllm-spec", spec, v, "fused")
+        spec, v = common.structure_spec("egt", depth=4, width=4, budget=10)
+        bench("yggdrasil", spec, v, "fused")
+
+    # speedups vs specinfer & vs ar, per dataset
+    out = {"rows": rows, "speedup_vs_specinfer": {}, "speedup_vs_ar": {}}
+    for ds in common.DATASETS:
+        d = {r["system"]: r["tpot_ms"] for r in rows if r["dataset"] == ds}
+        out["speedup_vs_specinfer"][ds] = {
+            s: d["specinfer"] / d[s] for s in d if s != "ar"}
+        out["speedup_vs_ar"][ds] = {s: d["ar"] / d[s] for s in d}
+    common.save("fig10_e2e", out)
+    return out
+
+
+if __name__ == "__main__":
+    res = run()
+    for ds, sp in res["speedup_vs_ar"].items():
+        print(ds, {k: round(v, 2) for k, v in sp.items()})

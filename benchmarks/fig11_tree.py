@@ -1,0 +1,53 @@
+"""Fig. 11 analogue: (a) measured AAL per tree structure vs verification
+budget; (b) theoretical speedup (Eq. 3 with the measured latency profile)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks import common
+from repro.core import static_trees
+from repro.core.objective import speedup_objective
+
+
+def run(quick: bool = True):
+    tb = common.testbed(0.5)   # moderate-acceptance corpus: trees matter here
+    prof = common.measure_profile(tb)
+    prompt, lengths = common.prompts_for(tb, B=2)
+    max_new = 64 if quick else 128
+    ra = static_trees.measure_rank_accept(
+        tb.drafter, tb.d_params, tb.verifier, tb.v_params, prompt, lengths,
+        k=4, iters=16)
+    budgets = (4, 8, 16) if quick else (4, 8, 16, 32, 64)
+    rows = []
+    for budget in budgets:
+        # every structure drafts to depth <= 8 and is verified with at most
+        # `budget` tokens — the paper's equal-verification-budget setting;
+        # EGT drafts deep (D=8) and prunes the best `budget`-node subtree.
+        cases = {
+            "chain": common.structure_spec("chain", depth=min(budget - 1, 8)),
+            "kary2": common.structure_spec("kary2", depth=3),
+            "sequoia": common.structure_spec("sequoia", budget=budget,
+                                             depth=8, rank_accept=ra),
+            "egt_w2": common.structure_spec("egt", depth=8, width=2),
+            "egt_w4": common.structure_spec("egt", depth=8, width=4),
+        }
+        for name, (spec, _) in cases.items():
+            v = min(budget, spec.num_nodes)
+            eng = common.make_engine(tb, profile=prof)
+            s = common.run_generate(eng, prompt, lengths, max_new,
+                                    spec=spec, verify_v=v)
+            theo = speedup_objective(prof, s["aal"], spec.depth,
+                                     max(spec.width, 1), v)
+            rows.append({"budget": budget, "structure": name,
+                         "aal": s["aal"], "tpot_ms": s["tpot_ms"],
+                         "theoretical_speedup": theo})
+    out = {"rows": rows, "rank_accept": list(map(float, ra))}
+    common.save("fig11_tree", out)
+    return out
+
+
+if __name__ == "__main__":
+    res = run()
+    for r in res["rows"]:
+        print({k: (round(v, 3) if isinstance(v, float) else v)
+               for k, v in r.items()})

@@ -1,0 +1,39 @@
+"""Fig. 13 analogue: EGT parameter sensitivity — per-token latency over the
+⟨D_draft, W_draft, W_verify⟩ grid."""
+from __future__ import annotations
+
+from benchmarks import common
+from repro.core.egt import egt_spec
+
+
+def run(quick: bool = True):
+    tb = common.testbed(0.5)   # moderate-acceptance corpus: trees matter here
+    prof = common.measure_profile(tb)
+    prompt, lengths = common.prompts_for(tb, B=2)
+    max_new = 32 if quick else 96
+    depths = (2, 4, 8)
+    widths = (1, 2, 4)
+    verifies = (4, 8, 16)
+    rows = []
+    for d in depths:
+        for w in widths:
+            spec = egt_spec(d, w)
+            for v in verifies:
+                if v > spec.num_nodes:   # invalid configs excluded (paper)
+                    continue
+                eng = common.make_engine(tb, profile=prof)
+                s = common.run_generate(eng, prompt, lengths, max_new,
+                                        spec=spec, verify_v=v)
+                rows.append({"D": d, "W": w, "V": v, "tpot_ms": s["tpot_ms"],
+                             "aal": s["aal"]})
+    best = min(rows, key=lambda r: r["tpot_ms"])
+    out = {"rows": rows, "best": best}
+    common.save("fig13_sensitivity", out)
+    return out
+
+
+if __name__ == "__main__":
+    res = run()
+    print("best:", res["best"])
+    for r in res["rows"]:
+        print(r)

@@ -1,0 +1,50 @@
+"""Fig. 15 analogue: sampling-temperature sensitivity, Yggdrasil (EGT) vs
+Sequoia-style static tree. Stochastic acceptance (rejection sampling) at
+t > 0, greedy at t = 0."""
+from __future__ import annotations
+
+from benchmarks import common
+from repro.core import static_trees
+
+
+def run(quick: bool = True):
+    tb = common.testbed(0.5)   # moderate-acceptance corpus: trees matter here
+    prof = common.measure_profile(tb)
+    prompt, lengths = common.prompts_for(tb, B=2)
+    max_new = 32 if quick else 96
+    ra = static_trees.measure_rank_accept(
+        tb.drafter, tb.d_params, tb.verifier, tb.v_params, prompt, lengths,
+        k=4, iters=16)
+    temps = (0.0, 0.5, 1.0)
+    rows = []
+    for t in temps:
+        for system in ("sequoia", "yggdrasil"):
+            if system == "sequoia":
+                spec, v = common.structure_spec("sequoia", budget=12,
+                                                depth=8, rank_accept=ra)
+                plan = "staged_device"
+            else:
+                spec, v = common.structure_spec("egt", depth=4, width=4,
+                                                budget=10)
+                plan = "fused"
+            eng = common.make_engine(tb, profile=prof, plan=plan,
+                                     temperature=t)
+            s = common.run_generate(eng, prompt, lengths, max_new,
+                                    spec=spec, verify_v=v)
+            rows.append({"temperature": t, "system": system,
+                         "tpot_ms": s["tpot_ms"], "aal": s["aal"]})
+    ratio = {}
+    for t in temps:
+        d = {r["system"]: r["tpot_ms"] for r in rows if r["temperature"] == t}
+        ratio[t] = d["sequoia"] / d["yggdrasil"]
+    out = {"rows": rows, "yggdrasil_over_sequoia": ratio}
+    common.save("fig15_temperature", out)
+    return out
+
+
+if __name__ == "__main__":
+    res = run()
+    for r in res["rows"]:
+        print({k: (round(v, 3) if isinstance(v, float) else v)
+               for k, v in r.items()})
+    print("speedup vs sequoia:", res["yggdrasil_over_sequoia"])

@@ -1,0 +1,25 @@
+"""Fig. 5 analogue: verifier/drafter latency vs number of tokens verified in
+parallel, measured on this runtime. Feeds the engine's latency objective."""
+from __future__ import annotations
+
+from benchmarks import common
+
+
+def run(quick: bool = True):
+    tb = common.testbed()
+    widths = (1, 2, 4, 8, 16, 32) if quick else (1, 2, 4, 8, 16, 32, 64, 128)
+    prof = common.measure_profile(tb, widths=widths)
+    rows = [{"width": w, "t_verify_ms": 1e3 * tv, "t_draft_ms": 1e3 * td}
+            for w, tv, td in zip(prof.verify_widths, prof.verify_times,
+                                 prof.draft_times)]
+    payload = {"rows": rows,
+               "note": "t_verify(1)/t_verify(W) is the parallel-verification "
+                       "free-lunch region; the knee is where Eq.3 stops "
+                       "paying for wider verification"}
+    common.save("fig5_latency_curve", payload)
+    return payload
+
+
+if __name__ == "__main__":
+    for r in run()["rows"]:
+        print(r)

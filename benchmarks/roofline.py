@@ -1,0 +1,83 @@
+"""Roofline table: aggregate the dry-run JSONs into the per-(arch × shape)
+report of EXPERIMENTS.md §Roofline (single-pod numbers)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List
+
+DRYRUN = os.path.join(os.path.dirname(__file__), "results", "dryrun")
+
+COLS = ("arch", "shape", "mesh", "chips", "compute_s", "memory_s",
+        "collective_s", "dominant", "useful_flops_ratio")
+
+
+def load_records(mesh: str = None, variants: bool = False) -> List[Dict]:
+    recs = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN, "*.json"))):
+        if ("__it" in os.path.basename(path)) != variants:
+            continue  # §Perf hillclimb variants are reported separately
+        with open(path) as f:
+            r = json.load(f)
+        if not r.get("ok"):
+            continue
+        if mesh and r["mesh"] != mesh:
+            continue
+        recs.append(r)
+    return recs
+
+
+def row(r: Dict) -> Dict:
+    rf = r["roofline"]
+    return {
+        "arch": r["arch"] + r.get("variant", ""),
+        "shape": r["shape"], "kind": r["kind"], "mesh": r["mesh"],
+        "chips": r["chips"],
+        "compute_s": rf["compute_s"], "memory_s": rf["memory_s"],
+        "collective_s": rf["collective_s"], "dominant": rf["dominant"],
+        "model_flops": r["model_flops_global"],
+        "hlo_flops": r["hlo_flops_global"],
+        "useful": r["useful_flops_ratio"],
+        "coll_bytes_dev": r["collective_bytes_per_device"],
+        "step_bound_s": max(rf["compute_s"], rf["memory_s"],
+                            rf["collective_s"]),
+    }
+
+
+def markdown_table(recs: List[Dict]) -> str:
+    lines = ["| arch | shape | kind | compute s | memory s | collective s | "
+             "dominant | useful FLOPs |",
+             "|---|---|---|---|---|---|---|---|"]
+    for r in map(row, recs):
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['kind']} | "
+            f"{r['compute_s']:.3e} | {r['memory_s']:.3e} | "
+            f"{r['collective_s']:.3e} | {r['dominant']} | {r['useful']:.2f} |")
+    return "\n".join(lines)
+
+
+def run(quick: bool = True):
+    recs = load_records(mesh="pod16x16")
+    table = markdown_table(recs)
+    failures = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN, "*.json"))):
+        with open(path) as f:
+            r = json.load(f)
+        if not r.get("ok"):
+            failures.append({"case": os.path.basename(path),
+                             "error": r.get("error", "?")})
+    out = {"rows": [row(r) for r in recs], "n_single_pod": len(recs),
+           "n_multi_pod": len(load_records(mesh="pod2x16x16")),
+           "failures": failures}
+    with open(os.path.join(os.path.dirname(__file__), "results",
+                           "roofline_table.md"), "w") as f:
+        f.write(table + "\n")
+    return out
+
+
+if __name__ == "__main__":
+    res = run()
+    print(markdown_table(load_records(mesh="pod16x16")))
+    print(f"\nsingle-pod: {res['n_single_pod']}  multi-pod: "
+          f"{res['n_multi_pod']}  failures: {len(res['failures'])}")

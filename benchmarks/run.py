@@ -1,0 +1,56 @@
+"""Benchmark harness entry point: one benchmark per paper table/figure.
+
+``python -m benchmarks.run [--full] [--only fig10,...]``
+prints one CSV block per benchmark and writes JSON to benchmarks/results/.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+BENCHES = ("fig5_latency_curve", "fig4_runtime", "fig11_tree", "fig10_e2e",
+           "fig12_breakdown", "fig13_sensitivity", "fig14_objective",
+           "fig15_temperature", "roofline")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="long mode (more tokens / wider sweeps)")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated benchmark subset")
+    args = ap.parse_args()
+    names = args.only.split(",") if args.only else list(BENCHES)
+    failed = []
+    for name in names:
+        mod = __import__(f"benchmarks.{name}", fromlist=["run"])
+        t0 = time.perf_counter()
+        print(f"== {name} ==", flush=True)
+        try:
+            res = mod.run(quick=not args.full)
+        except Exception:
+            traceback.print_exc()
+            failed.append(name)
+            continue
+        dt = time.perf_counter() - t0
+        rows = res.get("rows", [])
+        if rows:
+            keys = list(rows[0])
+            print(",".join(map(str, keys)))
+            for r in rows:
+                print(",".join(f"{r.get(k):.4g}" if isinstance(r.get(k), float)
+                               else str(r.get(k)) for k in keys))
+        extras = {k: v for k, v in res.items() if k != "rows"}
+        for k, v in extras.items():
+            print(f"# {k}: {v}")
+        print(f"# {name} done in {dt:.1f}s\n", flush=True)
+    if failed:
+        print("FAILED:", ",".join(failed))
+        sys.exit(1)
+    print("all benchmarks complete")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,86 @@
+"""Compare speculation-tree structures on the same drafter/verifier pair:
+sequence chain (Leviathan), k-ary (SpecInfer), dataset-profiled static
+(Sequoia-style), and the Equal-Growth Tree — AAL and per-token latency.
+Also renders a small EGT as ASCII to show the context-adaptive shape.
+
+  PYTHONPATH=src python examples/tree_structures.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import static_trees
+from repro.core.egt import draft_tree, egt_spec, template_spec
+from repro.core.engine import EngineConfig, SpeculativeEngine
+from repro.data.pipeline import MarkovSource
+from repro.models.cache import init_cache
+from repro.serving.testbed import TestbedSpec, build_testbed
+
+
+def render_tree(parents, tokens, depths):
+    """ASCII render of one batch element's draft tree."""
+    n = len(parents)
+    kids = {i: [] for i in range(-1, n)}
+    for i in range(n):
+        kids[int(parents[i])].append(i)
+
+    lines = []
+
+    def walk(i, indent):
+        lines.append("  " * indent + f"[{i}] tok={int(tokens[i])} "
+                                     f"d={int(depths[i])}")
+        for c in kids.get(i, []):
+            walk(c, indent + 1)
+
+    walk(0, 0)
+    return "\n".join(lines)
+
+
+def main():
+    tb = build_testbed(TestbedSpec())
+    src = MarkovSource(vocab=tb.spec.vocab,
+                       concentration=tb.data_cfg.concentration, seed=0)
+    rng = np.random.default_rng(3)
+    prompt = jnp.asarray(src.sample_fast(rng, 2, 16))
+    lengths = jnp.full((2,), 16, jnp.int32)
+
+    # ---- show one EGT ------------------------------------------------------
+    eng = SpeculativeEngine(tb.drafter, tb.d_params, tb.verifier, tb.v_params,
+                            config=EngineConfig())
+    _, vcache, dcache, _ = eng.prefill(prompt, lengths)
+    spec = egt_spec(3, 3)
+    res = draft_tree(tb.drafter, tb.d_params, dcache,
+                     jnp.zeros((2,), jnp.int32), spec)
+    print("one Equal-Growth Tree (D=3, W=3 — note leaves attach anywhere):")
+    print(render_tree(np.asarray(res.tree.parents)[0],
+                      np.asarray(res.tree.tokens)[0],
+                      np.asarray(res.tree.depths)[0]))
+
+    # ---- compare structures ------------------------------------------------
+    ra = static_trees.measure_rank_accept(
+        tb.drafter, tb.d_params, tb.verifier, tb.v_params, prompt, lengths,
+        k=4, iters=16)
+    print(f"\nprofiled rank-acceptance: {np.round(ra, 3)}")
+
+    budget = 10
+    cases = {}
+    p, r = static_trees.chain(6)
+    cases["chain(6)"] = (template_spec(p, r), 7)
+    p, r = static_trees.kary(2, 3)
+    cases["2-ary(d3)"] = (template_spec(p, r), budget)
+    p, r = static_trees.sequoia(ra, budget, max_depth=8)
+    cases["sequoia(10)"] = (template_spec(p, r), budget)
+    cases["EGT(4x4)"] = (egt_spec(4, 4), budget)
+
+    print(f"\n{'structure':<14} {'AAL':>6} {'TPOT ms':>9}")
+    for name, (sp, v) in cases.items():
+        e = SpeculativeEngine(tb.drafter, tb.d_params, tb.verifier,
+                              tb.v_params, config=EngineConfig(plan="fused"))
+        e.generate(prompt, lengths, 6, spec=sp, verify_v=v)       # warm
+        _, stats = e.generate(prompt, lengths, 40, spec=sp, verify_v=v)
+        s = stats.summary()
+        print(f"{name:<14} {s['aal']:>6.2f} {s['tpot_ms']:>9.1f}")
+
+
+if __name__ == "__main__":
+    main()

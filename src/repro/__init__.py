@@ -1,0 +1,2 @@
+"""repro: Yggdrasil (latency-optimal tree speculative decoding) in JAX."""
+__version__ = "0.1.0"

@@ -1,0 +1,3 @@
+from repro.configs.base import ModelConfig, reduced
+from repro.configs.registry import ASSIGNED, all_configs, get_config, get_reduced_config
+from repro.configs.shapes import SHAPES, InputShape

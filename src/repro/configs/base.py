@@ -1,0 +1,264 @@
+"""Model configuration dataclasses.
+
+Every assigned architecture is expressed as a ``ModelConfig``. The config is
+a frozen dataclass so it can key jit caches and compilation buckets.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    # identity
+    name: str = "model"
+    family: str = "dense"  # dense | moe | ssm | hybrid | audio | vlm
+    source: str = ""       # citation for the config values
+
+    # trunk
+    num_layers: int = 2
+    d_model: int = 256
+    num_heads: int = 4
+    num_kv_heads: int = 4
+    head_dim: int = 64
+    d_ff: int = 1024
+    vocab_size: int = 512
+
+    # mlp
+    mlp_act: str = "silu"      # silu | sq_relu | gelu
+    gated_mlp: bool = True     # SwiGLU-style gate
+
+    # attention
+    rope_theta: float = 10000.0
+    sliding_window: int = 0    # 0 = full attention
+    use_qk_norm: bool = False  # chameleon
+
+    # MoE
+    num_experts: int = 0
+    num_experts_per_tok: int = 0
+    moe_d_ff: int = 0                  # expert hidden dim (defaults to d_ff)
+    capacity_factor: float = 1.25
+    router_aux_loss_coef: float = 0.01
+
+    # hybrid (jamba-style): an attention layer every `attn_layer_period`
+    # layers at `attn_layer_offset`; MoE layer every `moe_layer_period`.
+    attn_layer_period: int = 0
+    attn_layer_offset: int = 0
+    moe_layer_period: int = 0
+    moe_layer_offset: int = 0
+
+    # ssm (mamba2 / SSD)
+    ssm_state_size: int = 0
+    ssm_head_dim: int = 64
+    ssm_expand: int = 2
+    ssm_chunk: int = 64
+    ssm_conv_width: int = 4
+    ssm_num_groups: int = 1
+
+    # encoder-decoder (whisper)
+    is_encoder_decoder: bool = False
+    num_encoder_layers: int = 0
+    encoder_seq_len: int = 0     # stubbed frontend sequence length (frames)
+    encoder_feature_dim: int = 0  # dim of the precomputed frontend embeddings
+
+    # norms / positions / embeddings
+    norm_type: str = "rmsnorm"     # rmsnorm | layernorm
+    pos_embedding: str = "rope"    # rope | learned | none
+    tie_embeddings: bool = False
+    norm_eps: float = 1e-5
+
+    # perf-iteration knobs (§Perf hillclimbing; defaults = paper baseline)
+    gqa_grouped: bool = False        # GQA attention without repeat_kv
+    moe_batch_dispatch: bool = False  # data-shard-local MoE routing
+    moe_combine_dtype: str = "float32"  # MoE combine/scatter accumulation
+    cache_pad_to: int = 1            # pad cache len (enables seq-sharding)
+    attn_score_seqshard: bool = False  # pin decode scores to the cache_seq
+                                       # sharding (psum output, no V gather)
+
+    # runtime
+    max_seq_len: int = 32768
+    dtype: str = "float32"         # compute dtype ("bfloat16" for dry-run)
+    param_dtype: str = "float32"
+    remat: bool = False
+    use_pallas: bool = False       # route hot ops through Pallas kernels
+    attn_chunk: int = 512          # flash prefill query/kv block
+    loss_chunk: int = 512          # chunked cross-entropy sequence block
+    vocab_pad_to: int = 1          # pad vocab to a multiple (256 for dry-run)
+    scan_unroll: bool = False      # unroll block scan (dry-run HLO parsing)
+
+    def __post_init__(self):
+        if self.moe_d_ff == 0 and self.num_experts:
+            object.__setattr__(self, "moe_d_ff", self.d_ff)
+        if self.head_dim == 0 and self.num_heads:
+            object.__setattr__(self, "head_dim", self.d_model // self.num_heads)
+
+    # ---- per-layer structure -------------------------------------------------
+    def layer_mixer(self, i: int) -> str:
+        """Return the sequence mixer for layer ``i``: 'attn' or 'ssm'."""
+        if self.family == "ssm":
+            return "ssm"
+        if self.attn_layer_period:
+            return ("attn" if i % self.attn_layer_period == self.attn_layer_offset
+                    else "ssm")
+        return "attn"
+
+    def layer_ffn(self, i: int) -> str:
+        """Return the FFN kind for layer ``i``: 'dense', 'moe' or 'none'."""
+        if self.family == "ssm":
+            return "none"  # mamba2 blocks have no separate FFN
+        if self.moe_layer_period:
+            return ("moe" if i % self.moe_layer_period == self.moe_layer_offset
+                    else "dense")
+        if self.num_experts:
+            return "moe"
+        return "dense"
+
+    @property
+    def layers_per_block(self) -> int:
+        """Heterogeneous layers are grouped into a repeating block that is
+        scanned over (compile-time efficiency). The block is the LCM of the
+        layer-kind periods."""
+        period = 1
+        for p in (self.attn_layer_period, self.moe_layer_period):
+            if p:
+                period = _lcm(period, p)
+        return period
+
+    @property
+    def num_blocks(self) -> int:
+        assert self.num_layers % self.layers_per_block == 0, (
+            f"{self.name}: num_layers={self.num_layers} not divisible by "
+            f"block period {self.layers_per_block}")
+        return self.num_layers // self.layers_per_block
+
+    @property
+    def vocab_padded(self) -> int:
+        m = self.vocab_pad_to
+        return ((self.vocab_size + m - 1) // m) * m
+
+    @property
+    def num_q_per_kv(self) -> int:
+        return self.num_heads // max(self.num_kv_heads, 1)
+
+    @property
+    def ssm_d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_num_heads(self) -> int:
+        return self.ssm_d_inner // self.ssm_head_dim
+
+    # ---- size accounting (roofline) ------------------------------------------
+    def param_count(self) -> int:
+        """Analytic parameter count (embedding + trunk [+ encoder])."""
+        d, V = self.d_model, self.vocab_size
+        n = V * d  # token embedding
+        if not self.tie_embeddings:
+            n += d * V  # lm head
+        for i in range(self.num_layers):
+            n += self._layer_params(i)
+        n += d  # final norm
+        if self.is_encoder_decoder:
+            for _ in range(self.num_encoder_layers):
+                # self-attn + mlp + 2 norms (encoder heads == decoder heads)
+                n += self._attn_params(cross=False) + self._dense_ffn_params() + 2 * d
+            n += d  # encoder final norm
+        return n
+
+    def active_param_count(self) -> int:
+        """Params touched per token (MoE: only top-k experts)."""
+        if not self.num_experts:
+            return self.param_count()
+        n = self.param_count()
+        for i in range(self.num_layers):
+            if self.layer_ffn(i) == "moe":
+                per_expert = self._expert_params()
+                n -= (self.num_experts - self.num_experts_per_tok) * per_expert
+        return n
+
+    def _attn_params(self, cross: bool = False) -> int:
+        d, H, KV, dh = self.d_model, self.num_heads, self.num_kv_heads, self.head_dim
+        return d * H * dh + 2 * d * KV * dh + H * dh * d
+
+    def _dense_ffn_params(self) -> int:
+        mult = 3 if self.gated_mlp else 2
+        return mult * self.d_model * self.d_ff
+
+    def _expert_params(self) -> int:
+        mult = 3 if self.gated_mlp else 2
+        return mult * self.d_model * self.moe_d_ff
+
+    def _ssm_params(self) -> int:
+        d, di, ds = self.d_model, self.ssm_d_inner, self.ssm_state_size
+        g = self.ssm_num_groups
+        nh = self.ssm_num_heads
+        conv_dim = di + 2 * g * ds
+        n = d * (2 * di + 2 * g * ds + nh)        # in_proj (z,x,B,C,dt)
+        n += self.ssm_conv_width * conv_dim       # conv
+        n += nh * 2 + nh                          # A_log, D, dt_bias
+        n += di                                   # ssm norm
+        n += di * d                               # out_proj
+        return n
+
+    def _layer_params(self, i: int) -> int:
+        n = 0
+        if self.layer_mixer(i) == "attn":
+            n += self._attn_params() + self.d_model
+            if self.is_encoder_decoder:
+                n += self._attn_params(cross=True) + self.d_model
+        else:
+            n += self._ssm_params() + self.d_model
+        ffn = self.layer_ffn(i)
+        if ffn == "dense":
+            n += self._dense_ffn_params() + self.d_model
+        elif ffn == "moe":
+            n += self.num_experts * self._expert_params()
+            n += self.d_model * self.num_experts  # router
+            n += self.d_model
+        return n
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+
+def _lcm(a: int, b: int) -> int:
+    import math
+    return a * b // math.gcd(a, b)
+
+
+def reduced(cfg: ModelConfig, **overrides) -> ModelConfig:
+    """A tiny same-family variant for CPU smoke tests (<=2 layers, d<=512,
+    <=4 experts)."""
+    kw = dict(
+        num_layers=cfg.layers_per_block * max(1, 2 // cfg.layers_per_block)
+        if cfg.layers_per_block > 1 else 2,
+        d_model=min(cfg.d_model, 256),
+        num_heads=4,
+        num_kv_heads=min(cfg.num_kv_heads, 2) if cfg.num_kv_heads < cfg.num_heads else 4,
+        head_dim=64,
+        d_ff=min(cfg.d_ff, 512) if cfg.d_ff else 0,
+        vocab_size=min(cfg.vocab_size, 512),
+        max_seq_len=256,
+        remat=False,
+    )
+    if cfg.num_experts:
+        kw["num_experts"] = min(cfg.num_experts, 4)
+        kw["num_experts_per_tok"] = min(cfg.num_experts_per_tok, 2)
+        kw["moe_d_ff"] = min(cfg.moe_d_ff, 256)
+    if cfg.family in ("ssm", "hybrid"):
+        kw["ssm_state_size"] = min(cfg.ssm_state_size, 64) or 64
+        kw["ssm_head_dim"] = 32
+        kw["ssm_chunk"] = 16
+    if cfg.is_encoder_decoder:
+        kw["num_encoder_layers"] = 2
+        kw["encoder_seq_len"] = 32
+        kw["encoder_feature_dim"] = min(cfg.d_model, 256)
+    if cfg.attn_layer_period:
+        # keep the hybrid interleave structure but at minimum depth
+        kw["num_layers"] = cfg.layers_per_block
+    if cfg.sliding_window:
+        kw["sliding_window"] = 64
+    kw.update(overrides)
+    return cfg.replace(**kw)

@@ -1,0 +1,29 @@
+"""Chameleon-34B [arXiv:2405.09818] — early-fusion VLM over VQ image tokens.
+
+Image tokens are ordinary entries in the 65536 vocab (VQ-VAE codebook occupies
+a contiguous id range); the VQ image tokenizer is STUBBED — ``input_specs``
+provides token ids that may include image-token ids. Chameleon uses QK-norm
+for training stability.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="chameleon-34b",
+    family="vlm",
+    source="arXiv:2405.09818",
+    num_layers=48,
+    d_model=8192,
+    num_heads=64,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=22016,
+    vocab_size=65536,
+    mlp_act="silu",
+    gated_mlp=True,
+    use_qk_norm=True,
+    rope_theta=10000.0,
+)
+
+# VQ codebook ids live in [IMAGE_TOKEN_START, IMAGE_TOKEN_START + 8192)
+IMAGE_TOKEN_START = 4
+IMAGE_TOKEN_COUNT = 8192

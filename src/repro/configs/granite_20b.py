@@ -1,0 +1,18 @@
+"""Granite-20B code model [arXiv:2405.04324] — llama-arch, MQA (kv=1)."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="granite-20b",
+    family="dense",
+    source="arXiv:2405.04324",
+    num_layers=52,
+    d_model=6144,
+    num_heads=48,
+    num_kv_heads=1,          # multi-query attention
+    head_dim=128,
+    d_ff=24576,
+    vocab_size=49152,
+    mlp_act="gelu",
+    gated_mlp=False,
+    rope_theta=10000.0,
+)

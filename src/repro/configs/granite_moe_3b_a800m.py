@@ -1,0 +1,22 @@
+"""Granite-MoE 3B-a800m [hf:ibm-granite/granite-3.0-1b-a400m-base family]
+— 40 experts, top-8, GQA kv=8 (per assignment: MoE 40e top-8)."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="granite-moe-3b-a800m",
+    family="moe",
+    source="hf:ibm-granite/granite-3.0-1b-a400m-base",
+    num_layers=32,
+    d_model=1536,
+    num_heads=24,
+    num_kv_heads=8,
+    head_dim=64,
+    d_ff=512,
+    vocab_size=49155,
+    mlp_act="silu",
+    gated_mlp=True,
+    num_experts=40,
+    num_experts_per_tok=8,
+    moe_d_ff=512,
+    rope_theta=10000.0,
+)

@@ -1,0 +1,18 @@
+"""InternLM2-20B [arXiv:2403.17297] — dense GQA."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="internlm2-20b",
+    family="dense",
+    source="arXiv:2403.17297",
+    num_layers=48,
+    d_model=6144,
+    num_heads=48,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=16384,
+    vocab_size=92544,
+    mlp_act="silu",
+    gated_mlp=True,
+    rope_theta=1000000.0,
+)

@@ -1,0 +1,37 @@
+"""Jamba-v0.1 52B [arXiv:2403.19887] — hybrid Mamba+attention 1:7, MoE 16e top-2.
+
+Layer pattern (period 8): attention at offset 4, Mamba elsewhere; MoE FFN on
+every other layer (period 2, offset 1). Jamba v0.1 uses Mamba-1 layers; we
+instantiate the SSD (Mamba-2) formulation of the same state-space block, which
+shares the recurrence structure — noted in DESIGN.md.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="jamba-v0.1-52b",
+    family="hybrid",
+    source="arXiv:2403.19887",
+    num_layers=32,
+    d_model=4096,
+    num_heads=32,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=14336,
+    vocab_size=65536,
+    mlp_act="silu",
+    gated_mlp=True,
+    num_experts=16,
+    num_experts_per_tok=2,
+    moe_d_ff=14336,
+    attn_layer_period=8,
+    attn_layer_offset=4,
+    moe_layer_period=2,
+    moe_layer_offset=1,
+    ssm_state_size=128,       # SSD-form state
+    ssm_head_dim=64,
+    ssm_expand=2,             # d_inner = 8192 -> 128 ssm heads
+    ssm_chunk=64,
+    ssm_conv_width=4,
+    ssm_num_groups=1,
+    pos_embedding="none",     # jamba uses no positional encoding
+)

@@ -1,0 +1,17 @@
+"""Llama-2-7B — the paper's own target/verifier model [arXiv:2307.09288]."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama2-7b",
+    family="dense",
+    source="arXiv:2307.09288 (paper's verifier)",
+    num_layers=32,
+    d_model=4096,
+    num_heads=32,
+    num_kv_heads=32,
+    head_dim=128,
+    d_ff=11008,
+    vocab_size=32000,
+    mlp_act="silu",
+    gated_mlp=True,
+)

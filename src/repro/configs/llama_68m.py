@@ -1,0 +1,17 @@
+"""Llama-68M — the paper's drafter model [SpecInfer, arXiv:2305.09781]."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama-68m",
+    family="dense",
+    source="SpecInfer drafter (JackFram/llama-68m)",
+    num_layers=2,
+    d_model=768,
+    num_heads=12,
+    num_kv_heads=12,
+    head_dim=64,
+    d_ff=3072,
+    vocab_size=32000,
+    mlp_act="silu",
+    gated_mlp=True,
+)

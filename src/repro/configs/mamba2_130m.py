@@ -1,0 +1,23 @@
+"""Mamba2-130M [arXiv:2405.21060] — attention-free SSD (state-space duality)."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="mamba2-130m",
+    family="ssm",
+    source="arXiv:2405.21060",
+    num_layers=24,
+    d_model=768,
+    num_heads=0,
+    num_kv_heads=0,
+    head_dim=0,
+    d_ff=0,                   # mamba2 blocks have no separate FFN
+    vocab_size=50280,
+    ssm_state_size=128,
+    ssm_head_dim=64,
+    ssm_expand=2,             # d_inner = 1536, 24 ssm heads
+    ssm_chunk=64,
+    ssm_conv_width=4,
+    ssm_num_groups=1,
+    pos_embedding="none",
+    tie_embeddings=True,
+)

@@ -1,0 +1,22 @@
+"""Mixtral-8x7B [arXiv:2401.04088] — MoE 8 experts top-2, sliding-window attn."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="mixtral-8x7b",
+    family="moe",
+    source="arXiv:2401.04088",
+    num_layers=32,
+    d_model=4096,
+    num_heads=32,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=14336,
+    vocab_size=32000,
+    mlp_act="silu",
+    gated_mlp=True,
+    num_experts=8,
+    num_experts_per_tok=2,
+    moe_d_ff=14336,
+    sliding_window=4096,
+    rope_theta=1000000.0,
+)

@@ -1,0 +1,18 @@
+"""Nemotron-4 15B [arXiv:2402.16819] — dense GQA, squared-ReLU MLP."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="nemotron-4-15b",
+    family="dense",
+    source="arXiv:2402.16819",
+    num_layers=32,
+    d_model=6144,
+    num_heads=48,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=24576,
+    vocab_size=256000,
+    mlp_act="sq_relu",
+    gated_mlp=False,          # Nemotron-4 uses squared ReLU, non-gated MLP
+    rope_theta=10000.0,
+)

@@ -1,0 +1,39 @@
+"""Architecture registry: ``--arch <id>`` lookup for launchers and tests."""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from repro.configs.base import ModelConfig, reduced
+
+_MODULES = {
+    "nemotron-4-15b": "repro.configs.nemotron_4_15b",
+    "jamba-v0.1-52b": "repro.configs.jamba_v0_1_52b",
+    "yi-6b": "repro.configs.yi_6b",
+    "internlm2-20b": "repro.configs.internlm2_20b",
+    "whisper-medium": "repro.configs.whisper_medium",
+    "granite-20b": "repro.configs.granite_20b",
+    "mamba2-130m": "repro.configs.mamba2_130m",
+    "granite-moe-3b-a800m": "repro.configs.granite_moe_3b_a800m",
+    "chameleon-34b": "repro.configs.chameleon_34b",
+    "mixtral-8x7b": "repro.configs.mixtral_8x7b",
+    # the paper's own drafter/verifier pair
+    "llama2-7b": "repro.configs.llama2_7b",
+    "llama-68m": "repro.configs.llama_68m",
+}
+
+ASSIGNED: List[str] = list(_MODULES)[:10]
+
+
+def get_config(arch: str) -> ModelConfig:
+    if arch not in _MODULES:
+        raise KeyError(f"unknown arch {arch!r}; known: {sorted(_MODULES)}")
+    return importlib.import_module(_MODULES[arch]).CONFIG
+
+
+def get_reduced_config(arch: str, **overrides) -> ModelConfig:
+    return reduced(get_config(arch), **overrides)
+
+
+def all_configs() -> Dict[str, ModelConfig]:
+    return {a: get_config(a) for a in _MODULES}

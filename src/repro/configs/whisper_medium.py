@@ -1,0 +1,30 @@
+"""Whisper-medium [arXiv:2212.04356] — encoder-decoder audio model.
+
+The conv/mel frontend is STUBBED: ``input_specs`` provides precomputed frame
+embeddings of shape (batch, encoder_seq_len, d_model); this config describes
+the transformer backbone only.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-medium",
+    family="audio",
+    source="arXiv:2212.04356",
+    num_layers=24,            # decoder layers
+    d_model=1024,
+    num_heads=16,
+    num_kv_heads=16,
+    head_dim=64,
+    d_ff=4096,
+    vocab_size=51865,
+    mlp_act="gelu",
+    gated_mlp=False,
+    norm_type="layernorm",
+    pos_embedding="learned",
+    is_encoder_decoder=True,
+    num_encoder_layers=24,
+    encoder_seq_len=1500,     # 30s audio at 50 frames/s (post conv stub)
+    encoder_feature_dim=1024,
+    tie_embeddings=True,
+    max_seq_len=448,
+)

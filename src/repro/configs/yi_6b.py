@@ -1,0 +1,18 @@
+"""Yi-6B [arXiv:2403.04652] — llama-architecture dense GQA (kv=4)."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="yi-6b",
+    family="dense",
+    source="arXiv:2403.04652",
+    num_layers=32,
+    d_model=4096,
+    num_heads=32,
+    num_kv_heads=4,
+    head_dim=128,
+    d_ff=11008,
+    vocab_size=64000,
+    mlp_act="silu",
+    gated_mlp=True,
+    rope_theta=5000000.0,
+)

@@ -1,0 +1,10 @@
+from repro.core.buckets import Bucket, DEFAULT_BUCKETS, select_bucket
+from repro.core.egt import DraftSpec, draft_tree, egt_spec, template_spec
+from repro.core.engine import (EngineConfig, GenStats, SpeculativeEngine,
+                               generate_autoregressive)
+from repro.core.objective import (LatencyProfile, estimate_aal,
+                                  speedup_objective)
+from repro.core.pruning import dp_prune_reference, topk_prune
+from repro.core.tree import (TreeArrays, ancestor_mask, ancestor_paths,
+                             chain_template, kary_template)
+from repro.core.verify import greedy_accept, stochastic_accept

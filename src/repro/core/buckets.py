@@ -1,0 +1,60 @@
+"""Compilation buckets: the static ⟨D_draft, W_draft, W_verify⟩ registry.
+
+Each bucket keys exactly one compiled speculation-step executable (the JAX
+analogue of one captured CUDA graph). The runtime picks a bucket per
+iteration — depth from the predictor, width/verify from the latency
+objective — and replays the corresponding executable; shapes never change
+inside a bucket, so there are no recompiles on the decode path.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Sequence, Tuple
+
+from repro.core.objective import LatencyProfile, speedup_objective
+
+
+@dataclass(frozen=True)
+class Bucket:
+    depth: int
+    width: int
+    verify: int
+
+    @property
+    def num_nodes(self) -> int:
+        return 1 + self.depth * self.width
+
+    def key(self) -> Tuple[int, int, int]:
+        return (self.depth, self.width, self.verify)
+
+
+DEFAULT_BUCKETS: Tuple[Bucket, ...] = (
+    Bucket(2, 2, 4), Bucket(4, 2, 8), Bucket(4, 4, 8),
+    Bucket(8, 4, 16), Bucket(8, 8, 32), Bucket(16, 8, 64),
+)
+
+
+def buckets_for_depths(depth_options: Sequence[int], width: int,
+                       verify_frac: float = 0.5) -> Tuple[Bucket, ...]:
+    out = []
+    for d in depth_options:
+        n = 1 + d * width
+        out.append(Bucket(d, width, max(2, int(n * verify_frac))))
+    return tuple(out)
+
+
+def select_bucket(buckets: Sequence[Bucket], predicted_depth: int,
+                  profile: LatencyProfile, aal_estimates: Dict = None,
+                  objective: str = "speedup") -> Bucket:
+    """Choose the bucket for this iteration: smallest depth >= prediction,
+    ties broken by the latency objective with an optimistic AAL estimate."""
+    cands = [b for b in buckets if b.depth >= predicted_depth] or list(buckets)
+    best, best_v = None, -float("inf")
+    for b in cands:
+        aal = (aal_estimates or {}).get(b.key(),
+                                        min(predicted_depth + 1, b.depth + 1))
+        v = (speedup_objective(profile, aal, b.depth, b.width, b.verify)
+             if objective == "speedup" else aal)
+        if v > best_v:
+            best, best_v = b, v
+    return best

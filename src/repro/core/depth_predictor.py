@@ -1,0 +1,91 @@
+"""Draft-depth predictor (paper §4.2, O5).
+
+A two-layer MLP encoder over the verifier's last-token hidden state with
+multiple classification heads — one per candidate depth bucket — trained
+offline on (embedding, achieved accept-length) pairs collected by profiling
+an in-domain corpus. At runtime the head scores select D_draft per request.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.params import ParamDef, init_params
+from repro.training.optimizer import OptConfig, adamw_update, init_opt_state
+
+
+def predictor_defs(d_model: int, hidden: int, depth_options: Sequence[int]
+                   ) -> Dict[str, ParamDef]:
+    return {
+        "w1": ParamDef((d_model, hidden), (None, None)),
+        "b1": ParamDef((hidden,), (None,), init="zeros"),
+        "w2": ParamDef((hidden, hidden), (None, None)),
+        "b2": ParamDef((hidden,), (None,), init="zeros"),
+        "heads": ParamDef((hidden, len(depth_options)), (None, None)),
+        "head_b": ParamDef((len(depth_options),), (None,), init="zeros"),
+    }
+
+
+def init_predictor(key, d_model: int, depth_options: Sequence[int],
+                   hidden: int = 128):
+    return init_params(predictor_defs(d_model, hidden, depth_options), key)
+
+
+def predictor_logits(p: Dict, h: jax.Array) -> jax.Array:
+    """h: [B, d_model] -> [B, num_depth_options]."""
+    x = jax.nn.gelu(h @ p["w1"] + p["b1"])
+    x = jax.nn.gelu(x @ p["w2"] + p["b2"])
+    return x @ p["heads"] + p["head_b"]
+
+
+def predict_depth(p: Dict, h: jax.Array, depth_options: Sequence[int]
+                  ) -> jax.Array:
+    """[B] predicted optimal draft depth."""
+    idx = jnp.argmax(predictor_logits(p, h), axis=-1)
+    return jnp.asarray(depth_options)[idx]
+
+
+def best_bucket_labels(accept_lens: jax.Array, depth_options: Sequence[int]
+                       ) -> jax.Array:
+    """Label = smallest depth option >= the achieved accept length (drafting
+    deeper than what gets accepted is wasted work; shallower caps AAL)."""
+    opts = jnp.asarray(depth_options)                      # [K] ascending
+    ge = opts[None, :] >= jnp.minimum(accept_lens[:, None], opts[-1])
+    return jnp.argmax(ge, axis=-1)
+
+
+def train_predictor(key, embeddings: jax.Array, accept_lens: jax.Array,
+                    depth_options: Sequence[int], steps: int = 300,
+                    batch: int = 64, hidden: int = 128,
+                    lr: float = 1e-3) -> Tuple[Dict, List[float]]:
+    """Offline training on profiling data. embeddings: [N, d]; accept_lens:
+    [N] achieved accepted length with a deep draft."""
+    n, d = embeddings.shape
+    params = init_predictor(key, d, depth_options, hidden)
+    labels = best_bucket_labels(accept_lens, depth_options)
+    opt_cfg = OptConfig(lr=lr, warmup_steps=10, total_steps=steps,
+                        weight_decay=0.0)
+    state = init_opt_state(params)
+
+    @jax.jit
+    def step(params, state, idx):
+        def lf(p):
+            logits = predictor_logits(p, embeddings[idx])
+            logz = jax.nn.logsumexp(logits, -1)
+            gold = jnp.take_along_axis(logits, labels[idx][:, None], -1)[:, 0]
+            return (logz - gold).mean()
+        loss, grads = jax.value_and_grad(lf)(params)
+        params, state, _ = adamw_update(params, grads, state, opt_cfg)
+        return params, state, loss
+
+    losses = []
+    k = key
+    for i in range(steps):
+        k, sk = jax.random.split(k)
+        idx = jax.random.randint(sk, (min(batch, n),), 0, n)
+        params, state, loss = step(params, state, idx)
+        if i % 50 == 0:
+            losses.append(float(loss))
+    return params, losses

@@ -1,0 +1,181 @@
+"""Equal-Growth Tree drafting (paper §4.2) plus static tree-template drafting
+(SpecInfer k-ary / Sequoia-style / sequence baselines).
+
+The draft loop is a *python* loop over exactly D steps of exactly W nodes, so
+the whole thing traces into one static graph per ⟨D, W⟩ bucket. Leaves attach
+anywhere in the partial tree: at each step the globally best (node, candidate)
+pairs by path log-probability are expanded — generation probabilities as the
+acceptance surrogate [OPT-tree 44].
+"""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.tree import TreeArrays, empty_tree
+from repro.models.model import Model
+
+
+class DraftSpec(NamedTuple):
+    """Static drafting configuration (hashable -> jit bucket key)."""
+    mode: str                 # "egt" | "template"
+    depth: int                # D_draft: number of drafter invocations
+    width: int                # W_draft: nodes added per step (EGT)
+    num_nodes: int            # N = total tree slots
+    template_parents: Optional[Tuple[int, ...]] = None
+    template_ranks: Optional[Tuple[int, ...]] = None
+
+    @property
+    def cand_k(self) -> int:
+        if self.mode == "template":
+            return max(self.template_ranks) + 1
+        return self.width
+
+
+def egt_spec(depth: int, width: int) -> DraftSpec:
+    return DraftSpec("egt", depth, width, 1 + depth * width)
+
+
+def template_spec(parents, ranks) -> DraftSpec:
+    """Build a spec from a static template (see tree.py templates)."""
+    import numpy as np
+    p = np.asarray(parents)
+    r = np.asarray(ranks)
+    d = np.zeros(len(p), np.int32)
+    for i in range(1, len(p)):
+        d[i] = d[p[i]] + 1
+    return DraftSpec("template", int(d.max()), 0, len(p),
+                     tuple(int(x) for x in p), tuple(int(x) for x in r))
+
+
+class DraftResult(NamedTuple):
+    tree: TreeArrays
+    amask: jax.Array        # [B, N, N] ancestor-or-self mask
+    draft_probs: jax.Array  # [B, N, V] drafter distribution at each node
+    cand_tok: jax.Array     # [B, N, K] top-K continuations per node
+    cand_lp: jax.Array      # [B, N, K] their log-probs
+    scratch: Dict           # drafter per-layer tree K/V (for cache commit)
+
+
+def _dist(logits: jax.Array, temperature: float) -> jax.Array:
+    if temperature == 0.0:
+        return jax.nn.softmax(logits, axis=-1)  # probs used only for ranking
+    return jax.nn.softmax(logits / temperature, axis=-1)
+
+
+def draft_tree(drafter: Model, params, cache: Dict, root_token: jax.Array,
+               spec: DraftSpec, temperature: float = 0.0,
+               sample_key: Optional[jax.Array] = None) -> DraftResult:
+    """Grow a speculation tree on the drafter. Fully static shapes.
+
+    root_token: [B] the confirmed-but-uncommitted head token (slot 0).
+    sample_key: when given (temperature > 0), the rank-0 candidate of every
+    node is *sampled* from the drafter distribution instead of argmax — this
+    makes W=1 chain speculation exactly Leviathan speculative sampling.
+    """
+    cfg = drafter.cfg
+    B = root_token.shape[0]
+    N, D, K = spec.num_nodes, spec.depth, spec.cand_k
+    V = cfg.vocab_size
+
+    tree = empty_tree(B, N)
+    tree = tree._replace(
+        tokens=tree.tokens.at[:, 0].set(root_token),
+        path_lp=tree.path_lp.at[:, 0].set(0.0),
+        live=tree.live.at[:, 0].set(True),
+    )
+    amask = jnp.zeros((B, N, N), bool).at[:, 0, 0].set(True)
+    draft_probs = jnp.zeros((B, N, V), jnp.float32)
+    cand_tok = jnp.zeros((B, N, K), jnp.int32)
+    cand_lp = jnp.full((B, N, K), -jnp.inf, jnp.float32)
+    taken = jnp.zeros((B, N, K), bool)
+    scratch = drafter.init_tree_scratch(B, N)
+
+    if sample_key is not None:
+        n_calls = 1 + (D if spec.mode == "egt" else D)
+        sample_keys = list(jax.random.split(sample_key, n_calls))
+
+    def process(new_tokens, new_depths, rows, offset, q,
+                draft_probs, cand_tok, cand_lp, scratch):
+        """Run drafter on q new nodes; record their dists and candidates."""
+        logits, scratch = drafter.tree_extend(
+            params, new_tokens, new_depths, rows, scratch, offset, cache)
+        probs = _dist(logits, temperature)                       # [B, q, V]
+        lp = jnp.log(jnp.maximum(probs, 1e-30))
+        top_lp, top_tok = jax.lax.top_k(lp, K)                    # [B, q, K]
+        if sample_key is not None:
+            # rank-0 candidate drawn from the drafter distribution
+            sk = sample_keys.pop()
+            samp = jax.random.categorical(sk, lp, axis=-1).astype(jnp.int32)
+            samp_lp = jnp.take_along_axis(lp, samp[..., None], -1)[..., 0]
+            top_tok = top_tok.at[..., 0].set(samp)
+            top_lp = top_lp.at[..., 0].set(samp_lp)
+        draft_probs = jax.lax.dynamic_update_slice_in_dim(
+            draft_probs, probs.astype(jnp.float32), offset, axis=1)
+        cand_tok = jax.lax.dynamic_update_slice_in_dim(
+            cand_tok, top_tok.astype(jnp.int32), offset, axis=1)
+        cand_lp = jax.lax.dynamic_update_slice_in_dim(
+            cand_lp, top_lp, offset, axis=1)
+        return draft_probs, cand_tok, cand_lp, scratch
+
+    # ---- root (the ahead-of-time head draft lives here: see engine) ----
+    rows0 = amask[:, 0:1, :]
+    draft_probs, cand_tok, cand_lp, scratch = process(
+        tree.tokens[:, 0:1], tree.depths[:, 0:1], rows0, 0, 1,
+        draft_probs, cand_tok, cand_lp, scratch)
+
+    offset = 1
+    if spec.mode == "template":
+        import numpy as np
+        tpl_p = np.asarray(spec.template_parents)
+        tpl_r = np.asarray(spec.template_ranks)
+        tpl_d = np.zeros(len(tpl_p), np.int32)
+        for i in range(1, len(tpl_p)):
+            tpl_d[i] = tpl_d[tpl_p[i]] + 1
+        steps = [(lvl, np.nonzero(tpl_d == lvl)[0]) for lvl in range(1, D + 1)]
+    else:
+        steps = [(s, None) for s in range(1, D + 1)]
+
+    b_idx = jnp.arange(B)[:, None]
+    for s, tpl_nodes in steps:
+        if spec.mode == "egt":
+            w = spec.width
+            scores = tree.path_lp[:, :, None] + cand_lp          # [B, N, K]
+            scores = jnp.where(tree.live[:, :, None] & ~taken, scores, -jnp.inf)
+            top_s, flat = jax.lax.top_k(scores.reshape(B, N * K), w)
+            par = (flat // K).astype(jnp.int32)                  # [B, w]
+            rank = (flat % K).astype(jnp.int32)
+            taken = taken.at[b_idx, par, rank].set(True)
+        else:
+            w = len(tpl_nodes)
+            par = jnp.broadcast_to(jnp.array(tpl_p[tpl_nodes]), (B, w)).astype(jnp.int32)
+            rank = jnp.broadcast_to(jnp.array(tpl_r[tpl_nodes]), (B, w)).astype(jnp.int32)
+            top_s = (tree.path_lp[b_idx, par]
+                     + cand_lp[b_idx, par, rank])
+
+        tok = cand_tok[b_idx, par, rank]                          # [B, w]
+        dep = tree.depths[b_idx, par] + 1
+        new_slots = offset + jnp.arange(w)[None, :]
+
+        tree = tree._replace(
+            tokens=jax.lax.dynamic_update_slice_in_dim(tree.tokens, tok, offset, 1),
+            parents=jax.lax.dynamic_update_slice_in_dim(tree.parents, par, offset, 1),
+            depths=jax.lax.dynamic_update_slice_in_dim(tree.depths, dep, offset, 1),
+            path_lp=jax.lax.dynamic_update_slice_in_dim(
+                tree.path_lp, top_s.astype(jnp.float32), offset, 1),
+            live=jax.lax.dynamic_update_slice_in_dim(
+                tree.live, jnp.ones((B, w), bool), offset, 1),
+        )
+        # ancestor rows for the new nodes = parent's row + self bit
+        parent_rows = amask[b_idx, par]                           # [B, w, N]
+        rows = parent_rows.at[jnp.arange(B)[:, None],
+                              jnp.arange(w)[None, :], new_slots].set(True)
+        amask = jax.lax.dynamic_update_slice(amask, rows, (0, offset, 0))
+
+        draft_probs, cand_tok, cand_lp, scratch = process(
+            tok, dep, rows, offset, w, draft_probs, cand_tok, cand_lp, scratch)
+        offset += w
+
+    return DraftResult(tree, amask, draft_probs, cand_tok, cand_lp, scratch)

@@ -1,0 +1,379 @@
+"""SpeculativeEngine: drafter + verifier + EGT + scheduling runtime.
+
+Execution plans (paper §5):
+  * "fused"  — one jitted megastep per bucket: draft D×W, prune to V, tree-
+    verify, accept, commit BOTH caches, and ahead-of-time stages (the next
+    head/tail draft folds into the next megastep's root processing; the
+    conditional tail-draft branch is eliminated by unconditional in-graph
+    superset compute). Zero host syncs inside an iteration.
+  * "staged" — the naive pipeline: draft / verify / accept / commit as
+    separate dispatches with a host round-trip on the acceptance result
+    driving a conditional tail draft (the CPU-logic bubbles of Fig. 9-a).
+
+Each ⟨D, W, V⟩ bucket compiles exactly once (static shapes via EGT); the
+runtime replays executables — the JAX analogue of CUDA-graph replay.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import egt, pruning, verify
+from repro.core.buckets import Bucket, select_bucket
+from repro.core.depth_predictor import predict_depth
+from repro.core.egt import DraftSpec, draft_tree, egt_spec, template_spec
+from repro.core.objective import LatencyProfile
+from repro.core.tree import ancestor_paths
+from repro.models.cache import init_cache
+from repro.models.model import Model
+
+
+@dataclass
+class EngineConfig:
+    temperature: float = 0.0
+    plan: str = "fused"            # fused | staged
+    accept_mode: str = "auto"      # greedy | stochastic | auto (by temperature)
+    objective: str = "speedup"     # speedup | aal (ablation)
+    max_target_len: int = 512
+    prune: bool = True             # O3 verification-width pruning
+    sample_draft: bool = True      # sample rank-0 candidate when temp > 0
+
+    def resolve_accept(self) -> str:
+        if self.accept_mode != "auto":
+            return self.accept_mode
+        return "greedy" if self.temperature == 0.0 else "stochastic"
+
+
+@dataclass
+class GenStats:
+    accept_lens: List[np.ndarray] = field(default_factory=list)
+    iter_times: List[float] = field(default_factory=list)
+    buckets: List[Tuple[int, int, int]] = field(default_factory=list)
+    compiles: int = 0
+
+    @property
+    def aal(self) -> float:
+        if not self.accept_lens:
+            return 0.0
+        return float(np.mean(np.concatenate([a.reshape(-1) for a in self.accept_lens])))
+
+    @property
+    def tokens_generated(self) -> int:
+        return int(sum(a.sum() for a in self.accept_lens))
+
+    @property
+    def total_time(self) -> float:
+        return float(sum(self.iter_times))
+
+    def summary(self) -> Dict[str, float]:
+        return {"aal": self.aal, "iters": len(self.iter_times),
+                "tokens": self.tokens_generated, "time_s": self.total_time,
+                "tpot_ms": 1e3 * self.total_time / max(self.tokens_generated, 1),
+                "compiles": self.compiles}
+
+
+class SpeculativeEngine:
+    def __init__(self, drafter: Model, d_params, verifier: Model, v_params,
+                 profile: Optional[LatencyProfile] = None,
+                 buckets: Optional[Tuple[Bucket, ...]] = None,
+                 predictor_params: Optional[Dict] = None,
+                 depth_options: Tuple[int, ...] = (2, 4, 8),
+                 config: Optional[EngineConfig] = None):
+        self.drafter, self.d_params = drafter, d_params
+        self.verifier, self.v_params = verifier, v_params
+        self.profile = profile or LatencyProfile.synthetic()
+        self.buckets = buckets
+        self.predictor_params = predictor_params
+        self.depth_options = depth_options
+        self.cfg = config or EngineConfig()
+        self._step_cache: Dict[Any, Any] = {}
+        self._compile_count = 0
+
+    # ------------------------------------------------------------ prefill --
+    def prefill(self, tokens: jax.Array, lengths: jax.Array,
+                enc_feats: Optional[jax.Array] = None):
+        B = tokens.shape[0]
+        L = self.cfg.max_target_len
+        vcache = init_cache(self.verifier.cfg, B, L)
+        dcache = init_cache(self.drafter.cfg, B, L)
+        v_logits, vcache, h_last = self.verifier.prefill(
+            self.v_params, tokens, lengths, vcache, enc_feats=enc_feats)
+        _, dcache, _ = self.drafter.prefill(
+            self.d_params, tokens, lengths, dcache)
+        return v_logits, vcache, dcache, h_last
+
+    # ----------------------------------------------------------- megastep --
+    def _build_step(self, spec: DraftSpec, verify_v: int):
+        cfg = self.cfg
+        accept_mode = cfg.resolve_accept()
+        a_max = spec.depth + 1
+        temp = cfg.temperature
+        needs_paths = any(self.verifier.cfg.layer_mixer(i) == "ssm"
+                          for i in range(self.verifier.cfg.num_layers))
+
+        def step(d_params, v_params, dcache, vcache, root_token, key):
+            kd, ka = jax.random.split(key)
+            res = draft_tree(self.drafter, d_params, dcache, root_token, spec,
+                             temperature=temp,
+                             sample_key=kd if (temp > 0 and cfg.sample_draft)
+                             else None)
+            if cfg.prune and verify_v < spec.num_nodes:
+                sub, select_idx = pruning.topk_prune(res.tree, verify_v, a_max)
+            else:
+                sub, select_idx = res.tree, jnp.broadcast_to(
+                    jnp.arange(spec.num_nodes)[None],
+                    res.tree.tokens.shape)
+            v = sub.tokens.shape[1]
+            b_idx = jnp.arange(sub.tokens.shape[0])[:, None]
+            sub_amask = (res.amask[b_idx[..., None], select_idx[:, :, None],
+                                   select_idx[:, None, :]])
+            paths = (ancestor_paths(sub.parents, a_max) if needs_paths else None)
+            t_logits, scratch, h_nodes = self.verifier.tree_verify(
+                v_params, sub.tokens, sub.depths, sub_amask, vcache,
+                tree_paths=paths)
+
+            if accept_mode == "greedy":
+                acc = verify.greedy_accept(sub, t_logits, a_max)
+            else:
+                tp = jax.nn.softmax(t_logits.astype(jnp.float32) / max(temp, 1e-6),
+                                    axis=-1)
+                dp = res.draft_probs[b_idx, select_idx]
+                acc = verify.stochastic_accept(sub, dp, tp, ka, a_max,
+                                               max_children=spec.cand_k)
+
+            vcache = self.verifier.commit(vcache, scratch, acc.node_idx,
+                                          acc.accept_len)
+            node_idx_orig = jnp.take_along_axis(select_idx, acc.node_idx, axis=1)
+            dcache = self.drafter.commit_scratch(dcache, res.scratch,
+                                                 node_idx_orig, acc.accept_len)
+
+            # emitted tokens this iteration: accepted drafts (excl. root,
+            # already emitted as last iter's bonus) + bonus
+            out_tokens = jnp.take_along_axis(sub.tokens, acc.node_idx, axis=1)
+            h_last = jnp.take_along_axis(
+                h_nodes, acc.last_node[:, None, None].repeat(h_nodes.shape[-1], -1),
+                axis=1)[:, 0]
+            return (dcache, vcache, acc.bonus, out_tokens, acc.accept_len,
+                    h_last)
+
+        return jax.jit(step, donate_argnums=(2, 3))
+
+    # ------------------------------------------------ staged plan pieces --
+    def _build_staged_parts(self, spec: DraftSpec, verify_v: int):
+        """Separate dispatches per stage (the naive pipeline of Fig. 9-a)."""
+        cfg = self.cfg
+        a_max = spec.depth + 1
+        temp = cfg.temperature
+        needs_paths = any(self.verifier.cfg.layer_mixer(i) == "ssm"
+                          for i in range(self.verifier.cfg.num_layers))
+
+        @jax.jit
+        def draft_fn(d_params, dcache, root_token, key):
+            return draft_tree(self.drafter, d_params, dcache, root_token,
+                              spec, temperature=temp,
+                              sample_key=key if (temp > 0 and cfg.sample_draft)
+                              else None)
+
+        @jax.jit
+        def verify_fn(v_params, vcache, res):
+            if cfg.prune and verify_v < spec.num_nodes:
+                sub, select_idx = pruning.topk_prune(res.tree, verify_v, a_max)
+            else:
+                sub, select_idx = res.tree, jnp.broadcast_to(
+                    jnp.arange(spec.num_nodes)[None], res.tree.tokens.shape)
+            b_idx = jnp.arange(sub.tokens.shape[0])[:, None]
+            sub_amask = res.amask[b_idx[..., None], select_idx[:, :, None],
+                                  select_idx[:, None, :]]
+            paths = (ancestor_paths(sub.parents, a_max) if needs_paths else None)
+            t_logits, scratch, h_nodes = self.verifier.tree_verify(
+                v_params, sub.tokens, sub.depths, sub_amask, vcache,
+                tree_paths=paths)
+            return sub, select_idx, t_logits, scratch, h_nodes
+
+        @jax.jit
+        def accept_fn(sub, t_logits, res, select_idx, key):
+            if cfg.resolve_accept() == "greedy":
+                return verify.greedy_accept(sub, t_logits, a_max)
+            b_idx = jnp.arange(sub.tokens.shape[0])[:, None]
+            tp = jax.nn.softmax(t_logits.astype(jnp.float32) / max(temp, 1e-6), -1)
+            dp = res.draft_probs[b_idx, select_idx]
+            return verify.stochastic_accept(sub, dp, tp, key, a_max,
+                                            max_children=spec.cand_k)
+
+        @jax.jit
+        def commit_fn(dcache, vcache, res, scratch, sub, select_idx,
+                      node_idx, accept_len, last_node, h_nodes):
+            vc = self.verifier.commit(vcache, scratch, node_idx, accept_len)
+            node_idx_orig = jnp.take_along_axis(select_idx, node_idx, axis=1)
+            dc = self.drafter.commit_scratch(dcache, res.scratch,
+                                             node_idx_orig, accept_len)
+            out_tokens = jnp.take_along_axis(sub.tokens, node_idx, axis=1)
+            h_last = jnp.take_along_axis(
+                h_nodes, last_node[:, None, None].repeat(h_nodes.shape[-1], -1),
+                axis=1)[:, 0]
+            return dc, vc, out_tokens, h_last
+
+        return {"draft": draft_fn, "verify": verify_fn, "accept": accept_fn,
+                "commit": commit_fn, "a_max": a_max}
+
+    def _run_staged(self, parts, dcache, vcache, root, key):
+        """One iteration under the staged plans, with the host boundary the
+        paper identifies: acceptance management on CPU + conditional logic."""
+        from repro.core import scheduler as sched
+        kd, ka = jax.random.split(key)
+        res = parts["draft"](self.d_params, dcache, root, kd)
+        sub, select_idx, t_logits, scratch, h_nodes = parts["verify"](
+            self.v_params, vcache, res)
+        if self.cfg.plan == "staged" and self.cfg.resolve_accept() == "greedy":
+            # host-side accept management (numpy) — the CPU bubble
+            tgt = np.asarray(jnp.argmax(t_logits, -1))
+            node_idx, accept_len, bonus, last = sched.greedy_accept_host(
+                np.asarray(sub.tokens), np.asarray(sub.parents),
+                np.asarray(sub.depths), np.asarray(sub.live), tgt,
+                parts["a_max"])
+            # conditional tail-draft decision happens here on the host in the
+            # naive pipeline; the fused plan eliminates this branch entirely
+            node_idx, accept_len = jnp.asarray(node_idx), jnp.asarray(accept_len)
+            bonus, last = jnp.asarray(bonus), jnp.asarray(last)
+        else:  # staged_device: accept on device, but sync to read the result
+            acc = parts["accept"](sub, t_logits, res, select_idx, ka)
+            node_idx, accept_len, bonus, last = acc
+            jax.block_until_ready(accept_len)  # control readback boundary
+        dcache, vcache, out_tokens, h_last = parts["commit"](
+            dcache, vcache, res, scratch, sub, select_idx, node_idx,
+            accept_len, last, h_nodes)
+        return dcache, vcache, bonus, out_tokens, accept_len, h_last
+
+    def _get_staged_parts(self, spec: DraftSpec, verify_v: int):
+        key = ("staged", spec, verify_v, self.cfg.resolve_accept(),
+               self.cfg.temperature, self.cfg.prune, self.cfg.sample_draft)
+        if key not in self._step_cache:
+            self._step_cache[key] = self._build_staged_parts(spec, verify_v)
+            self._compile_count += 1
+        return self._step_cache[key]
+
+    def _get_step(self, spec: DraftSpec, verify_v: int):
+        key = (spec, verify_v, self.cfg.plan, self.cfg.resolve_accept(),
+               self.cfg.temperature, self.cfg.prune, self.cfg.sample_draft)
+        if key not in self._step_cache:
+            self._step_cache[key] = self._build_step(spec, verify_v)
+            self._compile_count += 1
+        return self._step_cache[key]
+
+    # ----------------------------------------------------------- generate --
+    def generate(self, prompt: jax.Array, lengths: jax.Array, max_new: int,
+                 spec: Optional[DraftSpec] = None,
+                 verify_v: Optional[int] = None,
+                 key: Optional[jax.Array] = None,
+                 enc_feats: Optional[jax.Array] = None,
+                 dynamic_bucket: bool = False,
+                 ) -> Tuple[np.ndarray, GenStats]:
+        """Generate up to max_new tokens. If `spec` is None, buckets are
+        selected per-iteration (depth predictor + latency objective)."""
+        cfg = self.cfg
+        key = key if key is not None else jax.random.PRNGKey(0)
+        B = prompt.shape[0]
+        v_logits, vcache, dcache, h_last = self.prefill(prompt, lengths,
+                                                        enc_feats=enc_feats)
+        key, sk = jax.random.split(key)
+        root = self._sample(v_logits, sk)
+        out = [np.asarray(root)[:, None]]
+        produced = 1
+        stats = GenStats()
+        base_compiles = self._compile_count
+
+        while produced < max_new:
+            if spec is not None:
+                use_spec, use_v = spec, (verify_v or spec.num_nodes)
+            else:
+                use_spec, use_v = self._select(h_last)
+            key, sk = jax.random.split(key)
+            t0 = time.perf_counter()
+            if cfg.plan == "fused":
+                step = self._get_step(use_spec, use_v)
+                (dcache, vcache, bonus, toks, alen, h_last) = step(
+                    self.d_params, self.v_params, dcache, vcache, root, sk)
+            else:
+                parts = self._get_staged_parts(use_spec, use_v)
+                (dcache, vcache, bonus, toks, alen, h_last) = self._run_staged(
+                    parts, dcache, vcache, root, sk)
+            alen_np = np.asarray(alen)
+            t1 = time.perf_counter()
+            stats.iter_times.append(t1 - t0)
+            stats.accept_lens.append(alen_np)
+            stats.buckets.append((use_spec.depth, use_spec.width, use_v))
+            toks_np = np.asarray(toks)
+            # emit accepted drafts (chain minus the already-emitted root)
+            emit = np.full((B, toks_np.shape[1]), -1, np.int64)
+            for b in range(B):
+                emit[b, : alen_np[b] - 1] = toks_np[b, 1: alen_np[b]]
+            out.append(emit)
+            out.append(np.asarray(bonus)[:, None])
+            root = bonus
+            produced += int(alen_np.max())
+
+        stats.compiles = self._compile_count - base_compiles
+        seq = np.concatenate(out, axis=1)
+        return seq, stats
+
+    def _select(self, h_last) -> Tuple[DraftSpec, int]:
+        if self.predictor_params is not None:
+            d = int(np.asarray(predict_depth(self.predictor_params, h_last,
+                                             self.depth_options)).max())
+        else:
+            d = self.depth_options[-1]
+        bucket = select_bucket(self.buckets, d, self.profile,
+                               objective=self.cfg.objective)
+        return egt_spec(bucket.depth, bucket.width), bucket.verify
+
+    def _sample(self, logits, key):
+        if self.cfg.temperature == 0.0:
+            return jnp.argmax(logits, -1).astype(jnp.int32)
+        return jax.random.categorical(
+            key, logits.astype(jnp.float32) / self.cfg.temperature, -1
+        ).astype(jnp.int32)
+
+
+# --------------------------------------------------------------- baseline --
+def generate_autoregressive(model: Model, params, prompt: jax.Array,
+                            lengths: jax.Array, max_new: int,
+                            temperature: float = 0.0,
+                            key: Optional[jax.Array] = None,
+                            max_target_len: int = 512,
+                            enc_feats: Optional[jax.Array] = None,
+                            ) -> Tuple[np.ndarray, Dict[str, float]]:
+    """Plain AR decoding baseline (one jitted decode step, replayed)."""
+    key = key if key is not None else jax.random.PRNGKey(0)
+    B = prompt.shape[0]
+    cache = init_cache(model.cfg, B, max_target_len)
+    logits, cache, _ = model.prefill(params, prompt, lengths, cache,
+                                     enc_feats=enc_feats)
+
+    decode = jax.jit(lambda p, t, c: model.decode(p, t, c),
+                     donate_argnums=(2,))
+
+    def sample(lg, k):
+        if temperature == 0.0:
+            return jnp.argmax(lg, -1).astype(jnp.int32)
+        return jax.random.categorical(
+            k, lg.astype(jnp.float32) / temperature, -1).astype(jnp.int32)
+
+    toks = []
+    key, sk = jax.random.split(key)
+    tok = sample(logits, sk)
+    toks.append(np.asarray(tok))
+    t0 = time.perf_counter()
+    for _ in range(max_new - 1):
+        logits, cache, _ = decode(params, tok, cache)
+        key, sk = jax.random.split(key)
+        tok = sample(logits, sk)
+        toks.append(np.asarray(tok))
+    dt = time.perf_counter() - t0
+    seq = np.stack(toks, axis=1)
+    return seq, {"time_s": dt, "tokens": seq.shape[1] * B,
+                 "tpot_ms": 1e3 * dt / max(max_new - 1, 1)}

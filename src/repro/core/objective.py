@@ -1,0 +1,90 @@
+"""Latency-aware speedup objective (paper §4.1, Eq. 3).
+
+Speedup(⟨W_d, D_d, W_v⟩) = AAL · T_verify(1)
+                           / (T_draft(1) + D_d · T_draft(W_d)
+                              + T_verify(W_v) + overhead)
+
+T_draft/T_verify come from hardware profiles (the latency-vs-width curve of
+Fig. 5), measured once per (model, runtime) pair by the benchmark harness and
+interpolated piecewise-linearly. AAL is estimated from the tree's path
+probabilities: E[accepted] ≈ 1 + Σ_kept P(root->node path all accepted),
+using drafter probabilities as the acceptance surrogate.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from dataclasses import dataclass, field
+from typing import Dict, List, Sequence, Tuple
+
+import numpy as np
+
+
+@dataclass
+class LatencyProfile:
+    """Piecewise-linear latency models for one (drafter, verifier, runtime)."""
+    verify_widths: List[int]
+    verify_times: List[float]     # seconds per verifier call at width W
+    draft_widths: List[int]
+    draft_times: List[float]      # seconds per drafter call at width W
+    step_overhead: float = 0.0    # fixed per-iteration runtime cost (s)
+
+    def t_verify(self, w) -> float:
+        return float(np.interp(w, self.verify_widths, self.verify_times))
+
+    def t_draft(self, w) -> float:
+        return float(np.interp(w, self.draft_widths, self.draft_times))
+
+    def save(self, path: str):
+        with open(path, "w") as f:
+            json.dump(dataclasses.asdict(self), f, indent=2)
+
+    @classmethod
+    def load(cls, path: str) -> "LatencyProfile":
+        with open(path) as f:
+            return cls(**json.load(f))
+
+    @classmethod
+    def synthetic(cls, base_verify: float = 1.0, slope: float = 0.01,
+                  draft_frac: float = 0.1, saturate_at: int = 32,
+                  overhead: float = 0.05) -> "LatencyProfile":
+        """An analytic profile with the paper's Fig.5 shape: flat while the
+        chip is memory-bound, then linearly increasing once compute saturates."""
+        widths = [1, 2, 4, 8, 16, 32, 64, 128, 256]
+        def curve(base):
+            return [base * (1.0 + slope * max(0, w - saturate_at)) for w in widths]
+        return cls(widths, curve(base_verify), widths,
+                   curve(base_verify * draft_frac), overhead)
+
+
+def estimate_aal(path_probs_kept: np.ndarray) -> float:
+    """E[accept_len] ≈ 1 (root) + Σ kept non-root path probabilities."""
+    return 1.0 + float(np.sum(path_probs_kept))
+
+
+def speedup_objective(profile: LatencyProfile, aal: float, depth: int,
+                      width: int, verify_w: int) -> float:
+    """Eq. 3 with explicit root-draft and runtime overhead terms."""
+    t_spec = (profile.t_draft(1) + depth * profile.t_draft(width)
+              + profile.t_verify(verify_w) + profile.step_overhead)
+    return aal * profile.t_verify(1) / t_spec
+
+
+def aal_objective(aal: float, *_args, **_kw) -> float:
+    """The naive objective prior work maximizes (ablation baseline)."""
+    return aal
+
+
+def choose_config(profile: LatencyProfile,
+                  candidates: Sequence[Tuple[int, int, int]],
+                  aal_estimates: Dict[Tuple[int, int, int], float],
+                  objective: str = "speedup") -> Tuple[int, int, int]:
+    """Pick ⟨D, W, V⟩ maximizing the objective over a candidate bucket set."""
+    best, best_v = None, -np.inf
+    for (d, w, v) in candidates:
+        aal = aal_estimates[(d, w, v)]
+        val = (speedup_objective(profile, aal, d, w, v)
+               if objective == "speedup" else aal)
+        if val > best_v:
+            best, best_v = (d, w, v), val
+    return best

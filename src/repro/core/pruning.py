@@ -1,0 +1,103 @@
+"""Verification-width pruning (paper §4.2): extract the value-maximal subtree
+of size W_verify from the drafted tree.
+
+Because a child's path probability never exceeds its parent's, the top-V
+nodes by path probability are automatically parent-closed, so the maximum-
+value subtree reduces to a (static-shape) top-k — this is the in-graph fast
+path. The paper's bottom-up dynamic program is implemented as the host-side
+reference (`dp_prune_reference`) and the equivalence is property-tested.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.tree import TreeArrays, gather_subtree
+
+
+def topk_prune(tree: TreeArrays, v: int, max_depth: int
+               ) -> Tuple[TreeArrays, jax.Array]:
+    """Select the V best nodes (by path log-prob) as a re-indexed subtree.
+
+    Root is always kept (its path_lp is 0 >= all others). Returns
+    (subtree, select_idx [B, V] ascending).
+    """
+    scores = jnp.where(tree.live, tree.path_lp, -jnp.inf)
+    scores = scores.at[:, 0].set(jnp.inf)  # force root
+    _, idx = jax.lax.top_k(scores, v)
+    select_idx = jnp.sort(idx, axis=-1)    # parents stay before children
+    sub, _ = gather_subtree(tree, select_idx, v, max_depth)
+    return sub, select_idx
+
+
+def expected_aal_topv(tree: TreeArrays, v: int) -> jax.Array:
+    """[B] estimated AAL if the top-V subtree is verified."""
+    scores = jnp.where(tree.live, tree.path_lp, -jnp.inf)
+    scores = scores.at[:, 0].set(0.0)
+    top, _ = jax.lax.top_k(scores, v)
+    probs = jnp.exp(jnp.where(jnp.isfinite(top), top, -jnp.inf))
+    # root contributes prob 1; AAL = sum of kept path probs (root incl.)
+    return probs.sum(-1)
+
+
+def dp_prune_reference(parents: np.ndarray, path_probs: np.ndarray,
+                       v: int) -> Tuple[np.ndarray, float]:
+    """Exact bottom-up tree-knapsack DP (the paper's formulation).
+
+    Maximize Σ path_probs over parent-closed subtrees containing the root
+    with at most v nodes. Returns (selected node indices, value).
+    """
+    n = len(parents)
+    children = [[] for _ in range(n)]
+    for i in range(1, n):
+        if parents[i] >= 0:
+            children[parents[i]].append(i)
+
+    memo = {}
+
+    # dp[node] = list over size s of (best value, choice) using exactly s
+    # nodes from node's subtree, node included (size >= 1)
+    def solve(node):
+        if node in memo:
+            return memo[node]
+        base = np.full(v + 1, -np.inf)
+        base[1] = path_probs[node]
+        picks = {1: []}  # size -> list of (child, child_size)
+        choice = {s: [] for s in range(v + 1)}
+        choice[1] = []
+        for c in children[node]:
+            c_val, c_choice = solve(c)
+            new = base.copy()
+            new_choice = dict(choice)
+            for s in range(1, v + 1):
+                if not np.isfinite(base[s]):
+                    continue
+                for cs in range(1, v + 1 - s):
+                    if not np.isfinite(c_val[cs]):
+                        continue
+                    if base[s] + c_val[cs] > new[s + cs]:
+                        new[s + cs] = base[s] + c_val[cs]
+                        new_choice[s + cs] = choice[s] + [(c, cs)]
+            base, choice = new, new_choice
+        memo[node] = (base, choice)
+        return base, choice
+
+    import sys
+    sys.setrecursionlimit(10000)
+    val, choice = solve(0)
+    best_s = int(np.nanargmax(np.where(np.isfinite(val), val, -np.inf)))
+
+    # reconstruct
+    selected = []
+
+    def collect(node, size):
+        selected.append(node)
+        _, ch = solve(node)
+        for c, cs in ch[size]:
+            collect(c, cs)
+
+    collect(0, best_s)
+    return np.sort(np.array(selected)), float(val[best_s])

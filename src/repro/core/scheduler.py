@@ -1,0 +1,119 @@
+"""Stage-based scheduling runtime (paper §5).
+
+The speculation iteration decomposes into stages
+    head-draft -> grow(D) -> prune -> verify -> accept -> tail-draft -> commit
+with a host/device boundary wherever a stage's *control* depends on a prior
+stage's *values* (the CPU-logic bubbles of Fig. 9-a). Execution plans differ
+in where those boundaries sit:
+
+  * staged        — draft | verify | (host) accept | commit as separate
+                    dispatches; acceptance runs on the host (numpy) and a
+                    python conditional decides the tail draft, exactly the
+                    naive pipeline the paper starts from.
+  * staged_device — acceptance stays on device but commit is a separate
+                    dispatch (one host sync to read accept_len).
+  * fused         — the single megastep: all stages in one graph, the
+                    conditional tail/head drafts replaced by ahead-of-time
+                    superset computation (§5.1); zero intra-iteration syncs.
+
+`search_plan` is the profile-guided offline search of §5.2: measure each
+plan's per-iteration latency on a calibration prompt and pick the argmin
+(the dependency graph is small, so exhaustive grid search is exact).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PLANS = ("staged", "staged_device", "fused")
+
+
+# ----------------------------------------------------- host-side accept ----
+def greedy_accept_host(tokens: np.ndarray, parents: np.ndarray,
+                       depths: np.ndarray, live: np.ndarray,
+                       tgt_argmax: np.ndarray, a_max: int
+                       ) -> Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+    """Numpy mirror of verify.greedy_accept (the 'CPU accept management'
+    stage of the naive pipeline). Arrays are [B, V]."""
+    B, V = tokens.shape
+    node_idx = np.zeros((B, a_max), np.int32)
+    accept_len = np.ones((B,), np.int32)
+    bonus = np.zeros((B,), np.int32)
+    last = np.zeros((B,), np.int32)
+    for b in range(B):
+        cur = 0
+        chain = [0]
+        while True:
+            want = tgt_argmax[b, cur]
+            nxt = -1
+            for i in range(V):
+                if live[b, i] and parents[b, i] == cur and tokens[b, i] == want:
+                    nxt = i
+                    break
+            if nxt < 0 or len(chain) >= a_max:
+                break
+            cur = nxt
+            chain.append(cur)
+        accept_len[b] = len(chain)
+        bonus[b] = tgt_argmax[b, cur]
+        last[b] = cur
+        node_idx[b, :len(chain)] = chain
+        node_idx[b, len(chain):] = cur
+    return node_idx, accept_len, bonus, last
+
+
+# ------------------------------------------------------------- profiling ----
+@dataclass
+class StageProfile:
+    per_stage: Dict[str, float]          # measured stage latencies (s)
+    plan_times: Dict[str, float]         # measured per-iteration latency
+
+    def predicted(self, dispatch_overhead: float) -> Dict[str, float]:
+        """Analytic plan model: staged pays every boundary, fused pays one."""
+        s = self.per_stage
+        return {
+            "staged": (s.get("draft", 0) + s.get("verify", 0)
+                       + s.get("host_accept", 0) + s.get("commit", 0)
+                       + 4 * dispatch_overhead),
+            "staged_device": (s.get("draft", 0) + s.get("verify", 0)
+                              + s.get("accept_commit", 0)
+                              + 3 * dispatch_overhead),
+            "fused": s.get("megastep", 0) + dispatch_overhead,
+        }
+
+
+def time_call(fn: Callable, *args, repeat: int = 5, warmup: int = 2) -> float:
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    ts = []
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def search_plan(engine, prompt, lengths, *, spec, verify_v,
+                iters: int = 16) -> Tuple[str, StageProfile]:
+    """Profile every execution plan on a calibration prompt and return the
+    best plan plus the measured profile (offline, per §5.2)."""
+    times: Dict[str, float] = {}
+    orig_plan = engine.cfg.plan
+    for plan in PLANS:
+        engine.cfg.plan = plan
+        _, stats = engine.generate(prompt, lengths, iters, spec=spec,
+                                   verify_v=verify_v)
+        # drop the first (compile) iteration
+        its = stats.iter_times[1:] or stats.iter_times
+        times[plan] = float(np.median(its))
+    engine.cfg.plan = orig_plan
+    prof = StageProfile(per_stage={}, plan_times=times)
+    best = min(times, key=times.get)
+    return best, prof

@@ -1,0 +1,131 @@
+"""Static baseline tree structures (the paper's comparison set, Fig. 11).
+
+* chain        — sequence speculative decoding (Leviathan).
+* k-ary        — SpecInfer top-K expansion at every node.
+* sequoia      — dataset-adaptive static tree: given rank-conditional
+                 acceptance probabilities measured on a calibration corpus,
+                 greedily grow the tree that maximizes expected AAL under a
+                 node budget (Sequoia's dynamic program reduces to this
+                 greedy under positional independence, which is the
+                 assumption its profiling makes).
+
+All return (parents, expand_rank) templates consumable by
+``egt.template_spec`` — the same static-shape machinery as EGT, so every
+baseline enjoys identical runtime treatment (compiled bucket replay) and
+comparisons isolate the *tree structure*.
+"""
+from __future__ import annotations
+
+import heapq
+from typing import List, Sequence, Tuple
+
+import numpy as np
+
+
+def chain(depth: int) -> Tuple[np.ndarray, np.ndarray]:
+    parents = np.arange(-1, depth - 1, dtype=np.int32)
+    return parents, np.zeros(depth, np.int32)
+
+
+def kary(k: int, depth: int) -> Tuple[np.ndarray, np.ndarray]:
+    parents: List[int] = [-1]
+    ranks: List[int] = [0]
+    level = [0]
+    nid = 1
+    for _ in range(depth):
+        nxt = []
+        for p in level:
+            for r in range(k):
+                parents.append(p)
+                ranks.append(r)
+                nxt.append(nid)
+                nid += 1
+        level = nxt
+    return np.array(parents, np.int32), np.array(ranks, np.int32)
+
+
+def sequoia(rank_accept: Sequence[float], budget: int,
+            max_depth: int = 64) -> Tuple[np.ndarray, np.ndarray]:
+    """Greedy expected-AAL-maximal static tree under a node budget.
+
+    rank_accept[r] = P(candidate of rank r is accepted | parent accepted),
+    estimated by profiling the drafter/verifier pair on an in-domain corpus
+    (see ``measure_rank_accept``). Root occupies slot 0 with prob 1.
+    """
+    pa = np.asarray(rank_accept, np.float64)
+    parents = [-1]
+    ranks = [0]
+    depth = [0]
+    probs = [1.0]
+    # heap of candidate expansions: (-path_prob, parent, rank)
+    heap: List[Tuple[float, int, int]] = []
+
+    def push(parent: int):
+        if depth[parent] + 1 > max_depth:
+            return
+        for r in range(len(pa)):
+            p = probs[parent] * pa[r]
+            if p > 0:
+                heapq.heappush(heap, (-p, parent, r))
+
+    push(0)
+    used = set()
+    while len(parents) < budget and heap:
+        negp, parent, r = heapq.heappop(heap)
+        if (parent, r) in used:
+            continue
+        used.add((parent, r))
+        nid = len(parents)
+        parents.append(parent)
+        ranks.append(r)
+        depth.append(depth[parent] + 1)
+        probs.append(-negp)
+        push(nid)
+    return np.array(parents, np.int32), np.array(ranks, np.int32)
+
+
+def expected_aal(parents: np.ndarray, ranks: np.ndarray,
+                 rank_accept: Sequence[float]) -> float:
+    """Analytic E[AAL] of a template under positional independence."""
+    pa = np.asarray(rank_accept, np.float64)
+    probs = np.ones(len(parents))
+    for i in range(1, len(parents)):
+        probs[i] = probs[parents[i]] * pa[min(ranks[i], len(pa) - 1)]
+    return float(probs.sum())
+
+
+def measure_rank_accept(drafter, d_params, verifier, v_params, prompts,
+                        lengths, *, k: int = 8, iters: int = 24,
+                        key=None) -> np.ndarray:
+    """Profile P(rank-r draft == verifier greedy) on a calibration corpus.
+
+    Decodes with the verifier (greedy) and at each step asks the drafter for
+    its top-k candidates; rank r scores a hit when candidate r matches the
+    verifier's next token. This is the Sequoia-style dataset profiling pass.
+    """
+    import jax
+    import jax.numpy as jnp
+    from repro.models.cache import init_cache
+
+    B = prompts.shape[0]
+    L = int(lengths.max()) + iters + 8
+    vcache = init_cache(verifier.cfg, B, L)
+    dcache = init_cache(drafter.cfg, B, L)
+    v_logits, vcache, _ = verifier.prefill(v_params, prompts, lengths, vcache)
+    d_logits, dcache, _ = drafter.prefill(d_params, prompts, lengths, dcache)
+
+    v_step = jax.jit(lambda p, t, c: verifier.decode(p, t, c))
+    d_step = jax.jit(lambda p, t, c: drafter.decode(p, t, c))
+
+    hits = np.zeros(k, np.float64)
+    total = 0
+    tok = jnp.argmax(v_logits, -1).astype(jnp.int32)
+    for _ in range(iters):
+        # drafter's top-k candidates for the SAME position `tok` fills
+        _, d_top = jax.lax.top_k(d_logits, k)
+        hits += np.asarray(d_top == tok[:, None]).sum(0)     # [B, k] hits
+        total += B
+        v_logits, vcache, _ = v_step(v_params, tok, vcache)
+        d_logits, dcache, _ = d_step(d_params, tok, dcache)
+        tok = jnp.argmax(v_logits, -1).astype(jnp.int32)
+    return hits / max(total, 1)

@@ -1,0 +1,155 @@
+"""TokenTree: the static-shape speculation-tree abstraction (paper §6).
+
+A tree over N slots is encoded entirely in *data* (never in shapes):
+    tokens   [B, N] int32
+    parents  [B, N] int32   (-1 for the root at slot 0; parent < child)
+    depths   [B, N] int32   (root = 0)
+    path_lp  [B, N] f32     cumulative drafter log-prob of the root->node path
+    live     [B, N] bool    slot is populated
+
+All structure helpers are pure jnp and jit-compatible; the equal-growth
+invariant (W new nodes per step) keeps every shape static across decoding
+iterations, which is what lets the whole speculation step compile once and
+be replayed — the EGT/static-runtime bridge of the paper.
+"""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class TreeArrays(NamedTuple):
+    tokens: jax.Array    # [B, N]
+    parents: jax.Array   # [B, N]
+    depths: jax.Array    # [B, N]
+    path_lp: jax.Array   # [B, N]
+    live: jax.Array      # [B, N]
+
+
+def empty_tree(batch: int, n: int) -> TreeArrays:
+    return TreeArrays(
+        tokens=jnp.zeros((batch, n), jnp.int32),
+        parents=jnp.full((batch, n), -1, jnp.int32),
+        depths=jnp.zeros((batch, n), jnp.int32),
+        path_lp=jnp.full((batch, n), -jnp.inf, jnp.float32),
+        live=jnp.zeros((batch, n), bool),
+    )
+
+
+# --------------------------------------------------------------- masks ----
+def ancestor_mask(parents: jax.Array, max_depth: int) -> jax.Array:
+    """[B?, N, N] bool: mask[i, j] = j is an ancestor of i or i itself.
+
+    parents: [..., N] with parent index < node index; -1 = no parent.
+    """
+    n = parents.shape[-1]
+    eye = jnp.broadcast_to(jnp.eye(n, dtype=bool), parents.shape + (n,))
+
+    def step(mask, _):
+        # mask[i] |= mask[parent[i]]
+        safe = jnp.clip(parents, 0, n - 1)
+        parent_rows = jnp.take_along_axis(
+            mask, safe[..., None].repeat(n, -1), axis=-2)
+        upd = jnp.where((parents >= 0)[..., None], mask | parent_rows, mask)
+        return upd, None
+
+    mask, _ = jax.lax.scan(step, eye, None, length=max_depth)
+    return mask
+
+
+def node_depths(parents: jax.Array, max_depth: int) -> jax.Array:
+    """[..., N] depth of each node (root = 0)."""
+    n = parents.shape[-1]
+    d = jnp.zeros(parents.shape, jnp.int32)
+
+    def step(d, _):
+        safe = jnp.clip(parents, 0, n - 1)
+        pd = jnp.take_along_axis(d, safe, axis=-1)
+        return jnp.where(parents >= 0, pd + 1, 0), None
+
+    d, _ = jax.lax.scan(step, d, None, length=max_depth)
+    return d
+
+
+def ancestor_paths(parents: jax.Array, max_len: int) -> jax.Array:
+    """[..., N, max_len] root->node chains, -1 padded at the FRONT.
+
+    path[i, max_len-1] == i; path[i, max_len-1-d] == d-th ancestor.
+    """
+    n = parents.shape[-1]
+    idx = jnp.broadcast_to(jnp.arange(n), parents.shape)
+    cols = [idx]
+    cur = idx
+    for _ in range(max_len - 1):
+        safe = jnp.clip(cur, 0, n - 1)
+        cur = jnp.where(cur >= 0, jnp.take_along_axis(parents, safe, axis=-1), -1)
+        cols.append(cur)
+    # cols[t] = t-th ancestor (0th = self); reverse into front-padded layout
+    return jnp.stack(cols[::-1], axis=-1)
+
+
+def chain_template(depth: int) -> Dict[str, jnp.ndarray]:
+    """Sequence speculation = a linear chain of `depth` nodes."""
+    parents = jnp.arange(-1, depth - 1, dtype=jnp.int32)
+    return {"parents": parents, "expand_rank": jnp.zeros((depth,), jnp.int32)}
+
+
+def kary_template(k: int, depth: int) -> Dict[str, jnp.ndarray]:
+    """SpecInfer-style full k-ary tree template (N = (k^(d+1)-1)/(k-1))."""
+    parents = [-1]
+    ranks = [0]
+    level = [0]
+    nid = 1
+    for _ in range(depth):
+        nxt = []
+        for p in level:
+            for r in range(k):
+                parents.append(p)
+                ranks.append(r)
+                nxt.append(nid)
+                nid += 1
+        level = nxt
+    return {"parents": jnp.array(parents, jnp.int32),
+            "expand_rank": jnp.array(ranks, jnp.int32)}
+
+
+def template_steps(parents: jnp.ndarray) -> Tuple[Tuple[int, ...], jnp.ndarray]:
+    """Group template nodes by depth: returns (#nodes per depth, depths)."""
+    import numpy as np
+    p = np.asarray(parents)
+    d = np.zeros(len(p), np.int32)
+    for i in range(1, len(p)):
+        d[i] = d[p[i]] + 1
+    counts = tuple(int((d == lvl).sum()) for lvl in range(d.max() + 1))
+    return counts, jnp.array(d)
+
+
+def gather_subtree(tree: TreeArrays, select_idx: jax.Array, v: int,
+                   max_depth: int) -> Tuple[TreeArrays, jax.Array]:
+    """Extract the V selected nodes as a re-indexed tree.
+
+    select_idx: [B, V] node indices sorted ascending (parent-closed: for
+    every selected node its parent is selected — guaranteed by monotone
+    path probabilities, see pruning.py). Returns (subtree, old->new map).
+    """
+    b, n = tree.tokens.shape
+    b_idx = jnp.arange(b)[:, None]
+    # old -> new index map (N entries; unselected -> -1)
+    remap = jnp.full((b, n), -1, jnp.int32)
+    remap = remap.at[b_idx, select_idx].set(
+        jnp.broadcast_to(jnp.arange(v), (b, v)))
+    old_parents = tree.parents[b_idx, select_idx]          # [B, V]
+    new_parents = jnp.where(
+        old_parents >= 0,
+        jnp.take_along_axis(remap, jnp.clip(old_parents, 0, n - 1), axis=1),
+        -1)
+    sub = TreeArrays(
+        tokens=tree.tokens[b_idx, select_idx],
+        parents=new_parents,
+        depths=tree.depths[b_idx, select_idx],
+        path_lp=tree.path_lp[b_idx, select_idx],
+        live=tree.live[b_idx, select_idx],
+    )
+    return sub, remap

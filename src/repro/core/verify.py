@@ -1,0 +1,121 @@
+"""Tree verification & acceptance.
+
+Greedy mode is exactly lossless versus greedy autoregressive decoding
+(property-tested). Stochastic mode implements SpecInfer-style multi-branch
+rejection sampling: at each node, children are tried in slot order; on
+rejection the target residual is updated p <- norm(max(p - q, 0)). The bonus
+token is sampled from the final residual, so every iteration commits at
+least one target-distributed token.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.tree import TreeArrays, ancestor_mask, ancestor_paths
+
+
+class AcceptResult(NamedTuple):
+    node_idx: jax.Array    # [B, A_max] accepted chain, front-aligned (root=0)
+    accept_len: jax.Array  # [B] >= 1
+    bonus: jax.Array       # [B] next confirmed token (target-distributed)
+    last_node: jax.Array   # [B] deepest accepted node slot
+
+
+def _chain_from_last(parents: jax.Array, last: jax.Array, a_max: int,
+                     accept_len: jax.Array) -> jax.Array:
+    """Front-aligned root->last chain as [B, A_max] (pad trail with last)."""
+    paths = ancestor_paths(parents, a_max)                 # [B, N, A_max]
+    b_idx = jnp.arange(parents.shape[0])
+    chain = paths[b_idx, last]                             # [B, A_max], front-pad -1
+    n_pad = a_max - accept_len
+    # roll left per batch to front-align
+    pos = (jnp.arange(a_max)[None, :] + n_pad[:, None]) % a_max
+    chain = jnp.take_along_axis(chain, pos, axis=1)
+    # pad tail (beyond accept_len) with the last node (harmless: commit masks)
+    chain = jnp.where(jnp.arange(a_max)[None] < accept_len[:, None],
+                      chain, last[:, None])
+    return chain
+
+
+def greedy_accept(tree: TreeArrays, target_logits: jax.Array, a_max: int
+                  ) -> AcceptResult:
+    """tree: V-node pruned subtree; target_logits: [B, V, Vocab]."""
+    B, V = tree.tokens.shape
+    tgt = jnp.argmax(target_logits, axis=-1).astype(jnp.int32)  # [B, V]
+    b_idx = jnp.arange(B)[:, None]
+    parent_safe = jnp.clip(tree.parents, 0, V - 1)
+    ok = tree.tokens == tgt[b_idx, parent_safe]
+    ok = jnp.where(tree.parents >= 0, ok, True) & tree.live      # root ok
+
+    amask = ancestor_mask(tree.parents, a_max)                   # [B, V, V]
+    accepted = ~jnp.any(amask & ~ok[:, None, :], axis=-1) & tree.live
+
+    depth_score = jnp.where(accepted, tree.depths, -1)
+    last = jnp.argmax(depth_score, axis=-1).astype(jnp.int32)    # [B]
+    accept_len = depth_score[jnp.arange(B), last] + 1            # root depth 0
+    bonus = tgt[jnp.arange(B), last]
+    chain = _chain_from_last(tree.parents, last, a_max, accept_len)
+    return AcceptResult(chain, accept_len.astype(jnp.int32), bonus, last)
+
+
+def _sample_from(probs: jax.Array, key: jax.Array) -> jax.Array:
+    return jax.random.categorical(key, jnp.log(jnp.maximum(probs, 1e-30)), axis=-1)
+
+
+def stochastic_accept(tree: TreeArrays, draft_probs: jax.Array,
+                      target_probs: jax.Array, key: jax.Array, a_max: int,
+                      max_children: int) -> AcceptResult:
+    """Multi-branch rejection sampling (SpecInfer [31], Alg. in §Related).
+
+    draft_probs: [B, V, Vocab] drafter dist at each subtree node;
+    target_probs: [B, V, Vocab] verifier dist at each node (temperature-
+    adjusted). Root (slot 0) is confirmed by construction.
+    """
+    B, V = tree.tokens.shape
+    vocab = target_probs.shape[-1]
+    b_r = jnp.arange(B)
+
+    # children of each node ordered by slot: [B, V, max_children]
+    slot = jnp.arange(V)
+    is_child = (tree.parents[:, None, :] == slot[None, :, None]) & tree.live[:, None, :]
+    child_order = jnp.argsort(~is_child, axis=-1)[..., :max_children]
+    has_child = jnp.take_along_axis(is_child, child_order, axis=-1)
+    children = jnp.where(has_child, child_order, -1)       # [B, V, C]
+
+    cur = jnp.zeros((B,), jnp.int32)
+    done = jnp.zeros((B,), bool)
+    res = target_probs[:, 0]                               # residual at root
+    keys = jax.random.split(key, a_max * max_children + 1)
+    ki = 0
+    for _level in range(a_max - 1):
+        moved = jnp.zeros((B,), bool)
+        level_children = children[b_r, cur]                # [B, C]
+        q_cur = draft_probs[b_r, cur]                      # [B, Vocab]
+        for r in range(max_children):
+            c_slot = level_children[:, r]
+            valid = (c_slot >= 0) & ~done & ~moved
+            c_safe = jnp.clip(c_slot, 0, V - 1)
+            tok = tree.tokens[b_r, c_safe]
+            p_tok = res[b_r, tok]
+            q_tok = q_cur[b_r, tok]
+            ratio = p_tok / jnp.maximum(q_tok, 1e-30)
+            u = jax.random.uniform(keys[ki], (B,)); ki += 1
+            accept = valid & (u <= ratio)
+            reject = valid & ~accept
+            cur = jnp.where(accept, c_safe, cur)
+            moved = moved | accept
+            # residual update on rejection: p <- norm(max(p - q, 0))
+            new_res = jnp.maximum(res - q_cur, 0.0)
+            new_res = new_res / jnp.maximum(new_res.sum(-1, keepdims=True), 1e-30)
+            res = jnp.where(reject[:, None], new_res, res)
+        # descend: residual at the new node restarts from the target dist
+        res = jnp.where(moved[:, None], target_probs[b_r, cur], res)
+        done = done | ~moved
+
+    bonus = _sample_from(res, keys[ki]).astype(jnp.int32)
+    accept_len = tree.depths[b_r, cur] + 1
+    chain = _chain_from_last(tree.parents, cur, a_max, accept_len)
+    return AcceptResult(chain, accept_len.astype(jnp.int32), bonus, cur)

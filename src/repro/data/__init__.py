@@ -1,0 +1,2 @@
+from repro.data.pipeline import DataConfig, MarkovSource, batches, prompts
+from repro.data.tokenizer import ByteTokenizer

@@ -1,0 +1,27 @@
+"""Byte-level tokenizer (no external vocab files needed offline)."""
+from __future__ import annotations
+
+from typing import List
+
+import numpy as np
+
+PAD_ID = 0
+BOS_ID = 1
+EOS_ID = 2
+BYTE_OFFSET = 3
+
+
+class ByteTokenizer:
+    """ids = raw bytes + 3 specials. vocab_size = 259 (pad to model vocab)."""
+
+    vocab_size = 256 + BYTE_OFFSET
+
+    def encode(self, text: str, add_bos: bool = True) -> np.ndarray:
+        ids = [BOS_ID] if add_bos else []
+        ids += [b + BYTE_OFFSET for b in text.encode("utf-8")]
+        return np.array(ids, np.int32)
+
+    def decode(self, ids) -> str:
+        bs = bytes(int(i) - BYTE_OFFSET for i in ids
+                   if int(i) >= BYTE_OFFSET)
+        return bs.decode("utf-8", errors="replace")

@@ -1,0 +1,88 @@
+"""Pallas TPU kernel: causal flash attention for prefill/train.
+
+Grid = (batch*heads, q-blocks, kv-blocks) with the kv axis sequential;
+online-softmax state lives in VMEM scratch. Fully-masked kv blocks above the
+causal diagonal are skipped with pl.when (compute only the lower wedge —
+this is the structural fix for the 2x causal FLOP waste of a naive mask,
+see EXPERIMENTS.md §Perf).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            scale: float, n_kb: int, block_q: int, block_k: int):
+    qb = pl.program_id(1)
+    kb = pl.program_id(2)
+
+    @pl.when(kb == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    # causal wedge: kv block fully above the diagonal contributes nothing
+    @pl.when(kb * block_k <= qb * block_q + block_q - 1)
+    def _compute():
+        q = q_ref[0, :, 0, :].astype(jnp.float32)     # [bq, dh]
+        k = k_ref[0, :, 0, :].astype(jnp.float32)     # [bk, dh]
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+        q_pos = qb * block_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        k_pos = kb * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(q_pos >= k_pos, s, NEG_INF)
+
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev[:, 0], s.max(-1))[:, None]
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)
+        l_scr[...] = l_scr[...] * alpha + p.sum(-1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * alpha + jnp.dot(
+            p, v, preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    @pl.when(kb == n_kb - 1)
+    def _done():
+        o_ref[0, :, 0, :] = (acc_scr[...] /
+                             jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_q", "block_k", "interpret"))
+def flash_prefill(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  block_q: int = 256, block_k: int = 256,
+                  interpret: bool = True) -> jax.Array:
+    """Causal attention. q/k/v: [B, S, H, dh] (kv head-repeated). -> [B,S,H,dh]."""
+    B, S, H, dh = q.shape
+    bq, bk = min(block_q, S), min(block_k, S)
+    assert S % bq == 0 and S % bk == 0, (S, bq, bk)
+    n_qb, n_kb = S // bq, S // bk
+    scale = 1.0 / (dh ** 0.5)
+
+    kernel = functools.partial(_kernel, scale=scale, n_kb=n_kb,
+                               block_q=bq, block_k=bk)
+    return pl.pallas_call(
+        kernel,
+        grid=(B * H, n_qb, n_kb),
+        in_specs=[
+            pl.BlockSpec((1, bq, 1, dh), lambda bh, qb, kb: (bh // H, qb, bh % H, 0)),
+            pl.BlockSpec((1, bk, 1, dh), lambda bh, qb, kb: (bh // H, kb, bh % H, 0)),
+            pl.BlockSpec((1, bk, 1, dh), lambda bh, qb, kb: (bh // H, kb, bh % H, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, 1, dh),
+                               lambda bh, qb, kb: (bh // H, qb, bh % H, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, S, H, dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, dh), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

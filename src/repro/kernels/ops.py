@@ -1,0 +1,94 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+On CPU (this container) kernels run in interpret mode — the kernel body
+executes step-by-step with real BlockSpec tiling semantics, which validates
+indexing/accumulation logic; on TPU the same code lowers to Mosaic.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import flash_prefill as _fp
+from repro.kernels import ssd_scan as _ssd
+from repro.kernels import tree_attention as _ta
+
+
+def _interpret() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def tree_attention(q, k, v, mask, *, block_s: int = 256):
+    """Tree-masked verification attention (see tree_attention.py)."""
+    S = k.shape[1]
+    bs = block_s
+    while S % bs:
+        bs //= 2
+    return _ta.tree_attention(q, k, v, mask, block_s=max(bs, 1),
+                              interpret=_interpret())
+
+
+def flash_prefill(q, k, v, *, block_q: int = 256, block_k: int = 256):
+    """Causal flash attention with wedge skipping (see flash_prefill.py)."""
+    S = q.shape[1]
+    bq, bk = block_q, block_k
+    while S % bq:
+        bq //= 2
+    while S % bk:
+        bk //= 2
+    return _fp.flash_prefill(q, k, v, block_q=max(bq, 1), block_k=max(bk, 1),
+                             interpret=_interpret())
+
+
+def ssd_scan(x, dt, A, B, C, chunk: int, initial_state=None):
+    """Chunked SSD using the Pallas per-chunk kernel + host chunk recurrence.
+
+    Same contract as models.ssm.ssd_scan: x [b,s,h,p], dt [b,s,h] (already
+    softplus'ed), A [h] (negative), B/C [b,s,h,n] (groups expanded).
+    """
+    b, s, h, p = x.shape
+    n = B.shape[-1]
+    L = min(chunk, s)
+    orig_s = s
+    if s % L:
+        pad = L - s % L
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        s += pad
+    c = s // L
+
+    # [b, h, c, L, ...] layout for the kernel
+    xr = x.reshape(b, c, L, h, p).transpose(0, 3, 1, 2, 4)
+    dtr = dt.reshape(b, c, L, h).transpose(0, 3, 1, 2)
+    Br = B.reshape(b, c, L, h, n).transpose(0, 3, 1, 2, 4)
+    Cr = C.reshape(b, c, L, h, n).transpose(0, 3, 1, 2, 4)
+
+    zeros_prev = jnp.zeros((b, h, c, p, n), jnp.float32)
+    y_diag, deltas = _ssd.ssd_chunk(xr, dtr, A.astype(jnp.float32), Br, Cr,
+                                    zeros_prev, interpret=_interpret())
+
+    # chunk recurrence (tiny, sequential)
+    dA_cs = jnp.cumsum(dtr * A[None, :, None, None], axis=-1)   # [b,h,c,L]
+    chunk_decay = jnp.exp(dA_cs[..., -1])                        # [b,h,c]
+    st0 = (jnp.zeros((b, h, p, n), jnp.float32) if initial_state is None
+           else initial_state.astype(jnp.float32))
+
+    def step(carry, inp):
+        delta, dec = inp
+        new = carry * dec[..., None, None] + delta
+        return new, carry
+
+    final, prev = jax.lax.scan(
+        step, st0, (deltas.transpose(2, 0, 1, 3, 4),
+                    chunk_decay.transpose(2, 0, 1)))
+    prev = prev.transpose(1, 2, 0, 3, 4)                         # [b,h,c,p,n]
+
+    y_off = jnp.einsum("bhcln,bhcpn,bhcl->bhclp", Cr.astype(jnp.float32),
+                       prev, jnp.exp(dA_cs))
+    y = (y_diag.astype(jnp.float32) + y_off)
+    y = y.transpose(0, 2, 3, 1, 4).reshape(b, s, h, p)[:, :orig_s]
+    return y.astype(x.dtype), final

@@ -1,0 +1,54 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def tree_attention_ref(q, k, v, mask):
+    """q: [B,W,H,dh]; k/v: [B,S,H,dh]; mask: [B,W,S]."""
+    dh = q.shape[-1]
+    s = jnp.einsum("bwhd,bshd->bhws", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / jnp.sqrt(float(dh))
+    s = jnp.where(mask[:, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhws,bshd->bwhd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def flash_prefill_ref(q, k, v):
+    """Causal full attention. q/k/v: [B,S,H,dh]."""
+    B, S, H, dh = q.shape
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / jnp.sqrt(float(dh))
+    causal = jnp.tril(jnp.ones((S, S), bool))
+    s = jnp.where(causal[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def ssd_ref(x, dt, A, B, C, initial_state=None):
+    """Exact sequential SSD recurrence (token by token).
+
+    x: [b,s,h,p]; dt: [b,s,h]; A: [h]; B/C: [b,s,h,n].
+    Returns (y [b,s,h,p], final_state [b,h,p,n]).
+    """
+    b, s, h, p = x.shape
+    n = B.shape[-1]
+    st0 = (jnp.zeros((b, h, p, n), jnp.float32) if initial_state is None
+           else initial_state.astype(jnp.float32))
+
+    def step(st, inp):
+        xt, dtt, Bt, Ct = inp
+        decay = jnp.exp(dtt * A)                      # [b,h]
+        st = st * decay[..., None, None] + jnp.einsum(
+            "bh,bhp,bhn->bhpn", dtt, xt.astype(jnp.float32),
+            Bt.astype(jnp.float32))
+        y = jnp.einsum("bhpn,bhn->bhp", st, Ct.astype(jnp.float32))
+        return st, y
+
+    xs = (x.transpose(1, 0, 2, 3), dt.transpose(1, 0, 2),
+          B.transpose(1, 0, 2, 3), C.transpose(1, 0, 2, 3))
+    final, ys = jax.lax.scan(step, st0, xs)
+    return ys.transpose(1, 0, 2, 3).astype(x.dtype), final

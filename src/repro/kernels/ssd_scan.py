@@ -1,0 +1,87 @@
+"""Pallas TPU kernel: Mamba2 SSD chunk computation [arXiv:2405.21060].
+
+The SSD algorithm splits into (a) heavy per-chunk dense algebra — the
+intra-chunk output block, the chunk-end state contribution, and the
+cross-chunk output given the entering state — and (b) a tiny sequential
+recurrence over chunk-end states. (a) maps onto the MXU and is implemented
+here per (batch, head, chunk) grid cell with everything VMEM-resident;
+(b) stays a lax.scan in ops.py (it is O(heads·P·N) per chunk — negligible).
+
+The kernel computes, for one chunk of length L:
+    y_diag  = ((C Bᵀ) ∘ decay) (x·dt)        intra-chunk
+    state   = Bᵀ ((decay_end·dt) ∘ x)        chunk-end state delta
+    y_off   = (C prev_state) ∘ decay_in      cross-chunk (uses scanned state)
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _chunk_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, prev_ref,
+                  y_ref, st_ref):
+    x = x_ref[0, 0, 0].astype(jnp.float32)       # [L, P]
+    dt = dt_ref[0, 0, 0].astype(jnp.float32)     # [L]
+    A = a_ref[0]                                  # [] scalar (per head)
+    Bm = b_ref[0, 0, 0].astype(jnp.float32)      # [L, N]
+    Cm = c_ref[0, 0, 0].astype(jnp.float32)      # [L, N]
+    prev = prev_ref[0, 0, 0].astype(jnp.float32)  # [P, N] state entering chunk
+
+    dA = dt * A                                # [L]
+    cs = jnp.cumsum(dA)                        # [L]
+    # decay matrix exp(segsum) lower-tri
+    seg = cs[:, None] - cs[None, :]            # [L, L]
+    li = jax.lax.broadcasted_iota(jnp.int32, seg.shape, 0)
+    lj = jax.lax.broadcasted_iota(jnp.int32, seg.shape, 1)
+    Lmat = jnp.where(li >= lj, jnp.exp(seg), 0.0)
+
+    CB = jnp.dot(Cm, Bm.T, preferred_element_type=jnp.float32)  # [L, L]
+    M = CB * Lmat
+    xdt = x * dt[:, None]
+    y_diag = jnp.dot(M, xdt, preferred_element_type=jnp.float32)  # [L, P]
+
+    decay_in = jnp.exp(cs)[:, None]            # [L, 1]
+    y_off = jnp.dot(Cm, prev.T, preferred_element_type=jnp.float32) * decay_in
+
+    decay_end = jnp.exp(cs[-1] - cs)           # [L]
+    st = jnp.dot((Bm * (decay_end * dt)[:, None]).T, x,
+                 preferred_element_type=jnp.float32)              # [N, P]
+
+    y_ref[0, 0, 0] = (y_diag + y_off).astype(y_ref.dtype)
+    st_ref[0, 0, 0] = st.T.astype(st_ref.dtype)   # [P, N]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def ssd_chunk(x: jax.Array, dt: jax.Array, A: jax.Array, B: jax.Array,
+              C: jax.Array, prev_states: jax.Array, *,
+              interpret: bool = True):
+    """x: [b, h, c, L, P]; dt: [b, h, c, L]; A: [h]; B/C: [b, h, c, L, N];
+    prev_states: [b, h, c, P, N] (state entering each chunk, from the host
+    scan). Returns (y [b, h, c, L, P], state_deltas [b, h, c, P, N])."""
+    b, h, c, L, P = x.shape
+    N = B.shape[-1]
+    grid = (b * h, c)
+    return pl.pallas_call(
+        _chunk_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, L, P), lambda bh, ci: (bh // h, bh % h, ci, 0, 0)),
+            pl.BlockSpec((1, 1, 1, L), lambda bh, ci: (bh // h, bh % h, ci, 0)),
+            pl.BlockSpec((1,), lambda bh, ci: (bh % h,)),
+            pl.BlockSpec((1, 1, 1, L, N), lambda bh, ci: (bh // h, bh % h, ci, 0, 0)),
+            pl.BlockSpec((1, 1, 1, L, N), lambda bh, ci: (bh // h, bh % h, ci, 0, 0)),
+            pl.BlockSpec((1, 1, 1, P, N), lambda bh, ci: (bh // h, bh % h, ci, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, 1, L, P), lambda bh, ci: (bh // h, bh % h, ci, 0, 0)),
+            pl.BlockSpec((1, 1, 1, P, N), lambda bh, ci: (bh // h, bh % h, ci, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, h, c, L, P), x.dtype),
+            jax.ShapeDtypeStruct((b, h, c, P, N), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, dt, A, B, C, prev_states)

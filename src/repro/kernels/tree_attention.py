@@ -1,0 +1,99 @@
+"""Pallas TPU kernel: tree-masked verification attention (the paper's
+verification hot spot, cf. FastTree [36]).
+
+W tree queries attend to an S-slot committed KV cache under an arbitrary
+boolean visibility mask (committed-causality + ancestor mask merged by the
+caller). Flash-decode style: grid = (batch, heads, kv-blocks), with the
+kv-block axis innermost/sequential; running max / denominator / accumulator
+persist in VMEM scratch across kv blocks and the output is normalized in the
+final block.
+
+Block shapes: q tile [W, dh] and kv tiles [block_s, dh] live in VMEM; W and
+dh are MXU-friendly (multiples of 8×128 after padding by the wrapper).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _vmem(shape, dtype):
+    """VMEM scratch allocation (TPU); falls back cleanly in interpret mode."""
+    from jax.experimental.pallas import tpu as pltpu
+    return pltpu.VMEM(shape, dtype)
+
+
+def _kernel(q_ref, k_ref, v_ref, mask_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            scale: float, n_kb: int):
+    kb = pl.program_id(2)
+
+    @pl.when(kb == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, :, 0, :].astype(jnp.float32)        # [W, dh]
+    k = k_ref[0, :, 0, :].astype(jnp.float32)        # [bs, dh]
+    v = v_ref[0, :, 0, :].astype(jnp.float32)        # [bs, dh]
+    mask = mask_ref[0, :, :]                          # [W, bs]
+
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale  # [W, bs]
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_scr[...]                               # [W, 1]
+    m_new = jnp.maximum(m_prev[:, 0], s.max(-1))[:, None]
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new)
+    l_new = l_scr[...] * alpha + p.sum(-1, keepdims=True)
+    acc_new = acc_scr[...] * alpha + jnp.dot(p, v, preferred_element_type=jnp.float32)
+
+    m_scr[...] = m_new
+    l_scr[...] = l_new
+    acc_scr[...] = acc_new
+
+    @pl.when(kb == n_kb - 1)
+    def _done():
+        o_ref[0, :, 0, :] = (acc_scr[...] /
+                             jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_s", "interpret"))
+def tree_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                   mask: jax.Array, *, block_s: int = 256,
+                   interpret: bool = True) -> jax.Array:
+    """q: [B, W, H, dh]; k/v: [B, S, H, dh] (kv already head-repeated);
+    mask: [B, W, S] visibility (tree + causality merged). Returns [B, W, H, dh].
+    """
+    B, W, H, dh = q.shape
+    S = k.shape[1]
+    bs = min(block_s, S)
+    assert S % bs == 0, (S, bs)
+    n_kb = S // bs
+    scale = 1.0 / (dh ** 0.5)
+
+    kernel = functools.partial(_kernel, scale=scale, n_kb=n_kb)
+    out = pl.pallas_call(
+        kernel,
+        grid=(B * H, 1, n_kb),
+        in_specs=[
+            pl.BlockSpec((1, W, 1, dh), lambda bh, _, kb: (bh // H, 0, bh % H, 0)),
+            pl.BlockSpec((1, bs, 1, dh), lambda bh, _, kb: (bh // H, kb, bh % H, 0)),
+            pl.BlockSpec((1, bs, 1, dh), lambda bh, _, kb: (bh // H, kb, bh % H, 0)),
+            pl.BlockSpec((1, W, bs), lambda bh, _, kb: (bh // H, 0, kb)),
+        ],
+        out_specs=pl.BlockSpec((1, W, 1, dh), lambda bh, _, kb: (bh // H, 0, bh % H, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, W, H, dh), q.dtype),
+        scratch_shapes=[
+            _vmem((W, 1), jnp.float32),
+            _vmem((W, 1), jnp.float32),
+            _vmem((W, dh), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v, mask)
+    return out

@@ -1,0 +1,2 @@
+from repro.launch.mesh import (V5E, Hardware, make_host_mesh,
+                               make_production_mesh, mesh_chips)

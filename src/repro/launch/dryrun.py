@@ -1,0 +1,195 @@
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count="
+                           + os.environ.get("REPRO_DRYRUN_DEVICES", "512"))
+
+import argparse            # noqa: E402
+import json                # noqa: E402
+import time                # noqa: E402
+import traceback           # noqa: E402
+from typing import Any, Dict, Optional  # noqa: E402
+
+import jax                 # noqa: E402
+
+from repro.configs import ASSIGNED, SHAPES  # noqa: E402
+from repro.launch import hlo_analysis       # noqa: E402
+from repro.launch import steps as steps_mod  # noqa: E402
+from repro.launch.mesh import V5E, make_production_mesh, mesh_chips  # noqa: E402
+from repro.sharding import specs as sh       # noqa: E402
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__),
+                           "../../../benchmarks/results/dryrun")
+
+
+def model_flops(cfg, shape, kind: str) -> float:
+    """Analytic 'useful' FLOPs: 6·N_active·tokens (train), 2·N_active·tokens
+    (inference)."""
+    n = cfg.active_param_count()
+    if kind == "train":
+        return 6.0 * n * shape.global_batch * shape.seq_len
+    if kind == "prefill":
+        return 2.0 * n * shape.global_batch * shape.seq_len
+    return 2.0 * n * shape.global_batch  # decode: one token per request
+
+
+def run_case(arch: str, shape_name: str, multi_pod: bool,
+             kind: Optional[str] = None, unroll: bool = True,
+             out_dir: str = RESULTS_DIR, force: bool = False,
+             verbose: bool = True,
+             overrides: Optional[Dict[str, Any]] = None,
+             rules: Optional[Dict[str, Any]] = None,
+             mesh=None, tag_suffix: str = "") -> Optional[Dict[str, Any]]:
+    """Lower+compile one (arch, shape, mesh) case and record the roofline.
+
+    `overrides` (ModelConfig fields), `rules` (sharding-rule overrides) and
+    `mesh` (a custom jax Mesh) support §Perf hillclimb variants; tagged
+    records land next to the baselines with `tag_suffix`.
+    """
+    case = steps_mod.dryrun_case(arch, shape_name,
+                                 overrides={"scan_unroll": unroll,
+                                            **(overrides or {})})
+    mesh_name = ("pod2x16x16" if multi_pod else "pod16x16")
+    if mesh is not None:
+        mesh_name = "x".join(map(str, mesh.devices.shape))
+    if case is None:
+        if verbose:
+            print(f"SKIP {arch} × {shape_name}: "
+                  f"{steps_mod.LONG_SKIP.get(arch, 'n/a')}")
+        return None
+    kind = kind or case.shape.kind
+    tag = f"{case.key}__{kind}__{mesh_name}" if kind != case.shape.kind \
+        else f"{case.key}__{mesh_name}"
+    tag += tag_suffix
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, tag + ".json")
+    if os.path.exists(path) and not force:
+        with open(path) as f:
+            rec = json.load(f)
+        if rec.get("ok"):
+            if verbose:
+                print(f"CACHED {tag}")
+            return rec
+
+    if mesh is None:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh_chips(mesh)
+    rec: Dict[str, Any] = {
+        "arch": arch, "variant": case.variant, "shape": shape_name,
+        "kind": kind, "mesh": mesh_name, "chips": chips,
+        "params": case.cfg.param_count(),
+        "active_params": case.cfg.active_param_count(),
+        "unrolled": unroll, "ok": False,
+    }
+    if rules:
+        rec["rules"] = {k: list(v) for k, v in rules.items()}
+    t0 = time.perf_counter()
+    try:
+        with sh.use_mesh(mesh, rules=rules), mesh:
+            jitted, args = steps_mod.build(case, mesh, kind=kind)
+            lowered = jitted.lower(*args)
+            t1 = time.perf_counter()
+            compiled = lowered.compile()
+            t2 = time.perf_counter()
+            cost = compiled.cost_analysis()
+            if isinstance(cost, list):
+                cost = cost[0]
+            try:
+                ma = compiled.memory_analysis()
+                mem = {k: int(getattr(ma, k)) for k in (
+                    "argument_size_in_bytes", "output_size_in_bytes",
+                    "temp_size_in_bytes", "alias_size_in_bytes",
+                    "generated_code_size_in_bytes") if hasattr(ma, k)}
+            except Exception as e:  # CPU backend may not implement it
+                mem = {"error": str(e)}
+            hlo = compiled.as_text()
+    except Exception as e:
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=1)
+        if verbose:
+            print(f"FAIL {tag}: {rec['error']}")
+        return rec
+
+    rep = hlo_analysis.analyze(hlo)
+    if os.environ.get("REPRO_DUMP_OPS"):
+        rec["agg_ops"] = hlo_analysis.agg_ops(hlo, 15)
+    flops_dev = float(cost.get("flops", 0.0))
+    bytes_dev = float(cost.get("bytes accessed", 0.0))
+    if not unroll:  # trip-count correction (HloCostAnalysis counts bodies once)
+        m = rep.loop_multiplier
+        flops_dev *= m
+        bytes_dev *= m
+    coll_dev = rep.collective_bytes
+    wire_dev = rep.collective_wire_bytes
+
+    mf = model_flops(case.cfg, case.shape, kind)
+    hw = V5E
+    compute_s = flops_dev / hw.peak_flops_bf16
+    memory_s = bytes_dev / hw.hbm_bw
+    collective_s = coll_dev / hw.ici_bw
+    terms = {"compute_s": compute_s, "memory_s": memory_s,
+             "collective_s": collective_s}
+    dominant = max(terms, key=terms.get)
+
+    rec.update({
+        "ok": True,
+        "lower_s": round(t1 - t0, 2), "compile_s": round(t2 - t1, 2),
+        "flops_per_device": flops_dev, "bytes_per_device": bytes_dev,
+        "collective_bytes_per_device": coll_dev,
+        "collective_wire_bytes_per_device": wire_dev,
+        "collective_wire_s": wire_dev / hw.ici_bw,
+        "collective_by_kind": rep.bytes_by_kind(),
+        "top_collectives": hlo_analysis.top_collectives(rep, 12),
+        "num_collectives": len(rep.collectives),
+        "loop_multiplier": rep.loop_multiplier,
+        "memory_analysis": mem,
+        "model_flops_global": mf,
+        "hlo_flops_global": flops_dev * chips,
+        "useful_flops_ratio": mf / max(flops_dev * chips, 1.0),
+        "roofline": {**terms, "dominant": dominant.replace("_s", "")},
+    })
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+    if verbose:
+        r = rec["roofline"]
+        print(f"OK {tag}: compile={rec['compile_s']}s "
+              f"compute={r['compute_s']:.3e}s memory={r['memory_s']:.3e}s "
+              f"collective={r['collective_s']:.3e}s dom={r['dominant']} "
+              f"useful={rec['useful_flops_ratio']:.2f}")
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description="Multi-pod dry-run matrix")
+    ap.add_argument("--arch", default=None, help="one arch (default: all)")
+    ap.add_argument("--shape", default=None, choices=list(SHAPES),
+                    help="one shape (default: all)")
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--kind", default=None,
+                    choices=[None, "train", "prefill", "decode", "tree_verify"])
+    ap.add_argument("--no-unroll", action="store_true",
+                    help="keep lax.scan rolled (trip-count-corrected costs)")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--out", default=RESULTS_DIR)
+    args = ap.parse_args()
+
+    archs = [args.arch] if args.arch else list(ASSIGNED)
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    n_fail = 0
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                rec = run_case(arch, shape, mp, kind=args.kind,
+                               unroll=not args.no_unroll, out_dir=args.out,
+                               force=args.force)
+                if rec is not None and not rec.get("ok"):
+                    n_fail += 1
+    if n_fail:
+        raise SystemExit(f"{n_fail} case(s) failed")
+    print("dry-run matrix complete")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,104 @@
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count="
+                           + os.environ.get("REPRO_DRYRUN_DEVICES", "512"))
+
+"""§Perf hillclimbing driver (see EXPERIMENTS.md §Perf).
+
+Each iteration is a named variant of one of the three chosen
+(arch × shape) pairs: a ModelConfig override, a sharding-rule override, or
+a custom mesh. Variants re-lower + re-compile and land as tagged JSONs next
+to the baselines; the before/after table prints at the end.
+
+  PYTHONPATH=src python -m repro.launch.hillclimb --pair mixtral_prefill
+  PYTHONPATH=src python -m repro.launch.hillclimb --pair all --inspect
+"""
+import argparse      # noqa: E402
+import json          # noqa: E402
+from typing import Dict, List, Optional  # noqa: E402
+
+from repro.launch.dryrun import RESULTS_DIR, run_case  # noqa: E402
+
+# iteration ladders: applied CUMULATIVELY in order (hillclimbing)
+PAIRS: Dict[str, Dict] = {
+    "mixtral_prefill": {
+        "arch": "mixtral-8x7b", "shape": "prefill_32k",
+        "iters": [
+            ("it1_moe_batch_dispatch", dict(moe_batch_dispatch=True), None),
+            ("it2_bf16_combine", dict(moe_combine_dtype="bfloat16"), None),
+            ("it3_gqa_grouped", dict(gqa_grouped=True), None),
+            # it4 is a CODE change: drop the out_e sharding constraint so
+            # the w_out all-reduce commutes past the linear gather-combine
+            # ([B,E,C,d] capacity-inflated -> [B,S,d]).
+            ("it4_ar_after_combine", dict(), None),
+        ],
+    },
+    "nemotron_decode": {
+        "arch": "nemotron-4-15b", "shape": "decode_32k",
+        "iters": [
+            ("it1_gqa_grouped", dict(gqa_grouped=True), None),
+            ("it2_cache_pad_seqshard", dict(cache_pad_to=256), None),
+            ("it3_score_seqshard", dict(attn_score_seqshard=True), None),
+            # it4 is a CODE change (mixed-precision P·V einsum instead of
+            # materialized f32 cast, which XLA hoists above the per-layer
+            # slice converting the whole stacked cache) — same overrides.
+            ("it4_no_f32_v_cast", dict(), None),
+        ],
+    },
+    "yi_train": {
+        "arch": "yi-6b", "shape": "train_4k",
+        "iters": [
+            ("it1_gqa_grouped", dict(gqa_grouped=True), None),
+            ("it2_bigger_attn_chunk", dict(attn_chunk=1024), None),
+            ("it3_loss_chunk_256", dict(loss_chunk=256), None),
+            ("it4_no_remat", dict(remat=False, attn_chunk=512,
+                                  loss_chunk=512), None),
+        ],
+    },
+}
+
+
+def show(rec: Optional[Dict], label: str) -> None:
+    if not rec or not rec.get("ok"):
+        print(f"  {label:<28} FAILED: {(rec or {}).get('error')}")
+        return
+    r = rec["roofline"]
+    print(f"  {label:<28} compute={r['compute_s']:.3e} "
+          f"memory={r['memory_s']:.3e} collective={r['collective_s']:.3e} "
+          f"dom={r['dominant']} useful={rec['useful_flops_ratio']:.2f}")
+
+
+def run_pair(name: str, inspect: bool = False, force: bool = False) -> None:
+    p = PAIRS[name]
+    print(f"== {name}: {p['arch']} × {p['shape']} ==")
+    base = run_case(p["arch"], p["shape"], multi_pod=False, verbose=False)
+    show(base, "baseline")
+    if inspect and base and base.get("ok"):
+        for c in base.get("top_collectives", [])[:8]:
+            print(f"    COLL {c['kind']:<18} {c['bytes']:.3e}B g={c['group']}"
+                  f" {c['op'][-80:]}")
+    overrides: Dict = {}
+    for tag, conf, rules in p["iters"]:
+        overrides.update(conf)
+        rec = run_case(p["arch"], p["shape"], multi_pod=False,
+                       overrides=dict(overrides), rules=rules,
+                       tag_suffix="__" + tag, force=force, verbose=False)
+        show(rec, tag)
+        if inspect and rec and rec.get("ok"):
+            for c in rec.get("top_collectives", [])[:5]:
+                print(f"    COLL {c['kind']:<18} {c['bytes']:.3e}B "
+                      f"{c['op'][-80:]}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--pair", default="all",
+                    choices=list(PAIRS) + ["all"])
+    ap.add_argument("--inspect", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+    for name in (PAIRS if args.pair == "all" else [args.pair]):
+        run_pair(name, inspect=args.inspect, force=args.force)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,308 @@
+"""Post-compile HLO accounting for the roofline.
+
+``compiled.cost_analysis()`` gives FLOPs and bytes-accessed, but (a) XLA's
+HloCostAnalysis counts while-loop bodies ONCE (the block scan runs
+``num_blocks`` times), and (b) collective bytes are not reported at all.
+This module parses the optimized HLO text:
+
+  * builds the computation call graph, with while-loop bodies weighted by
+    their inferred trip count (parsed from the loop condition's comparison
+    constant);
+  * sums operand bytes of every all-gather / all-reduce / reduce-scatter /
+    all-to-all / collective-permute, scaled by the enclosing computation's
+    execution multiplier;
+  * reports the same multiplier table so flops/bytes from cost_analysis can
+    be trip-count-corrected.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Tuple
+
+DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([\d,]*)\]")
+_COMP_NAME = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)")
+_WHILE_RE = re.compile(
+    r"=\s*\(?.*?while\(.*?condition=%?([\w.\-]+),\s*body=%?([\w.\-]+)")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+_CALL_REF = re.compile(
+    r"(?:to_apply|calls|true_computation|false_computation)=%?([\w.\-]+)")
+_BRANCHES = re.compile(r"branch_computations=\{([^}]*)\}")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * DTYPE_BYTES.get(dtype, 4)
+
+
+@dataclass
+class Collective:
+    kind: str
+    comp: str
+    out_bytes: int
+    group_size: int = 1
+    multiplier: float = 1.0
+    op_name: str = ""          # jax-level origin from HLO metadata
+
+    @property
+    def operand_bytes(self) -> float:
+        """Input-buffer size (the 'operand size' roofline accounting)."""
+        g = max(self.group_size, 1)
+        if self.kind == "all-gather":
+            return self.out_bytes / g
+        if self.kind == "reduce-scatter":
+            return self.out_bytes * g
+        return float(self.out_bytes)
+
+    @property
+    def wire_bytes(self) -> float:
+        """Ring-algorithm bytes actually crossing links, per device."""
+        g = max(self.group_size, 1)
+        if g == 1 and self.kind != "collective-permute":
+            return 0.0
+        if self.kind == "all-reduce":
+            return 2.0 * self.out_bytes * (g - 1) / g
+        if self.kind == "all-gather":
+            return self.out_bytes * (g - 1) / g
+        if self.kind == "reduce-scatter":
+            return float(self.out_bytes * (g - 1))
+        if self.kind == "all-to-all":
+            return self.out_bytes * (g - 1) / g
+        return float(self.out_bytes)  # collective-permute
+
+    @property
+    def total_bytes(self) -> float:
+        return self.operand_bytes * self.multiplier
+
+    @property
+    def total_wire_bytes(self) -> float:
+        return self.wire_bytes * self.multiplier
+
+
+@dataclass
+class HloReport:
+    collectives: List[Collective] = field(default_factory=list)
+    multipliers: Dict[str, float] = field(default_factory=dict)
+    while_trips: Dict[str, int] = field(default_factory=dict)
+
+    @property
+    def collective_bytes(self) -> float:
+        return float(sum(c.total_bytes for c in self.collectives))
+
+    @property
+    def collective_wire_bytes(self) -> float:
+        return float(sum(c.total_wire_bytes for c in self.collectives))
+
+    def bytes_by_kind(self) -> Dict[str, float]:
+        out: Dict[str, float] = {}
+        for c in self.collectives:
+            out[c.kind] = out.get(c.kind, 0.0) + c.total_bytes
+        return out
+
+    @property
+    def loop_multiplier(self) -> float:
+        """Largest execution multiplier (≈ the block-scan trip count) —
+        used to trip-count-correct cost_analysis flops."""
+        return max(self.multipliers.values(), default=1.0)
+
+
+def split_computations(hlo: str) -> Dict[str, List[str]]:
+    comps: Dict[str, List[str]] = {}
+    cur = None
+    entry_name = None
+    for line in hlo.splitlines():
+        is_header = (line and not line[0].isspace()
+                     and line.rstrip().endswith("{")
+                     and (line.startswith("ENTRY") or line.startswith("%")))
+        if is_header:
+            m = _COMP_NAME.match(line)
+            cur = m.group(1) if m else None
+            if cur is not None:
+                comps[cur] = []
+                if line.startswith("ENTRY"):
+                    entry_name = cur
+        elif line.strip() == "}":
+            cur = None
+        elif cur is not None:
+            comps[cur].append(line)
+    if entry_name is not None:
+        comps["__entry__"] = comps[entry_name]
+    return comps
+
+
+def _trip_count(cond_lines: List[str]) -> int:
+    """The loop condition compares the induction var against a constant."""
+    consts = []
+    for ln in cond_lines:
+        consts += [int(x) for x in _CONST_RE.findall(ln)]
+    return max(consts) if consts else 1
+
+
+def build_multipliers(comps: Dict[str, List[str]]) -> Tuple[Dict[str, float],
+                                                            Dict[str, int]]:
+    entry = comps.get("__entry__")
+    mult: Dict[str, float] = {}
+    trips: Dict[str, int] = {}
+    if entry is None:
+        return {name: 1.0 for name in comps}, trips
+
+    # edges: comp -> [(callee, weight)]
+    edges: Dict[str, List[Tuple[str, float]]] = {}
+    for name, lines in comps.items():
+        if name == "__entry__":
+            continue
+        es: List[Tuple[str, float]] = []
+        for ln in lines:
+            wm = _WHILE_RE.search(ln)
+            if wm:
+                cond, body = wm.group(1), wm.group(2)
+                t = _trip_count(comps.get(cond, []))
+                trips[body] = t
+                es.append((body, float(t)))
+                es.append((cond, float(t)))
+                continue
+            for ref in _CALL_REF.findall(ln):
+                es.append((ref, 1.0))
+            bm = _BRANCHES.search(ln)
+            if bm:
+                for ref in bm.group(1).split(","):
+                    es.append((ref.strip().lstrip("%"), 1.0))
+        edges[name] = es
+
+    # find the true entry (computation whose lines == entry's)
+    entry_names = [n for n, l in comps.items()
+                   if n != "__entry__" and l is entry]
+    roots = entry_names or [next(iter(edges))]
+    for r in roots:
+        mult[r] = 1.0
+    stack = list(roots)
+    while stack:
+        c = stack.pop()
+        for callee, w in edges.get(c, []):
+            nm = mult[c] * w
+            if mult.get(callee, 0.0) < nm:
+                mult[callee] = nm
+                stack.append(callee)
+    for name in comps:
+        mult.setdefault(name, 1.0)
+    return mult, trips
+
+
+_IOTA_GROUPS = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=\[")
+_LIST_GROUPS = re.compile(r"replica_groups=\{\{([^}]*)\}")
+
+
+def _group_size(s: str) -> int:
+    m = _IOTA_GROUPS.search(s)
+    if m:
+        return int(m.group(2))  # [num_groups, group_size]<=[N]
+    m = _LIST_GROUPS.search(s)
+    if m:
+        ids = [x for x in m.group(1).split(",") if x.strip() != ""]
+        return max(len(ids), 1)
+    return 1
+
+
+def analyze(hlo: str) -> HloReport:
+    comps = split_computations(hlo)
+    mult, trips = build_multipliers(comps)
+    rep = HloReport(multipliers=mult, while_trips=trips)
+    for name, lines in comps.items():
+        if name == "__entry__":
+            continue
+        for ln in lines:
+            s = ln.strip()
+            if s.startswith("//") or "=" not in s:
+                continue
+            kind = None
+            for k in COLLECTIVES:
+                if re.search(rf"\b{k}(?:-start)?\(", s):
+                    kind = k
+                    break
+            if kind is None or re.search(rf"\b{kind}-done\(", s):
+                continue
+            # output shapes: everything between '=' and the op name
+            lhs_rhs = s.split("=", 1)[1]
+            head = re.split(rf"\b{kind}(?:-start)?\(", lhs_rhs)[0]
+            out_b = sum(_shape_bytes(d, dims)
+                        for d, dims in _SHAPE_RE.findall(head))
+            op = ""
+            om = re.search(r'op_name="([^"]*)"', s)
+            if om:
+                op = om.group(1)
+            rep.collectives.append(Collective(
+                kind=kind, comp=name, out_bytes=out_b,
+                group_size=_group_size(s), multiplier=mult.get(name, 1.0),
+                op_name=op))
+    return rep
+
+
+def top_ops(hlo: str, n: int = 25) -> List[Dict]:
+    """Largest instructions by output bytes × execution multiplier — the
+    first-order 'where do the HBM bytes go' attribution for §Perf."""
+    comps = split_computations(hlo)
+    mult, _ = build_multipliers(comps)
+    rows: List[Dict] = []
+    for name, lines in comps.items():
+        # fusion bodies don't touch HBM — only fusion boundaries count
+        if name == "__entry__" or "fused_computation" in name:
+            continue
+        m = mult.get(name, 1.0)
+        for ln in lines:
+            s = ln.strip()
+            if "=" not in s or s.startswith("//"):
+                continue
+            head = s.split("=", 1)[1]
+            opk = re.search(r"\)?\s*([a-z][a-z0-9\-]*)\(", head)
+            kind = opk.group(1) if opk else "?"
+            if kind in ("parameter", "constant", "get-tuple-element", "tuple"):
+                continue
+            out_b = sum(_shape_bytes(d, dims) for d, dims in
+                        _SHAPE_RE.findall(head.split(kind + "(")[0]))
+            if out_b < (1 << 20):
+                continue
+            op = ""
+            om = re.search(r'op_name="([^"]*)"', s)
+            if om:
+                op = om.group(1)
+            rows.append({"kind": kind, "bytes": out_b * m, "mult": m,
+                         "comp": name, "op": op[-120:]})
+    rows.sort(key=lambda r: -r["bytes"])
+    return rows[:n]
+
+
+def agg_ops(hlo: str, n: int = 20) -> List[Dict]:
+    """top_ops aggregated over repeated instances (unrolled layers) by the
+    normalized jax op_name — total output bytes per source op."""
+    raw = top_ops(hlo, n=10 ** 6)
+    agg: Dict[str, Dict] = {}
+    for r in raw:
+        key = re.sub(r"\d+", "#", f"{r['kind']}|{r['op']}")
+        a = agg.setdefault(key, {"kind": r["kind"], "op": r["op"],
+                                 "bytes": 0.0, "count": 0})
+        a["bytes"] += r["bytes"]
+        a["count"] += 1
+    rows = sorted(agg.values(), key=lambda r: -r["bytes"])
+    return rows[:n]
+
+
+def top_collectives(rep: HloReport, n: int = 20) -> List[Dict]:
+    """Largest collectives by total bytes, with jax-op attribution."""
+    out = []
+    for c in sorted(rep.collectives, key=lambda c: -c.total_bytes)[:n]:
+        out.append({"kind": c.kind, "bytes": c.total_bytes,
+                    "out_bytes": c.out_bytes, "group": c.group_size,
+                    "mult": c.multiplier, "op": c.op_name[-120:]})
+    return out

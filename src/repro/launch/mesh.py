@@ -1,0 +1,41 @@
+"""Production mesh + TPU v5e hardware model.
+
+``make_production_mesh`` is a FUNCTION (not a module-level constant) so that
+importing this module never touches jax device state; callers (dryrun, the
+launchers) decide when devices are enumerated.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model: int = 1):
+    """A 1×N mesh over whatever devices exist (CPU tests / examples)."""
+    n = len(jax.devices())
+    model = min(model, n)
+    return jax.make_mesh((n // model, model), ("data", "model"))
+
+
+@dataclass(frozen=True)
+class Hardware:
+    """TPU v5e per-chip peaks (the roofline denominators)."""
+    name: str = "tpu_v5e"
+    peak_flops_bf16: float = 197e12   # FLOP/s
+    hbm_bw: float = 819e9             # bytes/s
+    ici_bw: float = 50e9              # bytes/s per link
+    hbm_bytes: float = 16e9           # capacity per chip
+
+
+V5E = Hardware()
+
+
+def mesh_chips(mesh) -> int:
+    return mesh.devices.size

@@ -1,0 +1,256 @@
+"""Lowerable step builders for the dry-run matrix.
+
+For every (architecture × input shape × mesh) this module builds the jitted
+step function plus fully-abstract (ShapeDtypeStruct) inputs and explicit
+in/out shardings — so ``.lower().compile()`` proves the distribution config
+is coherent without allocating anything.
+
+Shape → step kind:
+    train_4k     -> train_step   (fwd + chunked-CE + bwd + AdamW update)
+    prefill_32k  -> prefill_step (prompt ingest, cache write, last logits)
+    decode_32k   -> serve_step   (ONE token against a seq_len KV cache)
+    long_500k    -> serve_step   (sub-quadratic archs; dense archs run an
+                    explicit sliding-window serving variant, see DESIGN.md)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import SHAPES, InputShape, get_config
+from repro.configs.base import ModelConfig
+from repro.models.cache import cache_logical_axes, init_cache
+from repro.models.model import Model
+from repro.sharding import specs as sh
+from repro.training.optimizer import OptConfig
+from repro.training.train_step import make_train_step
+
+# dense full-attention archs run long_500k under an explicit sliding-window
+# serving variant (window 8192) — recorded as `<arch>+swa` in the roofline.
+SWA_FOR_LONG = 8192
+LONG_NATIVE = {"mamba2-130m", "jamba-v0.1-52b", "mixtral-8x7b"}
+LONG_SKIP = {"whisper-medium": "decoder spec'd to <=448 positions; a 500k "
+                               "decoder cache is not meaningful for enc-dec"}
+
+
+@dataclasses.dataclass(frozen=True)
+class Case:
+    arch: str
+    shape: InputShape
+    cfg: ModelConfig
+    variant: str = ""          # "+swa" when the SWA serving variant is used
+
+    @property
+    def key(self) -> str:
+        return f"{self.arch}{self.variant}__{self.shape.name}"
+
+
+def dryrun_case(arch: str, shape_name: str,
+                overrides: Optional[Dict[str, Any]] = None) -> Optional[Case]:
+    """Resolve the dry-run config for (arch, shape); None if skipped."""
+    shape = SHAPES[shape_name]
+    cfg = get_config(arch)
+    variant = ""
+    kw: Dict[str, Any] = dict(dtype="bfloat16", param_dtype="bfloat16",
+                              vocab_pad_to=256)
+    if shape.kind == "train":
+        kw["remat"] = True
+        kw["max_seq_len"] = max(cfg.max_seq_len, shape.seq_len)
+    else:
+        kw["max_seq_len"] = max(cfg.max_seq_len, shape.seq_len + 8)
+    if shape.name == "long_500k":
+        if arch in LONG_SKIP:
+            return None
+        if arch not in LONG_NATIVE:
+            kw["sliding_window"] = SWA_FOR_LONG
+            variant = "+swa"
+    kw.update(overrides or {})
+    return Case(arch, shape, cfg.replace(**kw), variant)
+
+
+def batch_spec(mesh, global_batch: int) -> P:
+    """Shard the batch dim over (pod, data) where divisibility allows."""
+    axes = [a for a in ("pod", "data") if a in mesh.axis_names]
+    while axes:
+        extent = 1
+        for a in axes:
+            extent *= mesh.shape[a]
+        if global_batch % extent == 0:
+            return P(tuple(axes) if len(axes) > 1 else axes[0])
+        axes = axes[1:]
+    return P(None)
+
+
+def _cache_shardings(cfg: ModelConfig, cache_abs, mesh, batch: int):
+    """NamedSharding pytree for the KV cache, honoring batch divisibility."""
+    bspec = batch_spec(mesh, batch)
+    b_axes = bspec[0] if bspec else None
+
+    def one(axes, leaf):
+        entries = []
+        used = set()
+        if isinstance(b_axes, tuple):
+            used.update(b_axes)
+        elif b_axes:
+            used.add(b_axes)
+        for ax, dim in zip(axes, leaf.shape):
+            if ax == "batch":
+                entries.append(b_axes)
+                continue
+            entries.append(sh._resolve_entry(ax, dim, mesh,
+                                             sh._state().rules, used))
+        return NamedSharding(mesh, P(*entries))
+
+    axes_tree = cache_logical_axes(cache_abs)
+    return jax.tree.map(one, axes_tree, cache_abs,
+                        is_leaf=lambda x: isinstance(x, tuple))
+
+
+def _enc_feats_abs(cfg: ModelConfig, batch: int):
+    if not cfg.is_encoder_decoder:
+        return None
+    return jax.ShapeDtypeStruct(
+        (batch, cfg.encoder_seq_len, cfg.encoder_feature_dim),
+        jnp.dtype(cfg.dtype))
+
+
+# --------------------------------------------------------------- builders --
+def build_train(case: Case, mesh):
+    cfg, shape = case.cfg, case.shape
+    model = Model(cfg)
+    dtype = jnp.dtype(cfg.param_dtype)
+    defs = model.param_defs()
+    params_abs = model.abstract(dtype)
+    pshard = sh.fsdp_shardings(defs, mesh)
+    opt_abs = {"m": params_abs, "v": params_abs,
+               "step": jax.ShapeDtypeStruct((), jnp.int32)}
+    oshard = {"m": pshard, "v": pshard,
+              "step": NamedSharding(mesh, P())}
+    B, S = shape.global_batch, shape.seq_len
+    bspec = batch_spec(mesh, B)
+    # +1: the LM loss shifts by one, so the model processes exactly S tokens
+    batch_abs: Dict[str, Any] = {
+        "tokens": jax.ShapeDtypeStruct((B, S + 1), jnp.int32)}
+    bshard: Dict[str, Any] = {
+        "tokens": NamedSharding(mesh, P(*bspec, None))}
+    if cfg.is_encoder_decoder:
+        batch_abs["enc_feats"] = _enc_feats_abs(cfg, B)
+        bshard["enc_feats"] = NamedSharding(mesh, P(*bspec, None, None))
+
+    step = make_train_step(model, OptConfig())
+    jitted = jax.jit(step,
+                     in_shardings=(pshard, oshard, bshard),
+                     out_shardings=(pshard, oshard, None),
+                     donate_argnums=(0, 1))
+    return jitted, (params_abs, opt_abs, batch_abs)
+
+
+def build_prefill(case: Case, mesh):
+    cfg, shape = case.cfg, case.shape
+    model = Model(cfg)
+    dtype = jnp.dtype(cfg.dtype)
+    B, S = shape.global_batch, shape.seq_len
+    pshard = sh.param_shardings(model.param_defs(), mesh)
+    params_abs = model.abstract(dtype)
+    bspec = batch_spec(mesh, B)
+    tokens_abs = jax.ShapeDtypeStruct((B, S), jnp.int32)
+    lengths_abs = jax.ShapeDtypeStruct((B,), jnp.int32)
+    enc_abs = _enc_feats_abs(cfg, B)
+
+    def prefill_step(params, tokens, lengths, enc_feats=None):
+        cache = init_cache(cfg, B, S + 8, dtype=dtype)
+        from repro.models.cache import shard_cache
+        cache = shard_cache(cache)
+        logits, cache, h_last = model.prefill(params, tokens, lengths, cache,
+                                              enc_feats=enc_feats)
+        return logits, cache
+
+    args = [params_abs, tokens_abs, lengths_abs]
+    in_sh = [pshard, NamedSharding(mesh, P(*bspec, None)),
+             NamedSharding(mesh, P(*bspec))]
+    if enc_abs is not None:
+        args.append(enc_abs)
+        in_sh.append(NamedSharding(mesh, P(*bspec, None, None)))
+    jitted = jax.jit(prefill_step, in_shardings=tuple(in_sh))
+    return jitted, tuple(args)
+
+
+def _cache_len(cfg: ModelConfig, n: int) -> int:
+    m = max(cfg.cache_pad_to, 1)
+    return ((n + m - 1) // m) * m
+
+
+def build_decode(case: Case, mesh):
+    cfg, shape = case.cfg, case.shape
+    model = Model(cfg)
+    dtype = jnp.dtype(cfg.dtype)
+    B, S = shape.global_batch, shape.seq_len
+    pshard = sh.param_shardings(model.param_defs(), mesh)
+    params_abs = model.abstract(dtype)
+    cache_abs = init_cache(cfg, B, _cache_len(cfg, S + 8), dtype=dtype,
+                           abstract=True)
+    cshard = _cache_shardings(cfg, cache_abs, mesh, B)
+    bspec = batch_spec(mesh, B)
+    token_abs = jax.ShapeDtypeStruct((B,), jnp.int32)
+
+    def serve_step(params, token, cache):
+        return model.decode(params, token, cache)
+
+    jitted = jax.jit(serve_step,
+                     in_shardings=(pshard, NamedSharding(mesh, P(*bspec)),
+                                   cshard),
+                     out_shardings=(None, cshard, None),
+                     donate_argnums=(2,))
+    return jitted, (params_abs, token_abs, cache_abs)
+
+
+def build_tree_verify(case: Case, mesh, num_nodes: int = 64,
+                      depth_max: int = 16):
+    """Beyond-paper extra: the speculative tree-verify step itself, dry-run
+    at production scale (W=64 tree against a seq_len cache)."""
+    cfg, shape = case.cfg, case.shape
+    model = Model(cfg)
+    dtype = jnp.dtype(cfg.dtype)
+    B, S = shape.global_batch, shape.seq_len
+    pshard = sh.param_shardings(model.param_defs(), mesh)
+    params_abs = model.abstract(dtype)
+    cache_abs = init_cache(cfg, B, _cache_len(cfg, S + num_nodes + 8),
+                           dtype=dtype, abstract=True)
+    cshard = _cache_shardings(cfg, cache_abs, mesh, B)
+    bspec = batch_spec(mesh, B)
+    W = num_nodes
+    toks = jax.ShapeDtypeStruct((B, W), jnp.int32)
+    deps = jax.ShapeDtypeStruct((B, W), jnp.int32)
+    mask = jax.ShapeDtypeStruct((B, W, W), jnp.bool_)
+    needs_paths = any(cfg.layer_mixer(i) == "ssm"
+                      for i in range(cfg.num_layers))
+    paths = (jax.ShapeDtypeStruct((B, W, depth_max), jnp.int32)
+             if needs_paths else None)
+
+    def verify_step(params, tree_tokens, depths, tree_mask, cache,
+                    tree_paths=None):
+        return model.tree_verify(params, tree_tokens, depths, tree_mask,
+                                 cache, tree_paths=tree_paths)
+
+    args = [params_abs, toks, deps, mask, cache_abs]
+    in_sh = [pshard, NamedSharding(mesh, P(*bspec, None)),
+             NamedSharding(mesh, P(*bspec, None)),
+             NamedSharding(mesh, P(*bspec, None, None)), cshard]
+    if paths is not None:
+        args.append(paths)
+        in_sh.append(NamedSharding(mesh, P(*bspec, None, None)))
+    jitted = jax.jit(verify_step, in_shardings=tuple(in_sh))
+    return jitted, tuple(args)
+
+
+BUILDERS = {"train": build_train, "prefill": build_prefill,
+            "decode": build_decode, "tree_verify": build_tree_verify}
+
+
+def build(case: Case, mesh, kind: Optional[str] = None):
+    kind = kind or case.shape.kind
+    return BUILDERS[kind](case, mesh)

@@ -1,0 +1,76 @@
+"""Training launcher.
+
+Two modes:
+  * CPU end-to-end (default): train a REDUCED variant of ``--arch`` on the
+    synthetic Markov corpus for ``--steps`` steps — the runnable driver.
+  * ``--dryrun``: lower+compile the FULL config's train step on the
+    production mesh instead (no allocation) — see dryrun.py for the matrix.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.train --arch yi-6b --steps 100
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import SHAPES, get_config, get_reduced_config
+from repro.data.pipeline import DataConfig, batches
+from repro.models import Model
+from repro.training import (OptConfig, init_opt_state, make_train_step,
+                            save_checkpoint)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="yi-6b")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--full-config", action="store_true",
+                    help="use the full (assigned) config, not the reduced one")
+    ap.add_argument("--checkpoint", default=None)
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args()
+
+    cfg = (get_config(args.arch) if args.full_config
+           else get_reduced_config(args.arch))
+    cfg = cfg.replace(max_seq_len=max(cfg.max_seq_len, args.seq))
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    n_params = sum(int(np.prod(p.shape)) for p in jax.tree.leaves(params))
+    print(f"arch={args.arch} family={cfg.family} params={n_params/1e6:.1f}M")
+
+    opt_cfg = OptConfig(lr=args.lr, warmup_steps=max(args.steps // 10, 5),
+                        total_steps=args.steps)
+    step_fn = jax.jit(make_train_step(model, opt_cfg), donate_argnums=(0, 1))
+    state = init_opt_state(params)
+    data = DataConfig(vocab=cfg.vocab_size, seq_len=args.seq,
+                      batch=args.batch)
+    enc = (jnp.zeros((args.batch, cfg.encoder_seq_len,
+                      cfg.encoder_feature_dim)) if cfg.is_encoder_decoder
+           else None)
+
+    t0 = time.perf_counter()
+    for i, batch in enumerate(batches(data, args.steps)):
+        feed = {"tokens": jnp.asarray(batch["tokens"])}
+        if enc is not None:
+            feed["enc_feats"] = enc
+        params, state, metrics = step_fn(params, state, feed)
+        if i % args.log_every == 0 or i == args.steps - 1:
+            print(f"step {i:5d}  loss {float(metrics['loss']):.4f}  "
+                  f"lr {float(metrics['lr']):.2e}  "
+                  f"gnorm {float(metrics['grad_norm']):.2f}  "
+                  f"({time.perf_counter() - t0:.1f}s)", flush=True)
+    if args.checkpoint:
+        save_checkpoint(args.checkpoint, params)
+        print("saved", args.checkpoint)
+
+
+if __name__ == "__main__":
+    main()

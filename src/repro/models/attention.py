@@ -1,0 +1,413 @@
+"""Attention: GQA/MQA projections, flash-style prefill, cached decode,
+tree-mask verification, sliding window, cross-attention.
+
+Sharding strategy (baseline — see DESIGN.md §5 and EXPERIMENTS.md §Perf):
+  * Q heads sharded over `model` when divisible, else replicated.
+  * K/V: kv-heads sharded when divisible (MHA), else replicated; the decode
+    cache is always sharded along the *sequence* axis so long caches fit.
+  * Decode softmax over the sequence-sharded axis is left to GSPMD (the
+    shard_map flash-decode variant is a §Perf optimization).
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import cache as cache_lib
+from repro.models.layers import apply_rope, rms_norm
+from repro.models.params import ParamDef
+from repro.sharding import shard
+
+NEG_INF = -1e9
+
+
+# ------------------------------------------------------------- params ----
+def attn_defs(cfg: ModelConfig, cross: bool = False) -> Dict[str, ParamDef]:
+    d, H, KV, dh = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    defs = {
+        "wq": ParamDef((d, H, dh), (None, "heads", None)),
+        "wk": ParamDef((d, KV, dh), (None, "kv_heads", None)),
+        "wv": ParamDef((d, KV, dh), (None, "kv_heads", None)),
+        "wo": ParamDef((H, dh, d), ("heads", None, None), fan_in_dims=(0, 1)),
+    }
+    if cfg.use_qk_norm and not cross:
+        defs["q_norm"] = ParamDef((dh,), (None,), init="ones")
+        defs["k_norm"] = ParamDef((dh,), (None,), init="ones")
+    return defs
+
+
+def _project_q(p: Dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    if cfg.use_qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+    return shard(q, "batch", None, "heads", None)
+
+
+def _project_kv(p: Dict, x: jax.Array, cfg: ModelConfig) -> Tuple[jax.Array, jax.Array]:
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if cfg.use_qk_norm:
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    k = shard(k, "batch", None, "kv_heads", None)
+    v = shard(v, "batch", None, "kv_heads", None)
+    return k, v
+
+
+def _out_proj(p: Dict, o: jax.Array, cfg: ModelConfig) -> jax.Array:
+    out = jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+    return shard(out, "batch", None, None)
+
+
+def _repeat_kv(x: jax.Array, groups: int) -> jax.Array:
+    if groups == 1:
+        return x
+    return jnp.repeat(x, groups, axis=2)
+
+
+# ----------------------------------------------------- full / prefill ----
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, cfg: ModelConfig,
+                    *, causal: bool = True,
+                    q_offset: int = 0,
+                    kv_valid: Optional[jax.Array] = None) -> jax.Array:
+    """Block-wise online-softmax attention over full sequences.
+
+    q: [B, Sq, H, Dh]; k/v: [B, Skv, H, Dh] (kv already repeated to H heads).
+    kv_valid: [B, Skv] bool for padding. Sliding window honored via
+    cfg.sliding_window by dynamic kv slicing per query block.
+    """
+    B, Sq, H, Dh = q.shape
+    Skv = k.shape[1]
+    scale = 1.0 / math.sqrt(Dh)
+    qc = min(cfg.attn_chunk, Sq)
+    kc = min(cfg.attn_chunk, Skv)
+    while Sq % qc:       # fall back to the largest chunk that divides
+        qc -= 1
+    while Skv % kc:
+        kc -= 1
+    n_qc = Sq // qc
+    window = cfg.sliding_window
+
+    if cfg.use_pallas and kv_valid is None and not window and causal and Sq == Skv:
+        from repro.kernels import ops as kernel_ops
+        return kernel_ops.flash_prefill(q, k, v, block_q=qc, block_k=kc)
+
+    q_pos_base = jnp.arange(qc)
+    kv_pos_all = jnp.arange(Skv)
+
+    def q_block(carry, qi):
+        qb = jax.lax.dynamic_slice_in_dim(q, qi * qc, qc, axis=1)  # [B,qc,H,Dh]
+        q_pos = qi * qc + q_pos_base + q_offset
+
+        if window:
+            # only the last `window + qc` keys can be visible to this block
+            span = min(window + qc, Skv)
+            start = jnp.clip(qi * qc + qc - span + q_offset, 0, Skv - span)
+            kb_all = jax.lax.dynamic_slice_in_dim(k, start, span, axis=1)
+            vb_all = jax.lax.dynamic_slice_in_dim(v, start, span, axis=1)
+            kv_pos = start + jnp.arange(span)
+            valid_all = (None if kv_valid is None
+                         else jax.lax.dynamic_slice_in_dim(kv_valid, start, span, axis=1))
+        else:
+            kb_all, vb_all, kv_pos, valid_all = k, v, kv_pos_all, kv_valid
+
+        span = kb_all.shape[1]
+        n_kc = span // kc
+
+        def kv_block(state, ki):
+            m_prev, l_prev, acc = state
+            kb = jax.lax.dynamic_slice_in_dim(kb_all, ki * kc, kc, axis=1)
+            vb = jax.lax.dynamic_slice_in_dim(vb_all, ki * kc, kc, axis=1)
+            kp = jax.lax.dynamic_slice_in_dim(kv_pos, ki * kc, kc, axis=0)
+            s = jnp.einsum("bqhd,bkhd->bhqk", qb, kb).astype(jnp.float32) * scale
+            mask = jnp.ones((qc, kc), bool)
+            if causal:
+                mask &= q_pos[:, None] >= kp[None, :]
+            if window:
+                mask &= kp[None, :] > q_pos[:, None] - window
+            s = jnp.where(mask[None, None], s, NEG_INF)
+            if valid_all is not None:
+                vb_mask = jax.lax.dynamic_slice_in_dim(valid_all, ki * kc, kc, axis=1)
+                s = jnp.where(vb_mask[:, None, None, :], s, NEG_INF)
+            m_new = jnp.maximum(m_prev, s.max(-1))
+            alpha = jnp.exp(m_prev - m_new)
+            pexp = jnp.exp(s - m_new[..., None])
+            l_new = l_prev * alpha + pexp.sum(-1)
+            acc = acc * alpha[..., None] + jnp.einsum(
+                "bhqk,bkhd->bhqd", pexp, vb.astype(jnp.float32))
+            return (m_new, l_new, acc), None
+
+        m0 = jnp.full((B, H, qc), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, H, qc), jnp.float32)
+        a0 = jnp.zeros((B, H, qc, Dh), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(kv_block, (m0, l0, a0), jnp.arange(n_kc))
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        return carry, out.transpose(0, 2, 1, 3).astype(q.dtype)  # [B,qc,H,Dh]
+
+    _, outs = jax.lax.scan(q_block, None, jnp.arange(n_qc))  # [n_qc,B,qc,H,Dh]
+    return outs.transpose(1, 0, 2, 3, 4).reshape(B, Sq, H, Dh)
+
+
+def grouped_flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                            cfg: ModelConfig, *, causal: bool = True,
+                            kv_valid: Optional[jax.Array] = None) -> jax.Array:
+    """§Perf: block-wise online-softmax attention contracting in KV-head
+    space — K/V blocks are read once instead of materialized G× by
+    repeat_kv. q: [B, Sq, H, Dh]; k/v: [B, Skv, KV, Dh]."""
+    B, Sq, H, Dh = q.shape
+    Skv, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    scale = 1.0 / math.sqrt(Dh)
+    qc = min(cfg.attn_chunk, Sq)
+    kc = min(cfg.attn_chunk, Skv)
+    while Sq % qc:
+        qc -= 1
+    while Skv % kc:
+        kc -= 1
+    n_qc = Sq // qc
+    window = cfg.sliding_window
+    q_pos_base = jnp.arange(qc)
+    kv_pos_all = jnp.arange(Skv)
+
+    def q_block(carry, qi):
+        qb = jax.lax.dynamic_slice_in_dim(q, qi * qc, qc, axis=1)
+        qb = qb.reshape(B, qc, KV, G, Dh)
+        q_pos = qi * qc + q_pos_base
+
+        if window:
+            span = min(window + qc, Skv)
+            start = jnp.clip(qi * qc + qc - span, 0, Skv - span)
+            kb_all = jax.lax.dynamic_slice_in_dim(k, start, span, axis=1)
+            vb_all = jax.lax.dynamic_slice_in_dim(v, start, span, axis=1)
+            kv_pos = start + jnp.arange(span)
+            valid_all = (None if kv_valid is None else
+                         jax.lax.dynamic_slice_in_dim(kv_valid, start, span,
+                                                      axis=1))
+        else:
+            kb_all, vb_all, kv_pos, valid_all = k, v, kv_pos_all, kv_valid
+        n_kc = kb_all.shape[1] // kc
+
+        def kv_block(state, ki):
+            m_prev, l_prev, acc = state
+            kb = jax.lax.dynamic_slice_in_dim(kb_all, ki * kc, kc, axis=1)
+            vb = jax.lax.dynamic_slice_in_dim(vb_all, ki * kc, kc, axis=1)
+            kp = jax.lax.dynamic_slice_in_dim(kv_pos, ki * kc, kc, axis=0)
+            s = jnp.einsum("bqkgd,bskd->bkgqs", qb,
+                           kb).astype(jnp.float32) * scale
+            mask = jnp.ones((qc, kc), bool)
+            if causal:
+                mask &= q_pos[:, None] >= kp[None, :]
+            if window:
+                mask &= kp[None, :] > q_pos[:, None] - window
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+            if valid_all is not None:
+                vm = jax.lax.dynamic_slice_in_dim(valid_all, ki * kc, kc,
+                                                  axis=1)
+                s = jnp.where(vm[:, None, None, None, :], s, NEG_INF)
+            m_new = jnp.maximum(m_prev, s.max(-1))
+            alpha = jnp.exp(m_prev - m_new)
+            pexp = jnp.exp(s - m_new[..., None])
+            l_new = l_prev * alpha + pexp.sum(-1)
+            acc = acc * alpha[..., None] + jnp.einsum(
+                "bkgqs,bskd->bkgqd", pexp, vb.astype(jnp.float32))
+            return (m_new, l_new, acc), None
+
+        m0 = jnp.full((B, KV, G, qc), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, KV, G, qc), jnp.float32)
+        a0 = jnp.zeros((B, KV, G, qc, Dh), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(kv_block, (m0, l0, a0),
+                                      jnp.arange(n_kc))
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        # [B, KV, G, qc, Dh] -> [B, qc, H, Dh]
+        out = out.transpose(0, 3, 1, 2, 4).reshape(B, qc, H, Dh)
+        return carry, out.astype(q.dtype)
+
+    _, outs = jax.lax.scan(q_block, None, jnp.arange(n_qc))
+    return outs.transpose(1, 0, 2, 3, 4).reshape(B, Sq, H, Dh)
+
+
+# ------------------------------------------------------ cached decode ----
+def cached_attention(q: jax.Array, entry: Dict, cfg: ModelConfig,
+                     q_pos: jax.Array, lengths: jax.Array,
+                     k_new: Optional[jax.Array] = None,
+                     v_new: Optional[jax.Array] = None,
+                     tree_mask: Optional[jax.Array] = None) -> jax.Array:
+    """Attention of W query tokens against the committed cache plus (for tree
+    verification) the W in-flight tree tokens.
+
+    q: [B, W, H, Dh]; q_pos: [B, W] absolute positions; lengths: [B];
+    k_new/v_new: [B, W, KV, Dh] the queries' own K/V (tree scratch);
+    tree_mask: [B, W, W] ancestor-or-self visibility (None for plain decode).
+    """
+    B, W, H, Dh = q.shape
+    G = cfg.num_q_per_kv
+    scale = 1.0 / math.sqrt(Dh)
+
+    if cfg.gqa_grouped and G > 1:
+        # §Perf: contract against the cache in KV-head space — the cache is
+        # read ONCE instead of materialized G× by repeat_kv.
+        KV = cfg.num_kv_heads
+        qg = q.reshape(B, W, KV, G, Dh)
+        s_cache = jnp.einsum("bqkgd,bskd->bkgqs", qg,
+                             entry["k"]).astype(jnp.float32) * scale
+        if cfg.attn_score_seqshard:
+            # §Perf it3: keep scores/probs on the cache's seq sharding so
+            # the P·V contraction psums a [B,W,H,Dh] partial instead of
+            # all-gathering V (the involuntary-remat path SPMD warns about)
+            s_cache = shard(s_cache, "batch", None, None, None, "cache_seq")
+        m_cache = cache_lib.visible_mask(entry["pos"], q_pos, lengths,
+                                         cfg.sliding_window)
+        s_cache = jnp.where(m_cache[:, None, None], s_cache, NEG_INF)
+        parts = [s_cache]
+        if k_new is not None:
+            s_tree = jnp.einsum("bqkgd,bskd->bkgqs", qg,
+                                k_new).astype(jnp.float32) * scale
+            tm = (jnp.eye(W, dtype=bool)[None] if tree_mask is None
+                  else tree_mask)
+            s_tree = jnp.where(tm[:, None, None], s_tree, NEG_INF)
+            parts.append(s_tree)
+        s_all = jnp.concatenate(parts, axis=-1)
+        probs = jax.nn.softmax(s_all, axis=-1)
+        sc = s_cache.shape[-1]
+        pc, pt = probs[..., :sc], probs[..., sc:]
+        if cfg.attn_score_seqshard:
+            pc = shard(pc, "batch", None, None, None, "cache_seq")
+        # §Perf it4: contract P·V at the cache's own precision with f32
+        # accumulation — a materialized `v.astype(f32)` gets hoisted by XLA
+        # above the per-layer slice, converting the whole stacked cache.
+        # Probs are downcast (tiny [B,KV,G,W,S] tensor) instead of V.
+        pv = pc.astype(entry["v"].dtype) if entry["v"].dtype != jnp.float32 \
+            else pc
+        out = jnp.einsum("bkgqs,bskd->bqkgd", pv, entry["v"],
+                         preferred_element_type=jnp.float32)
+        if cfg.attn_score_seqshard:
+            out = shard(out, "batch", None, None, None, None)
+        if k_new is not None:
+            out = out + jnp.einsum("bkgqs,bskd->bqkgd", pt, v_new,
+                                   preferred_element_type=jnp.float32)
+        return out.reshape(B, W, H, Dh).astype(q.dtype)
+
+    kc = _repeat_kv(entry["k"], G)  # [B, Sc, H, Dh]
+    vc = _repeat_kv(entry["v"], G)
+    s_cache = jnp.einsum("bqhd,bshd->bhqs", q, kc).astype(jnp.float32) * scale
+    m_cache = cache_lib.visible_mask(entry["pos"], q_pos, lengths, cfg.sliding_window)
+    s_cache = jnp.where(m_cache[:, None], s_cache, NEG_INF)
+
+    parts = [s_cache]
+    if k_new is not None:
+        kt = _repeat_kv(k_new, G)
+        s_tree = jnp.einsum("bqhd,bshd->bhqs", q, kt).astype(jnp.float32) * scale
+        if tree_mask is None:  # plain decode: attend to self only
+            tm = jnp.eye(W, dtype=bool)[None]
+        else:
+            tm = tree_mask
+        s_tree = jnp.where(tm[:, None], s_tree, NEG_INF)
+        parts.append(s_tree)
+
+    s_all = jnp.concatenate(parts, axis=-1)
+    probs = jax.nn.softmax(s_all, axis=-1)
+    pc, pt = probs[..., : kc.shape[1]], probs[..., kc.shape[1]:]
+    out = jnp.einsum("bhqs,bshd->bqhd", pc, vc.astype(jnp.float32))
+    if k_new is not None:
+        vt = _repeat_kv(v_new, G)
+        out = out + jnp.einsum("bhqs,bshd->bqhd", pt, vt.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+# -------------------------------------------------------- layer entry ----
+def attention_layer(p: Dict, x: jax.Array, cfg: ModelConfig, *, mode: str,
+                    positions: jax.Array, inv_freq: Optional[jax.Array],
+                    cache_entry: Optional[Dict] = None,
+                    lengths: Optional[jax.Array] = None,
+                    tree_mask: Optional[jax.Array] = None,
+                    seq_valid: Optional[jax.Array] = None,
+                    ) -> Tuple[jax.Array, Optional[Dict], Optional[Tuple]]:
+    """One self-attention layer in the given mode.
+
+    mode: 'train' | 'prefill' | 'decode' | 'tree'
+    Returns (out, updated_cache_entry, tree_kv) where tree_kv = (k_new, v_new)
+    for tree/decode (needed by the engine to commit accepted nodes).
+    """
+    q = _project_q(p, x, cfg)
+    k, v = _project_kv(p, x, cfg)
+    if inv_freq is not None:
+        q = apply_rope(q, positions, inv_freq)
+        k = apply_rope(k, positions, inv_freq)
+
+    def _full(q_, k_, v_, causal):
+        if cfg.gqa_grouped and cfg.num_q_per_kv > 1:
+            return grouped_flash_attention(q_, k_, v_, cfg, causal=causal,
+                                           kv_valid=seq_valid)
+        return flash_attention(q_, _repeat_kv(k_, cfg.num_q_per_kv),
+                               _repeat_kv(v_, cfg.num_q_per_kv), cfg,
+                               causal=causal, kv_valid=seq_valid)
+
+    if mode == "encode":  # bidirectional (whisper encoder)
+        out = _full(q, k, v, False)
+        return _out_proj(p, out, cfg), None, None
+
+    if mode == "train":
+        out = _full(q, k, v, True)
+        return _out_proj(p, out, cfg), None, None
+
+    if mode == "prefill":
+        out = _full(q, k, v, True)
+        valid = None if seq_valid is None else seq_valid
+        new_entry = cache_lib.write_tokens(cache_entry, k, v, positions, cfg,
+                                           valid=valid)
+        return _out_proj(p, out, cfg), new_entry, None
+
+    if mode in ("decode", "tree"):
+        out = cached_attention(q, cache_entry, cfg, positions, lengths,
+                               k_new=k, v_new=v,
+                               tree_mask=tree_mask if mode == "tree" else None)
+        return _out_proj(p, out, cfg), cache_entry, (k, v)
+
+    raise ValueError(mode)
+
+
+def attention_tree_extend(p: Dict, x: jax.Array, cfg: ModelConfig, *,
+                          positions: jax.Array, inv_freq: Optional[jax.Array],
+                          cache_entry: Dict, lengths: jax.Array,
+                          scratch_k: jax.Array, scratch_v: jax.Array,
+                          offset: int, ext_mask: jax.Array,
+                          ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Drafter-side incremental tree growth: Q new nodes are appended to the
+    per-layer tree scratch ([B, N, KV, Dh]) at a *static* offset, then attend
+    to the committed cache plus the whole scratch under ext_mask [B, Q, N].
+
+    The static offset is the equal-growth property at work: every draft step
+    of a ⟨D, W⟩ bucket appends exactly W nodes, so the offsets (1, 1+W,
+    1+2W, …) are compile-time constants and the step graph is reusable.
+    """
+    q = _project_q(p, x, cfg)
+    k, v = _project_kv(p, x, cfg)
+    if inv_freq is not None:
+        q = apply_rope(q, positions, inv_freq)
+        k = apply_rope(k, positions, inv_freq)
+    scratch_k = jax.lax.dynamic_update_slice_in_dim(scratch_k, k, offset, axis=1)
+    scratch_v = jax.lax.dynamic_update_slice_in_dim(scratch_v, v, offset, axis=1)
+    out = cached_attention(q, cache_entry, cfg, positions, lengths,
+                           k_new=scratch_k, v_new=scratch_v, tree_mask=ext_mask)
+    return _out_proj(p, out, cfg), scratch_k, scratch_v
+
+
+def cross_attention_layer(p: Dict, x: jax.Array, cfg: ModelConfig,
+                          cache_entry: Dict) -> jax.Array:
+    """Decoder cross-attention against cached encoder K/V (no mask, no rope)."""
+    q = _project_q(p, x, cfg)
+    G = cfg.num_q_per_kv
+    ck, cv = _repeat_kv(cache_entry["ck"], G), _repeat_kv(cache_entry["cv"], G)
+    s = jnp.einsum("bqhd,bshd->bhqs", q, ck).astype(jnp.float32)
+    s = s / math.sqrt(cfg.head_dim)
+    probs = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqs,bshd->bqhd", probs, cv.astype(jnp.float32)).astype(x.dtype)
+    return _out_proj(p, out, cfg)
+
+
+def encode_cross_kv(p: Dict, enc_out: jax.Array, cfg: ModelConfig) -> Tuple[jax.Array, jax.Array]:
+    """Project encoder output into the decoder layer's cross K/V."""
+    return _project_kv(p, enc_out, cfg)

@@ -1,0 +1,212 @@
+"""Static-shape decode caches.
+
+The cache is a plain pytree so it can be jit-carried, donated and sharded.
+
+Layout (per attention layer, stacked over scan blocks):
+    k, v : [num_blocks, B, S_cache, KV, Dh]   (seq dim sharded over `model`)
+    pos  : [num_blocks, B, S_cache] int32     absolute position held in the
+                                              slot, -1 if empty
+Per SSM layer:
+    state: [num_blocks, B, H, P, N] float32
+    conv : [num_blocks, B, W-1, conv_dim]
+Global:
+    length: [B] int32  committed tokens per request
+
+Sliding-window archs use a ring buffer: S_cache == window and slots are
+addressed ``pos % window``; full-attention archs use S_cache == max target
+length with slot == pos. Both cases are handled by `slot_for`.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.sharding import shard
+
+Cache = Dict[str, Any]
+
+
+def cache_seq_len(cfg: ModelConfig, target_len: int) -> int:
+    if cfg.sliding_window:
+        return min(cfg.sliding_window, target_len)
+    return target_len
+
+
+def _attn_entry(cfg: ModelConfig, batch: int, s_cache: int, dtype) -> Dict:
+    kv, dh = cfg.num_kv_heads, cfg.head_dim
+    return {
+        "k": jnp.zeros((batch, s_cache, kv, dh), dtype),
+        "v": jnp.zeros((batch, s_cache, kv, dh), dtype),
+        "pos": jnp.full((batch, s_cache), -1, jnp.int32),
+    }
+
+
+def _attn_entry_abstract(cfg: ModelConfig, batch: int, s_cache: int, dtype) -> Dict:
+    kv, dh = cfg.num_kv_heads, cfg.head_dim
+    return {
+        "k": jax.ShapeDtypeStruct((batch, s_cache, kv, dh), dtype),
+        "v": jax.ShapeDtypeStruct((batch, s_cache, kv, dh), dtype),
+        "pos": jax.ShapeDtypeStruct((batch, s_cache), jnp.int32),
+    }
+
+
+def _ssm_entry(cfg: ModelConfig, batch: int, dtype) -> Dict:
+    h, p, n = cfg.ssm_num_heads, cfg.ssm_head_dim, cfg.ssm_state_size
+    conv_dim = cfg.ssm_d_inner + 2 * cfg.ssm_num_groups * cfg.ssm_state_size
+    return {
+        "state": jnp.zeros((batch, h, p, n), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.ssm_conv_width - 1, conv_dim), dtype),
+    }
+
+
+def _ssm_entry_abstract(cfg: ModelConfig, batch: int, dtype) -> Dict:
+    h, p, n = cfg.ssm_num_heads, cfg.ssm_head_dim, cfg.ssm_state_size
+    conv_dim = cfg.ssm_d_inner + 2 * cfg.ssm_num_groups * cfg.ssm_state_size
+    return {
+        "state": jax.ShapeDtypeStruct((batch, h, p, n), jnp.float32),
+        "conv": jax.ShapeDtypeStruct((batch, cfg.ssm_conv_width - 1, conv_dim), dtype),
+    }
+
+
+def _cross_entry(cfg: ModelConfig, batch: int, dtype, abstract: bool) -> Dict:
+    kv, dh, t = cfg.num_kv_heads, cfg.head_dim, cfg.encoder_seq_len
+    mk = (lambda s, dt: jax.ShapeDtypeStruct(s, dt)) if abstract else (
+        lambda s, dt: jnp.zeros(s, dt))
+    return {"ck": mk((batch, t, kv, dh), dtype), "cv": mk((batch, t, kv, dh), dtype)}
+
+
+def init_cache(cfg: ModelConfig, batch: int, target_len: int,
+               dtype=jnp.float32, abstract: bool = False) -> Cache:
+    """Build the full cache pytree (stacked over scan blocks)."""
+    s_cache = cache_seq_len(cfg, target_len)
+    lpb, nb = cfg.layers_per_block, cfg.num_blocks
+
+    def block_entry(block_idx: int) -> Dict:
+        entry = {}
+        for j in range(lpb):
+            i = block_idx * lpb + j
+            if cfg.layer_mixer(i) == "attn":
+                e = (_attn_entry_abstract if abstract else _attn_entry)(
+                    cfg, batch, s_cache, dtype)
+                if cfg.is_encoder_decoder:
+                    e.update(_cross_entry(cfg, batch, dtype, abstract))
+            else:
+                e = (_ssm_entry_abstract if abstract else _ssm_entry)(cfg, batch, dtype)
+            entry[f"layer{j}"] = e
+        return entry
+
+    # every block has identical structure (period == layers_per_block), so
+    # stack block 0's structure nb times
+    proto = block_entry(0)
+    if abstract:
+        blocks = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct((nb,) + s.shape, s.dtype), proto)
+    else:
+        blocks = jax.tree.map(lambda a: jnp.broadcast_to(a[None], (nb,) + a.shape), proto)
+        blocks = jax.tree.map(jnp.array, blocks)  # materialize
+
+    length = (jax.ShapeDtypeStruct((batch,), jnp.int32) if abstract
+              else jnp.zeros((batch,), jnp.int32))
+    return {"blocks": blocks, "length": length}
+
+
+def _leaf_axes(path: Tuple, leaf) -> Tuple:
+    leafname = getattr(path[-1], "key", str(path[-1]))
+    if leafname in ("k", "v", "ck", "cv"):
+        return ("layers", "batch", "cache_seq", "kv_heads", "head_dim_shard")[-leaf.ndim:]
+    if leafname == "pos":
+        return ("layers", "batch", "cache_seq")[-leaf.ndim:]
+    if leafname == "state":
+        return ("layers", "batch", "ssm_heads", None, None)[-leaf.ndim:]
+    if leafname == "conv":
+        return ("layers", "batch", None, "ssm_inner")[-leaf.ndim:]
+    if leafname == "length":
+        return ("batch",)
+    raise ValueError(leafname)
+
+
+def cache_logical_axes(cache: Cache):
+    """(path, axes) pairs for every cache leaf — used for jit shardings."""
+    return jax.tree_util.tree_map_with_path(
+        lambda p, x: _leaf_axes(p, x), cache,
+        is_leaf=lambda x: hasattr(x, "ndim") and not isinstance(x, dict))
+
+
+def shard_cache(cache: Cache) -> Cache:
+    """Apply sharding constraints to every cache leaf."""
+    return jax.tree_util.tree_map_with_path(
+        lambda p, x: shard(x, *_leaf_axes(p, x)), cache)
+
+
+def slot_for(pos: jax.Array, s_cache: int, sliding_window: int) -> jax.Array:
+    """Map absolute positions to cache slots (ring buffer under SWA)."""
+    if sliding_window:
+        return pos % s_cache
+    return pos
+
+
+def write_tokens(entry: Dict, k_new: jax.Array, v_new: jax.Array,
+                 positions: jax.Array, cfg: ModelConfig,
+                 valid: Optional[jax.Array] = None) -> Dict:
+    """Write S_new tokens into an attention cache entry.
+
+    k_new/v_new: [B, S_new, KV, Dh]; positions: [B, S_new] absolute positions;
+    valid: [B, S_new] bool (False entries are not written).
+    """
+    s_cache = entry["k"].shape[1]
+    slots = slot_for(positions, s_cache, cfg.sliding_window)  # [B, S_new]
+    if valid is None:
+        valid = positions >= 0
+    # scatter along the slot axis; invalid entries routed to slot 0 with
+    # a no-op via where-merge below would clobber — instead route invalid
+    # writes to an out-of-range slot and rely on mode="drop".
+    slots = jnp.where(valid, slots, s_cache)  # s_cache is out of range -> drop
+    b_idx = jnp.arange(k_new.shape[0])[:, None]
+
+    def scat(store, val):
+        return store.at[b_idx, slots].set(val, mode="drop")
+
+    return {
+        "k": scat(entry["k"], k_new),
+        "v": scat(entry["v"], v_new),
+        "pos": scat(entry["pos"], jnp.where(valid, positions, -1)),
+        **{kk: entry[kk] for kk in entry if kk in ("ck", "cv")},
+    }
+
+
+def commit_region(entry: Dict, k_nodes: jax.Array, v_nodes: jax.Array,
+                  node_idx: jax.Array, lengths: jax.Array, accept_len: jax.Array,
+                  cfg: ModelConfig) -> Dict:
+    """Commit accepted tree nodes into the cache.
+
+    k_nodes/v_nodes: [B, W, KV, Dh] tree-node K/V from verification;
+    node_idx: [B, A_max] indices into the W tree nodes forming the accepted
+    path (position j holds the node committed at lengths+j);
+    accept_len: [B] number of accepted nodes.
+    """
+    b = k_nodes.shape[0]
+    a_max = node_idx.shape[1]
+    b_idx = jnp.arange(b)[:, None]
+    gathered_k = k_nodes[b_idx, node_idx]  # [B, A_max, KV, Dh]
+    gathered_v = v_nodes[b_idx, node_idx]
+    positions = lengths[:, None] + jnp.arange(a_max)[None, :]
+    valid = jnp.arange(a_max)[None, :] < accept_len[:, None]
+    return write_tokens(entry, gathered_k, gathered_v, positions, cfg, valid=valid)
+
+
+def visible_mask(entry_pos: jax.Array, q_pos: jax.Array, lengths: jax.Array,
+                 sliding_window: int) -> jax.Array:
+    """[B, S_q, S_cache] mask of committed slots visible to each query.
+
+    entry_pos: [B, S_cache] absolute positions (-1 empty);
+    q_pos: [B, S_q] query absolute positions; lengths: [B] committed length.
+    """
+    kp = entry_pos[:, None, :]
+    qp = q_pos[:, :, None]
+    m = (kp >= 0) & (kp < lengths[:, None, None]) & (kp < qp)
+    if sliding_window:
+        m &= kp > qp - sliding_window
+    return m

@@ -1,0 +1,122 @@
+"""Shared layer primitives: norms, RoPE, MLPs, embeddings."""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.params import ParamDef
+from repro.sharding import shard
+
+
+# ---------------------------------------------------------------- norms ----
+def norm_defs(cfg: ModelConfig, d: Optional[int] = None) -> Dict[str, ParamDef]:
+    d = d or cfg.d_model
+    defs = {"scale": ParamDef((d,), (None,), init="ones")}
+    if cfg.norm_type == "layernorm":
+        defs["bias"] = ParamDef((d,), (None,), init="zeros")
+    return defs
+
+
+def apply_norm(p: Dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    if cfg.norm_type == "layernorm":
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + cfg.norm_eps)
+        y = y * p["scale"] + p["bias"]
+    else:  # rmsnorm
+        ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(ms + cfg.norm_eps) * p["scale"]
+    return y.astype(x.dtype)
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    y = xf * jax.lax.rsqrt(jnp.mean(jnp.square(xf), -1, keepdims=True) + eps)
+    return (y * scale).astype(x.dtype)
+
+
+# ----------------------------------------------------------------- rope ----
+def rope_frequencies(cfg: ModelConfig, dim: Optional[int] = None) -> jax.Array:
+    dim = dim or cfg.head_dim
+    exponent = jnp.arange(0, dim, 2, dtype=jnp.float32) / dim
+    return 1.0 / (cfg.rope_theta ** exponent)  # [dim/2]
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, inv_freq: jax.Array) -> jax.Array:
+    """x: [..., S, H, D]; positions: broadcastable to [..., S]."""
+    angles = positions[..., None].astype(jnp.float32) * inv_freq  # [..., S, D/2]
+    angles = angles[..., None, :]                                 # [..., S, 1, D/2]
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ----------------------------------------------------------------- mlps ----
+def mlp_defs(cfg: ModelConfig) -> Dict[str, ParamDef]:
+    d, f = cfg.d_model, cfg.d_ff
+    defs = {
+        "w_in": ParamDef((d, f), (None, "ff")),
+        "w_out": ParamDef((f, d), ("ff", None)),
+    }
+    if cfg.gated_mlp:
+        defs["w_gate"] = ParamDef((d, f), (None, "ff"))
+    return defs
+
+
+def _act(x: jax.Array, kind: str) -> jax.Array:
+    if kind == "silu":
+        return jax.nn.silu(x)
+    if kind == "gelu":
+        return jax.nn.gelu(x)
+    if kind == "sq_relu":  # nemotron-4 squared ReLU
+        r = jax.nn.relu(x)
+        return r * r
+    raise ValueError(kind)
+
+
+def apply_mlp(p: Dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    h = x @ p["w_in"]
+    h = shard(h, *(("batch",) + (None,) * (h.ndim - 2) + ("ff",)))
+    if cfg.gated_mlp:
+        h = _act(x @ p["w_gate"], cfg.mlp_act) * h
+    else:
+        h = _act(h, cfg.mlp_act)
+    out = h @ p["w_out"]
+    return shard(out, *(("batch",) + (None,) * (out.ndim - 1)))
+
+
+# ----------------------------------------------------------- embeddings ----
+def embed_defs(cfg: ModelConfig) -> Dict[str, ParamDef]:
+    defs = {"tok": ParamDef((cfg.vocab_padded, cfg.d_model), ("vocab", "d_model"))}
+    if cfg.pos_embedding == "learned":
+        defs["pos"] = ParamDef((cfg.max_seq_len, cfg.d_model), (None, None))
+    return defs
+
+
+def embed_tokens(p: Dict, tokens: jax.Array, cfg: ModelConfig,
+                 positions: Optional[jax.Array] = None) -> jax.Array:
+    h = jnp.take(p["tok"], tokens, axis=0)
+    if cfg.pos_embedding == "learned":
+        assert positions is not None
+        h = h + jnp.take(p["pos"], jnp.clip(positions, 0, cfg.max_seq_len - 1), axis=0)
+    return shard(h, "batch", None, None)
+
+
+def lm_head_defs(cfg: ModelConfig) -> Dict[str, ParamDef]:
+    if cfg.tie_embeddings:
+        return {}
+    return {"w": ParamDef((cfg.d_model, cfg.vocab_padded), ("d_model", "vocab"))}
+
+
+def apply_lm_head(params: Dict, h: jax.Array, cfg: ModelConfig) -> jax.Array:
+    if cfg.tie_embeddings:
+        w = params["embed"]["tok"].T
+    else:
+        w = params["lm_head"]["w"]
+    logits = h @ w
+    return shard(logits, *(("batch",) + (None,) * (logits.ndim - 2) + ("vocab",)))

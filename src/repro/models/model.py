@@ -1,0 +1,351 @@
+"""Unified model API.
+
+``Model`` wraps a ModelConfig with pure functions:
+
+    init(key)                      -> params
+    hidden_train(params, tokens)   -> (h, aux)            # full causal
+    logits(params, h)              -> vocab logits
+    encode(params, feats)          -> encoder states       (enc-dec only)
+    prefill(params, tokens, lengths, cache, enc_feats)
+                                   -> (last_logits, cache)
+    decode(params, token, cache)   -> (logits, cache)      # commits 1 token
+    tree_verify(params, tree, cache)
+                                   -> (logits [B,W,V], scratch)
+    commit(cache, scratch, node_idx, accept_len, tokens)   -> cache
+
+All functions are jit-compatible; shapes are static given (batch, seq, W).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import cache as cache_lib
+from repro.models import transformer
+from repro.models.layers import (apply_lm_head, apply_norm, embed_defs,
+                                 embed_tokens, lm_head_defs, norm_defs,
+                                 rope_frequencies)
+from repro.models.params import ParamDef, abstract_params, init_params, stacked
+from repro.sharding import shard
+
+
+class Model:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+
+    # ------------------------------------------------------------ params --
+    def param_defs(self) -> Dict[str, Any]:
+        cfg = self.cfg
+        defs: Dict[str, Any] = {
+            "embed": embed_defs(cfg),
+            "blocks": stacked(transformer.block_defs(cfg), cfg.num_blocks),
+            "final_norm": norm_defs(cfg),
+        }
+        head = lm_head_defs(cfg)
+        if head:
+            defs["lm_head"] = head
+        if cfg.is_encoder_decoder:
+            defs["enc_blocks"] = stacked(
+                transformer.block_defs(cfg, encoder=True), cfg.num_encoder_layers)
+            defs["enc_norm"] = norm_defs(cfg)
+            if cfg.pos_embedding == "learned":
+                defs["enc_pos"] = {
+                    "pos": ParamDef((cfg.encoder_seq_len, cfg.d_model), (None, None))}
+        return defs
+
+    def init(self, key: jax.Array, dtype=jnp.float32):
+        return init_params(self.param_defs(), key, dtype)
+
+    def abstract(self, dtype=jnp.float32):
+        return abstract_params(self.param_defs(), dtype)
+
+    def _inv_freq(self):
+        return (rope_frequencies(self.cfg)
+                if self.cfg.pos_embedding == "rope" else None)
+
+    # ------------------------------------------------------------- trunk --
+    def _run_blocks(self, params, h, mode: str, ctx: Dict,
+                    cache: Optional[Dict] = None):
+        cfg = self.cfg
+
+        def body(carry, xs):
+            h, aux = carry
+            bp, cb = xs
+            h, new_cb, scratch, a = transformer.apply_block(
+                bp, h, cfg, mode, ctx, cb)
+            return (h, aux + a), (new_cb, scratch)
+
+        if cfg.remat and mode == "train":
+            body = jax.checkpoint(body)
+
+        cache_blocks = None if cache is None else cache["blocks"]
+        (h, aux), (new_blocks, scratch) = jax.lax.scan(
+            body, (h, jnp.zeros((), jnp.float32)),
+            (params["blocks"], cache_blocks),
+            unroll=cfg.num_blocks if cfg.scan_unroll else 1)
+        h = apply_norm(params["final_norm"], h, cfg)
+        return h, aux, new_blocks, scratch
+
+    def logits(self, params, h: jax.Array) -> jax.Array:
+        return apply_lm_head(params, h, self.cfg)
+
+    # ------------------------------------------------------------- train --
+    def hidden_train(self, params, tokens: jax.Array,
+                     seq_valid: Optional[jax.Array] = None,
+                     enc_feats: Optional[jax.Array] = None):
+        cfg = self.cfg
+        B, S = tokens.shape
+        positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+        h = embed_tokens(params["embed"], tokens, cfg, positions)
+        ctx = {"positions": positions, "inv_freq": self._inv_freq(),
+               "seq_valid": seq_valid}
+        if cfg.is_encoder_decoder:
+            enc_out = self.encode(params, enc_feats)
+            ctx["enc_out"] = enc_out
+            # training with cross attention needs ck/cv; reuse prefill path by
+            # treating train as prefill-with-full-cache-less cross attention:
+            # we inline cross K/V per block via ctx (computed inside block).
+            return self._hidden_train_encdec(params, h, ctx)
+        h, aux, _, _ = self._run_blocks(params, h, "train", ctx)
+        return h, aux
+
+    def _hidden_train_encdec(self, params, h, ctx):
+        """Enc-dec training: per-block cross K/V computed on the fly."""
+        cfg = self.cfg
+        from repro.models import attention as attn_mod
+        from repro.models.layers import apply_norm as _an
+
+        def body(carry, bp):
+            h, aux = carry
+            lp = bp["layer0"]
+            x = _an(lp["mixer_norm"], h, cfg)
+            out, _, _ = attn_mod.attention_layer(
+                lp["attn"], x, cfg, mode="train",
+                positions=ctx["positions"], inv_freq=ctx.get("inv_freq"),
+                seq_valid=ctx.get("seq_valid"))
+            h = h + out
+            ck, cv = attn_mod.encode_cross_kv(lp["cross"], ctx["enc_out"], cfg)
+            xc = _an(lp["cross_norm"], h, cfg)
+            h = h + attn_mod.cross_attention_layer(
+                lp["cross"], xc, cfg, {"ck": ck, "cv": cv})
+            x = _an(lp["ffn_norm"], h, cfg)
+            from repro.models.layers import apply_mlp
+            h = h + apply_mlp(lp["mlp"], x, cfg)
+            return (h, aux), None
+
+        if cfg.remat:
+            body = jax.checkpoint(body)
+        (h, aux), _ = jax.lax.scan(
+            body, (h, jnp.zeros((), jnp.float32)), params["blocks"],
+            unroll=cfg.num_blocks if cfg.scan_unroll else 1)
+        return apply_norm(params["final_norm"], h, cfg), aux
+
+    # ------------------------------------------------------------ encode --
+    def encode(self, params, feats: jax.Array) -> jax.Array:
+        """feats: [B, T, d] precomputed frontend embeddings (stub carve-out)."""
+        cfg = self.cfg
+        h = feats + params["enc_pos"]["pos"][None] if "enc_pos" in params else feats
+        B, T = h.shape[:2]
+        ctx = {"positions": jnp.broadcast_to(jnp.arange(T)[None], (B, T)),
+               "inv_freq": None}
+
+        def body(carry, bp):
+            h, = carry
+            h, _, _, _ = transformer.apply_block(bp, h, cfg, "encode", ctx,
+                                                 encoder=True)
+            return (h,), None
+
+        (h,), _ = jax.lax.scan(
+            body, (h,), params["enc_blocks"],
+            unroll=cfg.num_encoder_layers if cfg.scan_unroll else 1)
+        return apply_norm(params["enc_norm"], h, cfg)
+
+    # ----------------------------------------------------------- prefill --
+    def prefill(self, params, tokens: jax.Array, lengths: jax.Array,
+                cache: Dict, enc_feats: Optional[jax.Array] = None):
+        """tokens: [B, S] right-padded prompts; lengths: [B].
+
+        Returns (last_logits [B, V], cache) where last_logits is the
+        distribution after each prompt's final token.
+        """
+        cfg = self.cfg
+        B, S = tokens.shape
+        positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+        seq_valid = positions < lengths[:, None]
+        h = embed_tokens(params["embed"], tokens, cfg, positions)
+        ctx = {"positions": positions, "inv_freq": self._inv_freq(),
+               "seq_valid": seq_valid, "lengths": lengths}
+        if cfg.is_encoder_decoder:
+            ctx["enc_out"] = self.encode(params, enc_feats)
+        h, aux, new_blocks, _ = self._run_blocks(params, h, "prefill", ctx, cache)
+        # hidden state of each prompt's last token
+        idx = jnp.clip(lengths - 1, 0, S - 1)
+        h_last = jnp.take_along_axis(h, idx[:, None, None].repeat(h.shape[-1], -1),
+                                     axis=1)[:, 0]
+        logits = self.logits(params, h_last)
+        # `+ 0` forces a fresh buffer so donating the cache later can never
+        # invalidate the caller's `lengths` array
+        new_cache = {"blocks": new_blocks, "length": lengths.astype(jnp.int32) + 0}
+        return logits, new_cache, h_last
+
+    # ------------------------------------------------------------ decode --
+    def decode(self, params, token: jax.Array, cache: Dict):
+        """token: [B] confirmed next token. Commits it and returns logits."""
+        cfg = self.cfg
+        B = token.shape[0]
+        lengths = cache["length"]
+        positions = lengths[:, None]  # [B, 1]
+        h = embed_tokens(params["embed"], token[:, None], cfg, positions)
+        ctx = {"positions": positions, "inv_freq": self._inv_freq(),
+               "lengths": lengths}
+        h, aux, new_blocks, _ = self._run_blocks(params, h, "decode", ctx, cache)
+        logits = self.logits(params, h[:, 0])
+        new_cache = {"blocks": new_blocks, "length": lengths + 1}
+        return logits, new_cache, h[:, 0]
+
+    # ------------------------------------------------------- tree verify --
+    def tree_verify(self, params, tree_tokens: jax.Array, depths: jax.Array,
+                    tree_mask: jax.Array, cache: Dict,
+                    tree_paths: Optional[jax.Array] = None):
+        """tree_tokens: [B, W]; depths: [B, W] (root depth 0); tree_mask:
+        [B, W, W] ancestor-or-self; tree_paths: [B, W, Dmax] for SSM layers.
+
+        Returns (logits [B, W, V], scratch, hidden [B, W, d]); cache is NOT
+        mutated — call ``commit`` with the acceptance result.
+        """
+        cfg = self.cfg
+        lengths = cache["length"]
+        positions = lengths[:, None] + depths  # [B, W]
+        h = embed_tokens(params["embed"], tree_tokens, cfg, positions)
+        ctx = {"positions": positions, "inv_freq": self._inv_freq(),
+               "lengths": lengths, "tree_mask": tree_mask,
+               "tree_paths": tree_paths}
+        h, aux, _, scratch = self._run_blocks(params, h, "tree", ctx, cache)
+        logits = self.logits(params, h)
+        return logits, scratch, h
+
+    # ----------------------------------------------- drafter tree growth --
+    def init_tree_scratch(self, batch: int, n: int, dtype=jnp.float32):
+        """Per-layer K/V buffers for N in-flight tree nodes (drafter side)."""
+        cfg = self.cfg
+        assert all(cfg.layer_mixer(i) == "attn" for i in range(cfg.num_layers)), \
+            "tree_extend drafting requires an attention drafter (see DESIGN.md)"
+        kv, dh = cfg.num_kv_heads, cfg.head_dim
+        proto = {f"layer{j}": {
+            "k": jnp.zeros((batch, n, kv, dh), dtype),
+            "v": jnp.zeros((batch, n, kv, dh), dtype)}
+            for j in range(cfg.layers_per_block)}
+        return jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (cfg.num_blocks,) + a.shape), proto)
+
+    def tree_extend(self, params, new_tokens: jax.Array, depths_new: jax.Array,
+                    ext_mask: jax.Array, scratch, offset: int, cache: Dict):
+        """Process Q new tree nodes on the drafter.
+
+        new_tokens: [B, Q]; depths_new: [B, Q]; ext_mask: [B, Q, N] visibility
+        over ALL N scratch slots (ancestors only); offset: static write slot.
+        Returns (logits [B, Q, V], new_scratch).
+        """
+        cfg = self.cfg
+        lengths = cache["length"]
+        positions = lengths[:, None] + depths_new
+        h = embed_tokens(params["embed"], new_tokens, cfg, positions)
+        inv_freq = self._inv_freq()
+
+        from repro.models import attention as attn_mod
+        from repro.models.layers import apply_mlp
+
+        def body(carry, xs):
+            h, = carry
+            bp, cb, sb = xs
+            new_sb = {}
+            for j in range(cfg.layers_per_block):
+                lp, entry, sc = bp[f"layer{j}"], cb[f"layer{j}"], sb[f"layer{j}"]
+                x = apply_norm(lp["mixer_norm"], h, cfg)
+                out, sk, sv = attn_mod.attention_tree_extend(
+                    lp["attn"], x, cfg, positions=positions, inv_freq=inv_freq,
+                    cache_entry=entry, lengths=lengths,
+                    scratch_k=sc["k"], scratch_v=sc["v"], offset=offset,
+                    ext_mask=ext_mask)
+                h = h + out
+                new_sb[f"layer{j}"] = {"k": sk, "v": sv}
+                if "mlp" in lp:
+                    x = apply_norm(lp["ffn_norm"], h, cfg)
+                    h = h + apply_mlp(lp["mlp"], x, cfg)
+                elif "moe" in lp:
+                    from repro.models import moe as moe_mod
+                    x = apply_norm(lp["ffn_norm"], h, cfg)
+                    mo, _ = moe_mod.apply_moe(lp["moe"], x, cfg)
+                    h = h + mo
+            return (h,), new_sb
+
+        (h,), new_scratch = jax.lax.scan(
+            body, (h,), (params["blocks"], cache["blocks"], scratch))
+        h = apply_norm(params["final_norm"], h, cfg)
+        return self.logits(params, h), new_scratch
+
+    def commit_scratch(self, cache: Dict, scratch, node_idx: jax.Array,
+                       accept_len: jax.Array) -> Dict:
+        """Commit accepted tree nodes from a drafter tree scratch (full-N
+        buffers) into the drafter's cache."""
+        cfg = self.cfg
+        lengths = cache["length"]
+
+        def per_block(cb, sb):
+            return {f"layer{j}": cache_lib.commit_region(
+                cb[f"layer{j}"], sb[f"layer{j}"]["k"], sb[f"layer{j}"]["v"],
+                node_idx, lengths, accept_len, cfg)
+                for j in range(cfg.layers_per_block)}
+
+        new_blocks = jax.vmap(per_block)(cache["blocks"], scratch)
+        return {"blocks": new_blocks, "length": lengths + accept_len}
+
+    # ------------------------------------------------------------ commit --
+    def commit(self, cache: Dict, scratch: Dict, node_idx: jax.Array,
+               accept_len: jax.Array) -> Dict:
+        """Write accepted tree nodes into the cache.
+
+        node_idx: [B, A_max] tree-node index of the j-th accepted token;
+        accept_len: [B] number of accepted nodes (>= 1: root always accepted).
+        """
+        cfg = self.cfg
+        lengths = cache["length"]
+        B = node_idx.shape[0]
+        b_idx = jnp.arange(B)
+
+        def per_block(cb, sb):
+            new_cb = {}
+            for j in range(cfg.layers_per_block):
+                key = f"layer{j}"
+                entry, sc = cb[key], (sb or {}).get(key)
+                if sc is None:
+                    new_cb[key] = entry
+                elif "k" in sc:  # attention layer
+                    new_cb[key] = cache_lib.commit_region(
+                        entry, sc["k"], sc["v"], node_idx, lengths,
+                        accept_len, cfg)
+                else:            # ssm layer: adopt last accepted node's state
+                    last = node_idx[b_idx, jnp.maximum(accept_len - 1, 0)]
+                    new_state = sc["node_states"][b_idx, last]
+                    new_conv = sc["node_conv"][b_idx, last]
+                    keep = (accept_len > 0)[:, None]
+                    new_cb[key] = {
+                        "state": jnp.where(keep[..., None, None],
+                                           new_state, entry["state"]),
+                        "conv": jnp.where(
+                            keep[..., None],
+                            new_conv.astype(entry["conv"].dtype), entry["conv"]),
+                    }
+            return new_cb
+
+        new_blocks = jax.vmap(per_block)(cache["blocks"], scratch)
+        return {"blocks": new_blocks, "length": lengths + accept_len}
+
+
+@functools.lru_cache(maxsize=64)
+def get_model(cfg: ModelConfig) -> Model:
+    return Model(cfg)

@@ -1,0 +1,163 @@
+"""Mixture-of-Experts FFN with static-shape capacity-based dispatch.
+
+Dispatch is gather-based (indices, not one-hot einsum) so the big tensors are
+[E, C, d] activations rather than [T, E, C] routing masks. Expert weights are
+tensor-sharded on the expert hidden dim (`expert_ff` -> model axis), which is
+uniform across E = 8 / 16 / 40 (none of which divide a 16-way model axis).
+Expert-parallel layout is explored separately in EXPERIMENTS.md §Perf.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import _act
+from repro.models.params import ParamDef
+from repro.sharding import shard
+
+
+def moe_defs(cfg: ModelConfig) -> Dict[str, ParamDef]:
+    d, f, e = cfg.d_model, cfg.moe_d_ff, cfg.num_experts
+    defs = {
+        "router": ParamDef((d, e), (None, None)),
+        "w_in": ParamDef((e, d, f), ("experts", None, "expert_ff"), fan_in_dims=(1,)),
+        "w_out": ParamDef((e, f, d), ("experts", "expert_ff", None), fan_in_dims=(1,)),
+    }
+    if cfg.gated_mlp:
+        defs["w_gate"] = ParamDef((e, d, f), ("experts", None, "expert_ff"),
+                                  fan_in_dims=(1,))
+    return defs
+
+
+def _capacity(tokens: int, cfg: ModelConfig) -> int:
+    c = int(tokens * cfg.num_experts_per_tok * cfg.capacity_factor
+            / cfg.num_experts) + 1
+    return max(8, min(c, tokens))
+
+
+def apply_moe(p: Dict, x: jax.Array, cfg: ModelConfig) -> Tuple[jax.Array, jax.Array]:
+    """x: [B, S, d] -> (out [B, S, d], aux_loss scalar)."""
+    if cfg.moe_batch_dispatch:
+        return _apply_moe_batched(p, x, cfg)
+    B, S, d = x.shape
+    E, K = cfg.num_experts, cfg.num_experts_per_tok
+    T = B * S
+    C = _capacity(T, cfg)
+    xt = x.reshape(T, d)
+
+    logits = (xt @ p["router"]).astype(jnp.float32)          # [T, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, K)          # [T, K]
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # load-balance auxiliary loss (Switch-style)
+    me = probs.mean(0)                                       # [E]
+    ce = jnp.zeros((E,)).at[expert_idx.reshape(-1)].add(1.0) / (T * K)
+    aux = cfg.router_aux_loss_coef * E * jnp.sum(me * ce)
+
+    # position of each (token, k) assignment within its expert's capacity
+    flat_expert = expert_idx.reshape(-1)                     # [T*K]
+    onehot = jax.nn.one_hot(flat_expert, E, dtype=jnp.int32)  # [T*K, E]
+    pos_in_expert = (jnp.cumsum(onehot, axis=0) - onehot)    # exclusive cumsum
+    pos_in_expert = jnp.take_along_axis(
+        pos_in_expert, flat_expert[:, None], axis=1)[:, 0]   # [T*K]
+    keep = pos_in_expert < C
+
+    token_ids = jnp.repeat(jnp.arange(T), K)
+    # scatter token ids into the [E, C] dispatch table (dropped -> sentinel T)
+    dispatch = jnp.full((E, C), T, jnp.int32)
+    slot_e = jnp.where(keep, flat_expert, E)                 # drop -> OOB row
+    slot_c = jnp.where(keep, pos_in_expert, 0)
+    dispatch = dispatch.at[slot_e, slot_c].set(token_ids, mode="drop")
+
+    # gather expert inputs ([E, C, d]); sentinel row reads zeros
+    xt_pad = jnp.concatenate([xt, jnp.zeros((1, d), xt.dtype)], axis=0)
+    xin = xt_pad[dispatch]                                   # [E, C, d]
+    xin = shard(xin, "experts", None, None)
+
+    h = jnp.einsum("ecd,edf->ecf", xin, p["w_in"])
+    h = shard(h, "experts", None, "expert_ff")
+    if cfg.gated_mlp:
+        g = jnp.einsum("ecd,edf->ecf", xin, p["w_gate"])
+        h = _act(g, cfg.mlp_act) * h
+    else:
+        h = _act(h, cfg.mlp_act)
+    out_e = jnp.einsum("ecf,efd->ecd", h, p["w_out"])        # [E, C, d]
+    out_e = shard(out_e, "experts", None, None)
+
+    # combine: scatter-add back to tokens with gate weights
+    gates_flat = jnp.where(keep, gate_vals.reshape(-1), 0.0)  # [T*K]
+    gate_table = jnp.zeros((E, C), gates_flat.dtype).at[slot_e, slot_c].set(
+        gates_flat, mode="drop")
+    out = jnp.zeros((T + 1, d), jnp.float32).at[dispatch.reshape(-1)].add(
+        (out_e * gate_table[..., None]).reshape(E * C, d).astype(jnp.float32))
+    out = out[:T].reshape(B, S, d).astype(x.dtype)
+    return shard(out, "batch", None, None), aux
+
+
+def _apply_moe_batched(p: Dict, x: jax.Array, cfg: ModelConfig
+                       ) -> Tuple[jax.Array, jax.Array]:
+    """§Perf variant: batch-row-local dispatch + gather-based combine.
+
+    Routing, capacity and combine all keep the leading batch dim, so under a
+    batch-sharded mesh every step is shard-local — the cross-device scatter/
+    gather of the flat-token path disappears, and the only collective left
+    is the w_out contraction's all-reduce. Combine is a GATHER over [E, C]
+    expert outputs per token (no [T, d] scatter-add accumulator).
+    Capacity is per-sequence (C = S·K·cf/E), a standard deployment choice.
+    """
+    B, S, d = x.shape
+    E, K = cfg.num_experts, cfg.num_experts_per_tok
+    C = _capacity(S, cfg)
+    b_idx = jnp.arange(B)[:, None]
+
+    logits = (x @ p["router"]).astype(jnp.float32)            # [B, S, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, K)           # [B, S, K]
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    me = probs.mean((0, 1))
+    ce = (jnp.zeros((B, E)).at[b_idx.repeat(S * K, 1).reshape(B, -1),
+                               expert_idx.reshape(B, -1)].add(1.0)
+          ).mean(0) / (S * K)
+    aux = cfg.router_aux_loss_coef * E * jnp.sum(me * ce)
+
+    flat_e = expert_idx.reshape(B, S * K)                     # [B, S*K]
+    onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)
+    pos = jnp.cumsum(onehot, axis=1) - onehot                 # exclusive
+    pos = jnp.take_along_axis(pos, flat_e[..., None], axis=2)[..., 0]
+    keep = pos < C                                            # [B, S*K]
+
+    token_ids = jnp.repeat(jnp.arange(S), K)[None].repeat(B, 0)
+    slot_e = jnp.where(keep, flat_e, E)
+    slot_c = jnp.where(keep, pos, 0)
+    dispatch = jnp.full((B, E, C), S, jnp.int32)
+    dispatch = dispatch.at[b_idx, slot_e, slot_c].set(token_ids, mode="drop")
+
+    x_pad = jnp.concatenate([x, jnp.zeros((B, 1, d), x.dtype)], axis=1)
+    xin = x_pad[b_idx[..., None], dispatch]                   # [B, E, C, d]
+    xin = shard(xin, "batch", "experts", None, None)
+
+    h = jnp.einsum("becd,edf->becf", xin, p["w_in"])
+    h = shard(h, "batch", "experts", None, "expert_ff")
+    if cfg.gated_mlp:
+        g = jnp.einsum("becd,edf->becf", xin, p["w_gate"])
+        h = _act(g, cfg.mlp_act) * h
+    else:
+        h = _act(h, cfg.mlp_act)
+    out_e = jnp.einsum("becf,efd->becd", h, p["w_out"])       # [B, E, C, d]
+    # NOTE: no sharding constraint on out_e — the combine below is linear in
+    # out_e, so the model-axis reduction of the w_out contraction is allowed
+    # to commute past the gather; pinning out_e here forces the all-reduce
+    # on [B,E,C,d] (capacity-inflated) instead of [B,S*K,d] (§Perf it4).
+
+    # gather-based combine: each (token, k) reads its expert/capacity slot
+    acc_dt = jnp.dtype(cfg.moe_combine_dtype)
+    picked = out_e[b_idx, slot_e.clip(0, E - 1), slot_c]   # [B, S*K, d]
+    gates = jnp.where(keep, gate_vals.reshape(B, S * K), 0.0)
+    out = (picked.astype(acc_dt) * gates[..., None].astype(acc_dt))
+    out = out.reshape(B, S, K, d).sum(2).astype(x.dtype)
+    return shard(out, "batch", None, None), aux

@@ -1,0 +1,75 @@
+"""Parameter definition tables.
+
+Each layer declares its parameters as ``ParamDef`` entries (shape + logical
+axes + initializer). Both ``init_params`` and the sharding-spec derivation
+(`repro.sharding.specs.param_shardings`) consume the same table, so the
+parameter pytree and its PartitionSpecs can never drift apart.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class ParamDef:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]   # logical axis name per dim (None = replicated)
+    init: str = "normal"              # normal | zeros | ones
+    fan_in_dims: Tuple[int, ...] = () # dims whose product is fan-in (default: all but last)
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+    def fan_in(self) -> int:
+        dims = self.fan_in_dims or tuple(range(len(self.shape) - 1))
+        n = 1
+        for d in dims:
+            n *= self.shape[d]
+        return max(n, 1)
+
+
+def stacked(defs: Any, n: int, axis_name: str = "layers") -> Any:
+    """Prepend a stacking dim (for lax.scan over layer blocks)."""
+    return jax.tree.map(
+        lambda d: ParamDef((n,) + d.shape, (axis_name,) + d.axes, d.init,
+                           tuple(x + 1 for x in (d.fan_in_dims or tuple(range(len(d.shape) - 1))))),
+        defs,
+        is_leaf=lambda x: isinstance(x, ParamDef),
+    )
+
+
+def init_params(defs: Any, key: jax.Array, dtype=jnp.float32) -> Any:
+    leaves, treedef = jax.tree.flatten(defs, is_leaf=lambda x: isinstance(x, ParamDef))
+    keys = jax.random.split(key, len(leaves))
+
+    def one(d: ParamDef, k):
+        if d.init == "zeros":
+            return jnp.zeros(d.shape, dtype)
+        if d.init == "ones":
+            return jnp.ones(d.shape, dtype)
+        scale = 1.0 / math.sqrt(d.fan_in())
+        return (jax.random.normal(k, d.shape, jnp.float32) * scale).astype(dtype)
+
+    return jax.tree.unflatten(treedef, [one(d, k) for d, k in zip(leaves, keys)])
+
+
+def abstract_params(defs: Any, dtype=jnp.float32) -> Any:
+    """ShapeDtypeStruct pytree for AOT lowering without allocation."""
+    return jax.tree.map(
+        lambda d: jax.ShapeDtypeStruct(d.shape, dtype),
+        defs, is_leaf=lambda x: isinstance(x, ParamDef))
+
+
+def count_params(defs: Any) -> int:
+    total = 0
+    for d in jax.tree.leaves(defs, is_leaf=lambda x: isinstance(x, ParamDef)):
+        n = 1
+        for s in d.shape:
+            n *= s
+        total += n
+    return total

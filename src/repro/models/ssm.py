@@ -1,0 +1,307 @@
+"""Mamba2 / SSD (state-space duality) block [arXiv:2405.21060].
+
+Three execution modes mirror the attention layer:
+  * full-sequence chunked SSD scan (train / prefill),
+  * single-step recurrence (decode),
+  * per-path re-scan for tree verification (an SSM has no attention mask, so
+    a W-node speculation tree is verified by re-scanning each node's ancestor
+    path from the committed state — see DESIGN.md §Arch-applicability).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.params import ParamDef
+from repro.sharding import shard
+
+
+# ------------------------------------------------------------- params ----
+def ssm_defs(cfg: ModelConfig) -> Dict[str, ParamDef]:
+    d, di, n = cfg.d_model, cfg.ssm_d_inner, cfg.ssm_state_size
+    g, h, w = cfg.ssm_num_groups, cfg.ssm_num_heads, cfg.ssm_conv_width
+    conv_dim = di + 2 * g * n
+    return {
+        "w_in_z": ParamDef((d, di), (None, "ssm_inner")),
+        "w_in_xbc": ParamDef((d, conv_dim), (None, "ssm_inner")),
+        "w_in_dt": ParamDef((d, h), (None, "ssm_heads")),
+        "conv_w": ParamDef((w, conv_dim), (None, "ssm_inner")),
+        "conv_b": ParamDef((conv_dim,), ("ssm_inner",), init="zeros"),
+        "A_log": ParamDef((h,), ("ssm_heads",), init="zeros"),
+        "D": ParamDef((h,), ("ssm_heads",), init="ones"),
+        "dt_bias": ParamDef((h,), ("ssm_heads",), init="zeros"),
+        "norm_scale": ParamDef((di,), ("ssm_inner",), init="ones"),
+        "w_out": ParamDef((di, d), ("ssm_inner", None)),
+    }
+
+
+def _split_xbc(xbc: jax.Array, cfg: ModelConfig):
+    di, g, n = cfg.ssm_d_inner, cfg.ssm_num_groups, cfg.ssm_state_size
+    x = xbc[..., :di]
+    b = xbc[..., di: di + g * n]
+    c = xbc[..., di + g * n:]
+    return x, b, c
+
+
+def _heads(x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """[..., d_inner] -> [..., H, P]"""
+    return x.reshape(*x.shape[:-1], cfg.ssm_num_heads, cfg.ssm_head_dim)
+
+
+def _groups(x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """[..., G*N] -> [..., G, N] broadcast-expanded to heads later."""
+    return x.reshape(*x.shape[:-1], cfg.ssm_num_groups, cfg.ssm_state_size)
+
+
+def _expand_groups(x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """[..., G, N] -> [..., H, N] (each group serves H/G heads)."""
+    rep = cfg.ssm_num_heads // cfg.ssm_num_groups
+    return jnp.repeat(x, rep, axis=-2)
+
+
+def _gated_norm(y: jax.Array, z: jax.Array, scale: jax.Array, eps: float) -> jax.Array:
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    ms = jnp.mean(jnp.square(y), -1, keepdims=True)
+    return (y * jax.lax.rsqrt(ms + eps) * scale).astype(z.dtype)
+
+
+# ----------------------------------------------------------- full scan ----
+def _segsum(x: jax.Array) -> jax.Array:
+    """segsum(x)[..., i, j] = sum_{j < k <= i} x[..., k]  (lower-triangular)."""
+    L = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    out = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((L, L), bool), k=0)
+    return jnp.where(mask, out, -jnp.inf)
+
+
+def ssd_scan(x: jax.Array, dt: jax.Array, A: jax.Array, B: jax.Array,
+             C: jax.Array, chunk: int,
+             initial_state: Optional[jax.Array] = None,
+             ) -> Tuple[jax.Array, jax.Array]:
+    """Chunked SSD. x: [b,s,h,p]; dt: [b,s,h] (>=0, already softplus'ed);
+    A: [h] (negative); B,C: [b,s,h,n] (groups pre-expanded).
+    Returns (y [b,s,h,p], final_state [b,h,p,n])."""
+    bsz, s, h, p = x.shape
+    n = B.shape[-1]
+    L = min(chunk, s)
+    orig_s = s
+    if s % L:  # pad to a chunk multiple; dt=0 pads are identity steps
+        padn = L - s % L
+        x = jnp.pad(x, ((0, 0), (0, padn), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, padn), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, padn), (0, 0), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, padn), (0, 0), (0, 0)))
+        s = s + padn
+    c = s // L
+
+    xr = x.reshape(bsz, c, L, h, p)
+    dtr = dt.reshape(bsz, c, L, h)
+    Br = B.reshape(bsz, c, L, h, n)
+    Cr = C.reshape(bsz, c, L, h, n)
+
+    dA = dtr * A  # [b,c,L,h]
+    dA_cs = jnp.cumsum(dA, axis=2)
+
+    # intra-chunk (diagonal blocks)
+    Lmat = jnp.exp(_segsum(dA.transpose(0, 1, 3, 2)))          # [b,c,h,L,L]
+    CB = jnp.einsum("bclhn,bcshn->bchls", Cr, Br)              # [b,c,h,L,L]
+    M = CB * Lmat
+    xdt = xr * dtr[..., None]                                  # [b,c,L,h,p]
+    y_diag = jnp.einsum("bchls,bcshp->bclhp", M, xdt)
+
+    # chunk-end states
+    decay_states = jnp.exp(dA_cs[:, :, -1:, :] - dA_cs)        # [b,c,L,h]
+    states = jnp.einsum("bclhn,bclh,bclhp->bchpn", Br, decay_states * dtr, xr)
+
+    # inter-chunk recurrence
+    chunk_decay = jnp.exp(dA_cs[:, :, -1, :])                  # [b,c,h]
+    s0 = (jnp.zeros((bsz, h, p, n), jnp.float32) if initial_state is None
+          else initial_state.astype(jnp.float32))
+
+    def step(carry, inp):
+        st, dec = inp
+        new = carry * dec[:, :, None, None] + st
+        return new, carry  # emit the state *entering* the chunk
+
+    final, prev_states = jax.lax.scan(
+        step, s0,
+        (states.transpose(1, 0, 2, 3, 4).astype(jnp.float32),
+         chunk_decay.transpose(1, 0, 2)))
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)         # [b,c,h,p,n]
+
+    # off-diagonal (cross-chunk) contribution
+    state_decay = jnp.exp(dA_cs)                               # [b,c,L,h]
+    y_off = jnp.einsum("bclhn,bchpn,bclh->bclhp", Cr, prev_states, state_decay)
+
+    y = (y_diag + y_off).reshape(bsz, s, h, p)[:, :orig_s]
+    return y.astype(x.dtype), final
+
+
+def ssd_step(state: jax.Array, x: jax.Array, dt: jax.Array, A: jax.Array,
+             B: jax.Array, C: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Single-token recurrence. state: [b,h,p,n]; x: [b,h,p]; dt: [b,h];
+    B,C: [b,h,n]. Returns (y [b,h,p], new_state)."""
+    decay = jnp.exp(dt * A)                                    # [b,h]
+    state = (state * decay[..., None, None]
+             + jnp.einsum("bh,bhp,bhn->bhpn", dt, x.astype(jnp.float32),
+                          B.astype(jnp.float32)))
+    y = jnp.einsum("bhpn,bhn->bhp", state, C.astype(jnp.float32))
+    return y.astype(x.dtype), state
+
+
+# --------------------------------------------------------- conv (causal) ----
+def causal_conv(xbc: jax.Array, w: jax.Array, b: jax.Array,
+                init_tail: Optional[jax.Array] = None) -> jax.Array:
+    """Depthwise causal conv. xbc: [B,S,Cd]; w: [W,Cd]; init_tail: [B,W-1,Cd]
+    (the last W-1 pre-conv inputs preceding this sequence)."""
+    W = w.shape[0]
+    if init_tail is None:
+        init_tail = jnp.zeros((xbc.shape[0], W - 1, xbc.shape[-1]), xbc.dtype)
+    padded = jnp.concatenate([init_tail, xbc], axis=1)         # [B, S+W-1, Cd]
+    out = sum(padded[:, i: i + xbc.shape[1]] * w[i] for i in range(W))
+    return jax.nn.silu(out + b)
+
+
+def conv_step(conv_state: jax.Array, x_new: jax.Array, w: jax.Array,
+              b: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """conv_state: [B, W-1, Cd]; x_new: [B, Cd]."""
+    window = jnp.concatenate([conv_state, x_new[:, None]], axis=1)  # [B,W,Cd]
+    y = jax.nn.silu(jnp.einsum("bwc,wc->bc", window, w) + b)
+    return y, window[:, 1:]
+
+
+# ----------------------------------------------------------- layer API ----
+def ssm_layer(p: Dict, xin: jax.Array, cfg: ModelConfig, *, mode: str,
+              cache_entry: Optional[Dict] = None,
+              seq_valid: Optional[jax.Array] = None,
+              tree_paths: Optional[jax.Array] = None,
+              ) -> Tuple[jax.Array, Optional[Dict], Optional[Dict]]:
+    """One Mamba2 block.
+
+    mode 'train'/'prefill': xin [B,S,d]; 'decode': [B,1,d];
+    'tree': [B,W,d] with tree_paths [B,W,Dmax] ancestor chains (-1 pad at
+    front, ending with the node itself).
+    Returns (out, new_cache_entry, per_node_scratch) — scratch carries
+    per-node states for tree commit.
+    """
+    z = xin @ p["w_in_z"]
+    xbc_pre = xin @ p["w_in_xbc"]
+    dt_raw = xin @ p["w_in_dt"]
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+
+    if mode in ("train", "prefill"):
+        tail = None if cache_entry is None else None  # fresh sequence
+        xbc = causal_conv(xbc_pre, p["conv_w"], p["conv_b"], init_tail=tail)
+        x, B_, C_ = _split_xbc(xbc, cfg)
+        dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+        if seq_valid is not None:  # padded positions are identity steps
+            dt = dt * seq_valid[..., None]
+        xh = _heads(x, cfg)
+        Bh = _expand_groups(_groups(B_, cfg), cfg)
+        Ch = _expand_groups(_groups(C_, cfg), cfg)
+        xh = shard(xh, "batch", None, "ssm_heads", None)
+        y, final_state = ssd_scan(xh, dt, A, Bh, Ch, cfg.ssm_chunk)
+        y = y + xh * p["D"][:, None]
+        y = y.reshape(*xin.shape[:-1], cfg.ssm_d_inner)
+        out = _gated_norm(y.astype(jnp.float32), z, p["norm_scale"], cfg.norm_eps)
+        out = out @ p["w_out"]
+        new_entry = None
+        if mode == "prefill":
+            # conv tail = last W-1 *valid* pre-conv inputs; with right-padding
+            # the valid tail is at positions [len-W+1, len) — gather them.
+            Wc = cfg.ssm_conv_width
+            if seq_valid is None:
+                tail_idx = xin.shape[1] - (Wc - 1) + jnp.arange(Wc - 1)
+                tail_idx = jnp.broadcast_to(tail_idx, (xin.shape[0], Wc - 1))
+            else:
+                lengths = seq_valid.sum(-1).astype(jnp.int32)
+                tail_idx = lengths[:, None] - (Wc - 1) + jnp.arange(Wc - 1)[None]
+            tail_idx = jnp.clip(tail_idx, 0, xin.shape[1] - 1)
+            conv_tail = jnp.take_along_axis(
+                xbc_pre, tail_idx[..., None], axis=1)
+            new_entry = {"state": final_state, "conv": conv_tail}
+        return shard(out, "batch", None, None), new_entry, None
+
+    if mode == "decode":
+        xbc_t, new_conv = conv_step(cache_entry["conv"], xbc_pre[:, 0],
+                                    p["conv_w"], p["conv_b"])
+        x, B_, C_ = _split_xbc(xbc_t, cfg)
+        dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32) + p["dt_bias"])
+        y, new_state = ssd_step(cache_entry["state"], _heads(x, cfg), dt, A,
+                                _expand_groups(_groups(B_, cfg), cfg),
+                                _expand_groups(_groups(C_, cfg), cfg))
+        y = y + _heads(x, cfg) * p["D"][:, None]
+        y = y.reshape(xin.shape[0], 1, cfg.ssm_d_inner)
+        out = _gated_norm(y.astype(jnp.float32), z, p["norm_scale"], cfg.norm_eps)
+        out = out @ p["w_out"]
+        return out, {"state": new_state, "conv": new_conv}, None
+
+    if mode == "tree":
+        # Re-scan each node's ancestor path from the committed state.
+        assert tree_paths is not None
+        Bsz, W, _ = xin.shape
+        Dmax = tree_paths.shape[-1]
+        Wc = cfg.ssm_conv_width
+
+        def gather_nodes(arr, idx):
+            # arr: [B, W, F]; idx: [B, W, Dmax] -> [B, W, Dmax, F]
+            return jax.vmap(lambda a, i: a[jnp.clip(i, 0, W - 1)])(arr, idx)
+
+        path_xbc = gather_nodes(xbc_pre, tree_paths)           # [B,W,Dmax,Cd]
+        path_dt = gather_nodes(dt_raw, tree_paths)             # [B,W,Dmax,H]
+        pad = (tree_paths < 0)
+        path_x_masked = jnp.where(pad[..., None], 0.0, path_xbc)
+        n_pad = pad.sum(-1)                                    # [B,W]
+
+        def per_node(xp, dtp, npad, st0, tail0):
+            # xp: [Dmax, Cd] (front-padded); dtp: [Dmax, H]; tail0: [Wc-1, Cd]
+            # Left-align the real chain, then prepend the committed conv tail
+            # so the conv window for chain step t is seqf[t : t + Wc].
+            chain = jnp.roll(xp, -npad, axis=0)
+            seqf = jnp.concatenate([tail0, chain], axis=0)     # [Wc-1+Dmax, Cd]
+            steps = Dmax - npad
+
+            def body(st, t):
+                window = jax.lax.dynamic_slice_in_dim(seqf, t, Wc, axis=0)
+                xbc_t = jax.nn.silu(
+                    jnp.sum(window * p["conv_w"], axis=0) + p["conv_b"])
+                x_t, B_t, C_t = _split_xbc(xbc_t, cfg)
+                dt_t = jax.nn.softplus(
+                    dtp[jnp.clip(npad + t, 0, Dmax - 1)].astype(jnp.float32)
+                    + p["dt_bias"])
+                live = t < steps
+                dt_t = jnp.where(live, dt_t, 0.0)
+                xh = x_t.reshape(cfg.ssm_num_heads, cfg.ssm_head_dim)
+                Bh = _expand_groups(B_t.reshape(cfg.ssm_num_groups, -1), cfg)
+                Ch = _expand_groups(C_t.reshape(cfg.ssm_num_groups, -1), cfg)
+                decay = jnp.exp(dt_t * A)
+                st_new = st * decay[:, None, None] + jnp.einsum(
+                    "h,hp,hn->hpn", dt_t, xh.astype(jnp.float32),
+                    Bh.astype(jnp.float32))
+                y_t = jnp.einsum("hpn,hn->hp", st_new, Ch.astype(jnp.float32))
+                y_t = y_t + xh * p["D"][:, None]
+                return st_new, (y_t, st_new)
+
+            _, (ys, sts) = jax.lax.scan(body, st0, jnp.arange(Dmax))
+            # output/state of the node itself = last live step
+            last = jnp.clip(steps - 1, 0, Dmax - 1)
+            # conv tail after consuming this node = last Wc-1 raw inputs
+            tail_after = jax.lax.dynamic_slice_in_dim(seqf, steps, Wc - 1, axis=0)
+            return ys[last], sts[last], tail_after
+
+        per_node_v = jax.vmap(jax.vmap(per_node, in_axes=(0, 0, 0, None, None)),
+                              in_axes=(0, 0, 0, 0, 0))
+        y_nodes, st_nodes, tails = per_node_v(
+            path_x_masked, path_dt, n_pad,
+            cache_entry["state"].astype(jnp.float32), cache_entry["conv"])
+        y = y_nodes.reshape(Bsz, W, cfg.ssm_d_inner)
+        out = _gated_norm(y.astype(jnp.float32), z, p["norm_scale"], cfg.norm_eps)
+        out = out @ p["w_out"]
+        scratch = {"node_states": st_nodes, "node_conv": tails}
+        return out, cache_entry, scratch
+
+    raise ValueError(mode)

@@ -1,0 +1,106 @@
+"""Transformer block assembly: heterogeneous layer groups scanned over.
+
+A *block* is the repeating unit of `cfg.layers_per_block` layers (1 for
+homogeneous archs; 8 for jamba's mamba/attention interleave). Parameters for
+all blocks are stacked on a leading axis and the trunk is a `lax.scan` over
+blocks, which keeps compile time flat in depth.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention, moe, ssm
+from repro.models.layers import apply_mlp, apply_norm, mlp_defs, norm_defs
+
+
+def block_defs(cfg: ModelConfig, encoder: bool = False) -> Dict[str, Any]:
+    """ParamDefs for one block (layer0..layerN-1)."""
+    out: Dict[str, Any] = {}
+    for j in range(1 if encoder else cfg.layers_per_block):
+        i = j  # layer kind depends only on position within the block
+        layer: Dict[str, Any] = {}
+        mixer = "attn" if encoder else cfg.layer_mixer(i)
+        layer["mixer_norm"] = norm_defs(cfg)
+        if mixer == "attn":
+            layer["attn"] = attention.attn_defs(cfg)
+            if cfg.is_encoder_decoder and not encoder:
+                layer["cross_norm"] = norm_defs(cfg)
+                layer["cross"] = attention.attn_defs(cfg, cross=True)
+        else:
+            layer["ssm"] = ssm.ssm_defs(cfg)
+        ffn = "dense" if encoder else cfg.layer_ffn(i)
+        if ffn == "dense":
+            layer["ffn_norm"] = norm_defs(cfg)
+            layer["mlp"] = mlp_defs(cfg)
+        elif ffn == "moe":
+            layer["ffn_norm"] = norm_defs(cfg)
+            layer["moe"] = moe.moe_defs(cfg)
+        out[f"layer{j}"] = layer
+    return out
+
+
+def apply_block(bp: Dict, h: jax.Array, cfg: ModelConfig, mode: str,
+                ctx: Dict, cache_block: Optional[Dict] = None,
+                encoder: bool = False,
+                ) -> Tuple[jax.Array, Optional[Dict], Optional[Dict], jax.Array]:
+    """Apply one block. Returns (h, new_cache_block, scratch_block, aux_loss)."""
+    new_cache: Dict = {}
+    scratch: Dict = {}
+    aux = jnp.zeros((), jnp.float32)
+    n_layers = 1 if encoder else cfg.layers_per_block
+    for j in range(n_layers):
+        lp = bp[f"layer{j}"]
+        entry = None if cache_block is None else cache_block[f"layer{j}"]
+        mixer = "attn" if encoder else cfg.layer_mixer(j)
+
+        x = apply_norm(lp["mixer_norm"], h, cfg)
+        if mixer == "attn":
+            amode = "encode" if encoder else mode
+            out, new_entry, kv = attention.attention_layer(
+                lp["attn"], x, cfg, mode=amode,
+                positions=ctx["positions"], inv_freq=ctx.get("inv_freq"),
+                cache_entry=entry, lengths=ctx.get("lengths"),
+                tree_mask=ctx.get("tree_mask"), seq_valid=ctx.get("seq_valid"))
+            if mode == "decode" and not encoder:
+                # single confirmed token: write through immediately
+                from repro.models import cache as cache_lib
+                new_entry = cache_lib.write_tokens(
+                    entry, kv[0], kv[1], ctx["positions"], cfg)
+                kv = None
+            h = h + out
+            if cfg.is_encoder_decoder and not encoder:
+                if mode == "prefill" and ctx.get("enc_out") is not None:
+                    ck, cv = attention.encode_cross_kv(lp["cross"], ctx["enc_out"], cfg)
+                    new_entry = dict(new_entry or entry)
+                    new_entry["ck"], new_entry["cv"] = ck, cv
+                    entry = new_entry
+                if mode in ("prefill", "decode", "tree") and entry is not None:
+                    xc = apply_norm(lp["cross_norm"], h, cfg)
+                    h = h + attention.cross_attention_layer(lp["cross"], xc, cfg, entry)
+            if kv is not None:
+                scratch[f"layer{j}"] = {"k": kv[0], "v": kv[1]}
+        else:
+            out, new_entry, sc = ssm.ssm_layer(
+                lp["ssm"], x, cfg, mode=mode, cache_entry=entry,
+                seq_valid=ctx.get("seq_valid"), tree_paths=ctx.get("tree_paths"))
+            h = h + out
+            if sc is not None:
+                scratch[f"layer{j}"] = sc
+
+        if "mlp" in lp:
+            x = apply_norm(lp["ffn_norm"], h, cfg)
+            h = h + apply_mlp(lp["mlp"], x, cfg)
+        elif "moe" in lp:
+            x = apply_norm(lp["ffn_norm"], h, cfg)
+            mo, a = moe.apply_moe(lp["moe"], x, cfg)
+            h = h + mo
+            aux = aux + a
+
+        if entry is not None or new_entry is not None:
+            new_cache[f"layer{j}"] = new_entry if new_entry is not None else entry
+
+    return h, (new_cache or None), (scratch or None), aux

@@ -1,0 +1,2 @@
+from repro.serving.sampling import mask_padded_vocab, sample
+from repro.serving.server import BatchedServer, Request

@@ -1,0 +1,29 @@
+"""Token sampling utilities (temperature / top-k / greedy), vocab-pad aware."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def mask_padded_vocab(logits: jax.Array, real_vocab: int) -> jax.Array:
+    v = logits.shape[-1]
+    if v == real_vocab:
+        return logits
+    mask = jnp.arange(v) < real_vocab
+    return jnp.where(mask, logits, -1e9)
+
+
+def sample(logits: jax.Array, key: Optional[jax.Array],
+           temperature: float = 0.0, top_k: int = 0,
+           real_vocab: Optional[int] = None) -> jax.Array:
+    if real_vocab is not None:
+        logits = mask_padded_vocab(logits, real_vocab)
+    if temperature == 0.0:
+        return jnp.argmax(logits, -1).astype(jnp.int32)
+    logits = logits.astype(jnp.float32) / temperature
+    if top_k:
+        kth = jax.lax.top_k(logits, top_k)[0][..., -1:]
+        logits = jnp.where(logits < kth, -1e9, logits)
+    return jax.random.categorical(key, logits, -1).astype(jnp.int32)

@@ -1,0 +1,78 @@
+"""Batched serving driver.
+
+Requests are padded into fixed-size batches (static shapes) and decoded with
+the speculative engine. This is the single-tenant latency-optimal regime of
+the paper (§9): one batch in flight, engine monopolizes the device.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.engine import SpeculativeEngine
+
+
+@dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray          # [S] token ids
+    max_new: int = 32
+    result: Optional[np.ndarray] = None
+    stats: Dict = field(default_factory=dict)
+
+
+class BatchedServer:
+    def __init__(self, engine: SpeculativeEngine, batch_size: int,
+                 prompt_pad: int, eos_id: Optional[int] = None):
+        self.engine = engine
+        self.batch_size = batch_size
+        self.prompt_pad = prompt_pad
+        self.eos_id = eos_id
+        self.queue: List[Request] = []
+        self.done: Dict[int, Request] = {}
+
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def _make_batch(self, reqs: List[Request]):
+        B = self.batch_size
+        toks = np.zeros((B, self.prompt_pad), np.int32)
+        lens = np.zeros((B,), np.int32)
+        for i, r in enumerate(reqs):
+            p = r.prompt[: self.prompt_pad]
+            toks[i, : len(p)] = p
+            lens[i] = len(p)
+        for i in range(len(reqs), B):  # pad slots replay request 0
+            toks[i] = toks[0]
+            lens[i] = lens[0]
+        return jnp.asarray(toks), jnp.asarray(lens)
+
+    def step(self) -> List[Request]:
+        """Serve one batch from the queue; returns completed requests."""
+        if not self.queue:
+            return []
+        reqs, self.queue = self.queue[: self.batch_size], self.queue[self.batch_size:]
+        toks, lens = self._make_batch(reqs)
+        max_new = max(r.max_new for r in reqs)
+        t0 = time.perf_counter()
+        seq, stats = self.engine.generate(toks, lens, max_new)
+        dt = time.perf_counter() - t0
+        for i, r in enumerate(reqs):
+            out = seq[i][seq[i] >= 0][: r.max_new]
+            if self.eos_id is not None:
+                stop = np.nonzero(out == self.eos_id)[0]
+                if len(stop):
+                    out = out[: stop[0] + 1]
+            r.result = out
+            r.stats = {**stats.summary(), "batch_time_s": dt}
+            self.done[r.uid] = r
+        return reqs
+
+    def run(self) -> Dict[int, Request]:
+        while self.queue:
+            self.step()
+        return self.done

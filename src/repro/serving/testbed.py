@@ -1,0 +1,104 @@
+"""Aligned drafter/verifier pair for CPU-scale experiments.
+
+Trains a small verifier and a smaller drafter on the same Markov corpus so
+that the drafter genuinely approximates the verifier (the llama-68m /
+llama-2-7b relationship at laptop scale). Checkpoints are cached on disk so
+tests and benchmarks pay the training cost once.
+"""
+from __future__ import annotations
+
+import hashlib
+import os
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.data.pipeline import DataConfig, batches
+from repro.models import Model
+from repro.training import (OptConfig, init_opt_state, make_train_step,
+                            restore_checkpoint, save_checkpoint)
+
+CACHE_DIR = os.environ.get("REPRO_CACHE", "/root/repo/.cache")
+
+
+@dataclass
+class TestbedSpec:
+    vocab: int = 64
+    seq_len: int = 128
+    concentration: float = 0.03
+    train_steps: int = 240
+    batch: int = 32
+    verifier_layers: int = 4
+    verifier_dim: int = 256
+    drafter_layers: int = 1
+    drafter_dim: int = 128
+    max_target_len: int = 512
+    seed: int = 0
+
+    def key(self) -> str:
+        s = repr(self).encode()
+        return hashlib.sha1(s).hexdigest()[:12]
+
+
+@dataclass
+class Testbed:
+    spec: TestbedSpec
+    verifier: Model
+    v_params: dict
+    drafter: Model
+    d_params: dict
+    data_cfg: DataConfig
+    losses: Tuple[float, float] = (0.0, 0.0)
+
+
+def _model_cfg(name: str, layers: int, dim: int, spec: TestbedSpec) -> ModelConfig:
+    return ModelConfig(
+        name=name, num_layers=layers, d_model=dim, num_heads=max(2, dim // 64),
+        num_kv_heads=max(2, dim // 64), head_dim=64, d_ff=dim * 4,
+        vocab_size=spec.vocab, max_seq_len=spec.max_target_len)
+
+
+def _train(model: Model, params, data_cfg: DataConfig, steps: int,
+           seed: int) -> Tuple[dict, float]:
+    opt = OptConfig(lr=1e-3, warmup_steps=20, total_steps=steps)
+    step_fn = jax.jit(make_train_step(model, opt))
+    state = init_opt_state(params)
+    loss = float("nan")
+    for batch in batches(data_cfg, steps):
+        params, state, metrics = step_fn(params, state,
+                                         {"tokens": jnp.asarray(batch["tokens"])})
+        loss = float(metrics["loss"])
+    return params, loss
+
+
+def build_testbed(spec: Optional[TestbedSpec] = None,
+                  force: bool = False) -> Testbed:
+    spec = spec or TestbedSpec()
+    vcfg = _model_cfg("testbed-verifier", spec.verifier_layers,
+                      spec.verifier_dim, spec)
+    dcfg = _model_cfg("testbed-drafter", spec.drafter_layers,
+                      spec.drafter_dim, spec)
+    verifier, drafter = Model(vcfg), Model(dcfg)
+    v_params = verifier.init(jax.random.PRNGKey(spec.seed))
+    d_params = drafter.init(jax.random.PRNGKey(spec.seed + 1))
+    data_cfg = DataConfig(vocab=spec.vocab, seq_len=spec.seq_len,
+                          batch=spec.batch, concentration=spec.concentration,
+                          seed=spec.seed)
+
+    path = os.path.join(CACHE_DIR, f"testbed_{spec.key()}.npz")
+    if os.path.exists(path) and not force:
+        blob = restore_checkpoint(path, {"v": v_params, "d": d_params})
+        return Testbed(spec, verifier, blob["v"], drafter, blob["d"], data_cfg)
+
+    v_params, v_loss = _train(verifier, v_params, data_cfg, spec.train_steps,
+                              spec.seed)
+    d_params, d_loss = _train(drafter, d_params, data_cfg, spec.train_steps,
+                              spec.seed + 7)
+    os.makedirs(CACHE_DIR, exist_ok=True)
+    save_checkpoint(path, {"v": v_params, "d": d_params})
+    return Testbed(spec, verifier, v_params, drafter, d_params, data_cfg,
+                   losses=(v_loss, d_loss))

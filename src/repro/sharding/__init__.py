@@ -1,0 +1,10 @@
+from repro.sharding.specs import (
+    DEFAULT_RULES,
+    current_mesh,
+    named,
+    param_shardings,
+    shard,
+    sharding_divides,
+    spec_for,
+    use_mesh,
+)

@@ -1,0 +1,3 @@
+from repro.training.checkpoint import restore_checkpoint, save_checkpoint
+from repro.training.optimizer import OptConfig, adamw_update, init_opt_state, lr_at
+from repro.training.train_step import chunked_ce_loss, loss_fn, make_train_step

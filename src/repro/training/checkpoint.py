@@ -1,0 +1,45 @@
+"""Flat-npz checkpointing for arbitrary pytrees (no orbax dependency)."""
+from __future__ import annotations
+
+import os
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten(tree: Any, prefix: str = "") -> Dict[str, np.ndarray]:
+    out = {}
+    if isinstance(tree, dict):
+        for k, v in sorted(tree.items()):
+            out.update(_flatten(v, f"{prefix}{k}/"))
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            out.update(_flatten(v, f"{prefix}{i}/"))
+    else:
+        out[prefix.rstrip("/")] = np.asarray(tree)
+    return out
+
+
+def save_checkpoint(path: str, tree: Any) -> None:
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    np.savez(path, **_flatten(tree))
+
+
+def restore_checkpoint(path: str, like: Any) -> Any:
+    """Restore into the structure of `like` (shapes must match)."""
+    data = np.load(path if path.endswith(".npz") else path + ".npz")
+
+    def rebuild(proto: Any, prefix: str = "") -> Any:
+        if isinstance(proto, dict):
+            return {k: rebuild(v, f"{prefix}{k}/") for k, v in proto.items()}
+        if isinstance(proto, (list, tuple)):
+            t = type(proto)
+            return t(rebuild(v, f"{prefix}{i}/") for i, v in enumerate(proto))
+        key = prefix.rstrip("/")
+        arr = data[key]
+        assert arr.shape == tuple(proto.shape), (key, arr.shape, proto.shape)
+        return jnp.asarray(arr)
+
+    return rebuild(like)

@@ -1,0 +1,81 @@
+"""Training step: chunked cross-entropy (bounds the [B, S, V] logits peak),
+gradients, AdamW update. Used by the end-to-end trainer, the drafter/verifier
+alignment pipeline, and the train_4k dry-run shape."""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.model import Model
+from repro.training.optimizer import OptConfig, adamw_update
+
+
+def chunked_ce_loss(model: Model, params, h: jax.Array, targets: jax.Array,
+                    valid: Optional[jax.Array] = None) -> jax.Array:
+    """Cross-entropy over vocab computed in sequence chunks.
+
+    h: [B, S, d]; targets: [B, S]; valid: [B, S] bool. Each chunk's logits are
+    rematerialized in the backward pass (jax.checkpoint), so the live logits
+    tensor is [B, loss_chunk, V] instead of [B, S, V].
+    """
+    cfg = model.cfg
+    B, S, d = h.shape
+    c = min(cfg.loss_chunk, S)
+    if S % c:
+        c = S  # fall back to unchunked for awkward lengths
+    n_chunks = S // c
+    if valid is None:
+        valid = jnp.ones((B, S), bool)
+
+    hc = h.reshape(B, n_chunks, c, d).transpose(1, 0, 2, 3)
+    tc = targets.reshape(B, n_chunks, c).transpose(1, 0, 2)
+    vc = valid.reshape(B, n_chunks, c).transpose(1, 0, 2)
+
+    @jax.checkpoint
+    def chunk_loss(hx, tx, vx):
+        logits = model.logits(params, hx).astype(jnp.float32)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, tx[..., None], axis=-1)[..., 0]
+        nll = (logz - gold) * vx
+        return nll.sum(), vx.sum()
+
+    def body(carry, xs):
+        tot, cnt = carry
+        l, n = chunk_loss(*xs)
+        return (tot + l, cnt + n), None
+
+    (tot, cnt), _ = jax.lax.scan(body, (0.0, 0.0), (hc, tc, vc),
+                                 unroll=n_chunks if cfg.scan_unroll else 1)
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+def loss_fn(model: Model, params, tokens: jax.Array,
+            valid: Optional[jax.Array] = None,
+            enc_feats: Optional[jax.Array] = None) -> Tuple[jax.Array, Dict]:
+    """Next-token LM loss (inputs tokens[:, :-1] predict tokens[:, 1:])."""
+    inp, tgt = tokens[:, :-1], tokens[:, 1:]
+    v = None if valid is None else valid[:, 1:]
+    h, aux = model.hidden_train(params, inp,
+                                seq_valid=None if valid is None else valid[:, :-1],
+                                enc_feats=enc_feats)
+    ce = chunked_ce_loss(model, params, h, tgt, v)
+    return ce + aux, {"ce": ce, "aux": aux}
+
+
+def make_train_step(model: Model, opt_cfg: OptConfig):
+    """Returns train_step(params, opt_state, batch) -> (params, state, metrics).
+
+    `batch` is a dict with 'tokens' [B, S] (+ optional 'valid', 'enc_feats').
+    """
+    def train_step(params, opt_state, batch):
+        def wrapped(p):
+            return loss_fn(model, p, batch["tokens"], batch.get("valid"),
+                           batch.get("enc_feats"))
+        (loss, parts), grads = jax.value_and_grad(wrapped, has_aux=True)(params)
+        params, opt_state, om = adamw_update(params, grads, opt_state, opt_cfg)
+        return params, opt_state, {"loss": loss, **parts, **om}
+
+    return train_step

@@ -1,0 +1,114 @@
+"""Per-kernel correctness sweeps: every Pallas kernel (interpret mode on CPU)
+against its pure-jnp oracle in ref.py, across shapes and dtypes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+
+def _rand(key, shape, dtype):
+    x = jax.random.normal(key, shape, jnp.float32)
+    return x.astype(dtype)
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else \
+        dict(rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------- tree ----
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,W,S,H,dh", [
+    (1, 8, 64, 2, 64),
+    (2, 16, 128, 4, 64),
+    (2, 5, 96, 2, 128),     # W not MXU-aligned, S not block-aligned
+    (1, 64, 512, 1, 64),
+])
+def test_tree_attention_matches_ref(B, W, S, H, dh, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(0), 4)
+    q = _rand(ks[0], (B, W, H, dh), dtype)
+    k = _rand(ks[1], (B, S, H, dh), dtype)
+    v = _rand(ks[2], (B, S, H, dh), dtype)
+    # random visibility mask with at least one visible slot per query
+    mask = jax.random.bernoulli(ks[3], 0.4, (B, W, S))
+    mask = mask.at[:, :, 0].set(True)
+    out = ops.tree_attention(q, k, v, mask)
+    want = ref.tree_attention_ref(q, k, v, mask)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), **_tol(dtype))
+
+
+def test_tree_attention_fully_masked_rows_are_finite():
+    B, W, S, H, dh = 1, 4, 32, 2, 64
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = _rand(ks[0], (B, W, H, dh), jnp.float32)
+    k = _rand(ks[1], (B, S, H, dh), jnp.float32)
+    v = _rand(ks[2], (B, S, H, dh), jnp.float32)
+    mask = jnp.zeros((B, W, S), bool)
+    out = ops.tree_attention(q, k, v, mask)
+    assert bool(jnp.all(jnp.isfinite(out)))
+
+
+# -------------------------------------------------------------- prefill ----
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,S,H,dh", [
+    (1, 128, 2, 64),
+    (2, 256, 4, 64),
+    (1, 192, 2, 128),       # S not a power of two
+])
+def test_flash_prefill_matches_ref(B, S, H, dh, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(2), 3)
+    q = _rand(ks[0], (B, S, H, dh), dtype)
+    k = _rand(ks[1], (B, S, H, dh), dtype)
+    v = _rand(ks[2], (B, S, H, dh), dtype)
+    out = ops.flash_prefill(q, k, v, block_q=64, block_k=64)
+    want = ref.flash_prefill_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), **_tol(dtype))
+
+
+# ------------------------------------------------------------------ ssd ----
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("b,s,h,p,n,chunk", [
+    (1, 64, 2, 32, 16, 16),
+    (2, 96, 4, 64, 32, 32),   # s not divisible by chunk
+    (1, 128, 2, 32, 64, 64),
+])
+def test_ssd_scan_matches_ref(b, s, h, p, n, chunk, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(3), 5)
+    x = _rand(ks[0], (b, s, h, p), dtype)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)) - 1.0)
+    A = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.3)
+    B = _rand(ks[3], (b, s, h, n), dtype)
+    C = _rand(ks[4], (b, s, h, n), dtype)
+    y, st = ops.ssd_scan(x, dt, A, B, C, chunk=chunk)
+    y_ref, st_ref = ref.ssd_ref(x, dt, A, B, C)
+    tol = dict(rtol=4e-2, atol=4e-2) if dtype == jnp.bfloat16 else \
+        dict(rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(y_ref, np.float32), **tol)
+    np.testing.assert_allclose(np.asarray(st), np.asarray(st_ref),
+                               rtol=1e-3, atol=1e-3)
+
+
+def test_ssd_scan_carries_initial_state():
+    b, s, h, p, n = 1, 32, 2, 16, 8
+    ks = jax.random.split(jax.random.PRNGKey(4), 6)
+    x = _rand(ks[0], (b, s, h, p), jnp.float32)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)) - 1.0)
+    A = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.3)
+    B = _rand(ks[3], (b, s, h, n), jnp.float32)
+    C = _rand(ks[4], (b, s, h, n), jnp.float32)
+    st0 = jax.random.normal(ks[5], (b, h, p, n))
+    # split scan == full scan (state handoff correctness)
+    y1, st1 = ops.ssd_scan(x[:, :16], dt[:, :16], A, B[:, :16], C[:, :16],
+                           chunk=8, initial_state=st0)
+    y2, st2 = ops.ssd_scan(x[:, 16:], dt[:, 16:], A, B[:, 16:], C[:, 16:],
+                           chunk=8, initial_state=st1)
+    y_full, st_full = ops.ssd_scan(x, dt, A, B, C, chunk=8, initial_state=st0)
+    np.testing.assert_allclose(np.concatenate([y1, y2], 1), np.asarray(y_full),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(st2), np.asarray(st_full),
+                               rtol=1e-4, atol=1e-4)

@@ -1,0 +1,155 @@
+"""Unit tests: latency objective (Eq. 3), bucket selection, sharding rules,
+depth predictor, and the HLO collective analyzer."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.core.buckets import Bucket, buckets_for_depths, select_bucket
+from repro.core.objective import (LatencyProfile, aal_objective,
+                                  choose_config, speedup_objective)
+from repro.launch import hlo_analysis as H
+
+
+# ------------------------------------------------------------- objective ----
+def test_speedup_objective_penalizes_wide_verification():
+    prof = LatencyProfile.synthetic(base_verify=1.0, slope=0.05,
+                                    saturate_at=16)
+    # same AAL, wider verification => lower speedup once saturated
+    s_small = speedup_objective(prof, aal=3.0, depth=4, width=4, verify_w=16)
+    s_big = speedup_objective(prof, aal=3.0, depth=4, width=4, verify_w=256)
+    assert s_small > s_big
+
+
+def test_speedup_objective_vs_aal_diverge():
+    """The paper's Fig. 5 phenomenon: AAL keeps growing with verify width but
+    actual speedup reverses — the two objectives pick different configs."""
+    prof = LatencyProfile.synthetic(base_verify=1.0, slope=0.1, saturate_at=8)
+    # AAL grows slowly (log-ish) with V; latency grows linearly after 8
+    cands = [(4, 4, v) for v in (4, 8, 16, 64, 256)]
+    aal = {(4, 4, v): 1.0 + np.log2(v) * 0.5 for _, _, v in
+           [(4, 4, v) for v in (4, 8, 16, 64, 256)]}
+    best_speed = choose_config(prof, cands, aal, objective="speedup")
+    best_aal = choose_config(prof, cands, aal, objective="aal")
+    assert best_aal[2] == 256                 # AAL always wants the max
+    assert best_speed[2] < 256                # latency objective stops earlier
+
+
+def test_select_bucket_respects_depth_prediction():
+    buckets = buckets_for_depths((2, 4, 8), width=4)
+    prof = LatencyProfile.synthetic()
+    b = select_bucket(buckets, 4, prof)
+    assert b.depth >= 4
+    b2 = select_bucket(buckets, 100, prof)    # beyond all buckets -> any
+    assert b2 in buckets
+
+
+# ---------------------------------------------------------------- specs ----
+def test_spec_for_divisibility_fallback():
+    import os
+    from repro.sharding import specs as sh
+    devs = jax.devices()
+    if len(devs) < 2:
+        pytest.skip("needs >=2 devices")
+
+
+def test_param_and_fsdp_shardings_on_host_mesh():
+    from repro.models import Model
+    from repro.configs import get_reduced_config
+    from repro.sharding import specs as sh
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    cfg = get_reduced_config("yi-6b")
+    defs = Model(cfg).param_defs()
+    ps = sh.param_shardings(defs, mesh)
+    fs = sh.fsdp_shardings(defs, mesh)
+    assert len(jax.tree.leaves(ps)) == len(jax.tree.leaves(fs))
+
+
+# -------------------------------------------------------- depth predictor ----
+def test_depth_predictor_learns_separable_labels():
+    from repro.core.depth_predictor import (best_bucket_labels, predict_depth,
+                                            train_predictor)
+    rng = np.random.default_rng(0)
+    n, d = 512, 32
+    opts = (2, 4, 8)
+    # embeddings whose first coordinate encodes the achievable accept length
+    emb = rng.normal(size=(n, d)).astype(np.float32)
+    alen = np.where(emb[:, 0] > 0.5, 8, np.where(emb[:, 0] > -0.5, 4, 2))
+    params, _ = train_predictor(jax.random.PRNGKey(0), jnp.asarray(emb),
+                                jnp.asarray(alen), opts, steps=200)
+    pred = np.asarray(predict_depth(params, jnp.asarray(emb), opts))
+    acc = (pred == alen).mean()
+    assert acc > 0.8, acc
+
+
+def test_best_bucket_labels():
+    from repro.core.depth_predictor import best_bucket_labels
+    labels = np.asarray(best_bucket_labels(jnp.array([1, 2, 3, 4, 7, 8, 20]),
+                                           (2, 4, 8)))
+    np.testing.assert_array_equal(labels, [0, 0, 1, 1, 2, 2, 2])
+
+
+# ------------------------------------------------------------ HLO parser ----
+SAMPLE_HLO = """
+HloModule jit_step
+
+%add.1 (a: f32[], b: f32[]) -> f32[] {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %r = f32[] add(%a, %b)
+}
+
+%body (p: (s32[], f32[128,256])) -> (s32[], f32[128,256]) {
+  %p = (s32[], f32[128,256]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %x = f32[128,256]{1,0} get-tuple-element(%p), index=1
+  %ar = f32[128,256]{1,0} all-reduce(%x), channel_id=1, replica_groups=[4,4]<=[16], use_global_device_ids=true, to_apply=%add.1
+  %one = s32[] constant(1)
+  %ip = s32[] add(%i, %one)
+  ROOT %t = (s32[], f32[128,256]) tuple(%ip, %ar)
+}
+
+%cond (p: (s32[], f32[128,256])) -> pred[] {
+  %p = (s32[], f32[128,256]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %n = s32[] constant(8)
+  ROOT %c = pred[] compare(%i, %n), direction=LT
+}
+
+ENTRY %main (arg: f32[128,256]) -> f32[128,256] {
+  %arg = f32[128,256]{1,0} parameter(0)
+  %ag = f32[128,1024]{1,0} all-gather(%arg), channel_id=2, replica_groups=[4,4]<=[16], dimensions={1}
+  %z = s32[] constant(0)
+  %t0 = (s32[], f32[128,256]) tuple(%z, %arg)
+  %w = (s32[], f32[128,256]) while(%t0), condition=%cond, body=%body
+  ROOT %out = f32[128,256]{1,0} get-tuple-element(%w), index=1
+}
+"""
+
+
+def test_hlo_collective_accounting():
+    rep = H.analyze(SAMPLE_HLO)
+    kinds = {c.kind for c in rep.collectives}
+    assert kinds == {"all-reduce", "all-gather"}
+    ar = next(c for c in rep.collectives if c.kind == "all-reduce")
+    ag = next(c for c in rep.collectives if c.kind == "all-gather")
+    assert ar.out_bytes == 128 * 256 * 4
+    assert ar.group_size == 4
+    assert ar.multiplier == 8.0               # inside the 8-trip while body
+    assert ag.out_bytes == 128 * 1024 * 4
+    assert ag.operand_bytes == 128 * 1024 * 4 / 4
+    assert ag.multiplier == 1.0
+    total = rep.collective_bytes
+    assert total == 8 * 128 * 256 * 4 + 128 * 1024
+    assert rep.loop_multiplier == 8.0
+    # wire bytes: ring all-reduce 2*(g-1)/g, all-gather (g-1)/g of output
+    np.testing.assert_allclose(
+        rep.collective_wire_bytes,
+        8 * 2 * 128 * 256 * 4 * 3 / 4 + 128 * 1024 * 4 * 3 / 4)
+
+
+def test_hlo_group_size_list_format():
+    assert H._group_size("replica_groups={{0,1,2,3},{4,5,6,7}}") == 4
+    assert H._group_size("replica_groups=[16,32]<=[512]") == 32
+    assert H._group_size("source_target_pairs={{0,1}}") == 1

@@ -1,0 +1,65 @@
+"""§Perf variants must preserve model semantics: grouped-GQA attention and
+batch-local MoE dispatch are pure layout/locality changes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced_config
+from repro.models import Model
+from repro.models import moe as moe_mod
+from repro.models.cache import init_cache
+from repro.models.params import init_params
+
+
+@pytest.mark.parametrize("arch", ["yi-6b", "nemotron-4-15b", "granite-20b"])
+def test_gqa_grouped_matches_baseline(arch):
+    cfg0 = get_reduced_config(arch)
+    cfg1 = cfg0.replace(gqa_grouped=True)
+    m0, m1 = Model(cfg0), Model(cfg1)
+    params = m0.init(jax.random.PRNGKey(0))
+    B, S = 2, 24
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0,
+                              cfg0.vocab_size)
+    h0, _ = m0.hidden_train(params, toks)
+    h1, _ = m1.hidden_train(params, toks)
+    np.testing.assert_allclose(np.asarray(h0), np.asarray(h1),
+                               rtol=3e-4, atol=3e-4)
+    lengths = jnp.full((B,), S, jnp.int32)
+    c0, c1 = init_cache(cfg0, B, 64), init_cache(cfg1, B, 64)
+    l0, c0, _ = m0.prefill(params, toks, lengths, c0)
+    l1, c1, _ = m1.prefill(params, toks, lengths, c1)
+    np.testing.assert_allclose(np.asarray(l0), np.asarray(l1),
+                               rtol=5e-4, atol=5e-4)
+    nxt = jnp.argmax(l0, -1)
+    d0, _, _ = m0.decode(params, nxt, c0)
+    d1, _, _ = m1.decode(params, nxt, c1)
+    np.testing.assert_allclose(np.asarray(d0), np.asarray(d1),
+                               rtol=5e-4, atol=5e-4)
+
+
+@pytest.mark.parametrize("arch", ["mixtral-8x7b", "granite-moe-3b-a800m"])
+def test_moe_batch_dispatch_matches_when_no_drops(arch):
+    """With ample capacity the batch-local dispatch is exactly the flat
+    dispatch (drops are the only semantic difference)."""
+    cfg0 = get_reduced_config(arch).replace(capacity_factor=8.0)
+    cfg1 = cfg0.replace(moe_batch_dispatch=True)
+    p = init_params(moe_mod.moe_defs(cfg0), jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, cfg0.d_model)) * 0.5
+    y0, a0 = moe_mod.apply_moe(p, x, cfg0)
+    y1, a1 = moe_mod.apply_moe(p, x, cfg1)
+    np.testing.assert_allclose(np.asarray(y0), np.asarray(y1),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(float(a0), float(a1), rtol=1e-5)
+
+
+def test_moe_bf16_combine_close():
+    cfg0 = get_reduced_config("mixtral-8x7b").replace(capacity_factor=8.0,
+                                                      moe_batch_dispatch=True)
+    cfg1 = cfg0.replace(moe_combine_dtype="bfloat16")
+    p = init_params(moe_mod.moe_defs(cfg0), jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, cfg0.d_model)) * 0.5
+    y0, _ = moe_mod.apply_moe(p, x, cfg0)
+    y1, _ = moe_mod.apply_moe(p, x, cfg1)
+    np.testing.assert_allclose(np.asarray(y0), np.asarray(y1),
+                               rtol=2e-2, atol=2e-2)

@@ -1,0 +1,136 @@
+"""End-to-end system behaviour: the speculative engine must be LOSSLESS —
+greedy speculative output ≡ greedy autoregressive output of the verifier —
+across execution plans, tree specs and baselines. This is the paper's
+correctness contract (speculative decoding is an exact accelerator)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.egt import egt_spec, template_spec
+from repro.core.engine import (EngineConfig, SpeculativeEngine,
+                               generate_autoregressive)
+from repro.core.tree import chain_template, kary_template
+from repro.data.pipeline import MarkovSource
+from repro.serving.testbed import Testbed, TestbedSpec, build_testbed
+
+
+@pytest.fixture(scope="module")
+def tb() -> Testbed:
+    return build_testbed(TestbedSpec(train_steps=160))
+
+
+def _prompts(tb, B=2, S=12, seed=3):
+    rng = np.random.default_rng(seed)
+    m = MarkovSource(vocab=tb.spec.vocab,
+                     concentration=tb.data_cfg.concentration,
+                     seed=tb.data_cfg.seed)
+    toks = m.sample_fast(rng, B, S)
+    return jnp.asarray(toks), jnp.full((B,), S, jnp.int32)
+
+
+def _engine(tb, **cfg_kw):
+    return SpeculativeEngine(tb.drafter, tb.d_params, tb.verifier,
+                             tb.v_params, config=EngineConfig(**cfg_kw))
+
+
+MAX_NEW = 24
+
+
+@pytest.mark.parametrize("spec_kind", ["egt", "chain", "kary"])
+def test_greedy_lossless(tb, spec_kind):
+    prompt, lengths = _prompts(tb)
+    ar_seq, _ = generate_autoregressive(tb.verifier, tb.v_params, prompt,
+                                        lengths, MAX_NEW)
+    if spec_kind == "egt":
+        spec, v = egt_spec(4, 3), 8
+    elif spec_kind == "chain":
+        t = chain_template(4)
+        spec, v = template_spec(t["parents"], t["expand_rank"]), 5
+    else:
+        t = kary_template(2, 3)
+        spec, v = template_spec(t["parents"], t["expand_rank"]), 10
+    eng = _engine(tb)
+    sp_seq, stats = eng.generate(prompt, lengths, MAX_NEW, spec=spec,
+                                 verify_v=v)
+    for b in range(prompt.shape[0]):
+        got = sp_seq[b][sp_seq[b] >= 0][:MAX_NEW]
+        want = ar_seq[b][:len(got)]
+        np.testing.assert_array_equal(got, want)
+    assert stats.aal >= 1.0
+
+
+@pytest.mark.parametrize("plan", ["fused", "staged", "staged_device"])
+def test_plans_agree(tb, plan):
+    """All execution plans produce identical greedy output (the scheduling
+    runtime only moves WHERE stages run, never WHAT they compute)."""
+    prompt, lengths = _prompts(tb, seed=11)
+    ar_seq, _ = generate_autoregressive(tb.verifier, tb.v_params, prompt,
+                                        lengths, MAX_NEW)
+    eng = _engine(tb, plan=plan)
+    sp_seq, _ = eng.generate(prompt, lengths, MAX_NEW, spec=egt_spec(3, 2),
+                             verify_v=5)
+    for b in range(prompt.shape[0]):
+        got = sp_seq[b][sp_seq[b] >= 0][:MAX_NEW]
+        np.testing.assert_array_equal(got, ar_seq[b][:len(got)])
+
+
+def test_no_prune_lossless(tb):
+    prompt, lengths = _prompts(tb, seed=17)
+    ar_seq, _ = generate_autoregressive(tb.verifier, tb.v_params, prompt,
+                                        lengths, MAX_NEW)
+    eng = _engine(tb, prune=False)
+    sp_seq, _ = eng.generate(prompt, lengths, MAX_NEW, spec=egt_spec(3, 3))
+    for b in range(prompt.shape[0]):
+        got = sp_seq[b][sp_seq[b] >= 0][:MAX_NEW]
+        np.testing.assert_array_equal(got, ar_seq[b][:len(got)])
+
+
+def test_bucket_reuse_no_recompile(tb):
+    """EGT's static-shape property: iterating inside one bucket compiles
+    exactly once; only a bucket switch compiles a new executable."""
+    prompt, lengths = _prompts(tb, seed=23)
+    eng = _engine(tb)
+    _, st1 = eng.generate(prompt, lengths, 20, spec=egt_spec(3, 2), verify_v=5)
+    assert st1.compiles == 1
+    _, st2 = eng.generate(prompt, lengths, 20, spec=egt_spec(3, 2), verify_v=5)
+    assert st2.compiles == 0                      # replayed executable
+    _, st3 = eng.generate(prompt, lengths, 10, spec=egt_spec(4, 2), verify_v=5)
+    assert st3.compiles == 1                      # new bucket
+
+
+def test_dynamic_bucket_selection(tb):
+    """Engine picks buckets from predictor+objective when no spec is pinned."""
+    from repro.core.buckets import buckets_for_depths
+    prompt, lengths = _prompts(tb, seed=29)
+    eng = SpeculativeEngine(
+        tb.drafter, tb.d_params, tb.verifier, tb.v_params,
+        buckets=buckets_for_depths((2, 4), width=2),
+        depth_options=(2, 4), config=EngineConfig())
+    ar_seq, _ = generate_autoregressive(tb.verifier, tb.v_params, prompt,
+                                        lengths, MAX_NEW)
+    sp_seq, stats = eng.generate(prompt, lengths, MAX_NEW)
+    assert len(stats.buckets) >= 1
+    for b in range(prompt.shape[0]):
+        got = sp_seq[b][sp_seq[b] >= 0][:MAX_NEW]
+        np.testing.assert_array_equal(got, ar_seq[b][:len(got)])
+
+
+def test_stochastic_mode_runs_and_terminates(tb):
+    prompt, lengths = _prompts(tb, seed=31)
+    eng = _engine(tb, temperature=0.8)
+    seq, stats = eng.generate(prompt, lengths, 16, spec=egt_spec(3, 2),
+                              verify_v=5, key=jax.random.PRNGKey(5))
+    assert stats.tokens_generated >= 16
+    flat = seq[seq >= 0]
+    assert ((flat >= 0) & (flat < tb.spec.vocab)).all()
+
+
+def test_speculation_beats_ar_in_steps(tb):
+    """On the aligned testbed the engine must verify >1 token/iteration on
+    average — the core premise of speculative decoding."""
+    prompt, lengths = _prompts(tb, B=4, seed=37)
+    eng = _engine(tb)
+    _, stats = eng.generate(prompt, lengths, 32, spec=egt_spec(4, 4),
+                            verify_v=12)
+    assert stats.aal > 1.3, stats.summary()

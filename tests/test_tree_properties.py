@@ -1,0 +1,189 @@
+"""Property-based tests (hypothesis) on the tree/pruning/acceptance
+invariants that losslessness rests on."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import pruning, verify
+from repro.core.tree import (TreeArrays, ancestor_mask, ancestor_paths,
+                             empty_tree, gather_subtree, kary_template,
+                             node_depths)
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+
+# -------------------------------------------------- random-tree strategy ----
+@st.composite
+def random_parents(draw, max_n=14):
+    """Topologically-ordered random forest rooted at 0 (parent < child)."""
+    n = draw(st.integers(2, max_n))
+    parents = [-1]
+    for i in range(1, n):
+        parents.append(draw(st.integers(0, i - 1)))
+    return np.array(parents, np.int32)
+
+
+def make_tree(parents: np.ndarray, rng: np.random.Generator) -> TreeArrays:
+    n = len(parents)
+    # path log-probs must be monotone non-increasing along edges
+    edge_lp = -rng.exponential(1.0, n)
+    path_lp = np.zeros(n, np.float64)
+    for i in range(1, n):
+        path_lp[i] = path_lp[parents[i]] + edge_lp[i]
+    depths = np.zeros(n, np.int32)
+    for i in range(1, n):
+        depths[i] = depths[parents[i]] + 1
+    return TreeArrays(
+        tokens=jnp.asarray(rng.integers(0, 50, (1, n)), jnp.int32),
+        parents=jnp.asarray(parents)[None],
+        depths=jnp.asarray(depths)[None],
+        path_lp=jnp.asarray(path_lp, jnp.float32)[None],
+        live=jnp.ones((1, n), bool),
+    )
+
+
+# ------------------------------------------------------------ structure ----
+@given(random_parents())
+def test_ancestor_mask_matches_reference(parents):
+    n = len(parents)
+    got = np.asarray(ancestor_mask(jnp.asarray(parents)[None], n))[0]
+    want = np.zeros((n, n), bool)
+    for i in range(n):
+        j = i
+        while j >= 0:
+            want[i, j] = True
+            j = parents[j]
+    np.testing.assert_array_equal(got, want)
+
+
+@given(random_parents())
+def test_node_depths_and_paths_consistent(parents):
+    n = len(parents)
+    d = np.asarray(node_depths(jnp.asarray(parents)[None], n))[0]
+    paths = np.asarray(ancestor_paths(jnp.asarray(parents)[None], n))[0]
+    for i in range(n):
+        chain = [x for x in paths[i] if x >= 0]
+        assert chain[-1] == i
+        assert chain[0] == 0                      # rooted
+        assert len(chain) == d[i] + 1
+        for a, b in zip(chain, chain[1:]):
+            assert parents[b] == a                # consecutive edges
+
+
+# -------------------------------------------------------------- pruning ----
+@given(random_parents(), st.integers(1, 10), st.integers(0, 10 ** 6))
+def test_topk_prune_is_parent_closed_and_optimal(parents, v, seed):
+    n = len(parents)
+    v = min(v, n)
+    tree = make_tree(parents, np.random.default_rng(seed))
+    sub, select_idx = pruning.topk_prune(tree, v, n)
+    sel = np.asarray(select_idx)[0]
+    assert sel[0] == 0                            # root kept
+    assert len(np.unique(sel)) == v               # no duplicates
+    sel_set = set(sel.tolist())
+    for i in sel:
+        if parents[i] >= 0:
+            assert parents[i] in sel_set          # parent-closed
+    # matches the paper's bottom-up DP on the same instance
+    probs = np.exp(np.asarray(tree.path_lp)[0], dtype=np.float64)
+    dp_sel, dp_val = pruning.dp_prune_reference(parents, probs, v)
+    got_val = probs[sel].sum()
+    assert got_val >= dp_val - 1e-9               # top-k is optimal here
+    # re-indexed subtree preserves edges
+    new_parents = np.asarray(sub.parents)[0]
+    for j in range(v):
+        if new_parents[j] >= 0:
+            assert sel[new_parents[j]] == parents[sel[j]]
+
+
+@given(random_parents(), st.integers(0, 10 ** 6))
+def test_gather_subtree_identity(parents, seed):
+    n = len(parents)
+    tree = make_tree(parents, np.random.default_rng(seed))
+    idx = jnp.arange(n)[None]
+    sub, _ = gather_subtree(tree, idx, n, n)
+    for a, b in zip(sub, tree):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ----------------------------------------------------------- acceptance ----
+@given(random_parents(), st.integers(0, 10 ** 6))
+def test_greedy_accept_matches_host_reference(parents, seed):
+    rng = np.random.default_rng(seed)
+    n = len(parents)
+    tree = make_tree(parents, rng)
+    vocab = 50
+    logits = jnp.asarray(rng.normal(size=(1, n, vocab)), jnp.float32)
+    acc = verify.greedy_accept(tree, logits, n)
+    from repro.core.scheduler import greedy_accept_host
+    node_idx, alen, bonus, last = greedy_accept_host(
+        np.asarray(tree.tokens), np.asarray(tree.parents),
+        np.asarray(tree.depths), np.asarray(tree.live),
+        np.asarray(jnp.argmax(logits, -1)), n)
+    assert int(acc.accept_len[0]) == int(alen[0])
+    assert int(acc.bonus[0]) == int(bonus[0])
+    k = int(alen[0])
+    np.testing.assert_array_equal(np.asarray(acc.node_idx)[0, :k],
+                                  node_idx[0, :k])
+
+
+@given(random_parents(), st.integers(0, 10 ** 6))
+def test_greedy_accept_chain_is_valid(parents, seed):
+    """Every accepted chain is a root-to-node path whose tokens equal the
+    verifier's greedy continuation."""
+    rng = np.random.default_rng(seed)
+    n = len(parents)
+    tree = make_tree(parents, rng)
+    vocab = 8                                     # small => collisions likely
+    logits = jnp.asarray(rng.normal(size=(1, n, vocab)), jnp.float32)
+    tree = tree._replace(tokens=jnp.asarray(
+        rng.integers(0, vocab, (1, n)), jnp.int32))
+    acc = verify.greedy_accept(tree, logits, n)
+    tgt = np.asarray(jnp.argmax(logits, -1))[0]
+    toks = np.asarray(tree.tokens)[0]
+    chain = np.asarray(acc.node_idx)[0][: int(acc.accept_len[0])]
+    assert chain[0] == 0
+    for prev, cur in zip(chain, chain[1:]):
+        assert parents[cur] == prev
+        assert toks[cur] == tgt[prev]             # token matches target argmax
+    assert int(acc.bonus[0]) == tgt[chain[-1]]
+
+
+# ----------------------------------- stochastic acceptance distribution ----
+def test_stochastic_accept_preserves_target_distribution():
+    """Rejection-sampling identity on a 2-token chain with toy dists: the
+    marginal of the first emitted token must equal the target distribution."""
+    vocab = 4
+    n = 2                                          # root + one draft node
+    draws = 4000
+    rng = np.random.default_rng(0)
+    q = np.array([0.5, 0.3, 0.1, 0.1])             # drafter dist at root
+    p = np.array([0.25, 0.25, 0.3, 0.2])           # target dist at root
+    counts = np.zeros(vocab)
+    keys = jax.random.split(jax.random.PRNGKey(0), draws)
+    draft_tok = rng.choice(vocab, size=draws, p=q)
+    # batch all draws at once
+    B = draws
+    tree = TreeArrays(
+        tokens=jnp.concatenate([jnp.zeros((B, 1), jnp.int32),
+                                jnp.asarray(draft_tok)[:, None]], 1),
+        parents=jnp.broadcast_to(jnp.array([-1, 0], jnp.int32), (B, n)),
+        depths=jnp.broadcast_to(jnp.array([0, 1], jnp.int32), (B, n)),
+        path_lp=jnp.zeros((B, n), jnp.float32),
+        live=jnp.ones((B, n), bool),
+    )
+    dp = jnp.broadcast_to(jnp.asarray(q, jnp.float32), (B, n, vocab))
+    tp = jnp.broadcast_to(jnp.asarray(p, jnp.float32), (B, n, vocab))
+    acc = verify.stochastic_accept(tree, dp, tp, jax.random.PRNGKey(1),
+                                   a_max=2, max_children=1)
+    alen = np.asarray(acc.accept_len)
+    toks = np.asarray(tree.tokens)
+    bonus = np.asarray(acc.bonus)
+    emitted = np.where(alen >= 2, toks[:, 1], bonus)
+    for t in range(vocab):
+        counts[t] = (emitted == t).sum()
+    freq = counts / draws
+    np.testing.assert_allclose(freq, p, atol=0.03)
