@@ -1,0 +1,151 @@
+"""Serving benchmark: continuous batching vs run-to-completion batching.
+
+A Poisson arrival trace (exponential interarrivals) is replayed in wall
+clock against both servers on the CPU testbed:
+
+  * ``BatchedServer``    — requests wait until a full batch forms, then the
+    batch runs to completion (stragglers hold the batch; arrivals during a
+    batch wait for the next one).
+  * ``ContinuousServer`` — fixed slot pool, one megastep per scheduler
+    tick, finished slots refilled mid-flight from the admission queue.
+
+Reported per server: sustained throughput (tok/s over the makespan) and
+p50/p95 request latency (arrival -> completion). The continuous row also
+reports slot occupancy, AAL and recompiles-after-warmup (must be 0 — the
+whole point of the static-shape megastep is surviving slot churn without
+recompiling). Results land in benchmarks/results/fig_serving.json.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from benchmarks import common
+from repro.core.buckets import buckets_for_depths
+from repro.core.egt import egt_spec
+from repro.core.engine import EngineConfig, SpeculativeEngine
+from repro.data.pipeline import MarkovSource
+from repro.serving.continuous import ContinuousServer
+from repro.serving.server import BatchedServer, Request
+
+
+SPEC, VERIFY_V = egt_spec(4, 2), 6
+
+
+def make_trace(tb, n: int, rate_hz: float, max_new: int, seed: int = 0):
+    """Poisson arrivals: [(arrival_s, Request)] sorted by arrival."""
+    rng = np.random.default_rng(seed)
+    src = MarkovSource(vocab=tb.spec.vocab,
+                       concentration=tb.data_cfg.concentration,
+                       seed=tb.data_cfg.seed)
+    arrivals = np.cumsum(rng.exponential(1.0 / rate_hz, size=n))
+    out = []
+    for uid in range(n):
+        plen = int(rng.integers(8, 20))
+        out.append((float(arrivals[uid]),
+                    Request(uid=uid, prompt=src.sample(rng, plen),
+                            max_new=max_new)))
+    return out
+
+
+def _engine(tb) -> SpeculativeEngine:
+    return SpeculativeEngine(
+        tb.drafter, tb.d_params, tb.verifier, tb.v_params,
+        buckets=buckets_for_depths((4,), width=2, verify_frac=0.75),
+        depth_options=(4,), config=EngineConfig())
+
+
+def _request_stats(done: Dict[int, Request], t0: float) -> Dict:
+    lat = np.asarray([r.t_finish - r.t_submit for r in done.values()])
+    toks = int(sum(len(r.result) for r in done.values()))
+    makespan = max(r.t_finish for r in done.values()) - t0
+    return {"requests": len(done), "tokens": toks,
+            "makespan_s": float(makespan),
+            "throughput_tok_s": toks / max(makespan, 1e-9),
+            "latency_p50_s": float(np.percentile(lat, 50)),
+            "latency_p95_s": float(np.percentile(lat, 95)),
+            "latency_mean_s": float(lat.mean())}
+
+
+def drive_continuous(tb, trace, batch: int, prompt_pad: int) -> Dict:
+    eng = _engine(tb)
+    server = ContinuousServer(eng, batch_size=batch, prompt_pad=prompt_pad,
+                              spec=SPEC, verify_v=VERIFY_V)
+    server.warmup()
+    pending: List = list(trace)
+    t0 = time.perf_counter()
+    while pending or server.queue or any(s is not None for s in server.slots):
+        now = time.perf_counter() - t0
+        while pending and pending[0][0] <= now:
+            arr, req = pending.pop(0)
+            req.t_submit = t0 + arr
+            server.submit(req)
+        if server.queue or any(s is not None for s in server.slots):
+            server.step()
+        elif pending:
+            time.sleep(min(pending[0][0] - now, 0.002))
+    m = server.metrics.summary()
+    return {**_request_stats(server.done, t0),
+            "occupancy": m["occupancy"], "aal": m["aal"],
+            "refills": m["refills"],
+            "recompiles_after_warmup": m["recompiles_after_warmup"]}
+
+
+def drive_batched(tb, trace, batch: int, prompt_pad: int) -> Dict:
+    eng = _engine(tb)
+    server = BatchedServer(eng, batch_size=batch, prompt_pad=prompt_pad)
+    # warm the compile caches outside the timed trace, like warmup()
+    wreq = Request(uid=-1, prompt=trace[0][1].prompt.copy(),
+                   max_new=trace[0][1].max_new)
+    server.submit(wreq)
+    server.run()
+    server.done.clear()
+    pending: List = list(trace)
+    t0 = time.perf_counter()
+    while pending or server.queue:
+        now = time.perf_counter() - t0
+        while pending and pending[0][0] <= now:
+            arr, req = pending.pop(0)
+            req.t_submit = t0 + arr
+            server.submit(req)
+        if len(server.queue) >= batch or (server.queue and not pending):
+            server.step()
+        elif pending:
+            time.sleep(min(pending[0][0] - now, 0.002))
+    return _request_stats(server.done, t0)
+
+
+def run(quick: bool = True):
+    n = 12 if quick else 48
+    max_new = 24 if quick else 64
+    batch, prompt_pad = 4, 24
+    tb = common.testbed()
+
+    out = {"config": {"n_requests": n, "max_new": max_new, "batch": batch,
+                      "spec": {"depth": SPEC.depth, "width": SPEC.width,
+                               "verify_v": VERIFY_V}},
+           "servers": {}}
+    # rate chosen so the pool is load-bearing: a few arrivals per batch-time
+    for rate_hz in ((4.0,) if quick else (2.0, 8.0)):
+        trace_c = make_trace(tb, n, rate_hz, max_new)
+        trace_b = make_trace(tb, n, rate_hz, max_new)
+        res = {"continuous": drive_continuous(tb, trace_c, batch, prompt_pad),
+               "batched": drive_batched(tb, trace_b, batch, prompt_pad)}
+        res["latency_p50_speedup"] = (res["batched"]["latency_p50_s"]
+                                      / max(res["continuous"]["latency_p50_s"], 1e-9))
+        out["servers"][f"rate_{rate_hz:g}hz"] = res
+    common.save("fig_serving", out)
+    return out
+
+
+if __name__ == "__main__":
+    res = run()
+    for rate, r in res["servers"].items():
+        c, b = r["continuous"], r["batched"]
+        print(f"{rate}: continuous {c['throughput_tok_s']:.0f} tok/s "
+              f"p50={c['latency_p50_s'] * 1e3:.0f}ms p95={c['latency_p95_s'] * 1e3:.0f}ms "
+              f"occ={c['occupancy']:.2f} recompiles={c['recompiles_after_warmup']} | "
+              f"batched {b['throughput_tok_s']:.0f} tok/s "
+              f"p50={b['latency_p50_s'] * 1e3:.0f}ms p95={b['latency_p95_s'] * 1e3:.0f}ms")

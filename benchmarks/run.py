@@ -12,7 +12,7 @@ import traceback
 
 BENCHES = ("fig5_latency_curve", "fig4_runtime", "fig11_tree", "fig10_e2e",
            "fig12_breakdown", "fig13_sensitivity", "fig14_objective",
-           "fig15_temperature", "roofline")
+           "fig15_temperature", "fig_serving", "roofline")
 
 
 def main() -> None:

@@ -12,6 +12,21 @@ Execution plans (paper §5):
 
 Each ⟨D, W, V⟩ bucket compiles exactly once (static shapes via EGT); the
 runtime replays executables — the JAX analogue of CUDA-graph replay.
+
+Stepwise API (continuous batching):
+  The engine also exposes the decode loop one iteration at a time on an
+  explicit ``DecodeState`` (both caches + per-slot roots/progress):
+
+    state = engine.init_decode_state(batch_size)
+    state = engine.prefill_into_slot(state, slot, tokens, length)
+    state, res = engine.decode_step(state, spec=..., verify_v=...)
+
+  ``prefill_into_slot`` prefills a single batch slot (one compiled B=1
+  executable, slot index traced) and scatters it into the batched caches
+  without touching the other slots, so a serving loop can retire a finished
+  request and refill its slot mid-flight while the megastep keeps replaying
+  the same static-shape executable. ``generate`` is a thin wrapper over
+  ``decode_step``. See serving/continuous.py for the slot scheduler.
 """
 from __future__ import annotations
 
@@ -29,6 +44,7 @@ from repro.core.depth_predictor import predict_depth
 from repro.core.egt import DraftSpec, draft_tree, egt_spec, template_spec
 from repro.core.objective import LatencyProfile
 from repro.core.tree import ancestor_paths
+from repro.models import cache as cache_lib
 from repro.models.cache import init_cache
 from repro.models.model import Model
 
@@ -55,6 +71,7 @@ class GenStats:
     iter_times: List[float] = field(default_factory=list)
     buckets: List[Tuple[int, int, int]] = field(default_factory=list)
     compiles: int = 0
+    length_capped: bool = False  # stopped at the cache cap before max_new
 
     @property
     def aal(self) -> float:
@@ -74,7 +91,42 @@ class GenStats:
         return {"aal": self.aal, "iters": len(self.iter_times),
                 "tokens": self.tokens_generated, "time_s": self.total_time,
                 "tpot_ms": 1e3 * self.total_time / max(self.tokens_generated, 1),
-                "compiles": self.compiles}
+                "compiles": self.compiles,
+                "length_capped": self.length_capped}
+
+
+@dataclass
+class DecodeState:
+    """Explicit decode-loop state carried between ``decode_step`` calls.
+
+    Device side: both caches (donated every step), the per-slot root token
+    (last confirmed token, drafted from next) and its verifier hidden state
+    (feeds the depth predictor). Host side: per-slot produced-token counts.
+    """
+    dcache: Any
+    vcache: Any
+    root: jax.Array        # [B] int32 last confirmed token per slot
+    h_last: jax.Array      # [B, d_verifier] hidden at the last confirmed token
+    key: jax.Array
+    produced: np.ndarray   # [B] int64 tokens emitted per slot (incl. root)
+
+    @property
+    def batch_size(self) -> int:
+        return int(self.root.shape[0])
+
+
+@dataclass
+class StepResult:
+    """Host-visible outcome of one ``decode_step``.
+
+    ``tokens[b]`` holds the tokens slot b emitted this iteration, front-
+    aligned and -1 padded: accepted drafts (the chain minus the already-
+    emitted root) followed by the bonus token.
+    """
+    tokens: np.ndarray      # [B, A_max] int64, -1 padded
+    accept_len: np.ndarray  # [B] accepted chain length (>= 1)
+    bucket: Tuple[int, int, int]
+    iter_time: float
 
 
 class SpeculativeEngine:
@@ -106,6 +158,136 @@ class SpeculativeEngine:
         _, dcache, _ = self.drafter.prefill(
             self.d_params, tokens, lengths, dcache)
         return v_logits, vcache, dcache, h_last
+
+    # ------------------------------------------------------ stepwise API --
+    def init_decode_state(self, batch_size: int,
+                          key: Optional[jax.Array] = None) -> DecodeState:
+        """Empty decode state: zeroed caches, no slot holds a request yet."""
+        L = self.cfg.max_target_len
+        return DecodeState(
+            dcache=init_cache(self.drafter.cfg, batch_size, L),
+            vcache=init_cache(self.verifier.cfg, batch_size, L),
+            root=jnp.zeros((batch_size,), jnp.int32),
+            h_last=jnp.zeros((batch_size, self.verifier.cfg.d_model),
+                             jnp.float32),
+            key=key if key is not None else jax.random.PRNGKey(0),
+            produced=np.zeros((batch_size,), np.int64))
+
+    def _build_slot_prefill(self):
+        """One compiled executable that prefills a batch-1 prompt and
+        scatters it into a (traced) batch slot of the live caches. Shape
+        specialization per prompt length comes from jit retracing; the
+        per-pad cache key in `prefill_into_slot` only tracks the compile
+        count honestly."""
+        if self.verifier.cfg.is_encoder_decoder:
+            raise NotImplementedError(
+                "slot prefill does not support encoder-decoder models yet")
+        L = self.cfg.max_target_len
+
+        def fn(d_params, v_params, dcache, vcache, root, h_last,
+               tokens, length, slot, key):
+            vc1 = init_cache(self.verifier.cfg, 1, L)
+            dc1 = init_cache(self.drafter.cfg, 1, L)
+            v_logits, vc1, h1 = self.verifier.prefill(
+                v_params, tokens, length, vc1)
+            _, dc1, _ = self.drafter.prefill(d_params, tokens, length, dc1)
+            tok = self._sample(v_logits, key)
+            vcache = cache_lib.slot_update(vcache, slot, vc1)
+            dcache = cache_lib.slot_update(dcache, slot, dc1)
+            root = jax.lax.dynamic_update_index_in_dim(root, tok[0], slot, 0)
+            h_last = jax.lax.dynamic_update_index_in_dim(
+                h_last, h1[0].astype(h_last.dtype), slot, 0)
+            return dcache, vcache, root, h_last
+
+        return jax.jit(fn, donate_argnums=(2, 3, 4, 5))
+
+    def prefill_into_slot(self, state: DecodeState, slot: int,
+                          tokens: np.ndarray, length: int) -> DecodeState:
+        """Prefill one prompt into batch slot `slot` of `state`, leaving the
+        other slots untouched. `tokens` is a [P] right-padded prompt; every
+        distinct P compiles once, so a serving loop should pad to a fixed
+        prompt length. The slot's first generated token (sampled from the
+        prompt's last-position logits) lands in ``state.root[slot]``."""
+        pad = int(np.shape(tokens)[-1])
+        ck = ("slot_prefill", pad, self.cfg.temperature)
+        if ck not in self._step_cache:
+            self._step_cache[ck] = self._build_slot_prefill()
+            self._compile_count += 1
+        fn = self._step_cache[ck]
+        key, sk = jax.random.split(state.key)
+        dcache, vcache, root, h_last = fn(
+            self.d_params, self.v_params, state.dcache, state.vcache,
+            state.root, state.h_last,
+            jnp.asarray(tokens, jnp.int32).reshape(1, pad),
+            jnp.asarray([length], jnp.int32),
+            jnp.asarray(slot, jnp.int32), sk)
+        produced = state.produced.copy()
+        produced[slot] = 1  # the root token is the slot's first output
+        return DecodeState(dcache, vcache, root, h_last, key, produced)
+
+    def reset_state_slot(self, state: DecodeState, slot: int) -> DecodeState:
+        """Clear batch slot `slot` of both caches (length 0, positions -1,
+        SSM state zeroed) without touching the other slots. The emptied slot
+        keeps decoding harmlessly (tree nodes always see themselves, so no
+        all-masked attention rows); its output is garbage until the next
+        ``prefill_into_slot``. One compiled executable, slot index traced."""
+        ck = ("slot_reset",)
+        if ck not in self._step_cache:
+            self._step_cache[ck] = jax.jit(
+                lambda dc, vc, s: (cache_lib.reset_slot(dc, s),
+                                   cache_lib.reset_slot(vc, s)),
+                donate_argnums=(0, 1))
+            self._compile_count += 1
+        dcache, vcache = self._step_cache[ck](
+            state.dcache, state.vcache, jnp.asarray(slot, jnp.int32))
+        produced = state.produced.copy()
+        produced[slot] = 0
+        return DecodeState(dcache, vcache, state.root, state.h_last,
+                           state.key, produced)
+
+    def decode_step(self, state: DecodeState,
+                    spec: Optional[DraftSpec] = None,
+                    verify_v: Optional[int] = None,
+                    ) -> Tuple[DecodeState, StepResult]:
+        """Run one speculation iteration over every slot and return the
+        tokens each slot emitted. Shapes are static given the bucket, so
+        repeated calls replay one compiled megastep regardless of slot
+        churn. Input caches are donated — use the returned state."""
+        cfg = self.cfg
+        if spec is not None:
+            use_spec, use_v = spec, (verify_v or spec.num_nodes)
+        else:
+            use_spec, use_v = self._select(state.h_last)
+        key, sk = jax.random.split(state.key)
+        t0 = time.perf_counter()
+        if cfg.plan == "fused":
+            step = self._get_step(use_spec, use_v)
+            (dcache, vcache, bonus, toks, alen, h_last) = step(
+                self.d_params, self.v_params, state.dcache, state.vcache,
+                state.root, sk)
+        else:
+            parts = self._get_staged_parts(use_spec, use_v)
+            (dcache, vcache, bonus, toks, alen, h_last) = self._run_staged(
+                parts, state.dcache, state.vcache, state.root, sk)
+        alen_np = np.asarray(alen)
+        t1 = time.perf_counter()
+        toks_np, bonus_np = np.asarray(toks), np.asarray(bonus)
+        B, a_max = toks_np.shape
+        emit = np.full((B, a_max), -1, np.int64)
+        for b in range(B):
+            a = int(alen_np[b])
+            emit[b, : a - 1] = toks_np[b, 1: a]
+            emit[b, a - 1] = bonus_np[b]
+        new_state = DecodeState(dcache, vcache, bonus, h_last, key,
+                                state.produced + alen_np)
+        res = StepResult(tokens=emit, accept_len=alen_np,
+                         bucket=(use_spec.depth, use_spec.width, use_v),
+                         iter_time=t1 - t0)
+        return new_state, res
+
+    def slot_lengths(self, state: DecodeState) -> np.ndarray:
+        """Committed verifier-cache length per slot (host sync)."""
+        return np.asarray(state.vcache["length"])
 
     # ----------------------------------------------------------- megastep --
     def _build_step(self, spec: DraftSpec, verify_v: int):
@@ -273,49 +455,48 @@ class SpeculativeEngine:
                  enc_feats: Optional[jax.Array] = None,
                  dynamic_bucket: bool = False,
                  ) -> Tuple[np.ndarray, GenStats]:
-        """Generate up to max_new tokens. If `spec` is None, buckets are
-        selected per-iteration (depth predictor + latency objective)."""
-        cfg = self.cfg
+        """Generate until EVERY sequence has at least max_new tokens (slower
+        sequences keep the loop alive; fast ones over-generate and the caller
+        truncates). Thin wrapper over the stepwise API: batched prefill, then
+        `decode_step` until done. If `spec` is None, buckets are selected
+        per-iteration (depth predictor + latency objective)."""
         key = key if key is not None else jax.random.PRNGKey(0)
         B = prompt.shape[0]
         v_logits, vcache, dcache, h_last = self.prefill(prompt, lengths,
                                                         enc_feats=enc_feats)
         key, sk = jax.random.split(key)
         root = self._sample(v_logits, sk)
+        state = DecodeState(dcache, vcache, root, h_last, key,
+                            produced=np.ones((B,), np.int64))
         out = [np.asarray(root)[:, None]]
-        produced = 1
         stats = GenStats()
         base_compiles = self._compile_count
 
-        while produced < max_new:
-            if spec is not None:
-                use_spec, use_v = spec, (verify_v or spec.num_nodes)
-            else:
-                use_spec, use_v = self._select(h_last)
-            key, sk = jax.random.split(key)
-            t0 = time.perf_counter()
-            if cfg.plan == "fused":
-                step = self._get_step(use_spec, use_v)
-                (dcache, vcache, bonus, toks, alen, h_last) = step(
-                    self.d_params, self.v_params, dcache, vcache, root, sk)
-            else:
-                parts = self._get_staged_parts(use_spec, use_v)
-                (dcache, vcache, bonus, toks, alen, h_last) = self._run_staged(
-                    parts, dcache, vcache, root, sk)
-            alen_np = np.asarray(alen)
-            t1 = time.perf_counter()
-            stats.iter_times.append(t1 - t0)
-            stats.accept_lens.append(alen_np)
-            stats.buckets.append((use_spec.depth, use_spec.width, use_v))
-            toks_np = np.asarray(toks)
-            # emit accepted drafts (chain minus the already-emitted root)
-            emit = np.full((B, toks_np.shape[1]), -1, np.int64)
-            for b in range(B):
-                emit[b, : alen_np[b] - 1] = toks_np[b, 1: alen_np[b]]
-            out.append(emit)
-            out.append(np.asarray(bonus)[:, None])
-            root = bonus
-            produced += int(alen_np.max())
+        # largest chain one iteration can commit (bounds cache growth/iter)
+        if spec is not None:
+            step_bound = spec.depth + 1
+        elif self.buckets:
+            step_bound = max(bk.depth for bk in self.buckets) + 1
+        else:
+            step_bound = max(self.depth_options) + 1
+        L = self.cfg.max_target_len
+        lengths_np = np.asarray(lengths)
+
+        # per-sequence accounting: run until the SLOWEST sequence reaches
+        # max_new (a batch-max counter would silently under-generate it) —
+        # unless the fastest row is about to hit the cache cap, where a
+        # further commit would be silently dropped (mode="drop" scatter)
+        # and the output would diverge from the verifier.
+        while int(state.produced.min()) < max_new:
+            committed_max = int((lengths_np + state.produced).max()) - 1
+            if committed_max + step_bound > L:
+                stats.length_capped = True  # surfaced via summary()
+                break
+            state, res = self.decode_step(state, spec=spec, verify_v=verify_v)
+            stats.iter_times.append(res.iter_time)
+            stats.accept_lens.append(res.accept_len)
+            stats.buckets.append(res.bucket)
+            out.append(res.tokens)
 
         stats.compiles = self._compile_count - base_compiles
         seq = np.concatenate(out, axis=1)

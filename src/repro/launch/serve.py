@@ -1,12 +1,19 @@
-"""Serving launcher: batched speculative decoding on the CPU testbed.
+"""Serving launcher: speculative decoding on the CPU testbed.
 
 Builds (or restores) the aligned drafter/verifier pair, measures the
 latency profile, and serves a queue of requests through the speculative
-engine with dynamic bucket selection — the full Yggdrasil runtime at
-laptop scale.
+engine — the full Yggdrasil runtime at laptop scale. Two serving modes:
+
+  * ``--server batched``    — one padded batch to completion per step (the
+    single-tenant latency-optimal regime of §9).
+  * ``--server continuous`` — continuous batching: a fixed pool of decode
+    slots, retired requests replaced mid-flight via single-slot prefill,
+    one pinned megastep executable replayed across slot churn.
 
 Usage:
   PYTHONPATH=src python -m repro.launch.serve --requests 8 --max-new 48
+  PYTHONPATH=src python -m repro.launch.serve --server continuous \
+      --requests 16 --batch 4
 """
 from __future__ import annotations
 
@@ -15,21 +22,29 @@ import argparse
 import numpy as np
 
 from repro.core.buckets import buckets_for_depths
+from repro.core.egt import egt_spec
 from repro.core.engine import EngineConfig, SpeculativeEngine
 from repro.core.objective import LatencyProfile
 from repro.data.pipeline import MarkovSource
+from repro.serving.continuous import ContinuousServer
 from repro.serving.server import BatchedServer, Request
 from repro.serving.testbed import TestbedSpec, build_testbed
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
+    ap.add_argument("--server", default="batched",
+                    choices=["batched", "continuous"])
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=48)
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--plan", default="fused",
                     choices=["fused", "staged", "staged_device"])
+    ap.add_argument("--depth", type=int, default=4,
+                    help="pinned speculation depth (continuous mode)")
+    ap.add_argument("--width", type=int, default=2,
+                    help="pinned speculation width (continuous mode)")
     ap.add_argument("--profile", default=None,
                     help="LatencyProfile JSON (default: synthetic)")
     args = ap.parse_args()
@@ -42,7 +57,14 @@ def main() -> None:
         buckets=buckets_for_depths((2, 4, 8), width=2, verify_frac=0.75),
         depth_options=(2, 4, 8),
         config=EngineConfig(temperature=args.temperature, plan=args.plan))
-    server = BatchedServer(engine, batch_size=args.batch, prompt_pad=24)
+
+    if args.server == "continuous":
+        spec = egt_spec(args.depth, args.width)
+        server = ContinuousServer(engine, batch_size=args.batch,
+                                  prompt_pad=24, spec=spec,
+                                  verify_v=max(2, (3 * spec.num_nodes) // 4))
+    else:
+        server = BatchedServer(engine, batch_size=args.batch, prompt_pad=24)
 
     src = MarkovSource(vocab=tb.spec.vocab,
                        concentration=tb.data_cfg.concentration)
@@ -52,15 +74,28 @@ def main() -> None:
         server.submit(Request(uid=uid, prompt=src.sample(rng, plen),
                               max_new=args.max_new))
     done = server.run()
-    tot_tok, tot_t = 0, 0.0
-    for uid, req in sorted(done.items()):
-        s = req.stats
-        print(f"req {uid}: {len(req.result)} tokens  "
-              f"aal={s['aal']:.2f}  tpot={s['tpot_ms']:.1f}ms")
-        tot_tok += s["tokens"]
-        tot_t += s["time_s"]
-    print(f"served {len(done)} requests; aggregate TPOT "
-          f"{1e3 * tot_t / max(tot_tok, 1):.1f} ms/token")
+
+    if args.server == "continuous":
+        for uid, req in sorted(done.items()):
+            print(f"req {uid}: {len(req.result)} tokens  "
+                  f"queue={req.stats['queue_s'] * 1e3:.0f}ms  "
+                  f"latency={req.stats['latency_s'] * 1e3:.0f}ms")
+        m = server.metrics.summary()
+        print(f"served {m['completed']} requests in {m['steps']} steps; "
+              f"{m['throughput_tok_s']:.0f} tok/s  "
+              f"tpot={m['tpot_ms']:.1f}ms  aal={m['aal']:.2f}  "
+              f"occupancy={m['occupancy']:.2f}  refills={m['refills']}  "
+              f"recompiles_after_warmup={m['recompiles_after_warmup']}")
+    else:
+        tot_tok, tot_t = 0, 0.0
+        for uid, req in sorted(done.items()):
+            s = req.stats
+            print(f"req {uid}: {len(req.result)} tokens  "
+                  f"aal={s['aal']:.2f}  tpot={s['tpot_ms']:.1f}ms")
+            tot_tok += s["tokens"]
+            tot_t += s["time_s"]
+        print(f"served {len(done)} requests; aggregate TPOT "
+              f"{1e3 * tot_t / max(tot_tok, 1):.1f} ms/token")
 
 
 if __name__ == "__main__":

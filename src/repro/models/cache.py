@@ -141,6 +141,55 @@ def shard_cache(cache: Cache) -> Cache:
         lambda p, x: shard(x, *_leaf_axes(p, x)), cache)
 
 
+# ------------------------------------------------- per-slot management ----
+# Continuous batching refills one batch slot while the others keep decoding.
+# Every leaf's batch axis is recovered from `_leaf_axes`, so these work for
+# attention, SSM, cross-attention and `length` leaves alike, and stay
+# jit-compatible with a *traced* slot index (one compiled executable serves
+# every slot).
+
+def batch_axis(path: Tuple, leaf) -> int:
+    """Index of the batch axis for a cache leaf at `path`."""
+    return _leaf_axes(path, leaf).index("batch")
+
+
+def slot_slice(cache: Cache, slot) -> Cache:
+    """Extract batch slot `slot` as a batch-1 cache (same structure)."""
+    return jax.tree_util.tree_map_with_path(
+        lambda p, x: jax.lax.dynamic_slice_in_dim(
+            x, slot, 1, axis=batch_axis(p, x)), cache)
+
+
+def slot_update(cache: Cache, slot, slot_cache: Cache) -> Cache:
+    """Overwrite batch slot `slot` of `cache` with the content of the
+    batch-1 `slot_cache`, leaving every other slot untouched."""
+
+    def upd(path, big, small):
+        ax = batch_axis(path, big)
+        return jax.lax.dynamic_update_index_in_dim(
+            big, jnp.take(small, 0, axis=ax).astype(big.dtype), slot, axis=ax)
+
+    return jax.tree_util.tree_map_with_path(upd, cache, slot_cache)
+
+
+def reset_slot(cache: Cache, slot) -> Cache:
+    """Clear batch slot `slot`: committed length -> 0, positions -> -1 (so
+    `visible_mask` hides every stale entry), SSM state/conv -> 0. K/V payloads
+    are left in place — they are unreachable once pos/length are cleared."""
+
+    def upd(path, leaf):
+        name = getattr(path[-1], "key", str(path[-1]))
+        ax = batch_axis(path, leaf)
+        if name in ("k", "v", "ck", "cv"):
+            return leaf
+        row_shape = leaf.shape[:ax] + leaf.shape[ax + 1:]
+        fill = -1 if name == "pos" else 0
+        row = jnp.full(row_shape, fill, leaf.dtype)
+        return jax.lax.dynamic_update_index_in_dim(leaf, row, slot, axis=ax)
+
+    return jax.tree_util.tree_map_with_path(upd, cache)
+
+
 def slot_for(pos: jax.Array, s_cache: int, sliding_window: int) -> jax.Array:
     """Map absolute positions to cache slots (ring buffer under SWA)."""
     if sliding_window:

@@ -96,13 +96,16 @@ class Model:
     # ------------------------------------------------------------- train --
     def hidden_train(self, params, tokens: jax.Array,
                      seq_valid: Optional[jax.Array] = None,
-                     enc_feats: Optional[jax.Array] = None):
+                     enc_feats: Optional[jax.Array] = None,
+                     moe_dropless: bool = False):
+        """Full causal forward. ``moe_dropless=True`` disables MoE capacity
+        dropping, making this an exact reference for the inference paths."""
         cfg = self.cfg
         B, S = tokens.shape
         positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
         h = embed_tokens(params["embed"], tokens, cfg, positions)
         ctx = {"positions": positions, "inv_freq": self._inv_freq(),
-               "seq_valid": seq_valid}
+               "seq_valid": seq_valid, "moe_dropless": moe_dropless}
         if cfg.is_encoder_decoder:
             enc_out = self.encode(params, enc_feats)
             ctx["enc_out"] = enc_out
@@ -279,7 +282,7 @@ class Model:
                 elif "moe" in lp:
                     from repro.models import moe as moe_mod
                     x = apply_norm(lp["ffn_norm"], h, cfg)
-                    mo, _ = moe_mod.apply_moe(lp["moe"], x, cfg)
+                    mo, _ = moe_mod.apply_moe(lp["moe"], x, cfg, dropless=True)
                     h = h + mo
             return (h,), new_sb
 

@@ -38,14 +38,24 @@ def _capacity(tokens: int, cfg: ModelConfig) -> int:
     return max(8, min(c, tokens))
 
 
-def apply_moe(p: Dict, x: jax.Array, cfg: ModelConfig) -> Tuple[jax.Array, jax.Array]:
-    """x: [B, S, d] -> (out [B, S, d], aux_loss scalar)."""
+def apply_moe(p: Dict, x: jax.Array, cfg: ModelConfig,
+              dropless: bool = False) -> Tuple[jax.Array, jax.Array]:
+    """x: [B, S, d] -> (out [B, S, d], aux_loss scalar).
+
+    ``dropless=True`` sets capacity to the static worst-case per-expert load
+    (T: top-k indices are distinct, so a token hits an expert at most once)
+    and thus never drops an assignment. Inference paths MUST be dropless —
+    capacity dropping makes a token's output depend on the rest of the
+    batch, which breaks prefill/decode/tree_verify exactness (the lossless-
+    decoding contract). Training keeps capacity-factor dropping as the usual
+    throughput concession.
+    """
     if cfg.moe_batch_dispatch:
-        return _apply_moe_batched(p, x, cfg)
+        return _apply_moe_batched(p, x, cfg, dropless)
     B, S, d = x.shape
     E, K = cfg.num_experts, cfg.num_experts_per_tok
     T = B * S
-    C = _capacity(T, cfg)
+    C = T if dropless else _capacity(T, cfg)
     xt = x.reshape(T, d)
 
     logits = (xt @ p["router"]).astype(jnp.float32)          # [T, E]
@@ -98,8 +108,8 @@ def apply_moe(p: Dict, x: jax.Array, cfg: ModelConfig) -> Tuple[jax.Array, jax.A
     return shard(out, "batch", None, None), aux
 
 
-def _apply_moe_batched(p: Dict, x: jax.Array, cfg: ModelConfig
-                       ) -> Tuple[jax.Array, jax.Array]:
+def _apply_moe_batched(p: Dict, x: jax.Array, cfg: ModelConfig,
+                       dropless: bool = False) -> Tuple[jax.Array, jax.Array]:
     """§Perf variant: batch-row-local dispatch + gather-based combine.
 
     Routing, capacity and combine all keep the leading batch dim, so under a
@@ -111,7 +121,7 @@ def _apply_moe_batched(p: Dict, x: jax.Array, cfg: ModelConfig
     """
     B, S, d = x.shape
     E, K = cfg.num_experts, cfg.num_experts_per_tok
-    C = _capacity(S, cfg)
+    C = S if dropless else _capacity(S, cfg)
     b_idx = jnp.arange(B)[:, None]
 
     logits = (x @ p["router"]).astype(jnp.float32)            # [B, S, E]

@@ -96,7 +96,11 @@ def apply_block(bp: Dict, h: jax.Array, cfg: ModelConfig, mode: str,
             h = h + apply_mlp(lp["mlp"], x, cfg)
         elif "moe" in lp:
             x = apply_norm(lp["ffn_norm"], h, cfg)
-            mo, a = moe.apply_moe(lp["moe"], x, cfg)
+            # inference must be dropless: capacity drops couple a token's
+            # output to the batch and break cross-mode exactness
+            mo, a = moe.apply_moe(lp["moe"], x, cfg,
+                                  dropless=(mode != "train"
+                                            or bool(ctx.get("moe_dropless"))))
             h = h + mo
             aux = aux + a
 

@@ -1,2 +1,3 @@
+from repro.serving.continuous import ContinuousServer, ServingMetrics
 from repro.serving.sampling import mask_padded_vocab, sample
 from repro.serving.server import BatchedServer, Request

@@ -1,0 +1,261 @@
+"""Continuous-batching serving on the stepwise speculative engine.
+
+`BatchedServer` runs one padded batch to completion per call — the single-
+tenant regime of the paper (§9). This module serves sustained multi-user
+traffic instead: a fixed pool of `batch_size` decode slots advances one
+speculation megastep at a time, and whenever a slot's request retires (EOS
+or length), the slot is refilled from the admission queue via a single-slot
+prefill while the other slots keep decoding.
+
+Compile stability is the design constraint: the decode loop replays one
+⟨B, D, W, V⟩ megastep executable (bucket pinned at construction) and one
+B=1 slot-prefill executable (slot index traced), so slot churn never
+triggers a recompile — the megastep cache stays hot for the whole serving
+run. `warmup()` compiles both up front; `metrics.recompiles_after_warmup`
+must stay 0 and is asserted in tests/test_continuous_serving.py.
+
+Idle slots (no request waiting) keep decoding garbage — discarding their
+output is cheaper than breaking the static batch shape. Their cache growth
+is tracked host-side and they are re-parked (dummy 1-token prefill) before
+they could overflow the cache.
+"""
+from __future__ import annotations
+
+import time
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Deque, Dict, List, Optional
+
+import numpy as np
+
+from repro.core.egt import DraftSpec, egt_spec
+from repro.core.engine import DecodeState, SpeculativeEngine
+from repro.serving.server import Request, cut_at_eos, pad_prompt
+
+
+@dataclass
+class ServingMetrics:
+    """Live counters for a continuous serving run."""
+    steps: int = 0
+    iter_times: List[float] = field(default_factory=list)
+    prefill_times: List[float] = field(default_factory=list)  # refills/parks
+    occupancy: List[float] = field(default_factory=list)   # active/B per step
+    accept_lens: List[np.ndarray] = field(default_factory=list)  # active only
+    tokens_out: int = 0          # tokens credited to real requests
+    admissions: int = 0
+    refills: int = 0             # admissions into a previously-used slot
+    parks: int = 0               # idle-slot dummy prefills (overflow guard)
+    completed: int = 0
+    truncated_prompts: int = 0
+    recompiles_after_warmup: int = 0
+    latencies: List[float] = field(default_factory=list)   # submit -> finish
+
+    @property
+    def aal(self) -> float:
+        if not self.accept_lens:
+            return 0.0
+        flat = np.concatenate([a.reshape(-1) for a in self.accept_lens])
+        return float(flat.mean()) if flat.size else 0.0
+
+    @property
+    def total_time(self) -> float:
+        # decode megasteps AND slot prefills: throughput/TPOT must charge
+        # the refill overhead, or continuous wins by metric definition
+        return float(sum(self.iter_times) + sum(self.prefill_times))
+
+    def summary(self) -> Dict[str, float]:
+        lat = np.asarray(self.latencies) if self.latencies else np.zeros(1)
+        return {
+            "steps": self.steps,
+            "completed": self.completed,
+            "tokens": self.tokens_out,
+            "time_s": self.total_time,
+            "throughput_tok_s": self.tokens_out / max(self.total_time, 1e-9),
+            "tpot_ms": 1e3 * self.total_time / max(self.tokens_out, 1),
+            "aal": self.aal,
+            "occupancy": float(np.mean(self.occupancy)) if self.occupancy else 0.0,
+            "admissions": self.admissions,
+            "refills": self.refills,
+            "parks": self.parks,
+            "truncated_prompts": self.truncated_prompts,
+            "recompiles_after_warmup": self.recompiles_after_warmup,
+            "latency_p50_s": float(np.percentile(lat, 50)),
+            "latency_p95_s": float(np.percentile(lat, 95)),
+        }
+
+
+class ContinuousServer:
+    """Slot scheduler over the engine's stepwise API.
+
+    The bucket ⟨spec, verify_v⟩ is pinned so every decode step replays the
+    same executable (dynamic per-step bucket selection would trade compile
+    stability for scheduling freedom; the serving regime picks stability).
+    """
+
+    def __init__(self, engine: SpeculativeEngine, batch_size: int,
+                 prompt_pad: int, eos_id: Optional[int] = None,
+                 spec: Optional[DraftSpec] = None,
+                 verify_v: Optional[int] = None):
+        self.engine = engine
+        self.batch_size = batch_size
+        self.prompt_pad = prompt_pad
+        self.eos_id = eos_id
+        self.spec = spec if spec is not None else egt_spec(4, 2)
+        self.verify_v = verify_v or self.spec.num_nodes
+        self.queue: Deque[Request] = deque()
+        self.done: Dict[int, Request] = {}
+        self.metrics = ServingMetrics()
+
+        self.state: DecodeState = engine.init_decode_state(batch_size)
+        self.slots: List[Optional[Request]] = [None] * batch_size
+        self._buffers: List[List[int]] = [[] for _ in range(batch_size)]
+        self._budget = np.zeros(batch_size, np.int64)   # max tokens this slot
+        self._used = [False] * batch_size               # slot ever held a req
+        # host-side mirror of each slot's committed cache length: prompt at
+        # admission, +accept_len per step (exact — no device sync needed)
+        self._slot_len = np.zeros(batch_size, np.int64)
+        self._headroom = self.spec.depth + 2  # max cache growth per step
+        self._compile_base: Optional[int] = None
+        self._just_finished: List[Request] = []
+
+    # ---------------------------------------------------------- lifecycle --
+    def submit(self, req: Request):
+        req.t_submit = req.t_submit or time.perf_counter()
+        self.queue.append(req)
+
+    def warmup(self):
+        """Compile the three steady-state executables (slot prefill, slot
+        reset, pinned megastep) on dummy traffic, then snapshot the compile
+        counter: any later compile counts as a recompile-after-warmup."""
+        dummy = np.zeros(self.prompt_pad, np.int32)
+        self.state = self.engine.prefill_into_slot(self.state, 0, dummy, 1)
+        for i in range(self.batch_size):
+            self._park(i)
+        self.state, res = self.engine.decode_step(self.state, spec=self.spec,
+                                                  verify_v=self.verify_v)
+        self._slot_len += res.accept_len
+        self._compile_base = self.engine._compile_count
+
+    def _park(self, slot: int):
+        """Empty an idle slot (length 0, stale entries invisible); it keeps
+        decoding garbage, which is cheaper than breaking the batch shape."""
+        t0 = time.perf_counter()
+        self.state = self.engine.reset_state_slot(self.state, slot)
+        self.metrics.prefill_times.append(time.perf_counter() - t0)
+        self._slot_len[slot] = 0
+        self.slots[slot] = None
+
+    # ---------------------------------------------------------- admission --
+    def _admit(self) -> List[int]:
+        """Fill idle slots from the queue; park idle slots about to overflow.
+        Returns the slot indices admitted this call."""
+        L = self.engine.cfg.max_target_len
+        newly = []
+        for i in range(self.batch_size):
+            if self.slots[i] is not None:
+                continue
+            if self.queue:
+                req = self.queue.popleft()
+                toks, plen = pad_prompt(req, self.prompt_pad)
+                if req.truncated:
+                    self.metrics.truncated_prompts += 1
+                req.t_start = time.perf_counter()  # before engine work, like
+                t0 = req.t_start                   # BatchedServer.step
+                self.state = self.engine.prefill_into_slot(
+                    self.state, i, toks, plen)
+                self.metrics.prefill_times.append(time.perf_counter() - t0)
+                self._slot_len[i] = plen
+                # cap generation so commits can never run past the cache
+                self._budget[i] = min(req.max_new, L - plen - self._headroom)
+                self.slots[i] = req
+                self._buffers[i] = []
+                self.metrics.admissions += 1
+                if self._used[i]:
+                    self.metrics.refills += 1
+                self._used[i] = True
+                newly.append(i)
+            elif self._slot_len[i] > L - 2 * self._headroom:
+                self._park(i)  # idle slot drifting toward the cache cap
+                self.metrics.parks += 1
+        if newly:
+            # one host sync: each admitted slot's first token is its root
+            roots = np.asarray(self.state.root)
+            for i in newly:
+                self._credit(i, np.asarray([roots[i]], np.int64))
+        return newly
+
+    # --------------------------------------------------------- token flow --
+    def _credit(self, slot: int, tokens: np.ndarray):
+        """Append emitted tokens to the slot's request, honouring EOS and the
+        length budget; retire the request when either trips."""
+        req = self.slots[slot]
+        if req is None:
+            return
+        buf = self._buffers[slot]
+        take = tokens
+        finished = False
+        room = int(self._budget[slot]) - len(buf)
+        if len(take) >= room:
+            take, finished = take[:room], True
+        take, hit_eos = cut_at_eos(take, self.eos_id)
+        finished = finished or hit_eos
+        if len(take):
+            buf.extend(int(t) for t in take)
+            self.metrics.tokens_out += len(take)
+            if req.stream is not None:
+                req.stream(req.uid, np.asarray(take, np.int64))
+        if finished:
+            self._retire(slot)
+
+    def _retire(self, slot: int):
+        req = self.slots[slot]
+        req.result = np.asarray(self._buffers[slot], np.int64)
+        req.t_finish = time.perf_counter()
+        req.stats = {"tokens": len(req.result),
+                     "latency_s": req.t_finish - req.t_submit,
+                     "queue_s": req.t_start - req.t_submit,
+                     "prompt_truncated": req.truncated,
+                     "length_capped": self._budget[slot] < req.max_new}
+        self.done[req.uid] = req
+        self._just_finished.append(req)
+        self.slots[slot] = None  # slot refills at the next _admit
+        self.metrics.completed += 1
+        self.metrics.latencies.append(req.stats["latency_s"])
+
+    # --------------------------------------------------------------- step --
+    def step(self) -> List[Request]:
+        """Admit waiting requests into free slots, run ONE megastep over the
+        whole pool, distribute the emitted tokens, retire finished requests.
+        Returns the requests completed during this step."""
+        self._just_finished = []
+        self._admit()
+        if not any(r is not None for r in self.slots):
+            return self._just_finished
+        self.state, res = self.engine.decode_step(
+            self.state, spec=self.spec, verify_v=self.verify_v)
+        self._slot_len += res.accept_len
+        self.metrics.steps += 1
+        self.metrics.iter_times.append(res.iter_time)
+        active = [i for i, r in enumerate(self.slots) if r is not None]
+        self.metrics.occupancy.append(len(active) / self.batch_size)
+        if active:
+            self.metrics.accept_lens.append(res.accept_len[active])
+        for i in active:
+            toks = res.tokens[i]
+            self._credit(i, toks[toks >= 0])
+        if self._compile_base is not None:
+            self.metrics.recompiles_after_warmup = (
+                self.engine._compile_count - self._compile_base)
+        return self._just_finished
+
+    def run(self, max_steps: Optional[int] = None) -> Dict[int, Request]:
+        """Serve until the queue drains and every slot retires."""
+        if self._compile_base is None:
+            self.warmup()
+        steps = 0
+        while self.queue or any(r is not None for r in self.slots):
+            self.step()
+            steps += 1
+            if max_steps is not None and steps >= max_steps:
+                break
+        return self.done

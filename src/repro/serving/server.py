@@ -8,7 +8,7 @@ from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from typing import Callable, Dict, List, Optional
 
 import jax.numpy as jnp
 import numpy as np
@@ -23,6 +23,32 @@ class Request:
     max_new: int = 32
     result: Optional[np.ndarray] = None
     stats: Dict = field(default_factory=dict)
+    stream: Optional[Callable[[int, np.ndarray], None]] = None
+    # stream(uid, tokens) is called with each emitted chunk (continuous mode)
+    truncated: bool = False     # prompt exceeded prompt_pad and was cut
+    t_submit: float = 0.0
+    t_start: float = 0.0        # first prefill (admission to a slot / batch)
+    t_finish: float = 0.0
+
+
+def pad_prompt(req: Request, prompt_pad: int):
+    """Right-pad a request's prompt to `prompt_pad`; truncation is recorded
+    on the request, never silent. Returns (tokens [prompt_pad], length)."""
+    if len(req.prompt) > prompt_pad:
+        req.truncated = True
+    p = np.asarray(req.prompt[: prompt_pad], np.int32)
+    toks = np.zeros(prompt_pad, np.int32)
+    toks[: len(p)] = p
+    return toks, len(p)
+
+
+def cut_at_eos(tokens: np.ndarray, eos_id: Optional[int]):
+    """Cut `tokens` after the first EOS. Returns (tokens, hit_eos)."""
+    if eos_id is not None:
+        stop = np.nonzero(tokens == eos_id)[0]
+        if len(stop):
+            return tokens[: stop[0] + 1], True
+    return tokens, False
 
 
 class BatchedServer:
@@ -36,16 +62,17 @@ class BatchedServer:
         self.done: Dict[int, Request] = {}
 
     def submit(self, req: Request):
+        req.t_submit = req.t_submit or time.perf_counter()
         self.queue.append(req)
 
     def _make_batch(self, reqs: List[Request]):
+        if not reqs:
+            raise ValueError("_make_batch needs at least one request")
         B = self.batch_size
         toks = np.zeros((B, self.prompt_pad), np.int32)
         lens = np.zeros((B,), np.int32)
         for i, r in enumerate(reqs):
-            p = r.prompt[: self.prompt_pad]
-            toks[i, : len(p)] = p
-            lens[i] = len(p)
+            toks[i], lens[i] = pad_prompt(r, self.prompt_pad)
         for i in range(len(reqs), B):  # pad slots replay request 0
             toks[i] = toks[0]
             lens[i] = lens[0]
@@ -59,16 +86,16 @@ class BatchedServer:
         toks, lens = self._make_batch(reqs)
         max_new = max(r.max_new for r in reqs)
         t0 = time.perf_counter()
+        for r in reqs:
+            r.t_start = t0
         seq, stats = self.engine.generate(toks, lens, max_new)
         dt = time.perf_counter() - t0
         for i, r in enumerate(reqs):
-            out = seq[i][seq[i] >= 0][: r.max_new]
-            if self.eos_id is not None:
-                stop = np.nonzero(out == self.eos_id)[0]
-                if len(stop):
-                    out = out[: stop[0] + 1]
+            out, _ = cut_at_eos(seq[i][seq[i] >= 0][: r.max_new], self.eos_id)
             r.result = out
-            r.stats = {**stats.summary(), "batch_time_s": dt}
+            r.t_finish = time.perf_counter()
+            r.stats = {**stats.summary(), "batch_time_s": dt,
+                       "prompt_truncated": r.truncated}
             self.done[r.uid] = r
         return reqs
 

@@ -27,6 +27,7 @@ CACHE_DIR = os.environ.get("REPRO_CACHE", "/root/repo/.cache")
 
 @dataclass
 class TestbedSpec:
+    __test__ = False  # not a pytest class despite the name
     vocab: int = 64
     seq_len: int = 128
     concentration: float = 0.03
@@ -46,6 +47,7 @@ class TestbedSpec:
 
 @dataclass
 class Testbed:
+    __test__ = False  # not a pytest class despite the name
     spec: TestbedSpec
     verifier: Model
     v_params: dict

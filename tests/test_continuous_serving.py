@@ -1,0 +1,206 @@
+"""Continuous-batching serving: slot-refill correctness, equivalence with
+run-to-completion batching at temperature 0, and the compile-stability
+contract (zero new engine compiles after warmup across slot churn)."""
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig
+from repro.core.buckets import buckets_for_depths
+from repro.core.egt import egt_spec
+from repro.core.engine import EngineConfig, SpeculativeEngine
+from repro.models import cache as cache_lib
+from repro.serving.continuous import ContinuousServer
+from repro.serving.server import BatchedServer, Request
+from repro.serving.testbed import Testbed, TestbedSpec, build_testbed
+
+SPEC, VERIFY_V = egt_spec(3, 2), 5
+
+
+@pytest.fixture(scope="module")
+def tb() -> Testbed:
+    return build_testbed(TestbedSpec(train_steps=160))
+
+
+def _engine(tb, **cfg_kw) -> SpeculativeEngine:
+    # one depth-3 bucket == (SPEC, VERIFY_V), so BatchedServer's dynamic
+    # selection and the pinned continuous server share one megastep
+    return SpeculativeEngine(tb.drafter, tb.d_params, tb.verifier,
+                             tb.v_params,
+                             buckets=buckets_for_depths((3,), width=2,
+                                                        verify_frac=0.75),
+                             depth_options=(3,),
+                             config=EngineConfig(**cfg_kw))
+
+
+def _requests(tb, n, seed=0, eos_free=True):
+    rng = np.random.default_rng(seed)
+    out = []
+    for uid in range(n):
+        plen = int(rng.integers(6, 14))
+        prompt = rng.integers(1, tb.spec.vocab, size=plen).astype(np.int32)
+        out.append(Request(uid=uid, prompt=prompt,
+                           max_new=int(rng.integers(8, 18))))
+    return out
+
+
+# ------------------------------------------------------- the main contract --
+def test_continuous_matches_batched_with_zero_recompiles(tb):
+    """>= 3x batch_size concurrent requests, mid-flight slot refill, outputs
+    identical to BatchedServer at temperature 0, zero compiles after warmup."""
+    B, n = 2, 6  # 3x batch_size
+    eng = _engine(tb)
+
+    batched = BatchedServer(eng, batch_size=B, prompt_pad=16)
+    for r in _requests(tb, n):
+        batched.submit(r)
+    ref = batched.run()
+
+    streamed = {}
+
+    def on_tokens(uid, toks):
+        streamed.setdefault(uid, []).extend(int(t) for t in toks)
+
+    cont = ContinuousServer(eng, batch_size=B, prompt_pad=16,
+                            spec=SPEC, verify_v=VERIFY_V)
+    cont.warmup()
+    for r in _requests(tb, n):
+        r.stream = on_tokens
+        cont.submit(r)
+    done = cont.run()
+
+    assert sorted(done) == sorted(ref)
+    for uid in ref:
+        np.testing.assert_array_equal(
+            done[uid].result, ref[uid].result,
+            err_msg=f"continuous output diverged from batched for uid {uid}")
+        np.testing.assert_array_equal(streamed[uid], done[uid].result)
+
+    m = cont.metrics.summary()
+    # the static-shape contract: slot churn never compiles a new executable
+    assert m["recompiles_after_warmup"] == 0, m
+    assert m["completed"] == n
+    assert m["refills"] >= n - B     # every slot was refilled mid-flight
+    assert m["aal"] >= 1.0
+    assert 0 < m["occupancy"] <= 1.0
+
+
+def test_slot_lengths_and_long_run_parking(tb):
+    """Queue far more work than the pool and let it drain: slot bookkeeping
+    must track the device caches exactly and never overflow the cache."""
+    B = 2
+    eng = _engine(tb)
+    cont = ContinuousServer(eng, batch_size=B, prompt_pad=16,
+                            spec=SPEC, verify_v=VERIFY_V)
+    cont.warmup()
+    for r in _requests(tb, 8, seed=3):
+        cont.submit(r)
+    done = cont.run()
+    assert len(done) == 8
+    np.testing.assert_array_equal(cont._slot_len,
+                                  eng.slot_lengths(cont.state))
+    L = eng.cfg.max_target_len
+    assert (cont._slot_len <= L).all()
+    assert cont.metrics.summary()["recompiles_after_warmup"] == 0
+
+
+# ------------------------------------------------ scheduler logic (no jit) --
+class _FakeStepEngine:
+    """Just enough engine for ContinuousServer's host-side bookkeeping."""
+
+    class cfg:
+        max_target_len = 64
+
+    _compile_count = 0
+
+    def init_decode_state(self, batch_size):
+        return None
+
+
+def _server(**kw):
+    return ContinuousServer(_FakeStepEngine(), batch_size=2, prompt_pad=8,
+                            spec=egt_spec(2, 2), **kw)
+
+
+def _occupy(srv, slot, max_new=10):
+    req = Request(uid=0, prompt=np.array([1, 2]), max_new=max_new)
+    req.t_submit = req.t_start = 1.0
+    srv.slots[slot] = req
+    srv._buffers[slot] = []
+    srv._budget[slot] = max_new
+    return req
+
+
+def test_credit_retires_on_eos():
+    srv = _server(eos_id=7)
+    _occupy(srv, 0)
+    srv._credit(0, np.array([1, 2, 7, 9]))
+    assert srv.slots[0] is None                      # retired, slot freed
+    np.testing.assert_array_equal(srv.done[0].result, [1, 2, 7])
+    assert srv.metrics.completed == 1
+    assert srv.metrics.tokens_out == 3               # post-EOS token dropped
+
+
+def test_credit_retires_on_budget():
+    srv = _server()
+    _occupy(srv, 0, max_new=4)
+    srv._credit(0, np.array([5, 6, 8]))
+    assert srv.slots[0] is not None                  # 3/4 — still running
+    srv._credit(0, np.array([5, 6, 8]))              # would exceed: clamp
+    np.testing.assert_array_equal(srv.done[0].result, [5, 6, 8, 5])
+    assert srv.done[0].stats["tokens"] == 4
+
+
+def test_credit_ignores_idle_slot():
+    srv = _server()
+    srv._credit(0, np.array([5, 6]))
+    assert srv.metrics.tokens_out == 0 and not srv.done
+
+
+# --------------------------------------------------- per-slot cache ops ----
+def _hybrid_cfg():
+    # layer 0 attention + layer 1 SSM: exercises k/v/pos, state/conv and
+    # length leaves of the slot ops in one cache
+    return ModelConfig(name="slot-test", num_layers=2, d_model=32,
+                       num_heads=2, num_kv_heads=2, head_dim=16, d_ff=64,
+                       vocab_size=17, attn_layer_period=2,
+                       ssm_state_size=8, ssm_head_dim=16)
+
+
+def _filled_cache(cfg, batch, fill):
+    import jax.numpy as jnp
+    cache = cache_lib.init_cache(cfg, batch, 32)
+    return __import__("jax").tree.map(
+        lambda a: jnp.full(a.shape, fill, a.dtype), cache)
+
+
+def _assert_tree_equal(a, b, msg=""):
+    import jax
+    for la, lb in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb), msg)
+
+
+def test_slot_update_touches_only_the_slot():
+    cfg = _hybrid_cfg()
+    big = _filled_cache(cfg, 3, 3)
+    small = _filled_cache(cfg, 1, 5)
+    upd = cache_lib.slot_update(big, 1, small)
+    _assert_tree_equal(cache_lib.slot_slice(upd, 1), small, "slot not written")
+    for other in (0, 2):
+        _assert_tree_equal(cache_lib.slot_slice(upd, other),
+                           cache_lib.slot_slice(big, other),
+                           f"slot {other} disturbed")
+
+
+def test_reset_slot_clears_positions_and_state():
+    cfg = _hybrid_cfg()
+    big = _filled_cache(cfg, 3, 3)
+    rst = cache_lib.reset_slot(big, 1)
+    s1 = cache_lib.slot_slice(rst, 1)
+    assert int(np.asarray(s1["length"])[0]) == 0
+    blk = s1["blocks"]["layer0"]
+    assert (np.asarray(blk["pos"]) == -1).all()      # stale slots invisible
+    ssm = s1["blocks"]["layer1"]
+    assert (np.asarray(ssm["state"]) == 0).all()
+    assert (np.asarray(ssm["conv"]) == 0).all()
+    _assert_tree_equal(cache_lib.slot_slice(rst, 0),
+                       cache_lib.slot_slice(big, 0), "slot 0 disturbed")

@@ -34,9 +34,11 @@ def test_modes_consistent(arch):
             jax.random.PRNGKey(2), (B, cfg.encoder_seq_len, cfg.d_model)) * 0.02
 
     def ref_logits_for(toks, lens):
+        # moe_dropless: the reference must route every token exactly, like
+        # the inference paths do — capacity drops are a train-only concession
         h, _ = m.hidden_train(
             params, toks, seq_valid=jnp.arange(Sbuf)[None] < lens[:, None],
-            enc_feats=enc)
+            enc_feats=enc, moe_dropless=True)
         return m.logits(params, h)
 
     ref = ref_logits_for(tokens, lengths)

@@ -1,0 +1,88 @@
+"""BatchedServer behaviour: EOS truncation, pad-slot replication, prompt
+truncation recording and empty-queue guards — engine stubbed out so these
+run without a testbed."""
+import numpy as np
+import pytest
+
+from repro.core.engine import GenStats
+from repro.serving.server import BatchedServer, Request
+
+
+class FakeEngine:
+    """Echoes a fixed per-row sequence; records what it was asked to run."""
+
+    def __init__(self, seq_fn):
+        self.seq_fn = seq_fn
+        self.calls = []
+
+    def generate(self, toks, lens, max_new):
+        toks, lens = np.asarray(toks), np.asarray(lens)
+        self.calls.append((toks.copy(), lens.copy(), max_new))
+        seq = self.seq_fn(toks, lens, max_new)
+        stats = GenStats()
+        stats.accept_lens.append(np.ones(toks.shape[0], np.int64))
+        stats.iter_times.append(1e-4)
+        return seq, stats
+
+
+def arange_rows(toks, lens, max_new):
+    B = toks.shape[0]
+    return np.arange(1, max_new + 1)[None].repeat(B, 0) + 100 * np.arange(B)[:, None]
+
+
+def test_eos_truncation():
+    def with_eos(toks, lens, max_new):
+        seq = arange_rows(toks, lens, max_new)
+        seq[0, 3] = 7  # EOS mid-sequence for request 0
+        return seq
+
+    srv = BatchedServer(FakeEngine(with_eos), batch_size=2, prompt_pad=4,
+                        eos_id=7)
+    srv.submit(Request(uid=0, prompt=np.array([1, 2]), max_new=8))
+    srv.submit(Request(uid=1, prompt=np.array([3]), max_new=8))
+    done = srv.run()
+    np.testing.assert_array_equal(done[0].result, [1, 2, 3, 7])  # cut AT eos
+    assert len(done[1].result) == 8                              # no eos: full
+
+def test_pad_slots_replicate_request0_and_are_dropped():
+    eng = FakeEngine(arange_rows)
+    srv = BatchedServer(eng, batch_size=3, prompt_pad=4)
+    srv.submit(Request(uid=5, prompt=np.array([9, 8, 7]), max_new=4))
+    done = srv.run()
+    toks, lens, _ = eng.calls[0]
+    assert toks.shape == (3, 4)
+    np.testing.assert_array_equal(toks[1], toks[0])  # pad slots replay row 0
+    np.testing.assert_array_equal(toks[2], toks[0])
+    np.testing.assert_array_equal(lens, [3, 3, 3])
+    assert list(done) == [5]                         # pad rows never surface
+
+
+def test_prompt_truncation_recorded():
+    eng = FakeEngine(arange_rows)
+    srv = BatchedServer(eng, batch_size=1, prompt_pad=4)
+    req = Request(uid=0, prompt=np.arange(10) + 1, max_new=4)
+    srv.submit(req)
+    done = srv.run()
+    toks, lens, _ = eng.calls[0]
+    np.testing.assert_array_equal(toks[0], [1, 2, 3, 4])  # truncated, not 0-padded
+    assert lens[0] == 4
+    assert req.truncated                              # recorded, not silent
+    assert done[0].stats["prompt_truncated"] is True
+
+
+def test_empty_queue_guards():
+    srv = BatchedServer(FakeEngine(arange_rows), batch_size=2, prompt_pad=4)
+    assert srv.step() == []                 # all-empty queue is a no-op
+    with pytest.raises(ValueError):
+        srv._make_batch([])                 # defensive: never build 0-request batches
+
+
+def test_run_drains_multiple_batches():
+    eng = FakeEngine(arange_rows)
+    srv = BatchedServer(eng, batch_size=2, prompt_pad=4)
+    for uid in range(5):
+        srv.submit(Request(uid=uid, prompt=np.array([1 + uid]), max_new=3))
+    done = srv.run()
+    assert sorted(done) == [0, 1, 2, 3, 4]
+    assert len(eng.calls) == 3              # 2 + 2 + 1
+    assert all(r.t_finish >= r.t_submit > 0 for r in done.values())
