@@ -12,7 +12,6 @@ Systems (each = tree algorithm × runtime treatment, per Table 1):
 """
 from __future__ import annotations
 
-import numpy as np
 
 from benchmarks import common
 from repro.core import static_trees

@@ -2,7 +2,6 @@
 budget; (b) theoretical speedup (Eq. 3 with the measured latency profile)."""
 from __future__ import annotations
 
-import numpy as np
 
 from benchmarks import common
 from repro.core import static_trees

@@ -11,7 +11,6 @@ from __future__ import annotations
 
 import time
 
-import numpy as np
 
 from benchmarks import common
 from repro.core.egt import egt_spec

@@ -14,12 +14,21 @@ p50/p95 request latency (arrival -> completion). The continuous row also
 reports slot occupancy, AAL and recompiles-after-warmup (must be 0 — the
 whole point of the static-shape megastep is surviving slot churn without
 recompiling). Results land in benchmarks/results/fig_serving.json.
+
+When more than one device is visible (real chips, or CPU devices emulated
+with ``XLA_FLAGS=--xla_force_host_platform_device_count=N``), the run also
+sweeps data×model mesh shapes over the continuous server and records
+per-shape throughput/latency under ``mesh_sweep`` — the per-PR record of
+how sharding the speculative megastep behaves as the mesh changes. Every
+sharded run must still report zero recompiles after warmup.
 """
 from __future__ import annotations
 
+import argparse
 import time
-from typing import Dict, List
+from typing import Dict, List, Optional, Tuple
 
+import jax
 import numpy as np
 
 from benchmarks import common
@@ -50,11 +59,23 @@ def make_trace(tb, n: int, rate_hz: float, max_new: int, seed: int = 0):
     return out
 
 
-def _engine(tb) -> SpeculativeEngine:
+def _engine(tb, mesh=None) -> SpeculativeEngine:
     return SpeculativeEngine(
         tb.drafter, tb.d_params, tb.verifier, tb.v_params,
         buckets=buckets_for_depths((4,), width=2, verify_frac=0.75),
-        depth_options=(4,), config=EngineConfig())
+        depth_options=(4,), config=EngineConfig(), mesh=mesh)
+
+
+def feasible_mesh_shapes() -> List[Tuple[int, int]]:
+    """data×model shapes the visible devices support: full data-parallel,
+    full model-parallel, and the balanced split when it exists."""
+    n = len(jax.devices())
+    if n < 2:
+        return []
+    shapes = [(n, 1), (1, n)]
+    if n % 2 == 0 and n > 2:
+        shapes.append((n // 2, 2))
+    return shapes
 
 
 def _request_stats(done: Dict[int, Request], t0: float) -> Dict:
@@ -69,8 +90,9 @@ def _request_stats(done: Dict[int, Request], t0: float) -> Dict:
             "latency_mean_s": float(lat.mean())}
 
 
-def drive_continuous(tb, trace, batch: int, prompt_pad: int) -> Dict:
-    eng = _engine(tb)
+def drive_continuous(tb, trace, batch: int, prompt_pad: int,
+                     mesh=None) -> Dict:
+    eng = _engine(tb, mesh=mesh)
     server = ContinuousServer(eng, batch_size=batch, prompt_pad=prompt_pad,
                               spec=SPEC, verify_v=VERIFY_V)
     server.warmup()
@@ -90,6 +112,7 @@ def drive_continuous(tb, trace, batch: int, prompt_pad: int) -> Dict:
     return {**_request_stats(server.done, t0),
             "occupancy": m["occupancy"], "aal": m["aal"],
             "refills": m["refills"],
+            "mesh_devices": m["mesh_devices"],
             "recompiles_after_warmup": m["recompiles_after_warmup"]}
 
 
@@ -117,13 +140,33 @@ def drive_batched(tb, trace, batch: int, prompt_pad: int) -> Dict:
     return _request_stats(server.done, t0)
 
 
-def run(quick: bool = True):
+def sweep_meshes(tb, n: int, rate_hz: float, max_new: int, batch: int,
+                 prompt_pad: int,
+                 shapes: Optional[List[Tuple[int, int]]] = None,
+                 baseline: Optional[Dict] = None) -> Dict:
+    """Continuous serving across data×model mesh shapes (same trace per
+    shape), keyed "DxM"; "unsharded" is the single-device baseline row
+    (pass ``baseline`` to reuse an already-measured run of the same
+    trace/rate instead of re-driving it)."""
+    out: Dict[str, Dict] = {
+        "unsharded": baseline if baseline is not None else drive_continuous(
+            tb, make_trace(tb, n, rate_hz, max_new), batch, prompt_pad)}
+    for d, m in (feasible_mesh_shapes() if shapes is None else shapes):
+        mesh = jax.make_mesh((d, m), ("data", "model"))
+        out[f"{d}x{m}"] = drive_continuous(
+            tb, make_trace(tb, n, rate_hz, max_new), batch, prompt_pad,
+            mesh=mesh)
+    return out
+
+
+def run(quick: bool = True, mesh_sweep: bool = True):
     n = 12 if quick else 48
     max_new = 24 if quick else 64
     batch, prompt_pad = 4, 24
     tb = common.testbed()
 
     out = {"config": {"n_requests": n, "max_new": max_new, "batch": batch,
+                      "devices": len(jax.devices()),
                       "spec": {"depth": SPEC.depth, "width": SPEC.width,
                                "verify_v": VERIFY_V}},
            "servers": {}}
@@ -136,12 +179,25 @@ def run(quick: bool = True):
         res["latency_p50_speedup"] = (res["batched"]["latency_p50_s"]
                                       / max(res["continuous"]["latency_p50_s"], 1e-9))
         out["servers"][f"rate_{rate_hz:g}hz"] = res
+    shapes = feasible_mesh_shapes()
+    if mesh_sweep and shapes:   # single-device hosts have nothing to sweep
+        # quick mode already measured the identical unsharded 4 Hz run above
+        base = out["servers"].get("rate_4hz", {}).get("continuous")
+        out["mesh_sweep"] = sweep_meshes(tb, n, 4.0, max_new, batch,
+                                         prompt_pad, shapes=shapes,
+                                         baseline=base)
     common.save("fig_serving", out)
     return out
 
 
 if __name__ == "__main__":
-    res = run()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="bigger trace (48 requests, 2 arrival rates)")
+    ap.add_argument("--no-mesh-sweep", action="store_true",
+                    help="skip the data×model mesh-shape sweep")
+    cli = ap.parse_args()
+    res = run(quick=not cli.full, mesh_sweep=not cli.no_mesh_sweep)
     for rate, r in res["servers"].items():
         c, b = r["continuous"], r["batched"]
         print(f"{rate}: continuous {c['throughput_tok_s']:.0f} tok/s "
@@ -149,3 +205,9 @@ if __name__ == "__main__":
               f"occ={c['occupancy']:.2f} recompiles={c['recompiles_after_warmup']} | "
               f"batched {b['throughput_tok_s']:.0f} tok/s "
               f"p50={b['latency_p50_s'] * 1e3:.0f}ms p95={b['latency_p95_s'] * 1e3:.0f}ms")
+    for shape, c in res.get("mesh_sweep", {}).items():
+        print(f"mesh {shape}: {c['throughput_tok_s']:.0f} tok/s "
+              f"p50={c['latency_p50_s'] * 1e3:.0f}ms "
+              f"p95={c['latency_p95_s'] * 1e3:.0f}ms "
+              f"devices={c['mesh_devices']} "
+              f"recompiles={c['recompiles_after_warmup']}")

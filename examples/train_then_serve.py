@@ -18,11 +18,9 @@ from repro.core.buckets import buckets_for_depths
 from repro.core.depth_predictor import train_predictor
 from repro.core.egt import egt_spec
 from repro.core.engine import EngineConfig, SpeculativeEngine
-from repro.data.pipeline import DataConfig, MarkovSource, batches
-from repro.models import Model
+from repro.data.pipeline import MarkovSource
 from repro.serving.server import BatchedServer, Request
 from repro.serving.testbed import TestbedSpec, build_testbed
-from repro.training import OptConfig, init_opt_state, make_train_step
 
 
 def main():

@@ -5,7 +5,6 @@ Also renders a small EGT as ASCII to show the context-adaptive shape.
 
   PYTHONPATH=src python examples/tree_structures.py
 """
-import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -13,7 +12,6 @@ from repro.core import static_trees
 from repro.core.egt import draft_tree, egt_spec, template_spec
 from repro.core.engine import EngineConfig, SpeculativeEngine
 from repro.data.pipeline import MarkovSource
-from repro.models.cache import init_cache
 from repro.serving.testbed import TestbedSpec, build_testbed
 
 

@@ -8,8 +8,8 @@ inside a bucket, so there are no recompiles on the decode path.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Dict, List, Sequence, Tuple
+from dataclasses import dataclass
+from typing import Dict, Sequence, Tuple
 
 from repro.core.objective import LatencyProfile, speedup_objective
 

@@ -13,6 +13,17 @@ Execution plans (paper §5):
 Each ⟨D, W, V⟩ bucket compiles exactly once (static shapes via EGT); the
 runtime replays executables — the JAX analogue of CUDA-graph replay.
 
+Mesh execution (sharded serving):
+  Pass ``mesh=`` (a ``jax.sharding.Mesh`` with ``data``/``model`` axes) and
+  the engine becomes mesh-native: drafter/verifier params are placed via the
+  logical-axis rules (tensor-parallel on ``model``), both KV caches live
+  sharded (slots over ``data``, cache sequence over ``model``), and every
+  jitted executable — megastep, staged parts, slot prefill/reset — pins its
+  output shardings with explicit constraints so the state that cycles
+  through ``decode_step`` keeps one canonical placement. That is what
+  preserves the zero-recompile guarantee under slot churn: a drifting
+  output sharding would silently retrace the megastep on the next call.
+
 Stepwise API (continuous batching):
   The engine also exposes the decode loop one iteration at a time on an
   explicit ``DecodeState`` (both caches + per-slot roots/progress):
@@ -38,15 +49,16 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import egt, pruning, verify
+from repro.core import pruning, verify
 from repro.core.buckets import Bucket, select_bucket
 from repro.core.depth_predictor import predict_depth
-from repro.core.egt import DraftSpec, draft_tree, egt_spec, template_spec
+from repro.core.egt import DraftSpec, draft_tree, egt_spec
 from repro.core.objective import LatencyProfile
 from repro.core.tree import ancestor_paths
 from repro.models import cache as cache_lib
-from repro.models.cache import init_cache
+from repro.models.cache import init_cache, place_cache
 from repro.models.model import Model
+from repro.sharding import specs as sharding
 
 
 @dataclass
@@ -135,7 +147,8 @@ class SpeculativeEngine:
                  buckets: Optional[Tuple[Bucket, ...]] = None,
                  predictor_params: Optional[Dict] = None,
                  depth_options: Tuple[int, ...] = (2, 4, 8),
-                 config: Optional[EngineConfig] = None):
+                 config: Optional[EngineConfig] = None,
+                 mesh: Optional[jax.sharding.Mesh] = None):
         self.drafter, self.d_params = drafter, d_params
         self.verifier, self.v_params = verifier, v_params
         self.profile = profile or LatencyProfile.synthetic()
@@ -143,20 +156,78 @@ class SpeculativeEngine:
         self.predictor_params = predictor_params
         self.depth_options = depth_options
         self.cfg = config or EngineConfig()
+        self.mesh = mesh
+        if mesh is not None:
+            # tensor-parallel placement via the logical-axis rules; GQA archs
+            # whose kv_heads don't divide the model axis fall back to
+            # head-dim sharding (see sharding/specs.py)
+            self.d_params = jax.device_put(
+                d_params, sharding.param_shardings(drafter.param_defs(), mesh))
+            self.v_params = jax.device_put(
+                v_params, sharding.param_shardings(verifier.param_defs(), mesh))
         self._step_cache: Dict[Any, Any] = {}
         self._compile_count = 0
+
+    # ---------------------------------------------------------------- mesh --
+    def _ctx(self):
+        """Mesh context every trace/dispatch runs under (no-op unsharded)."""
+        return sharding.activate(self.mesh)
+
+    def _put(self, x: jax.Array, *axes: Optional[str]) -> jax.Array:
+        """Place an eagerly-built array onto its logical-axis sharding."""
+        s = sharding.sharding_for(axes, x.shape, self.mesh)
+        return x if s is None else jax.device_put(x, s)
+
+    def _constrain_state(self, dcache, vcache, root, h_last):
+        """In-graph sharding pins for everything that cycles through the
+        decode loop; keeps executables' output placements canonical so
+        repeated calls never retrace. No-op without a mesh."""
+        if self.mesh is None:
+            return dcache, vcache, root, h_last
+        return (cache_lib.shard_cache(dcache), cache_lib.shard_cache(vcache),
+                sharding.shard(root, "batch"),
+                sharding.shard(h_last, "batch", None))
+
+    def mesh_info(self) -> Dict[str, Any]:
+        """Mesh placement summary for logs/benchmark artifacts."""
+        if self.mesh is None:
+            return {"devices": 1, "shape": None}
+        return {"devices": int(self.mesh.devices.size),
+                "shape": {k: int(v) for k, v in self.mesh.shape.items()}}
+
+    def executable_count(self) -> int:
+        """Total traced executables across the step cache — unlike
+        ``_compile_count`` this also sees silent jit retraces (e.g. an input
+        sharding drifting under a mesh), so the serving layer can assert the
+        zero-recompile contract honestly."""
+        n = 0
+        for entry in self._step_cache.values():
+            fns = entry.values() if isinstance(entry, dict) else (entry,)
+            for f in fns:
+                size = getattr(f, "_cache_size", None)
+                n += int(size()) if callable(size) else 0
+        return n
 
     # ------------------------------------------------------------ prefill --
     def prefill(self, tokens: jax.Array, lengths: jax.Array,
                 enc_feats: Optional[jax.Array] = None):
         B = tokens.shape[0]
         L = self.cfg.max_target_len
-        vcache = init_cache(self.verifier.cfg, B, L)
-        dcache = init_cache(self.drafter.cfg, B, L)
-        v_logits, vcache, h_last = self.verifier.prefill(
-            self.v_params, tokens, lengths, vcache, enc_feats=enc_feats)
-        _, dcache, _ = self.drafter.prefill(
-            self.d_params, tokens, lengths, dcache)
+        with self._ctx():
+            tokens = self._put(jnp.asarray(tokens), "batch", None)
+            lengths = self._put(jnp.asarray(lengths), "batch")
+            vcache = place_cache(init_cache(self.verifier.cfg, B, L), self.mesh)
+            dcache = place_cache(init_cache(self.drafter.cfg, B, L), self.mesh)
+            v_logits, vcache, h_last = self.verifier.prefill(
+                self.v_params, tokens, lengths, vcache, enc_feats=enc_feats)
+            _, dcache, _ = self.drafter.prefill(
+                self.d_params, tokens, lengths, dcache)
+            # pin the eager outputs to the canonical decode-loop placement so
+            # the first decode_step compiles against the same shardings every
+            # later step reproduces
+            vcache = place_cache(vcache, self.mesh)
+            dcache = place_cache(dcache, self.mesh)
+            h_last = self._put(h_last, "batch", None)
         return v_logits, vcache, dcache, h_last
 
     # ------------------------------------------------------ stepwise API --
@@ -164,14 +235,18 @@ class SpeculativeEngine:
                           key: Optional[jax.Array] = None) -> DecodeState:
         """Empty decode state: zeroed caches, no slot holds a request yet."""
         L = self.cfg.max_target_len
-        return DecodeState(
-            dcache=init_cache(self.drafter.cfg, batch_size, L),
-            vcache=init_cache(self.verifier.cfg, batch_size, L),
-            root=jnp.zeros((batch_size,), jnp.int32),
-            h_last=jnp.zeros((batch_size, self.verifier.cfg.d_model),
-                             jnp.float32),
-            key=key if key is not None else jax.random.PRNGKey(0),
-            produced=np.zeros((batch_size,), np.int64))
+        with self._ctx():
+            return DecodeState(
+                dcache=place_cache(init_cache(self.drafter.cfg, batch_size, L),
+                                   self.mesh),
+                vcache=place_cache(init_cache(self.verifier.cfg, batch_size, L),
+                                   self.mesh),
+                root=self._put(jnp.zeros((batch_size,), jnp.int32), "batch"),
+                h_last=self._put(
+                    jnp.zeros((batch_size, self.verifier.cfg.d_model),
+                              jnp.float32), "batch", None),
+                key=key if key is not None else jax.random.PRNGKey(0),
+                produced=np.zeros((batch_size,), np.int64))
 
     def _build_slot_prefill(self):
         """One compiled executable that prefills a batch-1 prompt and
@@ -197,7 +272,7 @@ class SpeculativeEngine:
             root = jax.lax.dynamic_update_index_in_dim(root, tok[0], slot, 0)
             h_last = jax.lax.dynamic_update_index_in_dim(
                 h_last, h1[0].astype(h_last.dtype), slot, 0)
-            return dcache, vcache, root, h_last
+            return self._constrain_state(dcache, vcache, root, h_last)
 
         return jax.jit(fn, donate_argnums=(2, 3, 4, 5))
 
@@ -215,12 +290,13 @@ class SpeculativeEngine:
             self._compile_count += 1
         fn = self._step_cache[ck]
         key, sk = jax.random.split(state.key)
-        dcache, vcache, root, h_last = fn(
-            self.d_params, self.v_params, state.dcache, state.vcache,
-            state.root, state.h_last,
-            jnp.asarray(tokens, jnp.int32).reshape(1, pad),
-            jnp.asarray([length], jnp.int32),
-            jnp.asarray(slot, jnp.int32), sk)
+        with self._ctx():
+            dcache, vcache, root, h_last = fn(
+                self.d_params, self.v_params, state.dcache, state.vcache,
+                state.root, state.h_last,
+                jnp.asarray(tokens, jnp.int32).reshape(1, pad),
+                jnp.asarray([length], jnp.int32),
+                jnp.asarray(slot, jnp.int32), sk)
         produced = state.produced.copy()
         produced[slot] = 1  # the root token is the slot's first output
         return DecodeState(dcache, vcache, root, h_last, key, produced)
@@ -233,13 +309,14 @@ class SpeculativeEngine:
         ``prefill_into_slot``. One compiled executable, slot index traced."""
         ck = ("slot_reset",)
         if ck not in self._step_cache:
-            self._step_cache[ck] = jax.jit(
-                lambda dc, vc, s: (cache_lib.reset_slot(dc, s),
-                                   cache_lib.reset_slot(vc, s)),
-                donate_argnums=(0, 1))
+            def _reset(dc, vc, s):
+                return (cache_lib.shard_cache(cache_lib.reset_slot(dc, s)),
+                        cache_lib.shard_cache(cache_lib.reset_slot(vc, s)))
+            self._step_cache[ck] = jax.jit(_reset, donate_argnums=(0, 1))
             self._compile_count += 1
-        dcache, vcache = self._step_cache[ck](
-            state.dcache, state.vcache, jnp.asarray(slot, jnp.int32))
+        with self._ctx():
+            dcache, vcache = self._step_cache[ck](
+                state.dcache, state.vcache, jnp.asarray(slot, jnp.int32))
         produced = state.produced.copy()
         produced[slot] = 0
         return DecodeState(dcache, vcache, state.root, state.h_last,
@@ -260,15 +337,16 @@ class SpeculativeEngine:
             use_spec, use_v = self._select(state.h_last)
         key, sk = jax.random.split(state.key)
         t0 = time.perf_counter()
-        if cfg.plan == "fused":
-            step = self._get_step(use_spec, use_v)
-            (dcache, vcache, bonus, toks, alen, h_last) = step(
-                self.d_params, self.v_params, state.dcache, state.vcache,
-                state.root, sk)
-        else:
-            parts = self._get_staged_parts(use_spec, use_v)
-            (dcache, vcache, bonus, toks, alen, h_last) = self._run_staged(
-                parts, state.dcache, state.vcache, state.root, sk)
+        with self._ctx():
+            if cfg.plan == "fused":
+                step = self._get_step(use_spec, use_v)
+                (dcache, vcache, bonus, toks, alen, h_last) = step(
+                    self.d_params, self.v_params, state.dcache, state.vcache,
+                    state.root, sk)
+            else:
+                parts = self._get_staged_parts(use_spec, use_v)
+                (dcache, vcache, bonus, toks, alen, h_last) = self._run_staged(
+                    parts, state.dcache, state.vcache, state.root, sk)
         alen_np = np.asarray(alen)
         t1 = time.perf_counter()
         toks_np, bonus_np = np.asarray(toks), np.asarray(bonus)
@@ -310,7 +388,6 @@ class SpeculativeEngine:
                 sub, select_idx = res.tree, jnp.broadcast_to(
                     jnp.arange(spec.num_nodes)[None],
                     res.tree.tokens.shape)
-            v = sub.tokens.shape[1]
             b_idx = jnp.arange(sub.tokens.shape[0])[:, None]
             sub_amask = (res.amask[b_idx[..., None], select_idx[:, :, None],
                                    select_idx[:, None, :]])
@@ -340,7 +417,9 @@ class SpeculativeEngine:
             h_last = jnp.take_along_axis(
                 h_nodes, acc.last_node[:, None, None].repeat(h_nodes.shape[-1], -1),
                 axis=1)[:, 0]
-            return (dcache, vcache, acc.bonus, out_tokens, acc.accept_len,
+            dcache, vcache, bonus, h_last = self._constrain_state(
+                dcache, vcache, acc.bonus, h_last)
+            return (dcache, vcache, bonus, out_tokens, acc.accept_len,
                     h_last)
 
         return jax.jit(step, donate_argnums=(2, 3))
@@ -398,6 +477,9 @@ class SpeculativeEngine:
             h_last = jnp.take_along_axis(
                 h_nodes, last_node[:, None, None].repeat(h_nodes.shape[-1], -1),
                 axis=1)[:, 0]
+            dc = cache_lib.shard_cache(dc)
+            vc = cache_lib.shard_cache(vc)
+            h_last = sharding.shard(h_last, "batch", None)
             return dc, vc, out_tokens, h_last
 
         return {"draft": draft_fn, "verify": verify_fn, "accept": accept_fn,
@@ -429,6 +511,9 @@ class SpeculativeEngine:
         dcache, vcache, out_tokens, h_last = parts["commit"](
             dcache, vcache, res, scratch, sub, select_idx, node_idx,
             accept_len, last, h_nodes)
+        # `bonus` becomes next step's root: pin its placement so the staged
+        # parts (and a later fused megastep) never see a drifting sharding
+        bonus = self._put(jnp.asarray(bonus), "batch")
         return dcache, vcache, bonus, out_tokens, accept_len, h_last
 
     def _get_staged_parts(self, spec: DraftSpec, verify_v: int):
@@ -465,7 +550,7 @@ class SpeculativeEngine:
         v_logits, vcache, dcache, h_last = self.prefill(prompt, lengths,
                                                         enc_feats=enc_feats)
         key, sk = jax.random.split(key)
-        root = self._sample(v_logits, sk)
+        root = self._put(self._sample(v_logits, sk), "batch")
         state = DecodeState(dcache, vcache, root, h_last, key,
                             produced=np.ones((B,), np.int64))
         out = [np.asarray(root)[:, None]]

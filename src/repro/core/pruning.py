@@ -65,7 +65,6 @@ def dp_prune_reference(parents: np.ndarray, path_probs: np.ndarray,
             return memo[node]
         base = np.full(v + 1, -np.inf)
         base[1] = path_probs[node]
-        picks = {1: []}  # size -> list of (child, child_size)
         choice = {s: [] for s in range(v + 1)}
         choice[1] = []
         for c in children[node]:

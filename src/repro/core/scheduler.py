@@ -24,10 +24,9 @@ from __future__ import annotations
 
 import time
 from dataclasses import dataclass
-from typing import Callable, Dict, List, Optional, Tuple
+from typing import Callable, Dict, Optional, Tuple
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 PLANS = ("staged", "staged_device", "fused")
@@ -72,6 +71,12 @@ def greedy_accept_host(tokens: np.ndarray, parents: np.ndarray,
 class StageProfile:
     per_stage: Dict[str, float]          # measured stage latencies (s)
     plan_times: Dict[str, float]         # measured per-iteration latency
+    # mesh the profile was measured on: plan choice is mesh-dependent (the
+    # staged host boundary now also gathers sharded acceptance results, and
+    # fused folds the collectives into one dispatch), so a profile measured
+    # unsharded must not silently drive a sharded deployment
+    mesh_shape: Optional[Dict[str, int]] = None
+    mesh_devices: int = 1
 
     def predicted(self, dispatch_overhead: float) -> Dict[str, float]:
         """Analytic plan model: staged pays every boundary, fused pays one."""
@@ -114,6 +119,9 @@ def search_plan(engine, prompt, lengths, *, spec, verify_v,
         its = stats.iter_times[1:] or stats.iter_times
         times[plan] = float(np.median(its))
     engine.cfg.plan = orig_plan
-    prof = StageProfile(per_stage={}, plan_times=times)
+    minfo = engine.mesh_info()
+    prof = StageProfile(per_stage={}, plan_times=times,
+                        mesh_shape=minfo["shape"],
+                        mesh_devices=minfo["devices"])
     best = min(times, key=times.get)
     return best, prof

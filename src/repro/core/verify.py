@@ -9,7 +9,7 @@ least one target-distributed token.
 """
 from __future__ import annotations
 
-from typing import NamedTuple, Tuple
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -75,7 +75,6 @@ def stochastic_accept(tree: TreeArrays, draft_probs: jax.Array,
     adjusted). Root (slot 0) is confirmed by construction.
     """
     B, V = tree.tokens.shape
-    vocab = target_probs.shape[-1]
     b_r = jnp.arange(B)
 
     # children of each node ordered by slot: [B, V, max_children]

@@ -9,7 +9,7 @@ faster, so acceptance rates become realistic (and tunable via source entropy).
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, Iterator, Optional
+from typing import Dict, Iterator
 
 import numpy as np
 

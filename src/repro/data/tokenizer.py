@@ -1,7 +1,6 @@
 """Byte-level tokenizer (no external vocab files needed offline)."""
 from __future__ import annotations
 
-from typing import List
 
 import numpy as np
 

@@ -6,7 +6,6 @@ indexing/accumulation logic; on TPU the same code lowers to Mosaic.
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

@@ -8,7 +8,6 @@ import time                # noqa: E402
 import traceback           # noqa: E402
 from typing import Any, Dict, Optional  # noqa: E402
 
-import jax                 # noqa: E402
 
 from repro.configs import ASSIGNED, SHAPES  # noqa: E402
 from repro.launch import hlo_analysis       # noqa: E402

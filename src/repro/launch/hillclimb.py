@@ -13,10 +13,9 @@ to the baselines; the before/after table prints at the end.
   PYTHONPATH=src python -m repro.launch.hillclimb --pair all --inspect
 """
 import argparse      # noqa: E402
-import json          # noqa: E402
-from typing import Dict, List, Optional  # noqa: E402
+from typing import Dict, Optional  # noqa: E402
 
-from repro.launch.dryrun import RESULTS_DIR, run_case  # noqa: E402
+from repro.launch.dryrun import run_case  # noqa: E402
 
 # iteration ladders: applied CUMULATIVELY in order (hillclimbing)
 PAIRS: Dict[str, Dict] = {

@@ -6,7 +6,9 @@ launchers) decide when devices are enumerated.
 """
 from __future__ import annotations
 
+import warnings
 from dataclasses import dataclass
+from typing import Optional, Tuple
 
 import jax
 
@@ -22,6 +24,41 @@ def make_host_mesh(model: int = 1):
     n = len(jax.devices())
     model = min(model, n)
     return jax.make_mesh((n // model, model), ("data", "model"))
+
+
+def parse_mesh_shape(spec: str) -> Tuple[int, int]:
+    """Parse a ``DxM`` mesh request ("4x2" -> (4, 2): data=4, model=2)."""
+    try:
+        parts = tuple(int(p) for p in spec.lower().split("x"))
+    except ValueError:
+        raise ValueError(f"--mesh wants DxM (e.g. 4x2), got {spec!r}") from None
+    if len(parts) != 2 or any(p < 1 for p in parts):
+        raise ValueError(f"--mesh wants two positive extents DxM, got {spec!r}")
+    return parts
+
+
+def make_serving_mesh(spec: Optional[str] = None):
+    """Resolve a serving-CLI mesh request.
+
+    ``None`` keeps the engine unsharded. ``"host"`` spans whatever devices
+    exist via `make_host_mesh`. ``"DxM"`` builds a data×model mesh over
+    exactly D*M devices; when the host has fewer, we warn and fall back to
+    `make_host_mesh` rather than refuse to serve.
+    """
+    if spec is None:
+        return None
+    if spec == "host":
+        return make_host_mesh()
+    data, model = parse_mesh_shape(spec)
+    n = len(jax.devices())
+    if data * model > n:
+        warnings.warn(
+            f"--mesh {spec} wants {data * model} devices but only {n} exist; "
+            f"falling back to make_host_mesh() (try "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count={data * model} "
+            f"to emulate devices on CPU)", stacklevel=2)
+        return make_host_mesh()
+    return jax.make_mesh((data, model), ("data", "model"))
 
 
 @dataclass(frozen=True)

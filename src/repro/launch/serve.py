@@ -10,10 +10,20 @@ engine — the full Yggdrasil runtime at laptop scale. Two serving modes:
     slots, retired requests replaced mid-flight via single-slot prefill,
     one pinned megastep executable replayed across slot churn.
 
+Both servers also run mesh-sharded: ``--mesh DxM`` (e.g. ``--mesh 4x2``)
+places the engine on a data×model device mesh — verifier/drafter params
+tensor-parallel over ``model``, decode slots data-parallel over ``data`` —
+via the logical-axis rules in sharding/specs.py. ``--mesh host`` spans
+whatever devices exist; an infeasible request falls back to the host mesh.
+On a CPU-only box, emulate devices first:
+``XLA_FLAGS=--xla_force_host_platform_device_count=8``.
+
 Usage:
   PYTHONPATH=src python -m repro.launch.serve --requests 8 --max-new 48
   PYTHONPATH=src python -m repro.launch.serve --server continuous \
       --requests 16 --batch 4
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 PYTHONPATH=src \
+      python -m repro.launch.serve --server continuous --mesh 4x2
 """
 from __future__ import annotations
 
@@ -26,6 +36,7 @@ from repro.core.egt import egt_spec
 from repro.core.engine import EngineConfig, SpeculativeEngine
 from repro.core.objective import LatencyProfile
 from repro.data.pipeline import MarkovSource
+from repro.launch.mesh import make_serving_mesh
 from repro.serving.continuous import ContinuousServer
 from repro.serving.server import BatchedServer, Request
 from repro.serving.testbed import TestbedSpec, build_testbed
@@ -47,8 +58,12 @@ def main() -> None:
                     help="pinned speculation width (continuous mode)")
     ap.add_argument("--profile", default=None,
                     help="LatencyProfile JSON (default: synthetic)")
+    ap.add_argument("--mesh", default=None,
+                    help="device mesh: DxM (data x model, e.g. 4x2) or "
+                         "'host'; default unsharded")
     args = ap.parse_args()
 
+    mesh = make_serving_mesh(args.mesh)
     tb = build_testbed(TestbedSpec())
     prof = (LatencyProfile.load(args.profile) if args.profile
             else LatencyProfile.synthetic())
@@ -56,7 +71,11 @@ def main() -> None:
         tb.drafter, tb.d_params, tb.verifier, tb.v_params, profile=prof,
         buckets=buckets_for_depths((2, 4, 8), width=2, verify_frac=0.75),
         depth_options=(2, 4, 8),
-        config=EngineConfig(temperature=args.temperature, plan=args.plan))
+        config=EngineConfig(temperature=args.temperature, plan=args.plan),
+        mesh=mesh)
+    if mesh is not None:
+        info = engine.mesh_info()
+        print(f"mesh: {info['shape']} over {info['devices']} devices")
 
     if args.server == "continuous":
         spec = egt_spec(args.depth, args.width)

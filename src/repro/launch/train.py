@@ -18,7 +18,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs import SHAPES, get_config, get_reduced_config
+from repro.configs import get_config, get_reduced_config
 from repro.data.pipeline import DataConfig, batches
 from repro.models import Model
 from repro.training import (OptConfig, init_opt_state, make_train_step,

@@ -24,7 +24,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.sharding import shard
+from repro.sharding import shard, sharding_for
 
 Cache = Dict[str, Any]
 
@@ -139,6 +139,26 @@ def shard_cache(cache: Cache) -> Cache:
     """Apply sharding constraints to every cache leaf."""
     return jax.tree_util.tree_map_with_path(
         lambda p, x: shard(x, *_leaf_axes(p, x)), cache)
+
+
+def cache_shardings(cache: Cache, mesh=None) -> Cache:
+    """NamedSharding pytree for a (concrete or abstract) cache — the eager
+    counterpart of `shard_cache`, for `jax.device_put` placement of a
+    host-built cache and for explicit jit in/out shardings."""
+    return jax.tree_util.tree_map_with_path(
+        lambda p, x: sharding_for(_leaf_axes(p, x), x.shape, mesh), cache,
+        is_leaf=lambda x: hasattr(x, "ndim") and not isinstance(x, dict))
+
+
+def place_cache(cache: Cache, mesh=None) -> Cache:
+    """Device-put every cache leaf onto its logical-axis sharding. No-op
+    without a mesh (active or passed)."""
+    shardings = cache_shardings(cache, mesh)
+    if all(s is None for s in jax.tree.leaves(
+            shardings, is_leaf=lambda x: x is None)):
+        return cache
+    return jax.tree.map(jax.device_put, cache, shardings,
+                        is_leaf=lambda x: x is None)
 
 
 # ------------------------------------------------- per-slot management ----

@@ -18,7 +18,7 @@ All functions are jit-compatible; shapes are static given (batch, seq, W).
 from __future__ import annotations
 
 import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
@@ -30,7 +30,6 @@ from repro.models.layers import (apply_lm_head, apply_norm, embed_defs,
                                  embed_tokens, lm_head_defs, norm_defs,
                                  rope_frequencies)
 from repro.models.params import ParamDef, abstract_params, init_params, stacked
-from repro.sharding import shard
 
 
 class Model:
@@ -199,7 +198,6 @@ class Model:
     def decode(self, params, token: jax.Array, cache: Dict):
         """token: [B] confirmed next token. Commits it and returns logits."""
         cfg = self.cfg
-        B = token.shape[0]
         lengths = cache["length"]
         positions = lengths[:, None]  # [B, 1]
         h = embed_tokens(params["embed"], token[:, None], cfg, positions)

@@ -8,8 +8,8 @@ parameter pytree and its PartitionSpecs can never drift apart.
 from __future__ import annotations
 
 import math
-from dataclasses import dataclass, field
-from typing import Any, Dict, Optional, Tuple
+from dataclasses import dataclass
+from typing import Any, Optional, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -48,6 +48,7 @@ class ServingMetrics:
     completed: int = 0
     truncated_prompts: int = 0
     recompiles_after_warmup: int = 0
+    mesh_devices: int = 1        # devices the engine's mesh spans (1 = unsharded)
     latencies: List[float] = field(default_factory=list)   # submit -> finish
 
     @property
@@ -79,6 +80,7 @@ class ServingMetrics:
             "parks": self.parks,
             "truncated_prompts": self.truncated_prompts,
             "recompiles_after_warmup": self.recompiles_after_warmup,
+            "mesh_devices": self.mesh_devices,
             "latency_p50_s": float(np.percentile(lat, 50)),
             "latency_p95_s": float(np.percentile(lat, 95)),
         }
@@ -105,6 +107,7 @@ class ContinuousServer:
         self.queue: Deque[Request] = deque()
         self.done: Dict[int, Request] = {}
         self.metrics = ServingMetrics()
+        self.metrics.mesh_devices = engine.mesh_info()["devices"]
 
         self.state: DecodeState = engine.init_decode_state(batch_size)
         self.slots: List[Optional[Request]] = [None] * batch_size
@@ -116,6 +119,7 @@ class ContinuousServer:
         self._slot_len = np.zeros(batch_size, np.int64)
         self._headroom = self.spec.depth + 2  # max cache growth per step
         self._compile_base: Optional[int] = None
+        self._exec_base: int = 0
         self._just_finished: List[Request] = []
 
     # ---------------------------------------------------------- lifecycle --
@@ -135,6 +139,7 @@ class ContinuousServer:
                                                   verify_v=self.verify_v)
         self._slot_len += res.accept_len
         self._compile_base = self.engine._compile_count
+        self._exec_base = self.engine.executable_count()
 
     def _park(self, slot: int):
         """Empty an idle slot (length 0, stale entries invisible); it keeps
@@ -244,8 +249,19 @@ class ContinuousServer:
             toks = res.tokens[i]
             self._credit(i, toks[toks >= 0])
         if self._compile_base is not None:
-            self.metrics.recompiles_after_warmup = (
-                self.engine._compile_count - self._compile_base)
+            # the executable counter is the honest zero-recompile signal: it
+            # also sees silent jit retraces (a sharding drifting under a mesh
+            # retraces without any builder call) and subsumes builder-level
+            # compiles, whose new wrappers trace on first call. It reads a
+            # private jax attribute, so when it yielded nothing at warmup
+            # (warmup always traces several executables) fall back to
+            # builder-level counting rather than passing vacuously.
+            if self._exec_base > 0:
+                self.metrics.recompiles_after_warmup = max(
+                    0, self.engine.executable_count() - self._exec_base)
+            else:
+                self.metrics.recompiles_after_warmup = (
+                    self.engine._compile_count - self._compile_base)
         return self._just_finished
 
     def run(self, max_steps: Optional[int] = None) -> Dict[int, Request]:

@@ -90,12 +90,14 @@ class BatchedServer:
             r.t_start = t0
         seq, stats = self.engine.generate(toks, lens, max_new)
         dt = time.perf_counter() - t0
+        mesh_devices = self.engine.mesh_info()["devices"]
         for i, r in enumerate(reqs):
             out, _ = cut_at_eos(seq[i][seq[i] >= 0][: r.max_new], self.eos_id)
             r.result = out
             r.t_finish = time.perf_counter()
             r.stats = {**stats.summary(), "batch_time_s": dt,
-                       "prompt_truncated": r.truncated}
+                       "prompt_truncated": r.truncated,
+                       "mesh_devices": mesh_devices}
             self.done[r.uid] = r
         return reqs
 

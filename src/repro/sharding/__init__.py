@@ -1,10 +1,27 @@
 from repro.sharding.specs import (
     DEFAULT_RULES,
+    activate,
     current_mesh,
+    fsdp_shardings,
     named,
     param_shardings,
     shard,
     sharding_divides,
+    sharding_for,
     spec_for,
     use_mesh,
 )
+
+__all__ = [
+    "DEFAULT_RULES",
+    "activate",
+    "current_mesh",
+    "fsdp_shardings",
+    "named",
+    "param_shardings",
+    "shard",
+    "sharding_divides",
+    "sharding_for",
+    "spec_for",
+    "use_mesh",
+]

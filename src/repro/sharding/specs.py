@@ -12,7 +12,6 @@ import threading
 from typing import Any, Dict, Optional, Sequence, Tuple
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.models.params import ParamDef
@@ -60,11 +59,28 @@ def current_mesh() -> Optional[Mesh]:
     return _state().mesh
 
 
+@contextlib.contextmanager
+def activate(mesh: Optional[Mesh],
+             rules: Optional[Dict[str, Tuple[str, ...]]] = None):
+    """Enter a mesh for both this module's logical-axis resolution AND jax's
+    own mesh context (so `jax.make_mesh` axis names resolve inside jit).
+    No-op when `mesh` is None — callers can wrap unconditionally."""
+    if mesh is None:
+        yield
+        return
+    with use_mesh(mesh, rules=rules), mesh:
+        yield
+
+
 def _resolve_entry(logical: Optional[str], dim: int, mesh: Mesh,
                    rules: Dict[str, Tuple[str, ...]], used: set):
     if logical is None:
         return None
-    axes = [a for a in rules.get(logical, ()) if a in mesh.axis_names and a not in used]
+    # extent-1 axes shard nothing and jit normalizes them out of reported
+    # output specs; keeping them would make device_put placements and jit
+    # outputs structurally unequal (an executable-cache miss per call site)
+    axes = [a for a in rules.get(logical, ())
+            if a in mesh.axis_names and a not in used and mesh.shape[a] > 1]
     if not axes:
         return None
     extent = 1
@@ -92,8 +108,14 @@ def spec_for(axes: Sequence[Optional[str]], shape: Sequence[int],
         return P()
     rules = _state().rules
     used: set = set()
-    return P(*[_resolve_entry(ax, dim, mesh, rules, used)
-               for ax, dim in zip(axes, shape)])
+    entries = [_resolve_entry(ax, dim, mesh, rules, used)
+               for ax, dim in zip(axes, shape)]
+    # normalize away trailing Nones: jit outputs report truncated specs, and
+    # a P(..., None) vs P(...) mismatch is enough to miss the executable
+    # cache (a silent recompile) even though the shardings are identical
+    while entries and entries[-1] is None:
+        entries.pop()
+    return P(*entries)
 
 
 def shard(x: jax.Array, *axes: Optional[str]) -> jax.Array:
@@ -106,17 +128,25 @@ def shard(x: jax.Array, *axes: Optional[str]) -> jax.Array:
     return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
 
 
+def sharding_for(axes: Sequence[Optional[str]], shape: Sequence[int],
+                 mesh: Optional[Mesh] = None) -> Optional[NamedSharding]:
+    """NamedSharding from logical axes, for `jax.device_put` placement of
+    host-built arrays (the eager counterpart of `shard`)."""
+    mesh = mesh or current_mesh()
+    if mesh is None:
+        return None
+    return NamedSharding(mesh, spec_for(axes, shape, mesh))
+
+
 def sharding_divides(logical: str, dim: int, mesh: Optional[Mesh] = None) -> bool:
-    """True if `dim` can be fully sharded over the rule's mesh axes."""
+    """True if the rule would shard `dim` at all (possibly over a prefix of
+    its axes, per the divisibility fallback), considering this dim in
+    isolation. Mirrors `_resolve_entry` so the predicate always agrees with
+    what `spec_for` actually emits."""
     mesh = mesh or current_mesh()
     if mesh is None:
         return True
-    rules = _state().rules
-    axes = [a for a in rules.get(logical, ()) if a in mesh.axis_names]
-    extent = 1
-    for a in axes:
-        extent *= mesh.shape[a]
-    return dim % extent == 0
+    return _resolve_entry(logical, dim, mesh, _state().rules, set()) is not None
 
 
 def param_shardings(defs: Any, mesh: Optional[Mesh] = None) -> Any:

@@ -3,12 +3,11 @@ gradients, AdamW update. Used by the end-to-end trainer, the drafter/verifier
 alignment pipeline, and the train_4k dry-run shape."""
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import ModelConfig
 from repro.models.model import Model
 from repro.training.optimizer import OptConfig, adamw_update
 

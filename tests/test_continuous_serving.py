@@ -115,6 +115,9 @@ class _FakeStepEngine:
     def init_decode_state(self, batch_size):
         return None
 
+    def mesh_info(self):
+        return {"devices": 1, "shape": None}
+
 
 def _server(**kw):
     return ContinuousServer(_FakeStepEngine(), batch_size=2, prompt_pad=8,

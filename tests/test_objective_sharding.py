@@ -3,12 +3,11 @@ depth predictor, and the HLO collective analyzer."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from jax.sharding import PartitionSpec as P
 
-from repro.core.buckets import Bucket, buckets_for_depths, select_bucket
-from repro.core.objective import (LatencyProfile, aal_objective,
-                                  choose_config, speedup_objective)
+from repro.core.buckets import buckets_for_depths, select_bucket
+from repro.core.objective import (LatencyProfile, choose_config,
+                                  speedup_objective)
 from repro.launch import hlo_analysis as H
 
 
@@ -46,12 +45,46 @@ def test_select_bucket_respects_depth_prediction():
 
 
 # ---------------------------------------------------------------- specs ----
+class _FakeMesh:
+    """Duck-typed mesh (axis_names + shape) so the divisibility rules can be
+    tested without multiple real devices."""
+
+    def __init__(self, **shape):
+        self.axis_names = tuple(shape)
+        self.shape = shape
+
+
 def test_spec_for_divisibility_fallback():
-    import os
     from repro.sharding import specs as sh
-    devs = jax.devices()
-    if len(devs) < 2:
-        pytest.skip("needs >=2 devices")
+    mesh = _FakeMesh(data=4, model=2)
+    # kv_heads=3 does not divide model=2 -> the rule drops; head_dim picks
+    # up the sharding instead (the GQA head-dim fallback)
+    spec = sh.spec_for(("batch", "kv_heads", "head_dim_shard"),
+                       (8, 3, 64), mesh)
+    assert spec == P("data", None, "model")
+    # divisible kv_heads shard normally; head_dim is left alone ("model"
+    # is already claimed by kv_heads)
+    spec = sh.spec_for(("batch", "kv_heads", "head_dim_shard"),
+                       (8, 4, 64), mesh)
+    assert spec == P("data", "model")
+    # the decode cache's seq axis outranks kv_heads for the model axis
+    spec = sh.spec_for(("cache_seq", "kv_heads"), (64, 4), mesh)
+    assert spec == P("model")
+    # batch smaller than the data axis stays replicated
+    spec = sh.spec_for(("batch", None), (2, 16), _FakeMesh(data=4, model=2))
+    assert spec == P()
+
+
+def test_spec_for_drops_trailing_nones_and_unit_axes():
+    """Specs must match jit's normalized output specs structurally, or the
+    executable cache misses on every placed-vs-computed array pair (a
+    silent recompile under serving)."""
+    from repro.sharding import specs as sh
+    spec = sh.spec_for(("batch", None, "kv_heads", None),
+                       (8, 4, 4, 64), _FakeMesh(data=4, model=2))
+    assert spec == P("data", None, "model")          # trailing None dropped
+    spec = sh.spec_for(("batch", "vocab"), (8, 64), _FakeMesh(data=8, model=1))
+    assert spec == P("data")                          # extent-1 axis dropped
 
 
 def test_param_and_fsdp_shardings_on_host_mesh():

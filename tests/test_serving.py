@@ -24,6 +24,9 @@ class FakeEngine:
         stats.iter_times.append(1e-4)
         return seq, stats
 
+    def mesh_info(self):
+        return {"devices": 1, "shape": None}
+
 
 def arange_rows(toks, lens, max_new):
     B = toks.shape[0]

@@ -6,12 +6,11 @@ import numpy as np
 import pytest
 
 pytest.importorskip("hypothesis")  # optional dev dependency
-from hypothesis import given, settings, strategies as st
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
-from repro.core import pruning, verify
-from repro.core.tree import (TreeArrays, ancestor_mask, ancestor_paths,
-                             empty_tree, gather_subtree, kary_template,
-                             node_depths)
+from repro.core import pruning, verify  # noqa: E402
+from repro.core.tree import (TreeArrays, ancestor_mask,  # noqa: E402
+                             ancestor_paths, gather_subtree, node_depths)
 
 settings.register_profile("ci", max_examples=25, deadline=None)
 settings.load_profile("ci")
@@ -165,7 +164,6 @@ def test_stochastic_accept_preserves_target_distribution():
     q = np.array([0.5, 0.3, 0.1, 0.1])             # drafter dist at root
     p = np.array([0.25, 0.25, 0.3, 0.2])           # target dist at root
     counts = np.zeros(vocab)
-    keys = jax.random.split(jax.random.PRNGKey(0), draws)
     draft_tok = rng.choice(vocab, size=draws, p=q)
     # batch all draws at once
     B = draws
