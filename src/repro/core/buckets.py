@@ -43,17 +43,71 @@ def buckets_for_depths(depth_options: Sequence[int], width: int,
     return tuple(out)
 
 
+def parse_buckets(text: str) -> Tuple[Bucket, ...]:
+    """Parse a ladder flag like ``"2x2,4x2x6,8x4x16"``: each entry is DxW
+    (verify defaults to 3/4 of the tree) or DxWxV."""
+    out = []
+    for part in text.split(","):
+        dims = [int(x) for x in part.strip().split("x")]
+        if len(dims) == 2:
+            d, w = dims
+            v = max(2, (3 * (1 + d * w)) // 4)
+        elif len(dims) == 3:
+            d, w, v = dims
+        else:
+            raise ValueError(f"bucket {part!r}: expected DxW or DxWxV")
+        out.append(Bucket(d, w, v))
+    return tuple(out)
+
+
+def ladder_headroom(buckets: Sequence[Bucket]) -> int:
+    """Max cache growth one megastep can commit under ANY ladder bucket
+    (deepest chain + bonus + slack) — the admission budget must reserve
+    this much, or a deep step near the cache cap would silently drop
+    commits."""
+    return max(b.depth for b in buckets) + 2
+
+
+def validate_ladder(buckets: Sequence[Bucket], max_target_len: int,
+                    prompt_pad: int = 0) -> Tuple[Bucket, ...]:
+    """Sanity-check a bucket ladder for adaptive serving. Returns the ladder
+    as a tuple (order preserved — earlier buckets win objective ties)."""
+    ladder = tuple(buckets)
+    if not ladder:
+        raise ValueError("bucket ladder is empty")
+    for b in ladder:
+        if b.depth < 1 or b.width < 1:
+            raise ValueError(f"bucket {b} has non-positive depth/width")
+        if not 1 <= b.verify <= b.num_nodes:
+            raise ValueError(f"bucket {b}: verify width {b.verify} outside "
+                             f"[1, {b.num_nodes}]")
+    if len(set(b.key() for b in ladder)) != len(ladder):
+        raise ValueError("bucket ladder has duplicate buckets")
+    # the DEEPEST bucket sets the per-step headroom: every admitted prompt
+    # must still have positive generation budget under it
+    need = prompt_pad + ladder_headroom(ladder) + 1
+    if max_target_len < need:
+        raise ValueError(
+            f"max_target_len={max_target_len} leaves no headroom for the "
+            f"deepest ladder bucket (need >= {need} with "
+            f"prompt_pad={prompt_pad})")
+    return ladder
+
+
 def select_bucket(buckets: Sequence[Bucket], predicted_depth: int,
                   profile: LatencyProfile, aal_estimates: Dict = None,
-                  objective: str = "speedup") -> Bucket:
+                  objective: str = "speedup", batch: int = 1) -> Bucket:
     """Choose the bucket for this iteration: smallest depth >= prediction,
-    ties broken by the latency objective with an optimistic AAL estimate."""
+    ties broken by the latency objective with an optimistic AAL estimate.
+    Ties on the objective keep the earliest candidate. ``batch`` feeds the
+    occupancy-aware latency model (see objective.step_latency)."""
     cands = [b for b in buckets if b.depth >= predicted_depth] or list(buckets)
     best, best_v = None, -float("inf")
     for b in cands:
         aal = (aal_estimates or {}).get(b.key(),
                                         min(predicted_depth + 1, b.depth + 1))
-        v = (speedup_objective(profile, aal, b.depth, b.width, b.verify)
+        v = (speedup_objective(profile, aal, b.depth, b.width, b.verify,
+                               batch=batch)
              if objective == "speedup" else aal)
         if v > best_v:
             best, best_v = b, v

@@ -140,6 +140,13 @@ class StepResult:
     bucket: Tuple[int, int, int]
     iter_time: float
 
+    def mean_accept(self, slots: Optional[List[int]] = None) -> float:
+        """Mean accept length this step — over `slots` when given (a serving
+        loop passes the active slots so idle garbage decodes don't pollute
+        the online AAL estimate)."""
+        a = self.accept_len if slots is None else self.accept_len[slots]
+        return float(np.mean(a)) if np.size(a) else 0.0
+
 
 class SpeculativeEngine:
     def __init__(self, drafter: Model, d_params, verifier: Model, v_params,
@@ -321,6 +328,22 @@ class SpeculativeEngine:
         produced[slot] = 0
         return DecodeState(dcache, vcache, state.root, state.h_last,
                            state.key, produced)
+
+    def warmup_buckets(self, state: DecodeState,
+                       buckets: Tuple[Bucket, ...],
+                       ) -> Tuple[DecodeState, Dict[Tuple[int, int, int], float]]:
+        """Compile the megastep for EVERY ladder bucket on the live state
+        (two steps each: the first traces, the second replays to measure a
+        steady-state iteration time). This is what lets an adaptive serving
+        loop switch buckets later without ever compiling on the decode
+        path. Returns the advanced state and per-bucket replay times."""
+        times: Dict[Tuple[int, int, int], float] = {}
+        for b in buckets:
+            spec = egt_spec(b.depth, b.width)
+            state, _ = self.decode_step(state, spec=spec, verify_v=b.verify)
+            state, res = self.decode_step(state, spec=spec, verify_v=b.verify)
+            times[b.key()] = res.iter_time
+        return state, times
 
     def decode_step(self, state: DecodeState,
                     spec: Optional[DraftSpec] = None,

@@ -62,12 +62,64 @@ def estimate_aal(path_probs_kept: np.ndarray) -> float:
     return 1.0 + float(np.sum(path_probs_kept))
 
 
+def ema_update(table: Dict, key, value: float, alpha: float):
+    """Keyed EMA: the first observation replaces the (absent) prior, later
+    ones blend with weight ``alpha``. Shared by the AAL and iteration-time
+    estimators so their seeding semantics cannot drift apart."""
+    prev = table.get(key)
+    table[key] = (float(value) if prev is None
+                  else (1 - alpha) * prev + alpha * float(value))
+
+
+class AALEstimator:
+    """Online per-bucket AAL estimate: an EMA of observed accept lengths.
+
+    Unvisited buckets report the optimistic prior depth+1 (full acceptance),
+    which is what pushes an adaptive scheduler to try a bucket once before
+    the EMA takes over. The ``estimates`` dict plugs straight into
+    ``select_bucket(..., aal_estimates=...)`` / ``choose_config``.
+    """
+
+    def __init__(self, alpha: float = 0.3):
+        self.alpha = alpha
+        self._ema: Dict[Tuple[int, int, int], float] = {}
+
+    def update(self, key: Tuple[int, int, int], observed_aal: float):
+        ema_update(self._ema, key, observed_aal, self.alpha)
+
+    def estimate(self, key: Tuple[int, int, int]) -> float:
+        depth = key[0]
+        return self._ema.get(key, float(depth) + 1.0)
+
+    def estimates(self, keys: Sequence[Tuple[int, int, int]]
+                  ) -> Dict[Tuple[int, int, int], float]:
+        return {k: self.estimate(k) for k in keys}
+
+    def observed(self, key: Tuple[int, int, int]) -> bool:
+        return key in self._ema
+
+
+def step_latency(profile: LatencyProfile, depth: int, width: int,
+                 verify_w: int, batch: int = 1) -> float:
+    """Modeled per-iteration latency (the denominator of Eq. 3).
+
+    ``batch`` scales the work fed into the width-latency curves: a pool of
+    `batch` active sequences drafts batch·W nodes per level and verifies
+    batch·V tree tokens in one dispatch, so a full pool pushes wide/deep
+    buckets past the chip's saturation knee while a draining pool keeps
+    them in the flat memory-bound region. batch=1 is exactly Eq. 3.
+    """
+    return (profile.t_draft(batch) + depth * profile.t_draft(batch * width)
+            + profile.t_verify(batch * verify_w) + profile.step_overhead)
+
+
 def speedup_objective(profile: LatencyProfile, aal: float, depth: int,
-                      width: int, verify_w: int) -> float:
-    """Eq. 3 with explicit root-draft and runtime overhead terms."""
-    t_spec = (profile.t_draft(1) + depth * profile.t_draft(width)
-              + profile.t_verify(verify_w) + profile.step_overhead)
-    return aal * profile.t_verify(1) / t_spec
+                      width: int, verify_w: int, batch: int = 1) -> float:
+    """Eq. 3 with explicit root-draft and runtime overhead terms. ``batch``
+    makes the objective occupancy-aware (see ``step_latency``): the AR
+    baseline in the numerator decodes the same `batch` sequences."""
+    return (aal * profile.t_verify(batch)
+            / step_latency(profile, depth, width, verify_w, batch))
 
 
 def aal_objective(aal: float, *_args, **_kw) -> float:

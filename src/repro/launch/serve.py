@@ -31,13 +31,14 @@ import argparse
 
 import numpy as np
 
-from repro.core.buckets import buckets_for_depths
+from repro.core.buckets import buckets_for_depths, parse_buckets
 from repro.core.egt import egt_spec
 from repro.core.engine import EngineConfig, SpeculativeEngine
 from repro.core.objective import LatencyProfile
 from repro.data.pipeline import MarkovSource
 from repro.launch.mesh import make_serving_mesh
 from repro.serving.continuous import ContinuousServer
+from repro.serving.controller import BucketController
 from repro.serving.server import BatchedServer, Request
 from repro.serving.testbed import TestbedSpec, build_testbed
 
@@ -56,6 +57,16 @@ def main() -> None:
                     help="pinned speculation depth (continuous mode)")
     ap.add_argument("--width", type=int, default=2,
                     help="pinned speculation width (continuous mode)")
+    ap.add_argument("--adaptive", action="store_true",
+                    help="continuous mode: precompile a bucket ladder and "
+                         "let the online controller re-pick the bucket each "
+                         "megastep (zero recompiles after warmup)")
+    ap.add_argument("--buckets", default="2x2x4,4x2x7,8x2x13",
+                    help="adaptive bucket ladder, comma-separated DxW or "
+                         "DxWxV entries (e.g. 2x2,4x2x7)")
+    ap.add_argument("--hysteresis", type=float, default=0.1,
+                    help="relative score margin a challenger bucket must "
+                         "beat the incumbent by before switching")
     ap.add_argument("--profile", default=None,
                     help="LatencyProfile JSON (default: synthetic)")
     ap.add_argument("--mesh", default=None,
@@ -77,7 +88,16 @@ def main() -> None:
         info = engine.mesh_info()
         print(f"mesh: {info['shape']} over {info['devices']} devices")
 
-    if args.server == "continuous":
+    if args.server == "continuous" and args.adaptive:
+        ladder = parse_buckets(args.buckets)
+        controller = BucketController(ladder, profile=prof,
+                                      hysteresis=args.hysteresis)
+        server = ContinuousServer(engine, batch_size=args.batch,
+                                  prompt_pad=24, buckets=ladder,
+                                  controller=controller)
+        print("adaptive ladder: "
+              + ", ".join("x".join(map(str, b.key())) for b in ladder))
+    elif args.server == "continuous":
         spec = egt_spec(args.depth, args.width)
         server = ContinuousServer(engine, batch_size=args.batch,
                                   prompt_pad=24, spec=spec,
@@ -105,6 +125,11 @@ def main() -> None:
               f"tpot={m['tpot_ms']:.1f}ms  aal={m['aal']:.2f}  "
               f"occupancy={m['occupancy']:.2f}  refills={m['refills']}  "
               f"recompiles_after_warmup={m['recompiles_after_warmup']}")
+        if args.adaptive:
+            print(f"bucket switches: {m['bucket_switches']}")
+            for bk, bs in m["buckets"].items():
+                print(f"  bucket {bk}: {bs['steps']} steps  "
+                      f"aal={bs['aal']:.2f}  iter={bs['iter_ms']:.1f}ms")
     else:
         tot_tok, tot_t = 0, 0.0
         for uid, req in sorted(done.items()):

@@ -1,3 +1,4 @@
 from repro.serving.continuous import ContinuousServer, ServingMetrics
+from repro.serving.controller import BucketController
 from repro.serving.sampling import mask_padded_vocab, sample
 from repro.serving.server import BatchedServer, Request

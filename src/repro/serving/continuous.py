@@ -7,12 +7,23 @@ speculation megastep at a time, and whenever a slot's request retires (EOS
 or length), the slot is refilled from the admission queue via a single-slot
 prefill while the other slots keep decoding.
 
-Compile stability is the design constraint: the decode loop replays one
-⟨B, D, W, V⟩ megastep executable (bucket pinned at construction) and one
-B=1 slot-prefill executable (slot index traced), so slot churn never
-triggers a recompile — the megastep cache stays hot for the whole serving
-run. `warmup()` compiles both up front; `metrics.recompiles_after_warmup`
-must stay 0 and is asserted in tests/test_continuous_serving.py.
+Compile stability is the design constraint: the decode loop replays
+warmup-compiled ⟨B, D, W, V⟩ megastep executables and one B=1 slot-prefill
+executable (slot index traced), so slot churn never triggers a recompile —
+the megastep cache stays hot for the whole serving run. `warmup()` compiles
+everything up front; `metrics.recompiles_after_warmup` must stay 0 and is
+asserted in tests/test_continuous_serving.py.
+
+Two scheduling modes share that contract:
+
+  * pinned   — one bucket ⟨spec, verify_v⟩ fixed at construction (default).
+  * adaptive — pass ``buckets=`` (a ladder): warmup precompiles ONE megastep
+    per ladder bucket, and a `BucketController` re-picks the bucket every
+    megastep from per-bucket AAL EMAs, the latency profile (or online
+    iter-time EMAs) and pool occupancy, with hysteresis. Switching buckets
+    replays a different warmup-compiled executable — it never compiles, so
+    `recompiles_after_warmup == 0` holds across switches too (asserted in
+    tests/test_adaptive_serving.py).
 
 Idle slots (no request waiting) keep decoding garbage — discarding their
 output is cheaper than breaking the static batch shape. Their cache growth
@@ -24,12 +35,14 @@ from __future__ import annotations
 import time
 from collections import deque
 from dataclasses import dataclass, field
-from typing import Deque, Dict, List, Optional
+from typing import Deque, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.core.buckets import Bucket, ladder_headroom, validate_ladder
 from repro.core.egt import DraftSpec, egt_spec
 from repro.core.engine import DecodeState, SpeculativeEngine
+from repro.serving.controller import BucketController
 from repro.serving.server import Request, cut_at_eos, pad_prompt
 
 
@@ -50,6 +63,14 @@ class ServingMetrics:
     recompiles_after_warmup: int = 0
     mesh_devices: int = 1        # devices the engine's mesh spans (1 = unsharded)
     latencies: List[float] = field(default_factory=list)   # submit -> finish
+    # adaptive scheduling: the bucket each step ran, and per-bucket rollups
+    bucket_history: List[Tuple[int, int, int]] = field(default_factory=list)
+    bucket_steps: Dict[Tuple[int, int, int], int] = field(default_factory=dict)
+    bucket_accept: Dict[Tuple[int, int, int], List[float]] = field(
+        default_factory=dict)
+    bucket_iter: Dict[Tuple[int, int, int], List[float]] = field(
+        default_factory=dict)
+    bucket_switches: int = 0
 
     @property
     def aal(self) -> float:
@@ -83,27 +104,62 @@ class ServingMetrics:
             "mesh_devices": self.mesh_devices,
             "latency_p50_s": float(np.percentile(lat, 50)),
             "latency_p95_s": float(np.percentile(lat, 95)),
+            "bucket_switches": self.bucket_switches,
+            "buckets": {
+                "x".join(map(str, k)): {
+                    "steps": self.bucket_steps[k],
+                    "aal": float(np.mean(self.bucket_accept[k]))
+                    if self.bucket_accept.get(k) else 0.0,
+                    "iter_ms": 1e3 * float(np.mean(self.bucket_iter[k]))
+                    if self.bucket_iter.get(k) else 0.0,
+                } for k in self.bucket_steps},
         }
 
 
 class ContinuousServer:
     """Slot scheduler over the engine's stepwise API.
 
-    The bucket ⟨spec, verify_v⟩ is pinned so every decode step replays the
-    same executable (dynamic per-step bucket selection would trade compile
-    stability for scheduling freedom; the serving regime picks stability).
+    Pinned mode fixes one bucket ⟨spec, verify_v⟩ at construction. Adaptive
+    mode (``buckets=``) precompiles the whole ladder at warmup and lets a
+    `BucketController` re-pick the bucket each megastep — scheduling freedom
+    WITHOUT giving up compile stability, because a switch replays a
+    different warmup-compiled executable instead of tracing a new one.
     """
 
     def __init__(self, engine: SpeculativeEngine, batch_size: int,
                  prompt_pad: int, eos_id: Optional[int] = None,
                  spec: Optional[DraftSpec] = None,
-                 verify_v: Optional[int] = None):
+                 verify_v: Optional[int] = None,
+                 buckets: Optional[Sequence[Bucket]] = None,
+                 controller: Optional[BucketController] = None):
         self.engine = engine
         self.batch_size = batch_size
         self.prompt_pad = prompt_pad
         self.eos_id = eos_id
-        self.spec = spec if spec is not None else egt_spec(4, 2)
-        self.verify_v = verify_v or self.spec.num_nodes
+        self.ladder: Optional[Tuple[Bucket, ...]] = None
+        self.controller: Optional[BucketController] = None
+        if buckets is not None:
+            if spec is not None or verify_v is not None:
+                raise ValueError("pass either a pinned spec/verify_v or an "
+                                 "adaptive bucket ladder, not both")
+            self.ladder = validate_ladder(buckets, engine.cfg.max_target_len,
+                                          prompt_pad)
+            if (controller is not None
+                    and tuple(controller.ladder) != self.ladder):
+                # a controller over different buckets could pick one warmup
+                # never compiled — a compile on the decode path
+                raise ValueError("controller ladder does not match the "
+                                 "server's bucket ladder")
+            self.controller = controller or BucketController(
+                self.ladder, profile=engine.profile)
+            first = self.ladder[0]
+            self.spec = egt_spec(first.depth, first.width)
+            self.verify_v = first.verify
+        else:
+            if controller is not None:
+                raise ValueError("a controller needs a bucket ladder")
+            self.spec = spec if spec is not None else egt_spec(4, 2)
+            self.verify_v = verify_v or self.spec.num_nodes
         self.queue: Deque[Request] = deque()
         self.done: Dict[int, Request] = {}
         self.metrics = ServingMetrics()
@@ -117,10 +173,14 @@ class ContinuousServer:
         # host-side mirror of each slot's committed cache length: prompt at
         # admission, +accept_len per step (exact — no device sync needed)
         self._slot_len = np.zeros(batch_size, np.int64)
-        self._headroom = self.spec.depth + 2  # max cache growth per step
+        # max cache growth per step: under a ladder the DEEPEST bucket binds
+        # (any step may run it), not whichever bucket is currently selected
+        self._headroom = (ladder_headroom(self.ladder) if self.ladder
+                          else self.spec.depth + 2)
         self._compile_base: Optional[int] = None
         self._exec_base: int = 0
         self._just_finished: List[Request] = []
+        self.warmed_buckets: set = set()  # bucket keys compiled at warmup
 
     # ---------------------------------------------------------- lifecycle --
     def submit(self, req: Request):
@@ -128,16 +188,29 @@ class ContinuousServer:
         self.queue.append(req)
 
     def warmup(self):
-        """Compile the three steady-state executables (slot prefill, slot
-        reset, pinned megastep) on dummy traffic, then snapshot the compile
-        counter: any later compile counts as a recompile-after-warmup."""
+        """Compile the steady-state executables (slot prefill, slot reset,
+        one megastep per bucket — the whole ladder in adaptive mode) on
+        dummy traffic, then snapshot the compile counter: any later compile
+        counts as a recompile-after-warmup."""
         dummy = np.zeros(self.prompt_pad, np.int32)
         self.state = self.engine.prefill_into_slot(self.state, 0, dummy, 1)
         for i in range(self.batch_size):
             self._park(i)
-        self.state, res = self.engine.decode_step(self.state, spec=self.spec,
-                                                  verify_v=self.verify_v)
-        self._slot_len += res.accept_len
+        if self.ladder is not None:
+            self.state, iter_times = self.engine.warmup_buckets(
+                self.state, self.ladder)
+            self.controller.seed_iter_times(iter_times)
+            self.warmed_buckets = {b.key() for b in self.ladder}
+            # warmup ran 2·len(ladder) garbage decode steps: re-sync the
+            # host-side length mirror once (off the hot path)
+            self._slot_len = np.asarray(
+                self.engine.slot_lengths(self.state), np.int64)
+        else:
+            self.state, res = self.engine.decode_step(
+                self.state, spec=self.spec, verify_v=self.verify_v)
+            self._slot_len += res.accept_len
+            self.warmed_buckets = {
+                (self.spec.depth, self.spec.width, self.verify_v)}
         self._compile_base = self.engine._compile_count
         self._exec_base = self.engine.executable_count()
 
@@ -170,8 +243,12 @@ class ContinuousServer:
                     self.state, i, toks, plen)
                 self.metrics.prefill_times.append(time.perf_counter() - t0)
                 self._slot_len[i] = plen
-                # cap generation so commits can never run past the cache
-                self._budget[i] = min(req.max_new, L - plen - self._headroom)
+                # cap generation so commits can never run past the cache;
+                # clamp at 0 so a prompt with no headroom left retires
+                # immediately (a negative budget would slip tokens through
+                # _credit's front-slice)
+                self._budget[i] = max(
+                    0, min(req.max_new, L - plen - self._headroom))
                 self.slots[i] = req
                 self._buffers[i] = []
                 self.metrics.admissions += 1
@@ -199,7 +276,10 @@ class ContinuousServer:
         buf = self._buffers[slot]
         take = tokens
         finished = False
-        room = int(self._budget[slot]) - len(buf)
+        # clamp: with the budget exhausted (or 0 at admission) room goes
+        # non-positive, and a negative slice take[:room] would KEEP tokens
+        # from the front instead of dropping them all
+        room = max(0, int(self._budget[slot]) - len(buf))
         if len(take) >= room:
             take, finished = take[:room], True
         take, hit_eos = cut_at_eos(take, self.eos_id)
@@ -234,17 +314,32 @@ class ContinuousServer:
         Returns the requests completed during this step."""
         self._just_finished = []
         self._admit()
-        if not any(r is not None for r in self.slots):
+        active = [i for i, r in enumerate(self.slots) if r is not None]
+        if not active:
             return self._just_finished
+        if self.controller is not None:
+            # occupancy-aware online bucket selection; every ladder bucket
+            # was compiled at warmup, so this only changes WHICH cached
+            # executable the megastep below replays
+            b = self.controller.choose(n_active=len(active))
+            self.spec, self.verify_v = egt_spec(b.depth, b.width), b.verify
         self.state, res = self.engine.decode_step(
             self.state, spec=self.spec, verify_v=self.verify_v)
         self._slot_len += res.accept_len
         self.metrics.steps += 1
         self.metrics.iter_times.append(res.iter_time)
-        active = [i for i, r in enumerate(self.slots) if r is not None]
         self.metrics.occupancy.append(len(active) / self.batch_size)
-        if active:
-            self.metrics.accept_lens.append(res.accept_len[active])
+        self.metrics.accept_lens.append(res.accept_len[active])
+        key = res.bucket
+        self.metrics.bucket_history.append(key)
+        self.metrics.bucket_steps[key] = self.metrics.bucket_steps.get(key, 0) + 1
+        self.metrics.bucket_accept.setdefault(key, []).append(
+            res.mean_accept(active))
+        self.metrics.bucket_iter.setdefault(key, []).append(res.iter_time)
+        if self.controller is not None:
+            self.controller.observe(key, res.mean_accept(active),
+                                    res.iter_time)
+            self.metrics.bucket_switches = self.controller.switches
         for i in active:
             toks = res.tokens[i]
             self._credit(i, toks[toks >= 0])

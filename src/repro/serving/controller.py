@@ -1,0 +1,116 @@
+"""Online bucket controller for adaptive continuous serving.
+
+The paper's latency objective (§4.1) runs offline: profile once, pick one
+⟨D, W, V⟩, pin it. This module runs the same objective *online* over a small
+precompiled **bucket ladder**: every megastep the controller re-scores the
+ladder from
+
+  (a) per-bucket AAL — an EMA of observed accept lengths (optimistic
+      depth+1 prior for buckets not yet visited, so each gets tried once),
+  (b) per-bucket iteration time — the measured ``LatencyProfile`` through
+      ``speedup_objective`` when a profile is given, otherwise an online
+      EMA of observed wall-clock iteration times seeded at warmup,
+  (c) pool occupancy — with a profile, the number of active slots feeds the
+      latency model's ``batch`` term: a full pool pushes wide/deep buckets
+      past the saturation knee (shallow wins), a draining pool keeps deep
+      trees in the flat memory-bound region (deep wins). WITHOUT a profile
+      there is no model to predict a bucket's cost at a different
+      occupancy, so online mode reacts to occupancy only indirectly —
+      observed iteration times already include whatever occupancy they ran
+      at, and the EMA lags the pool,
+
+with hysteresis: the incumbent bucket is kept unless a challenger beats it
+by a relative margin AND the incumbent has dwelt for a minimum number of
+steps. That bounds switching frequency, keeps the executable cache hot
+(every ladder bucket is compiled at warmup — switching replays a different
+cached executable, it never compiles), and prevents flapping on noisy AAL.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Sequence, Tuple
+
+from repro.core.buckets import Bucket
+from repro.core.objective import (AALEstimator, LatencyProfile, ema_update,
+                                  speedup_objective)
+
+BucketKey = Tuple[int, int, int]
+
+
+class BucketController:
+    """Pick the next megastep's bucket from a precompiled ladder."""
+
+    def __init__(self, ladder: Sequence[Bucket],
+                 profile: Optional[LatencyProfile] = None,
+                 aal_alpha: float = 0.3, iter_alpha: float = 0.3,
+                 hysteresis: float = 0.1, min_dwell: int = 2):
+        if not ladder:
+            raise ValueError("controller needs a non-empty bucket ladder")
+        self.ladder: Tuple[Bucket, ...] = tuple(ladder)
+        self.profile = profile
+        self.aal = AALEstimator(alpha=aal_alpha)
+        self.iter_alpha = iter_alpha
+        self.hysteresis = hysteresis
+        self.min_dwell = min_dwell
+        self._iter_ema: Dict[BucketKey, float] = {}
+        self.current: Optional[Bucket] = None
+        self.switches = 0
+        self._dwell = 0
+
+    # ------------------------------------------------------------ telemetry --
+    def seed_iter_times(self, times: Dict[BucketKey, float]):
+        """Seed the per-bucket iteration-time EMAs (from warmup replays)."""
+        for k, t in times.items():
+            if t > 0:
+                self._iter_ema.setdefault(k, float(t))
+
+    def observe(self, key: BucketKey, mean_accept_len: float,
+                iter_time: float):
+        """Feed one megastep's outcome back into the estimators."""
+        self.aal.update(key, mean_accept_len)
+        if iter_time > 0:
+            ema_update(self._iter_ema, key, iter_time, self.iter_alpha)
+
+    # -------------------------------------------------------------- scoring --
+    def score(self, bucket: Bucket, n_active: int = 1) -> float:
+        """Estimated speedup of running `bucket` at the current occupancy.
+
+        Profile mode predicts the cost at ``n_active`` explicitly. Online
+        mode (no profile) scores AAL per observed second and necessarily
+        ignores ``n_active`` — the iter-time EMA embeds the occupancy its
+        observations ran at (see the module docstring, item c)."""
+        aal = self.aal.estimate(bucket.key())
+        if self.profile is not None:
+            return speedup_objective(self.profile, aal, bucket.depth,
+                                     bucket.width, bucket.verify,
+                                     batch=max(1, n_active))
+        t = self._iter_ema.get(bucket.key())
+        if t is None:
+            return float("inf")     # unvisited: explore it once
+        return aal / t
+
+    def choose(self, n_active: int = 1) -> Bucket:
+        """Bucket for the next megastep, with hysteresis on the incumbent."""
+        scores = {b.key(): self.score(b, n_active) for b in self.ladder}
+        best = max(self.ladder, key=lambda b: scores[b.key()])  # first wins ties
+        if self.current is None:
+            self.current, self._dwell = best, 0
+        elif (best.key() != self.current.key()
+              and self._dwell >= self.min_dwell
+              and scores[best.key()]
+              > scores[self.current.key()] * (1.0 + self.hysteresis)):
+            self.current, self._dwell = best, 0
+            self.switches += 1
+        else:
+            self._dwell += 1
+        return self.current
+
+    def summary(self) -> Dict[str, object]:
+        return {
+            "ladder": [list(b.key()) for b in self.ladder],
+            "current": list(self.current.key()) if self.current else None,
+            "switches": self.switches,
+            "aal_estimates": {str(k): v for k, v in
+                              self.aal.estimates(
+                                  [b.key() for b in self.ladder]).items()},
+            "iter_ema_s": {str(k): v for k, v in self._iter_ema.items()},
+        }

@@ -1,0 +1,66 @@
+"""Emulated-clock driving for scheduling-policy evaluation.
+
+Wall clock on the CPU testbed cannot distinguish draft-tree buckets — it is
+dominated by interpreter and dispatch overhead, not by the width-latency
+curves the scheduler reasons about. Experiments that compare scheduling
+policies therefore run the REAL engine (real token flow, real acceptance)
+but charge each megastep the latency model's occupancy-aware cost
+(`objective.step_latency`) and each admission one prefill-width verifier
+call, accumulating an emulated clock. Used by benchmarks/fig_serving.py's
+``adaptive_sweep`` and tests/test_adaptive_serving.py — one implementation,
+so the acceptance test and the benchmark artifact cannot disagree about
+what a step costs.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+from repro.core.objective import LatencyProfile, step_latency
+from repro.serving.continuous import ContinuousServer
+
+
+def charged_step(server: ContinuousServer, profile: LatencyProfile
+                 ) -> Tuple[float, List]:
+    """Run one ``server.step()`` and return (emulated cost, finished
+    requests): admissions this call are charged a prefill-width verifier
+    call each; a decode step is charged the profile latency of the bucket
+    it ran at the occupancy it ran at."""
+    adm0, steps0 = server.metrics.admissions, server.metrics.steps
+    finished = server.step()
+    cost = ((server.metrics.admissions - adm0)
+            * profile.t_verify(server.prompt_pad))
+    if server.metrics.steps > steps0:
+        d, w, v = server.metrics.bucket_history[-1]
+        n_active = int(round(server.metrics.occupancy[-1]
+                             * server.batch_size))
+        cost += step_latency(profile, d, w, v, batch=max(1, n_active))
+    return cost, finished
+
+
+def drive_trace(server: ContinuousServer, trace, profile: LatencyProfile
+                ) -> Dict:
+    """Replay ``trace`` ([(arrival_emu_s, Request)] sorted by arrival) on
+    the emulated clock until everything retires. Warmup is charged nothing
+    (it is off the steady-state path). Returns busy/makespan times and
+    per-request submit->finish latencies in emulated seconds."""
+    server.warmup()
+    emu_t, busy = 0.0, 0.0
+    submit_at: Dict[int, float] = {}
+    finish_at: Dict[int, float] = {}
+    pending: List = list(trace)
+    while pending or server.queue or any(s is not None for s in server.slots):
+        while pending and pending[0][0] <= emu_t:
+            arr, req = pending.pop(0)
+            submit_at[req.uid] = arr
+            server.submit(req)
+        if not (server.queue or any(s is not None for s in server.slots)):
+            emu_t = pending[0][0]       # idle: jump to the next arrival
+            continue
+        cost, finished = charged_step(server, profile)
+        emu_t += cost
+        busy += cost
+        for req in finished:
+            finish_at[req.uid] = emu_t
+    return {"busy_s": busy, "makespan_s": emu_t,
+            "latencies_s": {u: finish_at[u] - submit_at[u]
+                            for u in finish_at}}

@@ -1,0 +1,197 @@
+"""Properties of the host/device accept boundary.
+
+1. Differential: `scheduler.greedy_accept_host` (the staged plan's CPU
+   accept stage) must agree with `verify.greedy_accept` (the fused plan's
+   in-graph accept) on chain, accept_len, bonus and last node, over
+   randomized trees with dead nodes and pruned subtrees. Siblings carry
+   DISTINCT tokens — the real drafting invariant (top-k candidates of one
+   parent never repeat), and what makes the greedy chain unique so the two
+   implementations are comparable.
+2. Statistical losslessness: `verify.stochastic_accept` commits tokens
+   distributed exactly like the target model on multi-child trees where
+   the rejection/residual paths genuinely trigger (chi-square test).
+
+The hypothesis versions explore the input space; the seeded versions run
+the same checker everywhere (hypothesis is an optional dev dependency).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import pruning, verify
+from repro.core.scheduler import greedy_accept_host
+from repro.core.tree import TreeArrays
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                       # optional dev dependency
+    HAVE_HYPOTHESIS = False
+
+VOCAB = 6                                 # small => target collisions likely
+
+
+# ----------------------------------------------------------- generators ----
+def _random_tree(rng, max_n=12, kill_frac=0.0) -> TreeArrays:
+    """Random topologically-ordered tree with distinct sibling tokens and
+    (optionally) dead nodes. Root is always live. Fan-out is capped at
+    VOCAB so siblings can actually be distinct — with duplicate sibling
+    tokens the host (first-match walk) and device (deepest-accepted) chains
+    legitimately diverge, and real drafting never produces duplicates."""
+    n = int(rng.integers(2, max_n + 1))
+    parents = [-1]
+    fanout = [0]
+    for i in range(1, n):
+        allowed = [p for p in range(i) if fanout[p] < VOCAB]
+        p = int(rng.choice(allowed))
+        parents.append(p)
+        fanout[p] += 1
+        fanout.append(0)
+    parents = np.asarray(parents, np.int32)
+    depths = np.zeros(n, np.int32)
+    tokens = np.zeros(n, np.int32)
+    tokens[0] = int(rng.integers(0, VOCAB))
+    for p in range(n):
+        kids = np.nonzero(parents == p)[0]
+        if len(kids):
+            toks = rng.choice(VOCAB, size=len(kids), replace=False)
+            for j, k in enumerate(kids):
+                tokens[k] = toks[j]
+                depths[k] = depths[p] + 1
+    live = rng.random(n) >= kill_frac
+    live[0] = True
+    path_lp = np.zeros(n, np.float32)
+    for i in range(1, n):
+        path_lp[i] = path_lp[parents[i]] - float(rng.exponential(1.0))
+    return TreeArrays(tokens=jnp.asarray(tokens)[None],
+                      parents=jnp.asarray(parents)[None],
+                      depths=jnp.asarray(depths)[None],
+                      path_lp=jnp.asarray(path_lp)[None],
+                      live=jnp.asarray(live)[None])
+
+
+def _check_host_matches_device(tree: TreeArrays, rng):
+    n = int(tree.tokens.shape[1])
+    logits = jnp.asarray(rng.normal(size=(1, n, VOCAB)), jnp.float32)
+    acc = verify.greedy_accept(tree, logits, n)
+    node_idx, alen, bonus, last = greedy_accept_host(
+        np.asarray(tree.tokens), np.asarray(tree.parents),
+        np.asarray(tree.depths), np.asarray(tree.live),
+        np.asarray(jnp.argmax(logits, -1)), n)
+    assert int(acc.accept_len[0]) == int(alen[0])
+    assert int(acc.bonus[0]) == int(bonus[0])
+    assert int(acc.last_node[0]) == int(last[0])
+    k = int(alen[0])
+    np.testing.assert_array_equal(np.asarray(acc.node_idx)[0, :k],
+                                  node_idx[0, :k])
+
+
+# ------------------------------------------------- differential: seeded ----
+@pytest.mark.parametrize("seed", range(40))
+def test_greedy_accept_host_device_agree_with_dead_nodes(seed):
+    rng = np.random.default_rng(seed)
+    tree = _random_tree(rng, kill_frac=0.35)
+    _check_host_matches_device(tree, rng)
+
+
+@pytest.mark.parametrize("seed", range(40))
+def test_greedy_accept_host_device_agree_on_pruned_trees(seed):
+    """Prune a live tree to a top-k subtree first: the boundary must agree
+    on exactly the inputs the staged plan feeds it after O3 pruning."""
+    rng = np.random.default_rng(1000 + seed)
+    tree = _random_tree(rng, kill_frac=0.0)
+    n = int(tree.tokens.shape[1])
+    v = int(rng.integers(1, n + 1))
+    sub, _ = pruning.topk_prune(tree, v, n)
+    _check_host_matches_device(sub, rng)
+
+
+# --------------------------------------------- differential: hypothesis ----
+if HAVE_HYPOTHESIS:
+    settings.register_profile("ci", max_examples=25, deadline=None,
+                              print_blob=True)
+    settings.load_profile("ci")
+
+    @given(st.integers(0, 10 ** 6), st.floats(0.0, 0.6),
+           st.integers(2, 14))
+    def test_greedy_accept_differential_hypothesis(seed, kill_frac, max_n):
+        rng = np.random.default_rng(seed)
+        tree = _random_tree(rng, max_n=max_n, kill_frac=kill_frac)
+        _check_host_matches_device(tree, rng)
+
+    @given(st.integers(0, 10 ** 6), st.integers(2, 14))
+    def test_greedy_accept_pruned_hypothesis(seed, max_n):
+        rng = np.random.default_rng(seed)
+        tree = _random_tree(rng, max_n=max_n, kill_frac=0.0)
+        n = int(tree.tokens.shape[1])
+        sub, _ = pruning.topk_prune(tree, int(rng.integers(1, n + 1)), n)
+        _check_host_matches_device(sub, rng)
+
+
+# --------------------------------- stochastic acceptance losslessness ----
+def test_stochastic_accept_is_lossless_on_multichild_trees():
+    """SpecInfer-style multi-branch rejection sampling: with two children
+    drawn i.i.d. from the drafter distribution q, the committed depth-1
+    token (accepted child, or the bonus sampled from the twice-updated
+    residual when both reject) must be distributed EXACTLY like the target
+    p. Chi-square over pooled draws from several seeds; fixed seeds keep
+    the test deterministic."""
+    vocab, n, draws = 4, 3, 6000
+    q = np.array([0.5, 0.3, 0.15, 0.05])     # drafter: confidently wrong
+    p = np.array([0.25, 0.25, 0.3, 0.2])     # target
+    counts = np.zeros(vocab)
+    n_reject_all = n_second_child = 0
+    for seed in (0, 1, 2):
+        rng = np.random.default_rng(seed)
+        kids = rng.choice(vocab, size=(draws, 2), p=q)   # i.i.d. from q
+        tree = TreeArrays(
+            tokens=jnp.concatenate([jnp.zeros((draws, 1), jnp.int32),
+                                    jnp.asarray(kids, jnp.int32)], axis=1),
+            parents=jnp.broadcast_to(jnp.array([-1, 0, 0], jnp.int32),
+                                     (draws, n)),
+            depths=jnp.broadcast_to(jnp.array([0, 1, 1], jnp.int32),
+                                    (draws, n)),
+            path_lp=jnp.zeros((draws, n), jnp.float32),
+            live=jnp.ones((draws, n), bool),
+        )
+        dp = jnp.broadcast_to(jnp.asarray(q, jnp.float32), (draws, n, vocab))
+        tp = jnp.broadcast_to(jnp.asarray(p, jnp.float32), (draws, n, vocab))
+        acc = verify.stochastic_accept(tree, dp, tp,
+                                       jax.random.PRNGKey(100 + seed),
+                                       a_max=2, max_children=2)
+        alen = np.asarray(acc.accept_len)
+        last = np.asarray(acc.last_node)
+        toks = np.asarray(tree.tokens)
+        bonus = np.asarray(acc.bonus)
+        emitted = np.where(alen >= 2, toks[np.arange(draws), last], bonus)
+        np.add.at(counts, emitted, 1)
+        n_reject_all += int((alen == 1).sum())
+        n_second_child += int((last == 2).sum())
+
+    # the interesting paths genuinely ran: residual updates (both children
+    # rejected -> bonus from the twice-subtracted residual) and the
+    # second-branch retry
+    assert n_reject_all > 100
+    assert n_second_child > 100
+
+    total = counts.sum()
+    expected = p * total
+    chi2 = float(((counts - expected) ** 2 / expected).sum())
+    # chi-square critical value, df=3, alpha=0.001
+    assert chi2 < 16.27, (chi2, counts / total, p)
+
+
+def test_stochastic_accept_biased_without_residual_update():
+    """Control for the test above: scoring the same draws against the
+    DRAFTER distribution (as if acceptance were unconditional) is visibly
+    not target-distributed — the chi-square above has teeth."""
+    vocab, draws = 4, 18000
+    q = np.array([0.5, 0.3, 0.15, 0.05])
+    p = np.array([0.25, 0.25, 0.3, 0.2])
+    rng = np.random.default_rng(0)
+    naive = rng.choice(vocab, size=draws, p=q)   # drafter output, no accept
+    counts = np.bincount(naive, minlength=vocab).astype(float)
+    expected = p * draws
+    chi2 = float(((counts - expected) ** 2 / expected).sum())
+    assert chi2 > 16.27

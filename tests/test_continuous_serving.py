@@ -104,6 +104,11 @@ def test_slot_lengths_and_long_run_parking(tb):
 
 
 # ------------------------------------------------ scheduler logic (no jit) --
+class _FakeState:
+    def __init__(self, batch_size):
+        self.root = np.zeros(batch_size, np.int64)
+
+
 class _FakeStepEngine:
     """Just enough engine for ContinuousServer's host-side bookkeeping."""
 
@@ -113,7 +118,10 @@ class _FakeStepEngine:
     _compile_count = 0
 
     def init_decode_state(self, batch_size):
-        return None
+        return _FakeState(batch_size)
+
+    def prefill_into_slot(self, state, slot, tokens, length):
+        return state
 
     def mesh_info(self):
         return {"devices": 1, "shape": None}
@@ -157,6 +165,40 @@ def test_credit_ignores_idle_slot():
     srv = _server()
     srv._credit(0, np.array([5, 6]))
     assert srv.metrics.tokens_out == 0 and not srv.done
+
+
+def test_credit_negative_room_drops_all_tokens():
+    """Regression: with the budget exhausted (room < 0), the old negative
+    slice take[:room] KEPT tokens from the front; it must drop them all and
+    retire with what was already buffered."""
+    srv = _server()
+    _occupy(srv, 0, max_new=2)
+    srv._buffers[0] = [9, 9, 9]          # buffered past the budget somehow
+    srv._credit(0, np.array([5, 6, 7]))  # room = 2 - 3 = -1
+    assert srv.metrics.tokens_out == 0   # nothing new credited
+    np.testing.assert_array_equal(srv.done[0].result, [9, 9, 9])
+
+
+def test_zero_budget_admission_retires_immediately(monkeypatch):
+    """Regression: a prompt so close to the cache cap that no generation
+    budget remains must be clamped to 0 (not negative) and retire at
+    admission with an empty result instead of slipping tokens through
+    _credit's front-slice."""
+    srv = _server()
+    # prompt_pad=8 fills the slot to length 8; max_target_len=64 leaves
+    # plenty, so shrink the cap via the headroom arithmetic instead
+    # (monkeypatch: cfg is a class attribute shared by every fake engine)
+    monkeypatch.setattr(srv.engine.cfg, "max_target_len",
+                        srv.prompt_pad + srv._headroom - 2)
+    req = Request(uid=5, prompt=np.arange(1, srv.prompt_pad + 1), max_new=10)
+    srv.submit(req)
+    srv._admit()
+    assert srv._budget[0] == 0           # clamped, not negative
+    assert srv.slots[0] is None          # retired at admission
+    assert 5 in srv.done
+    assert len(srv.done[5].result) == 0
+    assert srv.done[5].stats["length_capped"]
+    assert srv.metrics.tokens_out == 0
 
 
 # --------------------------------------------------- per-slot cache ops ----

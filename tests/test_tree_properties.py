@@ -12,7 +12,10 @@ from repro.core import pruning, verify  # noqa: E402
 from repro.core.tree import (TreeArrays, ancestor_mask,  # noqa: E402
                              ancestor_paths, gather_subtree, node_depths)
 
-settings.register_profile("ci", max_examples=25, deadline=None)
+# print_blob: on failure, emit the @reproduce_failure blob alongside the
+# randomized seed so the CI property-test job's failures replay locally
+settings.register_profile("ci", max_examples=25, deadline=None,
+                          print_blob=True)
 settings.load_profile("ci")
 
 
