@@ -1,0 +1,158 @@
+"""Bench-regression gate: diff a fig_serving.json artifact against the
+committed baseline and FAIL (exit 1) on a >10% drop in any gated metric.
+
+The gate only reads metrics that are deterministic on CI runners:
+
+  * emulated-clock throughput and AAL from ``adaptive_sweep`` (step costs
+    are profile-charged, not wall-clock, so runner speed cancels out);
+  * AAL and the fixed-cache-bytes slot ratio from ``quant_sweep`` (the
+    sweep drains an upfront queue — no wall-clock admission races);
+  * every ``recompiles_after_warmup`` anywhere in the artifact must be 0
+    (compile stability is a hard invariant, not a percentage).
+
+Wall-clock throughputs (the ``servers``/``mesh_sweep`` rows) are recorded
+in the artifact for humans but NOT gated — shared CI runners jitter far
+beyond 10% and a gate on them would train everyone to ignore red.
+
+Usage:
+  python benchmarks/check_regression.py \
+      --baseline benchmarks/results/baseline_serving.json \
+      --current benchmarks/results/fig_serving.json
+  # refresh the committed baseline from a trusted run:
+  python benchmarks/check_regression.py --write-baseline \
+      --current benchmarks/results/fig_serving.json \
+      --baseline benchmarks/results/baseline_serving.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Any, Dict, List, Tuple
+
+# dotted path into fig_serving.json -> direction ("higher" is better for
+# every gated metric today; the field keeps the gate honest if that changes)
+GATED_METRICS: Tuple[Tuple[str, str], ...] = (
+    ("adaptive_sweep.adaptive.throughput_tok_s", "higher"),
+    ("adaptive_sweep.adaptive.aal", "higher"),
+    ("adaptive_sweep.adaptive_over_best_pinned", "higher"),
+    ("quant_sweep.none.aal", "higher"),
+    ("quant_sweep.int8-kv.aal", "higher"),
+    ("quant_sweep.slots_ratio", "higher"),
+)
+DEFAULT_THRESHOLD = 0.10
+
+
+def lookup(blob: Dict, dotted: str) -> Any:
+    cur: Any = blob
+    for part in dotted.split("."):
+        if not isinstance(cur, dict) or part not in cur:
+            raise KeyError(dotted)
+        cur = cur[part]
+    return cur
+
+
+def _walk_recompiles(node: Any, path: str, out: List[Tuple[str, int]]):
+    if isinstance(node, dict):
+        for k, v in node.items():
+            p = f"{path}.{k}" if path else str(k)
+            if k == "recompiles_after_warmup":
+                out.append((p, int(v)))
+            else:
+                _walk_recompiles(v, p, out)
+    elif isinstance(node, list):  # sweeps recorded as row lists still count
+        for i, v in enumerate(node):
+            _walk_recompiles(v, f"{path}[{i}]", out)
+
+
+def compare(baseline: Dict, current: Dict,
+            threshold: float = DEFAULT_THRESHOLD) -> List[str]:
+    """Return the list of failures (empty == gate passes)."""
+    failures: List[str] = []
+    metrics = baseline.get("metrics")
+    if not isinstance(metrics, dict) or not metrics:
+        return ["baseline has no 'metrics' table — refusing to pass vacuously"]
+    thr = float(baseline.get("threshold", threshold))
+    for key, base_val in metrics.items():
+        direction = dict(GATED_METRICS).get(key, "higher")
+        try:
+            cur_val = float(lookup(current, key))
+        except KeyError:
+            failures.append(f"{key}: missing from the current artifact")
+            continue
+        base_val = float(base_val)
+        if direction == "higher":
+            floor = base_val * (1.0 - thr)
+            if cur_val < floor:
+                failures.append(
+                    f"{key}: {cur_val:.4g} < {floor:.4g} "
+                    f"(baseline {base_val:.4g}, -{thr:.0%} allowed)")
+        else:
+            ceil = base_val * (1.0 + thr)
+            if cur_val > ceil:
+                failures.append(
+                    f"{key}: {cur_val:.4g} > {ceil:.4g} "
+                    f"(baseline {base_val:.4g}, +{thr:.0%} allowed)")
+    recompiles: List[Tuple[str, int]] = []
+    _walk_recompiles(current, "", recompiles)
+    if not recompiles:
+        failures.append("no recompiles_after_warmup found in the artifact — "
+                        "the compile-stability invariant went unmeasured")
+    for path, val in recompiles:
+        if val != 0:
+            failures.append(f"{path}: {val} recompiles after warmup (must be 0)")
+    return failures
+
+
+def extract_baseline(current: Dict,
+                     threshold: float = DEFAULT_THRESHOLD) -> Dict:
+    metrics = {}
+    for key, _ in GATED_METRICS:
+        metrics[key] = float(lookup(current, key))
+    return {"threshold": threshold, "metrics": metrics}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", required=True)
+    ap.add_argument("--current", required=True)
+    ap.add_argument("--threshold", type=float, default=None,
+                    help="override the baseline's relative tolerance")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="extract the gated metrics from --current and "
+                         "write them to --baseline instead of checking")
+    args = ap.parse_args(argv)
+
+    with open(args.current) as f:
+        current = json.load(f)
+    if args.write_baseline:
+        blob = extract_baseline(
+            current,
+            DEFAULT_THRESHOLD if args.threshold is None else args.threshold)
+        with open(args.baseline, "w") as f:
+            json.dump(blob, f, indent=1)
+            f.write("\n")
+        print(f"baseline written to {args.baseline}:")
+        for k, v in blob["metrics"].items():
+            print(f"  {k} = {v:.4g}")
+        return 0
+
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    if args.threshold is not None:
+        baseline = {**baseline, "threshold": args.threshold}
+    failures = compare(baseline, current)
+    if failures:
+        print("BENCH REGRESSION GATE FAILED:", file=sys.stderr)
+        for fail in failures:
+            print(f"  - {fail}", file=sys.stderr)
+        return 1
+    thr = baseline.get("threshold", DEFAULT_THRESHOLD)
+    print(f"bench regression gate passed "
+          f"({len(baseline['metrics'])} metrics within {thr:.0%}, "
+          f"all recompile counters 0)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

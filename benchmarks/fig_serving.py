@@ -22,6 +22,15 @@ per-shape throughput/latency under ``mesh_sweep`` — the per-PR record of
 how sharding the speculative megastep behaves as the mesh changes. Every
 sharded run must still report zero recompiles after warmup.
 
+``quant_sweep`` compares the quantized serving path (int8 KV caches, and
+int8-kv+w8 weight-only on top) against fp32 on an identical request set
+driven queue-upfront (no wall-clock admission races, so token flow and AAL
+are deterministic given the seeds): per mode it records cache bytes per
+slot, the max concurrent slots a fixed cache-byte budget sustains (the
+budget is what the fp32 pool uses — the ≥1.8x headline), throughput, the
+AAL delta vs fp32 and recompiles-after-warmup (must stay 0: quantization
+changes dtypes at trace time, never shapes at step time).
+
 ``adaptive_sweep`` compares adaptive bucket scheduling (a precompiled
 ladder + the online controller) against every pinned ladder bucket on a
 mixed short/long Poisson trace. Decode/prefill costs come from an
@@ -47,7 +56,8 @@ from repro.core.egt import egt_spec
 from repro.core.engine import EngineConfig, SpeculativeEngine
 from repro.core.objective import LatencyProfile
 from repro.data.pipeline import MarkovSource
-from repro.serving.continuous import ContinuousServer
+from repro.quant import QuantConfig
+from repro.serving.continuous import ContinuousServer, slots_at_budget
 from repro.serving.controller import BucketController
 from repro.serving.emulation import drive_trace
 from repro.serving.server import BatchedServer, Request
@@ -257,6 +267,64 @@ def adaptive_sweep(tb, n: int, rate_hz: float, batch: int,
     return out
 
 
+def quant_sweep(tb, n: int, max_new: int, batch: int,
+                prompt_pad: int = 16) -> Dict:
+    """Quantized vs fp32 continuous serving on one request set (submitted
+    upfront; deterministic drain). Keys per mode: throughput, AAL,
+    kv_bytes_per_slot, slots at the fp32 pool's cache-byte budget,
+    recompiles. Top-level: slots_ratio (int8 over fp32 at fixed bytes) and
+    aal_delta (int8-kv minus fp32 — ~0: greedy int8-KV decode is
+    token-exact on this testbed, see tests/test_quant.py)."""
+    src = MarkovSource(vocab=tb.spec.vocab,
+                       concentration=tb.data_cfg.concentration,
+                       seed=tb.data_cfg.seed)
+    # prompts fixed up front so every mode serves the IDENTICAL request set
+    # (a shared stateful rng inside requests() would drift per mode and the
+    # AAL delta would measure workload, not quantization)
+    plens = np.random.default_rng(11).integers(8, 14, size=n)
+    prompts = [src.sample(np.random.default_rng(100 + uid), int(plens[uid]))
+               for uid in range(n)]
+
+    def requests():
+        return [Request(uid=uid, prompt=prompts[uid].copy(), max_new=max_new)
+                for uid in range(n)]
+
+    out: Dict = {"config": {"n": n, "max_new": max_new, "batch": batch}}
+    engines = {}
+    for mode in ("none", "int8-kv", "int8-kv+w8"):
+        eng = SpeculativeEngine(
+            tb.drafter, tb.d_params, tb.verifier, tb.v_params,
+            buckets=buckets_for_depths((4,), width=2, verify_frac=0.75),
+            depth_options=(4,),
+            config=EngineConfig(quant=QuantConfig.parse(mode)))
+        engines[mode] = eng
+        server = ContinuousServer(eng, batch_size=batch,
+                                  prompt_pad=prompt_pad,
+                                  spec=SPEC, verify_v=VERIFY_V)
+        server.warmup()
+        for req in requests():
+            server.submit(req)
+        server.run()
+        m = server.metrics.summary()
+        out[mode] = {
+            "throughput_tok_s": m["throughput_tok_s"],
+            "tokens": m["tokens"],
+            "aal": m["aal"],
+            "kv_bytes_per_slot": m["kv_bytes_per_slot"],
+            "recompiles_after_warmup": m["recompiles_after_warmup"],
+        }
+    # fixed HBM budget = what the fp32 pool pins at this batch size; the
+    # quantized engines fit slots_ratio x as many slots into the same bytes
+    budget = batch * out["none"]["kv_bytes_per_slot"]
+    out["cache_byte_budget"] = budget
+    for mode, eng in engines.items():
+        out[mode]["slots_at_budget"] = slots_at_budget(eng, budget)
+    out["slots_ratio"] = (out["int8-kv"]["slots_at_budget"]
+                          / max(out["none"]["slots_at_budget"], 1))
+    out["aal_delta"] = out["int8-kv"]["aal"] - out["none"]["aal"]
+    return out
+
+
 def sweep_meshes(tb, n: int, rate_hz: float, max_new: int, batch: int,
                  prompt_pad: int,
                  shapes: Optional[List[Tuple[int, int]]] = None,
@@ -307,6 +375,8 @@ def run(quick: bool = True, mesh_sweep: bool = True):
     # rate in emulated Hz — inter-arrivals comparable to a few step costs
     # so occupancy actually swings)
     out["adaptive_sweep"] = adaptive_sweep(tb, n, rate_hz=0.6, batch=batch)
+    # int8 KV / weight quantization vs fp32 at fixed cache bytes
+    out["quant_sweep"] = quant_sweep(tb, max(6, n // 2), max_new, batch)
     common.save("fig_serving", out)
     return out
 
@@ -343,3 +413,15 @@ if __name__ == "__main__":
             print(f"  pinned {bk}: {p['throughput_tok_s']:.2f} tok/emu-s")
         print(f"  adaptive / best pinned ({adp['best_pinned']}): "
               f"{adp['adaptive_over_best_pinned']:.2f}x")
+    qs = res.get("quant_sweep")
+    if qs:
+        for mode in ("none", "int8-kv", "int8-kv+w8"):
+            r = qs[mode]
+            print(f"quant {mode}: {r['throughput_tok_s']:.0f} tok/s  "
+                  f"aal={r['aal']:.2f}  "
+                  f"kv_bytes/slot={r['kv_bytes_per_slot']}  "
+                  f"slots@budget={r['slots_at_budget']}  "
+                  f"recompiles={r['recompiles_after_warmup']}")
+        print(f"  int8-kv slots at fixed cache bytes: "
+              f"{qs['slots_ratio']:.2f}x fp32  "
+              f"(aal delta {qs['aal_delta']:+.3f})")

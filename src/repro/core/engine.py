@@ -58,6 +58,7 @@ from repro.core.tree import ancestor_paths
 from repro.models import cache as cache_lib
 from repro.models.cache import init_cache, place_cache
 from repro.models.model import Model
+from repro.quant import QuantConfig, dequant_params, quantize_params
 from repro.sharding import specs as sharding
 
 
@@ -70,6 +71,7 @@ class EngineConfig:
     max_target_len: int = 512
     prune: bool = True             # O3 verification-width pruning
     sample_draft: bool = True      # sample rank-0 candidate when temp > 0
+    quant: QuantConfig = QuantConfig()  # int8 KV cache / weight-only params
 
     def resolve_accept(self) -> str:
         if self.accept_mode != "auto":
@@ -172,6 +174,13 @@ class SpeculativeEngine:
                 d_params, sharding.param_shardings(drafter.param_defs(), mesh))
             self.v_params = jax.device_put(
                 v_params, sharding.param_shardings(verifier.param_defs(), mesh))
+        if self.cfg.quant.weights:
+            # after mesh placement: QTensor payload/scales inherit the
+            # placed weights' shardings elementwise. Every compiled step
+            # dequantizes in-graph (dequant_params at the top), so HBM
+            # holds int8 while compute stays at the original dtype.
+            self.d_params = quantize_params(self.d_params)
+            self.v_params = quantize_params(self.v_params)
         self._step_cache: Dict[Any, Any] = {}
         self._compile_count = 0
 
@@ -202,6 +211,22 @@ class SpeculativeEngine:
         return {"devices": int(self.mesh.devices.size),
                 "shape": {k: int(v) for k, v in self.mesh.shape.items()}}
 
+    # ------------------------------------------------------------- quant --
+    def _kv_dtype(self):
+        """KV-cache storage dtype for init_cache (None = compute dtype)."""
+        return jnp.int8 if self.cfg.quant.kv_int8 else None
+
+    def cache_bytes_per_slot(self) -> Dict[str, int]:
+        """Device bytes ONE decode slot pins in both caches at
+        ``max_target_len`` — the quantity serving capacity planning divides
+        an HBM budget by (see serving.continuous.slots_at_budget)."""
+        L = self.cfg.max_target_len
+        v = cache_lib.cache_nbytes(self.verifier.cfg, 1, L,
+                                   kv_dtype=self._kv_dtype())
+        d = cache_lib.cache_nbytes(self.drafter.cfg, 1, L,
+                                   kv_dtype=self._kv_dtype())
+        return {"verifier": v, "drafter": d, "total": v + d}
+
     def executable_count(self) -> int:
         """Total traced executables across the step cache — unlike
         ``_compile_count`` this also sees silent jit retraces (e.g. an input
@@ -220,15 +245,24 @@ class SpeculativeEngine:
                 enc_feats: Optional[jax.Array] = None):
         B = tokens.shape[0]
         L = self.cfg.max_target_len
+        kv_dt = self._kv_dtype()
         with self._ctx():
             tokens = self._put(jnp.asarray(tokens), "batch", None)
             lengths = self._put(jnp.asarray(lengths), "batch")
-            vcache = place_cache(init_cache(self.verifier.cfg, B, L), self.mesh)
-            dcache = place_cache(init_cache(self.drafter.cfg, B, L), self.mesh)
+            vcache = place_cache(init_cache(self.verifier.cfg, B, L,
+                                            kv_dtype=kv_dt), self.mesh)
+            dcache = place_cache(init_cache(self.drafter.cfg, B, L,
+                                            kv_dtype=kv_dt), self.mesh)
+            # batch prefill runs eagerly (it always has), so in w8 mode this
+            # dequant materializes a transient fp32 param copy for the call;
+            # the hot paths — megastep, staged parts, slot prefill — all
+            # dequantize INSIDE their compiled graphs instead, which is
+            # where the serving loop spends its life.
             v_logits, vcache, h_last = self.verifier.prefill(
-                self.v_params, tokens, lengths, vcache, enc_feats=enc_feats)
+                dequant_params(self.v_params), tokens, lengths, vcache,
+                enc_feats=enc_feats)
             _, dcache, _ = self.drafter.prefill(
-                self.d_params, tokens, lengths, dcache)
+                dequant_params(self.d_params), tokens, lengths, dcache)
             # pin the eager outputs to the canonical decode-loop placement so
             # the first decode_step compiles against the same shardings every
             # later step reproduces
@@ -242,12 +276,13 @@ class SpeculativeEngine:
                           key: Optional[jax.Array] = None) -> DecodeState:
         """Empty decode state: zeroed caches, no slot holds a request yet."""
         L = self.cfg.max_target_len
+        kv_dt = self._kv_dtype()
         with self._ctx():
             return DecodeState(
-                dcache=place_cache(init_cache(self.drafter.cfg, batch_size, L),
-                                   self.mesh),
-                vcache=place_cache(init_cache(self.verifier.cfg, batch_size, L),
-                                   self.mesh),
+                dcache=place_cache(init_cache(self.drafter.cfg, batch_size, L,
+                                              kv_dtype=kv_dt), self.mesh),
+                vcache=place_cache(init_cache(self.verifier.cfg, batch_size, L,
+                                              kv_dtype=kv_dt), self.mesh),
                 root=self._put(jnp.zeros((batch_size,), jnp.int32), "batch"),
                 h_last=self._put(
                     jnp.zeros((batch_size, self.verifier.cfg.d_model),
@@ -265,11 +300,14 @@ class SpeculativeEngine:
             raise NotImplementedError(
                 "slot prefill does not support encoder-decoder models yet")
         L = self.cfg.max_target_len
+        kv_dt = self._kv_dtype()
 
         def fn(d_params, v_params, dcache, vcache, root, h_last,
                tokens, length, slot, key):
-            vc1 = init_cache(self.verifier.cfg, 1, L)
-            dc1 = init_cache(self.drafter.cfg, 1, L)
+            d_params = dequant_params(d_params)
+            v_params = dequant_params(v_params)
+            vc1 = init_cache(self.verifier.cfg, 1, L, kv_dtype=kv_dt)
+            dc1 = init_cache(self.drafter.cfg, 1, L, kv_dtype=kv_dt)
             v_logits, vc1, h1 = self.verifier.prefill(
                 v_params, tokens, length, vc1)
             _, dc1, _ = self.drafter.prefill(d_params, tokens, length, dc1)
@@ -400,6 +438,9 @@ class SpeculativeEngine:
                           for i in range(self.verifier.cfg.num_layers))
 
         def step(d_params, v_params, dcache, vcache, root_token, key):
+            # w8: int8 weights dequantize at the top of the compiled graph
+            d_params = dequant_params(d_params)
+            v_params = dequant_params(v_params)
             kd, ka = jax.random.split(key)
             res = draft_tree(self.drafter, d_params, dcache, root_token, spec,
                              temperature=temp,
@@ -458,13 +499,14 @@ class SpeculativeEngine:
 
         @jax.jit
         def draft_fn(d_params, dcache, root_token, key):
-            return draft_tree(self.drafter, d_params, dcache, root_token,
-                              spec, temperature=temp,
+            return draft_tree(self.drafter, dequant_params(d_params), dcache,
+                              root_token, spec, temperature=temp,
                               sample_key=key if (temp > 0 and cfg.sample_draft)
                               else None)
 
         @jax.jit
         def verify_fn(v_params, vcache, res):
+            v_params = dequant_params(v_params)
             if cfg.prune and verify_v < spec.num_nodes:
                 sub, select_idx = pruning.topk_prune(res.tree, verify_v, a_max)
             else:

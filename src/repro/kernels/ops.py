@@ -6,6 +6,7 @@ indexing/accumulation logic; on TPU the same code lowers to Mosaic.
 """
 from __future__ import annotations
 
+import os
 
 import jax
 import jax.numpy as jnp
@@ -16,16 +17,36 @@ from repro.kernels import tree_attention as _ta
 
 
 def _interpret() -> bool:
+    # REPRO_PALLAS_INTERPRET=1 forces interpret mode regardless of backend
+    # (the CI `quant` job sets it so CPU-only runners exercise the kernel
+    # bodies); =0 forces Mosaic lowering even on CPU (will fail fast there);
+    # unset OR empty falls back to backend inference.
+    env = os.environ.get("REPRO_PALLAS_INTERPRET", "").strip()
+    if env:
+        return env.lower() not in ("0", "false", "off", "no")
     return jax.default_backend() == "cpu"
 
 
-def tree_attention(q, k, v, mask, *, block_s: int = 256):
-    """Tree-masked verification attention (see tree_attention.py)."""
+def tree_attention(q, k, v, mask, *, k_scale=None, v_scale=None,
+                   block_s: int = 256):
+    """Tree-masked verification attention (see tree_attention.py).
+
+    Pass ``k_scale``/``v_scale`` ([B, S, H, G] fp32 scale groups along the
+    head dim, with int8 k/v — the pair ``repro.quant.quantize_kv`` returns)
+    to route through the dequantizing int8 kernel variant; omit for the
+    fp path.
+    """
     S = k.shape[1]
     bs = block_s
     while S % bs:
         bs //= 2
-    return _ta.tree_attention(q, k, v, mask, block_s=max(bs, 1),
+    bs = max(bs, 1)
+    if (k_scale is None) != (v_scale is None):
+        raise ValueError("pass both k_scale and v_scale, or neither")
+    if k_scale is not None:
+        return _ta.tree_attention_int8(q, k, v, k_scale, v_scale, mask,
+                                       block_s=bs, interpret=_interpret())
+    return _ta.tree_attention(q, k, v, mask, block_s=bs,
                               interpret=_interpret())
 
 

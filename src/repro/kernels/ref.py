@@ -16,6 +16,17 @@ def tree_attention_ref(q, k, v, mask):
     return out.astype(q.dtype)
 
 
+def tree_attention_int8_ref(q, k, v, k_scale, v_scale, mask):
+    """Oracle for the dequantizing int8 kernel: dequantize the int8 K/V
+    (per-slot, per-head scale groups along the head dim), then plain tree
+    attention. k/v: [B,S,H,dh] int8; k_scale/v_scale: [B,S,H,G] fp32."""
+    def dq(x, s):
+        g = s.shape[-1]
+        xf = x.astype(jnp.float32).reshape(*x.shape[:-1], g, -1)
+        return (xf * s[..., None]).reshape(x.shape)
+    return tree_attention_ref(q, dq(k, k_scale), dq(v, v_scale), mask)
+
+
 def flash_prefill_ref(q, k, v):
     """Causal full attention. q/k/v: [B,S,H,dh]."""
     B, S, H, dh = q.shape

@@ -37,6 +37,7 @@ from repro.core.engine import EngineConfig, SpeculativeEngine
 from repro.core.objective import LatencyProfile
 from repro.data.pipeline import MarkovSource
 from repro.launch.mesh import make_serving_mesh
+from repro.quant import QuantConfig
 from repro.serving.continuous import ContinuousServer
 from repro.serving.controller import BucketController
 from repro.serving.server import BatchedServer, Request
@@ -72,6 +73,11 @@ def main() -> None:
     ap.add_argument("--mesh", default=None,
                     help="device mesh: DxM (data x model, e.g. 4x2) or "
                          "'host'; default unsharded")
+    ap.add_argument("--quantize", default="none",
+                    choices=["none", "int8-kv", "int8-kv+w8"],
+                    help="int8-kv: both KV caches int8 with per-slot scales "
+                         "(greedy decode stays token-exact on the testbed); "
+                         "+w8 adds int8 weight-only params")
     args = ap.parse_args()
 
     mesh = make_serving_mesh(args.mesh)
@@ -82,11 +88,17 @@ def main() -> None:
         tb.drafter, tb.d_params, tb.verifier, tb.v_params, profile=prof,
         buckets=buckets_for_depths((2, 4, 8), width=2, verify_frac=0.75),
         depth_options=(2, 4, 8),
-        config=EngineConfig(temperature=args.temperature, plan=args.plan),
+        config=EngineConfig(temperature=args.temperature, plan=args.plan,
+                            quant=QuantConfig.parse(args.quantize)),
         mesh=mesh)
     if mesh is not None:
         info = engine.mesh_info()
         print(f"mesh: {info['shape']} over {info['devices']} devices")
+    if args.quantize != "none":
+        bps = engine.cache_bytes_per_slot()
+        print(f"quantize: {args.quantize}  "
+              f"cache bytes/slot={bps['total']}  "
+              f"(verifier {bps['verifier']}, drafter {bps['drafter']})")
 
     if args.server == "continuous" and args.adaptive:
         ladder = parse_buckets(args.buckets)

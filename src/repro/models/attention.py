@@ -245,6 +245,9 @@ def cached_attention(q: jax.Array, entry: Dict, cfg: ModelConfig,
     B, W, H, Dh = q.shape
     G = cfg.num_q_per_kv
     scale = 1.0 / math.sqrt(Dh)
+    # int8 caches dequantize here (per-layer slice, inside the block scan,
+    # so XLA cannot hoist a whole-stack fp32 copy); fp caches pass through
+    ek, ev = cache_lib.entry_kv(entry)
 
     if cfg.gqa_grouped and G > 1:
         # §Perf: contract against the cache in KV-head space — the cache is
@@ -252,7 +255,7 @@ def cached_attention(q: jax.Array, entry: Dict, cfg: ModelConfig,
         KV = cfg.num_kv_heads
         qg = q.reshape(B, W, KV, G, Dh)
         s_cache = jnp.einsum("bqkgd,bskd->bkgqs", qg,
-                             entry["k"]).astype(jnp.float32) * scale
+                             ek).astype(jnp.float32) * scale
         if cfg.attn_score_seqshard:
             # §Perf it3: keep scores/probs on the cache's seq sharding so
             # the P·V contraction psums a [B,W,H,Dh] partial instead of
@@ -279,9 +282,8 @@ def cached_attention(q: jax.Array, entry: Dict, cfg: ModelConfig,
         # accumulation — a materialized `v.astype(f32)` gets hoisted by XLA
         # above the per-layer slice, converting the whole stacked cache.
         # Probs are downcast (tiny [B,KV,G,W,S] tensor) instead of V.
-        pv = pc.astype(entry["v"].dtype) if entry["v"].dtype != jnp.float32 \
-            else pc
-        out = jnp.einsum("bkgqs,bskd->bqkgd", pv, entry["v"],
+        pv = pc.astype(ev.dtype) if ev.dtype != jnp.float32 else pc
+        out = jnp.einsum("bkgqs,bskd->bqkgd", pv, ev,
                          preferred_element_type=jnp.float32)
         if cfg.attn_score_seqshard:
             out = shard(out, "batch", None, None, None, None)
@@ -290,8 +292,8 @@ def cached_attention(q: jax.Array, entry: Dict, cfg: ModelConfig,
                                    preferred_element_type=jnp.float32)
         return out.reshape(B, W, H, Dh).astype(q.dtype)
 
-    kc = _repeat_kv(entry["k"], G)  # [B, Sc, H, Dh]
-    vc = _repeat_kv(entry["v"], G)
+    kc = _repeat_kv(ek, G)  # [B, Sc, H, Dh]
+    vc = _repeat_kv(ev, G)
     s_cache = jnp.einsum("bqhd,bshd->bhqs", q, kc).astype(jnp.float32) * scale
     m_cache = cache_lib.visible_mask(entry["pos"], q_pos, lengths, cfg.sliding_window)
     s_cache = jnp.where(m_cache[:, None], s_cache, NEG_INF)

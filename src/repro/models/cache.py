@@ -15,6 +15,18 @@ Global:
 Sliding-window archs use a ring buffer: S_cache == window and slots are
 addressed ``pos % window``; full-attention archs use S_cache == max target
 length with slot == pos. Both cases are handled by `slot_for`.
+
+Quantized caches (``init_cache(..., kv_dtype=jnp.int8)``) store the K/V
+payload as int8 with per-slot, per-head fp32 absmax scales alongside
+(sub-grouped along the head dim, G = head_dim/KV_GROUP scales per head):
+    k_scale, v_scale : [num_blocks, B, S_cache, KV, G]
+Tokens are quantized once at write time (`write_tokens`/`commit_region`)
+and dequantized at read time (`entry_kv`), so a committed token always
+dequantizes to the same values — the per-slot ops (`slot_update`,
+`slot_slice`, `reset_slot`) move/clear payload and scales together and the
+round-trip is exact. Cross-attention K/V (ck/cv) stays at the cache dtype:
+it is written once per request and read every step, so quantizing it saves
+little and would touch the encoder path.
 """
 from __future__ import annotations
 
@@ -22,8 +34,10 @@ from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.quant.kv import dequant_kv, kv_scale_groups, quantize_kv
 from repro.sharding import shard, sharding_for
 
 Cache = Dict[str, Any]
@@ -35,8 +49,19 @@ def cache_seq_len(cfg: ModelConfig, target_len: int) -> int:
     return target_len
 
 
-def _attn_entry(cfg: ModelConfig, batch: int, s_cache: int, dtype) -> Dict:
+def _attn_entry(cfg: ModelConfig, batch: int, s_cache: int, dtype,
+                kv_dtype=None) -> Dict:
     kv, dh = cfg.num_kv_heads, cfg.head_dim
+    if kv_dtype is not None and jnp.dtype(kv_dtype) == jnp.int8:
+        g = kv_scale_groups(dh)
+        return {
+            "k": jnp.zeros((batch, s_cache, kv, dh), jnp.int8),
+            "v": jnp.zeros((batch, s_cache, kv, dh), jnp.int8),
+            # neutral scale: an empty slot dequantizes to exact zeros
+            "k_scale": jnp.ones((batch, s_cache, kv, g), jnp.float32),
+            "v_scale": jnp.ones((batch, s_cache, kv, g), jnp.float32),
+            "pos": jnp.full((batch, s_cache), -1, jnp.int32),
+        }
     return {
         "k": jnp.zeros((batch, s_cache, kv, dh), dtype),
         "v": jnp.zeros((batch, s_cache, kv, dh), dtype),
@@ -44,8 +69,18 @@ def _attn_entry(cfg: ModelConfig, batch: int, s_cache: int, dtype) -> Dict:
     }
 
 
-def _attn_entry_abstract(cfg: ModelConfig, batch: int, s_cache: int, dtype) -> Dict:
+def _attn_entry_abstract(cfg: ModelConfig, batch: int, s_cache: int, dtype,
+                         kv_dtype=None) -> Dict:
     kv, dh = cfg.num_kv_heads, cfg.head_dim
+    if kv_dtype is not None and jnp.dtype(kv_dtype) == jnp.int8:
+        g = kv_scale_groups(dh)
+        return {
+            "k": jax.ShapeDtypeStruct((batch, s_cache, kv, dh), jnp.int8),
+            "v": jax.ShapeDtypeStruct((batch, s_cache, kv, dh), jnp.int8),
+            "k_scale": jax.ShapeDtypeStruct((batch, s_cache, kv, g), jnp.float32),
+            "v_scale": jax.ShapeDtypeStruct((batch, s_cache, kv, g), jnp.float32),
+            "pos": jax.ShapeDtypeStruct((batch, s_cache), jnp.int32),
+        }
     return {
         "k": jax.ShapeDtypeStruct((batch, s_cache, kv, dh), dtype),
         "v": jax.ShapeDtypeStruct((batch, s_cache, kv, dh), dtype),
@@ -79,8 +114,13 @@ def _cross_entry(cfg: ModelConfig, batch: int, dtype, abstract: bool) -> Dict:
 
 
 def init_cache(cfg: ModelConfig, batch: int, target_len: int,
-               dtype=jnp.float32, abstract: bool = False) -> Cache:
-    """Build the full cache pytree (stacked over scan blocks)."""
+               dtype=jnp.float32, abstract: bool = False,
+               kv_dtype=None) -> Cache:
+    """Build the full cache pytree (stacked over scan blocks).
+
+    ``kv_dtype=jnp.int8`` stores attention K/V as int8 with per-slot,
+    per-head fp32 scales (see module docstring); None keeps ``dtype``.
+    """
     s_cache = cache_seq_len(cfg, target_len)
     lpb, nb = cfg.layers_per_block, cfg.num_blocks
 
@@ -90,7 +130,7 @@ def init_cache(cfg: ModelConfig, batch: int, target_len: int,
             i = block_idx * lpb + j
             if cfg.layer_mixer(i) == "attn":
                 e = (_attn_entry_abstract if abstract else _attn_entry)(
-                    cfg, batch, s_cache, dtype)
+                    cfg, batch, s_cache, dtype, kv_dtype=kv_dtype)
                 if cfg.is_encoder_decoder:
                     e.update(_cross_entry(cfg, batch, dtype, abstract))
             else:
@@ -117,6 +157,11 @@ def _leaf_axes(path: Tuple, leaf) -> Tuple:
     leafname = getattr(path[-1], "key", str(path[-1]))
     if leafname in ("k", "v", "ck", "cv"):
         return ("layers", "batch", "cache_seq", "kv_heads", "head_dim_shard")[-leaf.ndim:]
+    if leafname in ("k_scale", "v_scale"):
+        # scales shard with their payload's batch/seq/head axes so a mesh
+        # keeps each int8 tile and its scales on the same device (the
+        # trailing scale-group axis stays unsharded)
+        return ("layers", "batch", "cache_seq", "kv_heads", None)[-leaf.ndim:]
     if leafname == "pos":
         return ("layers", "batch", "cache_seq")[-leaf.ndim:]
     if leafname == "state":
@@ -194,16 +239,27 @@ def slot_update(cache: Cache, slot, slot_cache: Cache) -> Cache:
 
 def reset_slot(cache: Cache, slot) -> Cache:
     """Clear batch slot `slot`: committed length -> 0, positions -> -1 (so
-    `visible_mask` hides every stale entry), SSM state/conv -> 0. K/V payloads
-    are left in place — they are unreachable once pos/length are cleared."""
+    `visible_mask` hides every stale entry), SSM state/conv -> 0. Floating
+    K/V payloads are left in place — unreachable once pos/length are
+    cleared — but the fill is per-leaf, not one shared value: int8 K/V
+    payloads reset to 0 and their scales to 1.0 (the empty-slot neutral
+    pair), never 0-scales, which would survive as a degenerate dequant if a
+    later write were ever partial."""
 
     def upd(path, leaf):
         name = getattr(path[-1], "key", str(path[-1]))
         ax = batch_axis(path, leaf)
         if name in ("k", "v", "ck", "cv"):
-            return leaf
+            if not jnp.issubdtype(leaf.dtype, jnp.integer):
+                return leaf
+            fill = 0                       # int8 payload back to empty
+        elif name == "pos":
+            fill = -1
+        elif name in ("k_scale", "v_scale"):
+            fill = 1.0                     # neutral scale, NOT 0
+        else:
+            fill = 0
         row_shape = leaf.shape[:ax] + leaf.shape[ax + 1:]
-        fill = -1 if name == "pos" else 0
         row = jnp.full(row_shape, fill, leaf.dtype)
         return jax.lax.dynamic_update_index_in_dim(leaf, row, slot, axis=ax)
 
@@ -217,13 +273,29 @@ def slot_for(pos: jax.Array, s_cache: int, sliding_window: int) -> jax.Array:
     return pos
 
 
+def is_quantized_entry(entry: Dict) -> bool:
+    """True when an attention cache entry holds int8 K/V + scales."""
+    return "k_scale" in entry
+
+
+def entry_kv(entry: Dict) -> Tuple[jax.Array, jax.Array]:
+    """The entry's K/V at compute precision — dequantized fp32 views for an
+    int8 entry, the stored arrays otherwise."""
+    if is_quantized_entry(entry):
+        return (dequant_kv(entry["k"], entry["k_scale"]),
+                dequant_kv(entry["v"], entry["v_scale"]))
+    return entry["k"], entry["v"]
+
+
 def write_tokens(entry: Dict, k_new: jax.Array, v_new: jax.Array,
                  positions: jax.Array, cfg: ModelConfig,
                  valid: Optional[jax.Array] = None) -> Dict:
     """Write S_new tokens into an attention cache entry.
 
     k_new/v_new: [B, S_new, KV, Dh]; positions: [B, S_new] absolute positions;
-    valid: [B, S_new] bool (False entries are not written).
+    valid: [B, S_new] bool (False entries are not written). On a quantized
+    entry the tokens are quantized here — the single rounding point — and
+    payload + scales are scattered to the same slots.
     """
     s_cache = entry["k"].shape[1]
     slots = slot_for(positions, s_cache, cfg.sliding_window)  # [B, S_new]
@@ -238,12 +310,19 @@ def write_tokens(entry: Dict, k_new: jax.Array, v_new: jax.Array,
     def scat(store, val):
         return store.at[b_idx, slots].set(val, mode="drop")
 
-    return {
-        "k": scat(entry["k"], k_new),
-        "v": scat(entry["v"], v_new),
-        "pos": scat(entry["pos"], jnp.where(valid, positions, -1)),
-        **{kk: entry[kk] for kk in entry if kk in ("ck", "cv")},
-    }
+    out = dict(entry)  # preserves ck/cv (and anything future) untouched
+    if is_quantized_entry(entry):
+        qk, ks = quantize_kv(k_new)
+        qv, vs = quantize_kv(v_new)
+        out["k"] = scat(entry["k"], qk)
+        out["v"] = scat(entry["v"], qv)
+        out["k_scale"] = scat(entry["k_scale"], ks)
+        out["v_scale"] = scat(entry["v_scale"], vs)
+    else:
+        out["k"] = scat(entry["k"], k_new)
+        out["v"] = scat(entry["v"], v_new)
+    out["pos"] = scat(entry["pos"], jnp.where(valid, positions, -1))
+    return out
 
 
 def commit_region(entry: Dict, k_nodes: jax.Array, v_nodes: jax.Array,
@@ -279,3 +358,15 @@ def visible_mask(entry_pos: jax.Array, q_pos: jax.Array, lengths: jax.Array,
     if sliding_window:
         m &= kp > qp - sliding_window
     return m
+
+
+# ----------------------------------------------------- byte accounting ----
+def cache_nbytes(cfg: ModelConfig, batch: int, target_len: int,
+                 dtype=jnp.float32, kv_dtype=None) -> int:
+    """Device bytes one cache pytree holds (payload + scales + pos + SSM +
+    length), computed on the abstract cache so no buffers materialize. This
+    is what serving capacity accounting divides an HBM budget by."""
+    c = init_cache(cfg, batch, target_len, dtype=dtype, abstract=True,
+                   kv_dtype=kv_dtype)
+    return int(sum(int(np.prod(x.shape)) * jnp.dtype(x.dtype).itemsize
+                   for x in jax.tree.leaves(c)))

@@ -1,0 +1,20 @@
+"""Quantized inference: int8 weight-only params and int8 KV caches.
+
+Two independent knobs, combined by `QuantConfig`:
+
+  * weight-only int8 — drafter/verifier params stored as `QTensor`
+    (symmetric per-channel int8 + fp32 absmax scales) and dequantized
+    in-graph at the top of every compiled step (`dequant_params`), so the
+    HBM-resident weights are ~4x smaller while compute stays fp32.
+  * int8 KV cache — both decode caches hold int8 K/V payloads with
+    per-slot, per-head fp32 scales (see models/cache.py), quantized at
+    write time and dequantized at read time; scales ride the same pytree
+    so sharding, donation and the per-slot ops all keep working.
+"""
+from repro.quant.config import QuantConfig
+from repro.quant.kv import dequant_kv, kv_scale_groups, quantize_kv
+from repro.quant.weights import (QTensor, dequant_params, param_nbytes,
+                                 quantize_params)
+
+__all__ = ["QuantConfig", "QTensor", "quantize_params", "dequant_params",
+           "param_nbytes", "quantize_kv", "dequant_kv", "kv_scale_groups"]

@@ -1,0 +1,40 @@
+"""QuantConfig: the one object the serving stack threads around.
+
+Frozen (hashable) so it can sit inside `EngineConfig` and key jit caches.
+The CLI surface is the mode string: ``none`` | ``int8-kv`` | ``int8-kv+w8``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+MODES = ("none", "int8-kv", "int8-kv+w8")
+
+
+@dataclass(frozen=True)
+class QuantConfig:
+    kv_dtype: str = "float32"   # "float32" | "int8"
+    weights: bool = False       # int8 weight-only quantization of params
+
+    @classmethod
+    def parse(cls, mode: str) -> "QuantConfig":
+        if mode in (None, "none"):
+            return cls()
+        if mode == "int8-kv":
+            return cls(kv_dtype="int8")
+        if mode == "int8-kv+w8":
+            return cls(kv_dtype="int8", weights=True)
+        raise ValueError(f"unknown quantize mode {mode!r}; pick one of {MODES}")
+
+    @property
+    def kv_int8(self) -> bool:
+        return self.kv_dtype == "int8"
+
+    @property
+    def enabled(self) -> bool:
+        return self.kv_int8 or self.weights
+
+    @property
+    def mode(self) -> str:
+        if self.kv_int8:
+            return "int8-kv+w8" if self.weights else "int8-kv"
+        return "w8" if self.weights else "none"

@@ -1,0 +1,50 @@
+"""Symmetric int8 quantization of K/V tokens.
+
+fp32 absmax scales per (batch, slot, kv-head) — sub-grouped along the head
+dim (`KV_GROUP` channels per scale) so the worst-case dequant error is
+small enough that greedy decode stays token-exact against fp32 on the
+testbed (asserted in tests/test_quant.py). A token written once
+dequantizes to the same values on every later read: the only rounding
+happens at write time. Scales live alongside the int8 payload in the
+cache entry and reset to 1.0 (not 0) so an empty slot dequantizes to
+exact zeros.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+# channels per scale group along the head dim; head dims not divisible by
+# this fall back to one scale per head (the coarsest group)
+KV_GROUP = 16
+
+# smallest representable group absmax; keeps scale > 0 so dequant of an
+# all-zero group stays exact zero instead of 0/0
+EPS = 1e-8
+
+
+def kv_scale_groups(dh: int) -> int:
+    """Scale groups per head: dh/KV_GROUP when divisible, else 1."""
+    return dh // KV_GROUP if dh % KV_GROUP == 0 and dh >= KV_GROUP else 1
+
+
+def quantize_kv(x: jax.Array, eps: float = EPS) -> Tuple[jax.Array, jax.Array]:
+    """x: [..., Dh] fp -> (int8 [..., Dh], fp32 scales [..., G])."""
+    dh = x.shape[-1]
+    g = kv_scale_groups(dh)
+    xf = x.astype(jnp.float32).reshape(*x.shape[:-1], g, dh // g)
+    amax = jnp.max(jnp.abs(xf), axis=-1)               # [..., G]
+    scale = jnp.maximum(amax, eps) / 127.0
+    q = jnp.clip(jnp.round(xf / scale[..., None]), -127, 127)
+    return q.astype(jnp.int8).reshape(x.shape), scale
+
+
+def dequant_kv(q: jax.Array, scale: jax.Array,
+               dtype=jnp.float32) -> jax.Array:
+    """int8 payload [..., Dh] + group scales [..., G] -> values in `dtype`."""
+    g = scale.shape[-1]
+    dh = q.shape[-1]
+    qf = q.astype(jnp.float32).reshape(*q.shape[:-1], g, dh // g)
+    return (qf * scale[..., None]).reshape(q.shape).astype(dtype)

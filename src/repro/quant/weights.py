@@ -1,0 +1,96 @@
+"""Weight-only int8 quantization as a pytree transform.
+
+`quantize_params` walks a parameter pytree and replaces every large
+floating matmul weight with a `QTensor`: symmetric per-channel int8 with
+fp32 absmax scales over the trailing axis (one scale per contraction row,
+uniform across the heterogeneous einsum layouts in this codebase — stacked
+block leaves keep their leading layer axis untouched). Small leaves (norm
+scales, biases, SSM A/D/dt vectors) stay fp32: quantizing them saves
+nothing and costs accuracy.
+
+`QTensor` is a registered pytree node, so the quantized params pass
+through jit, donation, `jax.device_put` and `tree_map` unchanged — every
+compiled step simply calls `dequant_params` at the top of its graph and
+traces against the dequantized fp32 view while HBM holds int8.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.quant.kv import EPS
+
+# leaves smaller than this stay fp32 (norms, biases, rope tables, ...)
+MIN_QUANT_SIZE = 2048
+
+
+@jax.tree_util.register_pytree_node_class
+class QTensor:
+    """int8 payload + per-channel fp32 scales (trailing-axis groups)."""
+
+    def __init__(self, q: jax.Array, scale: jax.Array, dtype=jnp.float32):
+        self.q, self.scale = q, scale
+        self.dtype = jnp.dtype(dtype)
+
+    def tree_flatten(self):
+        return (self.q, self.scale), self.dtype
+
+    @classmethod
+    def tree_unflatten(cls, dtype, children):
+        return cls(*children, dtype=dtype)
+
+    @property
+    def shape(self):
+        return self.q.shape
+
+    def dequant(self) -> jax.Array:
+        return (self.q.astype(jnp.float32)
+                * self.scale[..., None]).astype(self.dtype)
+
+    def __repr__(self):
+        return f"QTensor(shape={tuple(self.q.shape)}, dtype={self.dtype})"
+
+
+def _quantize_leaf(x: jax.Array) -> QTensor:
+    xf = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xf), axis=-1)
+    scale = jnp.maximum(amax, EPS) / 127.0
+    q = jnp.clip(jnp.round(xf / scale[..., None]), -127, 127).astype(jnp.int8)
+    return QTensor(q, scale, dtype=x.dtype)
+
+
+def _eligible(x: Any, min_size: int) -> bool:
+    return (hasattr(x, "ndim") and x.ndim >= 2
+            and jnp.issubdtype(x.dtype, jnp.floating)
+            and x.size >= min_size)
+
+
+def quantize_params(params: Any, min_size: int = MIN_QUANT_SIZE) -> Any:
+    """Quantize every eligible leaf of a parameter pytree to `QTensor`."""
+
+    def one(x):
+        if isinstance(x, QTensor):      # idempotent
+            return x
+        if _eligible(x, min_size):
+            return _quantize_leaf(x)
+        return x
+
+    return jax.tree.map(one, params,
+                        is_leaf=lambda x: isinstance(x, QTensor))
+
+
+def dequant_params(params: Any) -> Any:
+    """fp view of a (possibly) quantized parameter pytree; identity when no
+    leaf is a `QTensor`, so compiled steps can call it unconditionally."""
+    return jax.tree.map(
+        lambda x: x.dequant() if isinstance(x, QTensor) else x, params,
+        is_leaf=lambda x: isinstance(x, QTensor))
+
+
+def param_nbytes(params: Any) -> int:
+    """Device bytes held by a parameter pytree (QTensor = payload + scales,
+    since both are ordinary pytree leaves)."""
+    return int(sum(x.size * jnp.dtype(x.dtype).itemsize
+                   for x in jax.tree.leaves(params)))

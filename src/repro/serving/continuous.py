@@ -62,6 +62,8 @@ class ServingMetrics:
     truncated_prompts: int = 0
     recompiles_after_warmup: int = 0
     mesh_devices: int = 1        # devices the engine's mesh spans (1 = unsharded)
+    quant_mode: str = "none"     # engine QuantConfig mode string
+    kv_bytes_per_slot: int = 0   # both caches' bytes ONE slot pins
     latencies: List[float] = field(default_factory=list)   # submit -> finish
     # adaptive scheduling: the bucket each step ran, and per-bucket rollups
     bucket_history: List[Tuple[int, int, int]] = field(default_factory=list)
@@ -102,6 +104,8 @@ class ServingMetrics:
             "truncated_prompts": self.truncated_prompts,
             "recompiles_after_warmup": self.recompiles_after_warmup,
             "mesh_devices": self.mesh_devices,
+            "quant_mode": self.quant_mode,
+            "kv_bytes_per_slot": self.kv_bytes_per_slot,
             "latency_p50_s": float(np.percentile(lat, 50)),
             "latency_p95_s": float(np.percentile(lat, 95)),
             "bucket_switches": self.bucket_switches,
@@ -114,6 +118,15 @@ class ServingMetrics:
                     if self.bucket_iter.get(k) else 0.0,
                 } for k in self.bucket_steps},
         }
+
+
+def slots_at_budget(engine: SpeculativeEngine, cache_byte_budget: int) -> int:
+    """Max concurrent decode slots a fixed cache-byte budget sustains on
+    this engine — HBM capacity planning for the slot pool. An int8-KV
+    engine fits ~2-4x the slots of its fp32 twin at the same budget (the
+    headline of the quantized path; asserted in the quant_sweep bench)."""
+    per_slot = engine.cache_bytes_per_slot()["total"]
+    return int(cache_byte_budget) // max(per_slot, 1)
 
 
 class ContinuousServer:
@@ -164,6 +177,13 @@ class ContinuousServer:
         self.done: Dict[int, Request] = {}
         self.metrics = ServingMetrics()
         self.metrics.mesh_devices = engine.mesh_info()["devices"]
+        # getattr-guarded: the host-side scheduler tests drive a fake engine
+        # that has neither a QuantConfig nor cache byte accounting
+        qc = getattr(engine.cfg, "quant", None)
+        self.metrics.quant_mode = qc.mode if qc is not None else "none"
+        bytes_fn = getattr(engine, "cache_bytes_per_slot", None)
+        self.metrics.kv_bytes_per_slot = (bytes_fn()["total"]
+                                          if callable(bytes_fn) else 0)
 
         self.state: DecodeState = engine.init_decode_state(batch_size)
         self.slots: List[Optional[Request]] = [None] * batch_size

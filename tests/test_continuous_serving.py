@@ -249,3 +249,101 @@ def test_reset_slot_clears_positions_and_state():
     assert (np.asarray(ssm["conv"]) == 0).all()
     _assert_tree_equal(cache_lib.slot_slice(rst, 0),
                        cache_lib.slot_slice(big, 0), "slot 0 disturbed")
+
+
+# ------------------------------------- quantized (int8+scales) slot ops ----
+def _quantized_filled_cache(cfg, batch, seed=0):
+    """int8 cache with every attention slot committed through the real
+    quantizing write path, plus non-trivial SSM/length leaves."""
+    import jax
+    import jax.numpy as jnp
+    cache = cache_lib.init_cache(cfg, batch, 32, kv_dtype=jnp.int8)
+    keys = jax.random.split(jax.random.PRNGKey(seed), 4)
+    k = jax.random.normal(keys[0], (batch, 8, cfg.num_kv_heads, cfg.head_dim))
+    v = jax.random.normal(keys[1], (batch, 8, cfg.num_kv_heads, cfg.head_dim))
+    pos = jnp.broadcast_to(jnp.arange(8)[None], (batch, 8)).astype(jnp.int32)
+
+    def upd(path, leaf):
+        name = getattr(path[-1], "key", str(path[-1]))
+        if name in ("state", "conv"):
+            return jnp.full(leaf.shape, 2.0, leaf.dtype)
+        return leaf
+
+    cache = jax.tree_util.tree_map_with_path(upd, cache)
+    blk = cache["blocks"]["layer0"]
+    entry = jax.tree.map(lambda a: a[0], blk)
+    written = cache_lib.write_tokens(entry, k, v, pos, cfg)
+    cache["blocks"]["layer0"] = jax.tree.map(lambda a: a[None], written)
+    cache["length"] = jnp.full((batch,), 8, jnp.int32)
+    return cache
+
+
+def test_quantized_slot_update_and_slice_roundtrip_exactly():
+    """slot_update / slot_slice on an int8+scales cache: payload AND scales
+    move together bit-exactly, other slots untouched."""
+    cfg = _hybrid_cfg()
+    big = _quantized_filled_cache(cfg, 3, seed=0)
+    small = _quantized_filled_cache(cfg, 1, seed=1)
+    upd = cache_lib.slot_update(big, 1, small)
+    _assert_tree_equal(cache_lib.slot_slice(upd, 1), small, "slot not written")
+    for other in (0, 2):
+        _assert_tree_equal(cache_lib.slot_slice(upd, other),
+                           cache_lib.slot_slice(big, other),
+                           f"slot {other} disturbed")
+    blk = upd["blocks"]["layer0"]
+    assert np.asarray(blk["k"]).dtype == np.int8
+    assert np.asarray(blk["k_scale"]).dtype == np.float32
+
+
+def test_quantized_reset_slot_per_leaf_fills():
+    """reset_slot's per-leaf fill: int8 payloads -> 0, scales -> 1.0 (the
+    empty-slot neutral pair, NOT a shared zero fill), pos -> -1; the other
+    slots keep their exact quantized content."""
+    cfg = _hybrid_cfg()
+    big = _quantized_filled_cache(cfg, 3)
+    rst = cache_lib.reset_slot(big, 1)
+    s1 = cache_lib.slot_slice(rst, 1)
+    entry = s1["blocks"]["layer0"]
+    assert (np.asarray(entry["k"]) == 0).all()
+    assert (np.asarray(entry["v"]) == 0).all()
+    assert (np.asarray(entry["k_scale"]) == 1.0).all()
+    assert (np.asarray(entry["v_scale"]) == 1.0).all()
+    assert (np.asarray(entry["pos"]) == -1).all()
+    assert int(np.asarray(s1["length"])[0]) == 0
+    # and the neutral pair dequantizes to exact zeros
+    ek, ev = cache_lib.entry_kv(entry)
+    assert (np.asarray(ek) == 0).all() and (np.asarray(ev) == 0).all()
+    _assert_tree_equal(cache_lib.slot_slice(rst, 0),
+                       cache_lib.slot_slice(big, 0), "slot 0 disturbed")
+
+
+def test_quantized_continuous_serving_zero_recompiles(tb):
+    """The compile-stability contract survives quantization: an int8-KV
+    ContinuousServer sustains >= 3x batch_size requests with mid-flight slot
+    refills and never compiles after warmup (dtype changes at trace time,
+    never shape changes at step time)."""
+    from repro.core.engine import EngineConfig
+    from repro.quant import QuantConfig
+    B, n = 2, 6
+    eng = SpeculativeEngine(tb.drafter, tb.d_params, tb.verifier, tb.v_params,
+                            buckets=buckets_for_depths((3,), width=2,
+                                                       verify_frac=0.75),
+                            depth_options=(3,),
+                            config=EngineConfig(
+                                quant=QuantConfig.parse("int8-kv")))
+    cont = ContinuousServer(eng, batch_size=B, prompt_pad=16,
+                            spec=SPEC, verify_v=VERIFY_V)
+    cont.warmup()
+    for r in _requests(tb, n, seed=5):
+        cont.submit(r)
+    done = cont.run()
+    m = cont.metrics.summary()
+    assert m["completed"] == n
+    assert m["refills"] >= n - B
+    assert m["recompiles_after_warmup"] == 0, m
+    assert m["quant_mode"] == "int8-kv"
+    # quantized caches really are smaller per slot
+    fp_eng = _engine(tb)
+    assert (m["kv_bytes_per_slot"]
+            < fp_eng.cache_bytes_per_slot()["total"] / 2)
+    assert all(len(done[uid].result) > 0 for uid in done)

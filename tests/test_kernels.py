@@ -40,6 +40,57 @@ def test_tree_attention_matches_ref(B, W, S, H, dh, dtype):
                                np.asarray(want, np.float32), **_tol(dtype))
 
 
+@pytest.mark.parametrize("B,W,S,H,dh", [
+    (1, 8, 64, 2, 64),
+    (2, 5, 96, 2, 128),     # W not MXU-aligned, S not block-aligned
+    (1, 16, 128, 2, 32),    # dh below one full scale group size
+])
+def test_tree_attention_int8_matches_ref(B, W, S, H, dh):
+    """The dequantizing kernel against its oracle: identical int8 payload +
+    scales through both, so the comparison is tight (same dequant math)."""
+    from repro.quant import quantize_kv
+    ks = jax.random.split(jax.random.PRNGKey(5), 4)
+    q = _rand(ks[0], (B, W, H, dh), jnp.float32)
+    kq, k_scale = quantize_kv(_rand(ks[1], (B, S, H, dh), jnp.float32))
+    vq, v_scale = quantize_kv(_rand(ks[2], (B, S, H, dh), jnp.float32))
+    mask = jax.random.bernoulli(ks[3], 0.4, (B, W, S))
+    mask = mask.at[:, :, 0].set(True)
+    out = ops.tree_attention(q, kq, vq, mask, k_scale=k_scale,
+                             v_scale=v_scale)
+    want = ref.tree_attention_int8_ref(q, kq, vq, k_scale, v_scale, mask)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_tree_attention_int8_close_to_fp32():
+    """End-to-end quantization error: int8 path vs the fp32 kernel on the
+    same K/V stays within the per-group absmax rounding budget."""
+    from repro.quant import quantize_kv
+    B, W, S, H, dh = 2, 8, 64, 2, 64
+    ks = jax.random.split(jax.random.PRNGKey(6), 4)
+    q = _rand(ks[0], (B, W, H, dh), jnp.float32)
+    k = _rand(ks[1], (B, S, H, dh), jnp.float32)
+    v = _rand(ks[2], (B, S, H, dh), jnp.float32)
+    mask = jax.random.bernoulli(ks[3], 0.5, (B, W, S)).at[:, :, 0].set(True)
+    kq, k_scale = quantize_kv(k)
+    vq, v_scale = quantize_kv(v)
+    out8 = ops.tree_attention(q, kq, vq, mask, k_scale=k_scale,
+                              v_scale=v_scale)
+    out32 = ops.tree_attention(q, k, v, mask)
+    np.testing.assert_allclose(np.asarray(out8), np.asarray(out32),
+                               rtol=5e-2, atol=5e-2)
+
+
+def test_tree_attention_scale_args_must_pair():
+    B, W, S, H, dh = 1, 4, 32, 1, 64
+    ks = jax.random.split(jax.random.PRNGKey(7), 3)
+    q = _rand(ks[0], (B, W, H, dh), jnp.float32)
+    k = _rand(ks[1], (B, S, H, dh), jnp.float32)
+    mask = jnp.ones((B, W, S), bool)
+    with pytest.raises(ValueError):
+        ops.tree_attention(q, k, k, mask, k_scale=jnp.ones((B, S, H, 4)))
+
+
 def test_tree_attention_fully_masked_rows_are_finite():
     B, W, S, H, dh = 1, 4, 32, 2, 64
     ks = jax.random.split(jax.random.PRNGKey(1), 3)

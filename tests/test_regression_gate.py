@@ -1,0 +1,132 @@
+"""The bench-regression gate must fail loudly on doctored artifacts — a
+gate that passes vacuously (missing keys, empty baseline, nonzero recompile
+counters) is worse than no gate."""
+import copy
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+from benchmarks.check_regression import (compare, extract_baseline, lookup,
+                                         main)
+
+GOOD_CURRENT = {
+    "servers": {"rate_4hz": {"continuous": {"throughput_tok_s": 999.0,
+                                            "recompiles_after_warmup": 0}}},
+    "adaptive_sweep": {
+        "adaptive": {"throughput_tok_s": 10.0, "aal": 3.5,
+                     "recompiles_after_warmup": 0},
+        "adaptive_over_best_pinned": 1.05,
+    },
+    "quant_sweep": {
+        "none": {"aal": 3.5, "recompiles_after_warmup": 0},
+        "int8-kv": {"aal": 3.5, "recompiles_after_warmup": 0},
+        "slots_ratio": 3.4,
+    },
+}
+
+
+def _baseline():
+    return extract_baseline(GOOD_CURRENT)
+
+
+def test_gate_passes_on_identical_run():
+    assert compare(_baseline(), GOOD_CURRENT) == []
+
+
+def test_gate_passes_within_threshold():
+    cur = copy.deepcopy(GOOD_CURRENT)
+    cur["adaptive_sweep"]["adaptive"]["throughput_tok_s"] *= 0.95  # -5%
+    assert compare(_baseline(), cur) == []
+
+
+def test_gate_fails_on_throughput_regression():
+    cur = copy.deepcopy(GOOD_CURRENT)
+    cur["adaptive_sweep"]["adaptive"]["throughput_tok_s"] *= 0.8  # -20%
+    fails = compare(_baseline(), cur)
+    assert len(fails) == 1
+    assert "throughput_tok_s" in fails[0]
+
+
+def test_gate_fails_on_aal_regression():
+    cur = copy.deepcopy(GOOD_CURRENT)
+    cur["quant_sweep"]["int8-kv"]["aal"] = 2.0  # way below 3.5
+    fails = compare(_baseline(), cur)
+    assert any("quant_sweep.int8-kv.aal" in f for f in fails)
+
+
+def test_gate_fails_on_slots_ratio_regression():
+    cur = copy.deepcopy(GOOD_CURRENT)
+    cur["quant_sweep"]["slots_ratio"] = 1.2
+    assert any("slots_ratio" in f for f in compare(_baseline(), cur))
+
+
+def test_gate_fails_on_missing_metric_not_vacuously():
+    cur = copy.deepcopy(GOOD_CURRENT)
+    del cur["quant_sweep"]  # doctored artifact: the sweep silently vanished
+    fails = compare(_baseline(), cur)
+    assert any("missing" in f for f in fails)
+
+
+def test_gate_fails_on_empty_baseline():
+    assert compare({}, GOOD_CURRENT) != []
+    assert compare({"metrics": {}}, GOOD_CURRENT) != []
+
+
+def test_gate_fails_on_nonzero_recompiles_anywhere():
+    cur = copy.deepcopy(GOOD_CURRENT)
+    cur["servers"]["rate_4hz"]["continuous"]["recompiles_after_warmup"] = 3
+    fails = compare(_baseline(), cur)
+    assert any("recompiles" in f for f in fails)
+
+
+def test_gate_fails_when_recompiles_unmeasured():
+    cur = {"adaptive_sweep": GOOD_CURRENT["adaptive_sweep"],
+           "quant_sweep": GOOD_CURRENT["quant_sweep"]}
+    cur = json.loads(json.dumps(cur).replace("recompiles_after_warmup",
+                                             "recompiles_gone"))
+    fails = compare(_baseline(), cur)
+    assert any("unmeasured" in f for f in fails)
+
+
+def test_lookup_raises_on_missing_path():
+    with pytest.raises(KeyError):
+        lookup(GOOD_CURRENT, "quant_sweep.nope.aal")
+
+
+def test_main_exit_codes(tmp_path: Path):
+    base_p = tmp_path / "baseline.json"
+    cur_p = tmp_path / "current.json"
+    cur_p.write_text(json.dumps(GOOD_CURRENT))
+    # --write-baseline then check: passes
+    assert main(["--write-baseline", "--current", str(cur_p),
+                 "--baseline", str(base_p)]) == 0
+    assert main(["--current", str(cur_p), "--baseline", str(base_p)]) == 0
+    # doctored current: fails with exit 1
+    doctored = copy.deepcopy(GOOD_CURRENT)
+    doctored["adaptive_sweep"]["adaptive"]["aal"] = 0.1
+    cur_p.write_text(json.dumps(doctored))
+    assert main(["--current", str(cur_p), "--baseline", str(base_p)]) == 1
+
+
+def test_cli_process_fails_loudly_on_doctored_json(tmp_path: Path):
+    """The exact CI invocation, as a subprocess, against a doctored
+    artifact: nonzero exit AND a human-readable reason on stderr."""
+    repo = Path(__file__).resolve().parent.parent
+    base_p = tmp_path / "baseline.json"
+    cur_p = tmp_path / "current.json"
+    base_p.write_text(json.dumps(extract_baseline(GOOD_CURRENT)))
+    doctored = copy.deepcopy(GOOD_CURRENT)
+    doctored["quant_sweep"]["slots_ratio"] = 0.9
+    doctored["quant_sweep"]["int8-kv"]["recompiles_after_warmup"] = 2
+    cur_p.write_text(json.dumps(doctored))
+    proc = subprocess.run(
+        [sys.executable, str(repo / "benchmarks" / "check_regression.py"),
+         "--baseline", str(base_p), "--current", str(cur_p)],
+        capture_output=True, text=True, cwd=repo)
+    assert proc.returncode == 1
+    assert "BENCH REGRESSION GATE FAILED" in proc.stderr
+    assert "slots_ratio" in proc.stderr
+    assert "recompiles" in proc.stderr
