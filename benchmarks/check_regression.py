@@ -39,6 +39,11 @@ GATED_METRICS: Tuple[Tuple[str, str], ...] = (
     ("quant_sweep.none.aal", "higher"),
     ("quant_sweep.int8-kv.aal", "higher"),
     ("quant_sweep.slots_ratio", "higher"),
+    # verify-kernel HBM traffic (analytic model, fully deterministic):
+    # reintroducing repeat_kv on the hot path or dropping the kv-block
+    # early-out collapses these toward 1.0 and fails the gate
+    ("kernel_traffic.gqa_bytes_ratio", "higher"),
+    ("kernel_traffic.len_scaling_ratio", "higher"),
 )
 DEFAULT_THRESHOLD = 0.10
 

@@ -1,0 +1,131 @@
+"""Verify-kernel microbenchmark: HBM traffic + iteration time vs committed
+length.
+
+For a fixed GQA verification shape, sweep the committed cache length and
+record, per length:
+
+  * modeled HBM bytes for the fused length-aware kernel (block-granular
+    early-out, un-repeated K/V, in-kernel mask) — ``repro.kernels.traffic``;
+  * modeled bytes for the two XLA einsum paths (grouped, and the
+    repeat_kv baseline the kernel replaces);
+  * the roofline time the kernel bytes imply at a v5e-class bandwidth;
+  * measured wall time per ``ops.verify_attention`` call. On CPU the kernel
+    runs in interpret mode, so wall numbers only sanity-check the trend
+    (flat-ish in length it would NOT be if blocks weren't skipped); on TPU
+    they are the real thing. Wall time is recorded, never gated.
+
+The modeled-bytes rows are deterministic and feed the bench-regression gate
+via ``kernel_traffic`` in fig_serving.json; this standalone sweep writes
+``results/fig_kernel.json`` and a markdown table consumed by
+``benchmarks/roofline.py``.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks import common
+from repro.kernels import ops
+from repro.kernels.traffic import bytes_summary, roofline_time_s
+
+from repro.kernels.ops import VERIFY_BLOCK_S
+
+# a llama-2-7b-at-GQA-scale verification shape: 2 kv-heads x 4 query heads
+# per group, 8-node trees against a 512-slot cache; the block width is the
+# hot path's own, so the modeled rows describe the deployed kernel
+SHAPE = dict(batch=4, w=8, kv_heads=2, num_q_per_kv=4, head_dim=64,
+             s_cache=512, block_s=VERIFY_BLOCK_S)
+LENGTHS = (0, 64, 128, 256, 384, 512)
+
+
+def _inputs(length: int, key=0):
+    B, W = SHAPE["batch"], SHAPE["w"]
+    KV, G, dh = SHAPE["kv_heads"], SHAPE["num_q_per_kv"], SHAPE["head_dim"]
+    S = SHAPE["s_cache"]
+    ks = jax.random.split(jax.random.PRNGKey(key), 5)
+    q = jax.random.normal(ks[0], (B, W, KV * G, dh))
+    k = jax.random.normal(ks[1], (B, S, KV, dh))
+    v = jax.random.normal(ks[2], (B, S, KV, dh))
+    k_new = jax.random.normal(ks[3], (B, W, KV, dh))
+    v_new = jax.random.normal(ks[4], (B, W, KV, dh))
+    lens = jnp.full((B,), length, jnp.int32)
+    pos = jnp.arange(S)[None]
+    kv_pos = jnp.where(pos < lens[:, None], pos, -1).astype(jnp.int32)
+    q_pos = lens[:, None] + jnp.broadcast_to(jnp.arange(W)[None] % 4, (B, W))
+    tm = jnp.broadcast_to(jnp.tril(jnp.ones((W, W), bool))[None], (B, W, W))
+    return q, k, v, kv_pos, q_pos, lens, k_new, v_new, tm
+
+
+def measure_iter_s(length: int, reps: int = 5) -> float:
+    args = _inputs(length)
+    out = ops.verify_attention(*args, block_s=SHAPE["block_s"])
+    jax.block_until_ready(out)          # compile outside the timed region
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = ops.verify_attention(*args, block_s=SHAPE["block_s"])
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps
+
+
+def run(time_it: bool = True) -> Dict:
+    B = SHAPE["batch"]
+    rows: List[Dict] = []
+    for length in LENGTHS:
+        s = bytes_summary(w=SHAPE["w"], kv_heads=SHAPE["kv_heads"],
+                          num_q_per_kv=SHAPE["num_q_per_kv"],
+                          head_dim=SHAPE["head_dim"],
+                          s_cache=SHAPE["s_cache"],
+                          lengths=[length] * B, block_s=SHAPE["block_s"])
+        row = {"length": length, **s,
+               "roofline_s": roofline_time_s(s["kernel_bytes"])}
+        if time_it:
+            row["iter_s"] = measure_iter_s(length)
+        rows.append(row)
+    full, first = rows[-1], next(r for r in rows if r["length"] > 0)
+    out = {"shape": SHAPE, "backend": jax.default_backend(),
+           "interpret_mode": jax.default_backend() == "cpu",
+           "rows": rows,
+           # the two headline ratios (same definitions the gate uses):
+           # repeat_kv blow-up recovered at full length, and bytes tracking
+           # committed length instead of the max_len extent
+           "gqa_bytes_ratio": full["repeated_over_kernel"],
+           "len_scaling_ratio": (full["kernel_bytes"]
+                                 / max(first["kernel_bytes"], 1))}
+    common.save("fig_kernel", out)
+    return out
+
+
+def markdown_table(res: Dict) -> str:
+    lines = ["| length | kernel MB | grouped-XLA MB | repeat-KV MB | "
+             "roofline µs |" + (" iter ms |" if "iter_s" in res["rows"][0]
+                                else ""),
+             "|---|---|---|---|---|" + ("---|" if "iter_s" in res["rows"][0]
+                                        else "")]
+    for r in res["rows"]:
+        line = (f"| {r['length']} | {r['kernel_bytes'] / 2**20:.2f} | "
+                f"{r['xla_grouped_bytes'] / 2**20:.2f} | "
+                f"{r['xla_repeated_bytes'] / 2**20:.2f} | "
+                f"{r['roofline_s'] * 1e6:.1f} |")
+        if "iter_s" in r:
+            line += f" {r['iter_s'] * 1e3:.2f} |"
+        lines.append(line)
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--no-time", action="store_true",
+                    help="modeled bytes only (skip wall-clock reps)")
+    cli = ap.parse_args()
+    res = run(time_it=not cli.no_time)
+    print(markdown_table(res))
+    print(f"\nGQA repeat-KV blow-up recovered: "
+          f"{res['gqa_bytes_ratio']:.2f}x at full length "
+          f"(num_q_per_kv={SHAPE['num_q_per_kv']})")
+    print(f"bytes scale with committed length: "
+          f"{res['len_scaling_ratio']:.2f}x from first live block to "
+          f"max_len (vs 1.0x for the max_len-extent XLA paths)")

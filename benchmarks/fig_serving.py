@@ -325,6 +325,59 @@ def quant_sweep(tb, n: int, max_new: int, batch: int,
     return out
 
 
+def kernel_traffic(tb) -> Dict:
+    """Deterministic verify-kernel metrics for the regression gate.
+
+    The byte numbers come from the analytic traffic model
+    (repro.kernels.traffic) at a fixed GQA shape — pure arithmetic, so the
+    gate is runner-independent: ``gqa_bytes_ratio`` (repeat_kv blow-up the
+    fused kernel recovers at full length, ~num_q_per_kv x) and
+    ``len_scaling_ratio`` (kernel bytes track the committed length; the
+    XLA paths are flat at the max_len extent, ratio 1.0). The recompile
+    probe then drives the REAL fused-kernel megastep through slot churn on
+    the testbed: its ``recompiles_after_warmup`` must stay 0 like every
+    other counter in the artifact.
+    """
+    from repro.kernels.ops import VERIFY_BLOCK_S
+    from repro.kernels.traffic import bytes_summary
+    shape = dict(w=8, kv_heads=2, num_q_per_kv=4, head_dim=64, s_cache=512)
+    block_s = VERIFY_BLOCK_S  # the hot path's own skip granularity
+    full = bytes_summary(**shape, lengths=[512] * 4, block_s=block_s)
+    short = bytes_summary(**shape, lengths=[128] * 4, block_s=block_s)
+    out: Dict = {
+        "shape": {**shape, "batch": 4, "block_s": block_s},
+        "kernel_bytes_len128": short["kernel_bytes"],
+        "kernel_bytes_len512": full["kernel_bytes"],
+        "xla_repeated_bytes": full["xla_repeated_bytes"],
+        "gqa_bytes_ratio": full["repeated_over_kernel"],
+        "len_scaling_ratio": (full["kernel_bytes"]
+                              / max(short["kernel_bytes"], 1)),
+    }
+    eng = SpeculativeEngine(
+        tb.drafter, tb.d_params, tb.verifier, tb.v_params,
+        buckets=buckets_for_depths((4,), width=2, verify_frac=0.75),
+        depth_options=(4,), config=EngineConfig(verify_kernel="fused"))
+    state = eng.init_decode_state(2)
+    prompt = np.arange(1, 9, dtype=np.int32)
+    # warm every executable the churn loop replays (megastep, slot
+    # prefill, slot reset), then any further compile is a regression
+    state = eng.prefill_into_slot(state, 0, prompt, len(prompt))
+    state = eng.prefill_into_slot(state, 1, prompt, len(prompt))
+    state, _ = eng.decode_step(state, spec=SPEC, verify_v=VERIFY_V)
+    state = eng.reset_state_slot(state, 0)
+    state = eng.prefill_into_slot(state, 0, prompt, len(prompt))
+    warm = eng.executable_count()
+    for i in range(3):
+        state = eng.reset_state_slot(state, i % 2)
+        state = eng.prefill_into_slot(state, i % 2, prompt, len(prompt))
+        state, _ = eng.decode_step(state, spec=SPEC, verify_v=VERIFY_V)
+    out["kernel_path"] = {
+        "verify_path": eng.verify_path(),
+        "recompiles_after_warmup": eng.executable_count() - warm,
+    }
+    return out
+
+
 def sweep_meshes(tb, n: int, rate_hz: float, max_new: int, batch: int,
                  prompt_pad: int,
                  shapes: Optional[List[Tuple[int, int]]] = None,
@@ -377,6 +430,8 @@ def run(quick: bool = True, mesh_sweep: bool = True):
     out["adaptive_sweep"] = adaptive_sweep(tb, n, rate_hz=0.6, batch=batch)
     # int8 KV / weight quantization vs fp32 at fixed cache bytes
     out["quant_sweep"] = quant_sweep(tb, max(6, n // 2), max_new, batch)
+    # fused verify-kernel traffic model + kernel-path recompile probe
+    out["kernel_traffic"] = kernel_traffic(tb)
     common.save("fig_serving", out)
     return out
 
@@ -425,3 +480,9 @@ if __name__ == "__main__":
         print(f"  int8-kv slots at fixed cache bytes: "
               f"{qs['slots_ratio']:.2f}x fp32  "
               f"(aal delta {qs['aal_delta']:+.3f})")
+    kt = res.get("kernel_traffic")
+    if kt:
+        print(f"verify kernel: repeat-KV bytes recovered "
+              f"{kt['gqa_bytes_ratio']:.2f}x  length scaling "
+              f"{kt['len_scaling_ratio']:.2f}x  "
+              f"recompiles={kt['kernel_path']['recompiles_after_warmup']}")

@@ -57,6 +57,24 @@ def markdown_table(recs: List[Dict]) -> str:
     return "\n".join(lines)
 
 
+def kernel_markdown() -> str:
+    """Verify-kernel HBM-traffic section from the fig_kernel sweep (empty
+    string when the microbenchmark hasn't been run)."""
+    path = os.path.join(os.path.dirname(__file__), "results",
+                        "fig_kernel.json")
+    if not os.path.exists(path):
+        return ""
+    from benchmarks.fig_kernel import markdown_table
+    with open(path) as f:
+        res = json.load(f)
+    return ("\n## Verify-kernel HBM traffic "
+            f"(modeled, backend={res.get('backend', '?')})\n\n"
+            + markdown_table(res)
+            + f"\n\nrepeat-KV blow-up recovered: "
+              f"{res['gqa_bytes_ratio']:.2f}x; bytes scale with committed "
+              f"length: {res['len_scaling_ratio']:.2f}x.\n")
+
+
 def run(quick: bool = True):
     recs = load_records(mesh="pod16x16")
     table = markdown_table(recs)
@@ -67,12 +85,14 @@ def run(quick: bool = True):
         if not r.get("ok"):
             failures.append({"case": os.path.basename(path),
                              "error": r.get("error", "?")})
+    kernel_md = kernel_markdown()
     out = {"rows": [row(r) for r in recs], "n_single_pod": len(recs),
            "n_multi_pod": len(load_records(mesh="pod2x16x16")),
+           "has_kernel_table": bool(kernel_md),
            "failures": failures}
     with open(os.path.join(os.path.dirname(__file__), "results",
                            "roofline_table.md"), "w") as f:
-        f.write(table + "\n")
+        f.write(table + "\n" + kernel_md)
     return out
 
 

@@ -82,6 +82,12 @@ class ModelConfig:
     param_dtype: str = "float32"
     remat: bool = False
     use_pallas: bool = False       # route hot ops through Pallas kernels
+    verify_kernel: str = "auto"    # cached/tree attention hot path:
+                                   # "fused" = the GQA-native length-aware
+                                   # Pallas kernel, "xla" = the einsum
+                                   # oracle path, "auto" = fused on an
+                                   # accelerator backend, xla on CPU (where
+                                   # the kernel would run interpreted)
     attn_chunk: int = 512          # flash prefill query/kv block
     loss_chunk: int = 512          # chunked cross-entropy sequence block
     vocab_pad_to: int = 1          # pad vocab to a multiple (256 for dry-run)

@@ -72,6 +72,11 @@ class EngineConfig:
     prune: bool = True             # O3 verification-width pruning
     sample_draft: bool = True      # sample rank-0 candidate when temp > 0
     quant: QuantConfig = QuantConfig()  # int8 KV cache / weight-only params
+    verify_kernel: Optional[str] = None  # override BOTH models' cached/tree
+                                   # attention hot path: "fused" (GQA-native
+                                   # length-aware Pallas kernel) | "xla"
+                                   # (einsum oracle) | "auto"; None keeps
+                                   # each ModelConfig's own setting
 
     def resolve_accept(self) -> str:
         if self.accept_mode != "auto":
@@ -166,6 +171,15 @@ class SpeculativeEngine:
         self.depth_options = depth_options
         self.cfg = config or EngineConfig()
         self.mesh = mesh
+        if self.cfg.verify_kernel is not None:
+            # one switch for the whole runtime: every cached/tree attention
+            # in the megastep, staged parts and slot prefill follows it
+            # (kernel dispatch happens per-call in models/attention.py)
+            vk = self.cfg.verify_kernel
+            if drafter.cfg.verify_kernel != vk:
+                self.drafter = Model(drafter.cfg.replace(verify_kernel=vk))
+            if verifier.cfg.verify_kernel != vk:
+                self.verifier = Model(verifier.cfg.replace(verify_kernel=vk))
         if mesh is not None:
             # tensor-parallel placement via the logical-axis rules; GQA archs
             # whose kv_heads don't divide the model axis fall back to
@@ -210,6 +224,17 @@ class SpeculativeEngine:
             return {"devices": 1, "shape": None}
         return {"devices": int(self.mesh.devices.size),
                 "shape": {k: int(v) for k, v in self.mesh.shape.items()}}
+
+    def verify_path(self) -> str:
+        """Which cached/tree-attention implementation the VERIFIER's
+        megastep resolves to — "fused" (the GQA-native length-aware Pallas
+        kernel) or "xla" (the einsum oracle) — via the same predicate
+        ``cached_attention`` dispatches on, so this can't drift from the
+        real hot path. (A sliding-window drafter can individually fall back
+        to xla while the verifier stays fused.)"""
+        from repro.models.attention import fused_dispatch_ok
+        return ("fused" if fused_dispatch_ok(
+            self.verifier.cfg, mesh_active=self.mesh is not None) else "xla")
 
     # ------------------------------------------------------------- quant --
     def _kv_dtype(self):

@@ -6,7 +6,9 @@ indexing/accumulation logic; on TPU the same code lowers to Mosaic.
 """
 from __future__ import annotations
 
+import math
 import os
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp
@@ -27,22 +29,51 @@ def _interpret() -> bool:
     return jax.default_backend() == "cpu"
 
 
+# kv-block width of the fused verify hot path — the skip granularity of the
+# length-aware early-out. One constant shared by the dispatch
+# (models/attention.py), the analytic traffic model users
+# (benchmarks/fig_kernel.py, fig_serving.kernel_traffic) and the regression
+# gate, so the gated length-scaling ratio is the deployed kernel's, not a
+# benchmark-only configuration.
+VERIFY_BLOCK_S = 128
+
+
+def block_pad(s: int, block: int) -> Tuple[int, int]:
+    """(block_size, pad) so that ``(s + pad) % block_size == 0``.
+
+    The old ``while s % bs: bs //= 2`` fallback silently degraded to
+    scalar (bs=1) blocks for odd/prime ``s`` — thousands of grid steps and
+    no MXU tiling. Instead keep the block size and pad ``s`` up to the next
+    multiple (as ``ssd_scan`` always has); callers mask or slice the pad
+    away. ``s <= block`` needs neither: one block of exactly ``s``.
+    """
+    bs = min(block, s)
+    return bs, (-s) % bs
+
+
 def tree_attention(q, k, v, mask, *, k_scale=None, v_scale=None,
                    block_s: int = 256):
     """Tree-masked verification attention (see tree_attention.py).
 
-    Pass ``k_scale``/``v_scale`` ([B, S, H, G] fp32 scale groups along the
-    head dim, with int8 k/v — the pair ``repro.quant.quantize_kv`` returns)
-    to route through the dequantizing int8 kernel variant; omit for the
-    fp path.
+    GQA-native contract: k/v are the cache's own **un-repeated**
+    [B, S, KV, dh] layout (KV must divide q's H). Pass ``k_scale``/
+    ``v_scale`` ([B, S, KV, G] fp32 scale groups along the head dim, with
+    int8 k/v — the pair ``repro.quant.quantize_kv`` returns) to route
+    through the dequantizing int8 kernel variant; omit for the fp path.
+    Non-block-multiple S is padded up (masked False), never degraded to
+    scalar blocks.
     """
-    S = k.shape[1]
-    bs = block_s
-    while S % bs:
-        bs //= 2
-    bs = max(bs, 1)
     if (k_scale is None) != (v_scale is None):
         raise ValueError("pass both k_scale and v_scale, or neither")
+    S = k.shape[1]
+    bs, pad = block_pad(S, block_s)
+    if pad:
+        kv_pad = ((0, 0), (0, pad), (0, 0), (0, 0))
+        k, v = jnp.pad(k, kv_pad), jnp.pad(v, kv_pad)
+        mask = jnp.pad(mask, ((0, 0), (0, 0), (0, pad)))  # padded slots False
+        if k_scale is not None:  # neutral scales keep the int8 dequant exact
+            k_scale = jnp.pad(k_scale, kv_pad, constant_values=1.0)
+            v_scale = jnp.pad(v_scale, kv_pad, constant_values=1.0)
     if k_scale is not None:
         return _ta.tree_attention_int8(q, k, v, k_scale, v_scale, mask,
                                        block_s=bs, interpret=_interpret())
@@ -50,16 +81,57 @@ def tree_attention(q, k, v, mask, *, k_scale=None, v_scale=None,
                               interpret=_interpret())
 
 
+def verify_attention(q, k, v, kv_pos, q_pos, lengths, k_new, v_new,
+                     tree_mask, *, k_scale=None, v_scale=None,
+                     block_s: int = VERIFY_BLOCK_S):
+    """Fused, length-aware verification attention — the megastep hot path
+    (see tree_attention.verify_attention for the full contract).
+
+    q [B,W,H,dh] against the committed cache k/v [B,S,KV,dh] (+ int8 scales
+    when quantized) under the in-kernel committed-prefix mask derived from
+    ``kv_pos``/``q_pos``/``lengths``, plus the [B,T,KV,dh] tree scratch
+    under ``tree_mask`` [B,W,T]. kv-blocks past each slot's committed
+    length are skipped (compute and HBM fetch), so verify traffic scales
+    with the live cache, not its max_len extent.
+    """
+    if (k_scale is None) != (v_scale is None):
+        raise ValueError("pass both k_scale and v_scale, or neither")
+    S = k.shape[1]
+    bs, pad = block_pad(S, block_s)
+    if pad:  # pathological cache extents only; padded slots carry pos=-1
+        kv_pad = ((0, 0), (0, pad), (0, 0), (0, 0))
+        k, v = jnp.pad(k, kv_pad), jnp.pad(v, kv_pad)
+        kv_pos = jnp.pad(kv_pos, ((0, 0), (0, pad)), constant_values=-1)
+        if k_scale is not None:
+            k_scale = jnp.pad(k_scale, kv_pad, constant_values=1.0)
+            v_scale = jnp.pad(v_scale, kv_pad, constant_values=1.0)
+    if k_scale is not None:
+        return _ta.verify_attention_int8(
+            q, k, v, k_scale, v_scale, kv_pos, q_pos, lengths, k_new, v_new,
+            tree_mask, block_s=bs, interpret=_interpret())
+    return _ta.verify_attention(q, k, v, kv_pos, q_pos, lengths, k_new,
+                                v_new, tree_mask, block_s=bs,
+                                interpret=_interpret())
+
+
 def flash_prefill(q, k, v, *, block_q: int = 256, block_k: int = 256):
-    """Causal flash attention with wedge skipping (see flash_prefill.py)."""
+    """Causal flash attention with wedge skipping (see flash_prefill.py).
+
+    Non-block-multiple S is padded up to a common multiple of both block
+    sizes and the pad rows sliced off (padded keys sit above every real
+    query's causal horizon, so they never contribute).
+    """
     S = q.shape[1]
-    bq, bk = block_q, block_k
-    while S % bq:
-        bq //= 2
-    while S % bk:
-        bk //= 2
-    return _fp.flash_prefill(q, k, v, block_q=max(bq, 1), block_k=max(bk, 1),
-                             interpret=_interpret())
+    bq, _ = block_pad(S, block_q)
+    bk, _ = block_pad(S, block_k)
+    pad = (-S) % math.lcm(bq, bk)
+    if pad:
+        qkv_pad = ((0, 0), (0, pad), (0, 0), (0, 0))
+        q = jnp.pad(q, qkv_pad)
+        k, v = jnp.pad(k, qkv_pad), jnp.pad(v, qkv_pad)
+    out = _fp.flash_prefill(q, k, v, block_q=bq, block_k=bk,
+                            interpret=_interpret())
+    return out[:, :S] if pad else out
 
 
 def ssd_scan(x, dt, A, B, C, chunk: int, initial_state=None):

@@ -5,8 +5,26 @@ import jax
 import jax.numpy as jnp
 
 
+def _expand_kv(q, k, v):
+    """Repeat un-repeated [B,S,KV,dh] K/V up to q's H heads (oracle only —
+    the kernels never materialize this)."""
+    g = q.shape[2] // k.shape[2]
+    if g > 1:
+        k = jnp.repeat(k, g, axis=2)
+        v = jnp.repeat(v, g, axis=2)
+    return k, v
+
+
+def _dequant(x, s):
+    """int8 payload [..., Dh] + fp32 scale groups [..., G] -> fp32."""
+    g = s.shape[-1]
+    xf = x.astype(jnp.float32).reshape(*x.shape[:-1], g, -1)
+    return (xf * s[..., None]).reshape(x.shape)
+
+
 def tree_attention_ref(q, k, v, mask):
-    """q: [B,W,H,dh]; k/v: [B,S,H,dh]; mask: [B,W,S]."""
+    """q: [B,W,H,dh]; k/v: [B,S,KV,dh] un-repeated; mask: [B,W,S]."""
+    k, v = _expand_kv(q, k, v)
     dh = q.shape[-1]
     s = jnp.einsum("bwhd,bshd->bhws", q.astype(jnp.float32),
                    k.astype(jnp.float32)) / jnp.sqrt(float(dh))
@@ -19,12 +37,35 @@ def tree_attention_ref(q, k, v, mask):
 def tree_attention_int8_ref(q, k, v, k_scale, v_scale, mask):
     """Oracle for the dequantizing int8 kernel: dequantize the int8 K/V
     (per-slot, per-head scale groups along the head dim), then plain tree
-    attention. k/v: [B,S,H,dh] int8; k_scale/v_scale: [B,S,H,G] fp32."""
-    def dq(x, s):
-        g = s.shape[-1]
-        xf = x.astype(jnp.float32).reshape(*x.shape[:-1], g, -1)
-        return (xf * s[..., None]).reshape(x.shape)
-    return tree_attention_ref(q, dq(k, k_scale), dq(v, v_scale), mask)
+    attention. k/v: [B,S,KV,dh] int8; k_scale/v_scale: [B,S,KV,G] fp32."""
+    return tree_attention_ref(q, _dequant(k, k_scale), _dequant(v, v_scale),
+                              mask)
+
+
+def committed_mask_ref(kv_pos, q_pos, lengths):
+    """[B, W, S] committed-prefix visibility — the mask the fused verify
+    kernel computes in VMEM: slot occupied, committed, and strictly before
+    the query position."""
+    kp = kv_pos[:, None, :]
+    qp = q_pos[:, :, None]
+    return (kp >= 0) & (kp < lengths[:, None, None]) & (kp < qp)
+
+
+def verify_attention_ref(q, k, v, kv_pos, q_pos, lengths, k_new, v_new,
+                         tree_mask, k_scale=None, v_scale=None):
+    """Oracle for the fused verify kernel: dequantize (if int8), concat the
+    committed cache with the tree scratch, merge committed-prefix + ancestor
+    masks, then plain tree attention. Same contract as
+    ``tree_attention.verify_attention``."""
+    if k_scale is not None:
+        k, v = _dequant(k, k_scale), _dequant(v, v_scale)
+    mask = jnp.concatenate(
+        [committed_mask_ref(kv_pos, q_pos, lengths), tree_mask], axis=-1)
+    kk = jnp.concatenate([k.astype(jnp.float32),
+                          k_new.astype(jnp.float32)], axis=1)
+    vv = jnp.concatenate([v.astype(jnp.float32),
+                          v_new.astype(jnp.float32)], axis=1)
+    return tree_attention_ref(q, kk, vv, mask)
 
 
 def flash_prefill_ref(q, k, v):

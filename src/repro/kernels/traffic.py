@@ -1,0 +1,114 @@
+"""Analytic HBM-traffic model for verification attention.
+
+The verify megastep is bandwidth-bound, so the paper's latency model (and
+the stage-based scheduler built on it) is only as good as its estimate of
+the bytes one verification step actually moves. These functions model that
+traffic per attention layer, deterministically, from shapes alone — they
+feed the kernel microbenchmark (``benchmarks/fig_kernel.py``), the roofline
+tables, and the CI bench-regression gate (``kernel_traffic`` metrics in
+``benchmarks/fig_serving.py``), where the length-scaling and GQA ratios
+would silently regress if someone reintroduced ``repeat_kv`` or dropped the
+kv-block skip.
+
+Modeled flows (first-order: operand reads + output writes; scores/probs are
+assumed to stay on-chip for the kernel and are charged to the XLA paths
+only via the materialized visibility mask):
+
+* ``verify_kernel_bytes`` — the fused GQA-native kernel: K/V read once per
+  kv-head at storage precision (int8 payload + fp32 scale groups when
+  quantized), only for kv-blocks holding committed tokens (block-granular
+  ``ceil(len/block_s)`` early-out), no mask tensor (computed in VMEM from
+  ``kv_pos``/``q_pos``), plus the fused tree-scratch segment.
+* ``verify_xla_bytes`` — the einsum paths: the whole ``s_cache`` extent
+  every step plus the materialized ``[B, W, S]`` visibility mask; with
+  ``grouped=False`` additionally the ``repeat_kv`` blow-up (K/V
+  materialized G× at fp32 — the pre-kernel default hot path).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Sequence
+
+
+def _ceil_to(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def verify_kernel_bytes(*, w: int, kv_heads: int, num_q_per_kv: int,
+                        head_dim: int, s_cache: int,
+                        lengths: Sequence[int], block_s: int = 256,
+                        tree_t: Optional[int] = None,
+                        kv_itemsize: int = 4,
+                        scale_groups: int = 0) -> int:
+    """Modeled HBM bytes for ONE fused verify-attention call (one layer).
+
+    lengths: committed length per batch row (drives the kv-block skip);
+    kv_itemsize: cache storage itemsize (4 fp32, 1 int8); scale_groups:
+    fp32 scale groups per (slot, kv-head) for int8 caches, 0 for fp.
+    """
+    h = kv_heads * num_q_per_kv
+    t = w if tree_t is None else tree_t
+    bs = min(block_s, s_cache)
+    total = 0
+    for length in lengths:
+        live = _ceil_to(min(max(int(length), 0), s_cache), bs) if length else 0
+        # committed cache: K+V payload (+ scales) + slot positions, live
+        # blocks only
+        total += 2 * live * kv_heads * head_dim * kv_itemsize
+        total += 2 * live * kv_heads * scale_groups * 4
+        total += live * 4                                   # kv_pos int32
+        # queries in, output out (fp32), query positions
+        total += 2 * w * h * head_dim * 4 + w * 4
+        # fused tree segment: scratch K/V (never quantized) + ancestor mask
+        total += 2 * t * kv_heads * head_dim * 4 + w * t
+    return total
+
+
+def verify_xla_bytes(*, w: int, kv_heads: int, num_q_per_kv: int,
+                     head_dim: int, s_cache: int, batch: int,
+                     tree_t: Optional[int] = None,
+                     grouped: bool = False) -> int:
+    """Modeled HBM bytes for ONE einsum-path cached_attention call (one
+    layer): the full ``s_cache`` extent regardless of committed length, the
+    materialized ``[B, W, S]`` visibility mask, and — on the ungrouped
+    ``repeat_kv`` path — K/V blown up to all ``H`` heads at fp32."""
+    h = kv_heads * num_q_per_kv
+    t = w if tree_t is None else tree_t
+    kv_read_heads = kv_heads if grouped else h
+    per_row = (2 * s_cache * kv_read_heads * head_dim * 4     # K+V, full S
+               + w * s_cache                                  # [W, S] mask
+               + 2 * w * h * head_dim * 4                     # q in, out out
+               + 2 * t * kv_heads * head_dim * 4 + w * t)     # tree segment
+    return batch * per_row
+
+
+def bytes_summary(*, w: int, kv_heads: int, num_q_per_kv: int, head_dim: int,
+                  s_cache: int, lengths: Sequence[int], block_s: int = 256,
+                  kv_itemsize: int = 4, scale_groups: int = 0) -> dict:
+    """Kernel vs XLA-path traffic for one shape at given committed lengths,
+    plus the two gateable ratios (repeat-kv blow-up recovered; bytes track
+    length, not max_len)."""
+    common = dict(w=w, kv_heads=kv_heads, num_q_per_kv=num_q_per_kv,
+                  head_dim=head_dim, s_cache=s_cache)
+    kern = verify_kernel_bytes(lengths=lengths, block_s=block_s,
+                               kv_itemsize=kv_itemsize,
+                               scale_groups=scale_groups, **common)
+    repeated = verify_xla_bytes(batch=len(lengths), grouped=False, **common)
+    grouped = verify_xla_bytes(batch=len(lengths), grouped=True, **common)
+    return {"kernel_bytes": kern, "xla_repeated_bytes": repeated,
+            "xla_grouped_bytes": grouped,
+            "repeated_over_kernel": repeated / max(kern, 1),
+            "grouped_over_kernel": grouped / max(kern, 1)}
+
+
+def roofline_time_s(bytes_moved: int, hbm_gbps: float = 819.0) -> float:
+    """Bandwidth-bound step-time estimate at a given HBM bandwidth (default:
+    a v5e-class 819 GB/s) — what the latency profile's verify term should
+    track if the kernel keeps the verify stage memory-bound."""
+    return bytes_moved / (hbm_gbps * 1e9)
+
+
+def block_count(length: int, s_cache: int, block_s: int) -> int:
+    """Live kv-blocks the kernel touches for one row at ``length``."""
+    bs = min(block_s, s_cache)
+    return math.ceil(min(max(length, 0), s_cache) / bs) if length > 0 else 0

@@ -1,15 +1,35 @@
-"""Pallas TPU kernel: tree-masked verification attention (the paper's
-verification hot spot, cf. FastTree [36]).
+"""Pallas TPU kernels: tree-masked verification attention (the paper's
+verification hot spot, cf. FastTree [36] / SpecInfer's tree kernel).
 
-W tree queries attend to an S-slot committed KV cache under an arbitrary
-boolean visibility mask (committed-causality + ancestor mask merged by the
-caller). Flash-decode style: grid = (batch, heads, kv-blocks), with the
-kv-block axis innermost/sequential; running max / denominator / accumulator
-persist in VMEM scratch across kv blocks and the output is normalized in the
-final block.
+Both kernels are **GQA-native**: the grid runs over (batch, KV heads,
+kv-blocks) and each kv-head processes a ``[G·W, dh]`` query tile (G =
+num_q_per_kv query heads folded into the row axis), so every K/V tile is
+read from HBM exactly once per group instead of being materialized G× by
+``repeat_kv``. K/V arrive un-repeated as ``[B, S, KV, dh]`` — the cache's
+own layout. Flash-decode style: the kv-block axis is innermost/sequential;
+running max / denominator / accumulator persist in VMEM scratch across kv
+blocks and the output is normalized in the final block.
 
-Block shapes: q tile [W, dh] and kv tiles [block_s, dh] live in VMEM; W and
-dh are MXU-friendly (multiples of 8×128 after padding by the wrapper).
+Two entry points:
+
+* ``tree_attention`` / ``tree_attention_int8`` — generic visibility-mask
+  variant (caller supplies ``[B, W, S]`` bool); the standalone op and the
+  oracle-diff target.
+* ``verify_attention`` / ``verify_attention_int8`` — the serving hot path.
+  Fully fused and **length-aware**: per-slot committed ``lengths`` are
+  scalar-prefetched so (a) kv-blocks past ``ceil(len/block_s)`` are skipped
+  with ``pl.when`` AND their HBM fetch is elided by clamping the block
+  index map to the last live block (Pallas skips the copy when the block
+  index repeats — the flash-decoding early-out), and (b) the committed-
+  prefix causal mask is computed *in kernel* from ``kv_pos``/``q_pos``
+  instead of a materialized ``[B, W, S]`` mask (itself O(B·W·max_len) HBM
+  per layer). The W in-flight tree tokens (``k_new``/``v_new`` scratch) are
+  folded into the same online-softmax pass as a final grid step under the
+  ``[W, T]`` ancestor mask — no concat, no second dispatch.
+
+Shapes stay static: ``lengths`` is a traced operand and the grid is sized
+by ``S``/``block_s``, so the zero-recompile executable-cache contract of
+the megastep survives untouched.
 """
 from __future__ import annotations
 
@@ -18,57 +38,49 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 NEG_INF = -1e30
 
 
 def _vmem(shape, dtype):
     """VMEM scratch allocation (TPU); falls back cleanly in interpret mode."""
-    from jax.experimental.pallas import tpu as pltpu
     return pltpu.VMEM(shape, dtype)
 
 
-def _kernel(q_ref, k_ref, v_ref, mask_ref, o_ref, m_scr, l_scr, acc_scr, *,
-            scale: float, n_kb: int):
-    kb = pl.program_id(2)
+def _dequant_tile(x_ref, s_ref):
+    """int8 tile [bs, dh] * fp32 scale groups [bs, G] -> fp32 [bs, dh]."""
+    bs, dh = x_ref.shape[1], x_ref.shape[3]
+    g = s_ref.shape[3]
+    x = x_ref[0, :, 0, :].astype(jnp.float32).reshape(bs, g, dh // g)
+    return (x * s_ref[0, :, 0, :][:, :, None]).reshape(bs, dh)
 
-    @pl.when(kb == 0)
-    def _init():
-        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
-        l_scr[...] = jnp.zeros_like(l_scr)
-        acc_scr[...] = jnp.zeros_like(acc_scr)
 
-    q = q_ref[0, :, 0, :].astype(jnp.float32)        # [W, dh]
-    k = k_ref[0, :, 0, :].astype(jnp.float32)        # [bs, dh]
-    v = v_ref[0, :, 0, :].astype(jnp.float32)        # [bs, dh]
-    mask = mask_ref[0, :, :]                          # [W, bs]
-
-    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale  # [W, bs]
-    s = jnp.where(mask, s, NEG_INF)
-
-    m_prev = m_scr[...]                               # [W, 1]
+def _flash_update(s, v, m_scr, l_scr, acc_scr):
+    """One online-softmax accumulation step. s: [rows, bs]; v: [bs, dh]."""
+    m_prev = m_scr[...]                               # [rows, 1]
     m_new = jnp.maximum(m_prev[:, 0], s.max(-1))[:, None]
     alpha = jnp.exp(m_prev - m_new)
     p = jnp.exp(s - m_new)
-    l_new = l_scr[...] * alpha + p.sum(-1, keepdims=True)
-    acc_new = acc_scr[...] * alpha + jnp.dot(p, v, preferred_element_type=jnp.float32)
-
     m_scr[...] = m_new
-    l_scr[...] = l_new
-    acc_scr[...] = acc_new
-
-    @pl.when(kb == n_kb - 1)
-    def _done():
-        o_ref[0, :, 0, :] = (acc_scr[...] /
-                             jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+    l_scr[...] = l_scr[...] * alpha + p.sum(-1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * alpha + jnp.dot(
+        p, v, preferred_element_type=jnp.float32)
 
 
-def _qkernel(q_ref, k_ref, v_ref, ks_ref, vs_ref, mask_ref, o_ref,
-             m_scr, l_scr, acc_scr, *, scale: float, n_kb: int):
-    """int8 variant: K/V tiles arrive as int8 and are dequantized in VMEM —
-    fp32 scales per kv slot (sub-grouped along the head dim) broadcast over
-    their channel groups — so HBM traffic on the bandwidth-bound verify hot
-    spot is ~4x smaller. Accumulation is identical fp32 online softmax."""
+def _normalize_out(o_ref, m_scr, l_scr, acc_scr):
+    o_ref[0, 0] = (acc_scr[...] /
+                   jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+# ------------------------------------------------ generic-mask variant ----
+def _masked_kernel(*refs, scale: float, n_kb: int, g: int, w: int,
+                   quantized: bool):
+    if quantized:
+        (q_ref, k_ref, v_ref, ks_ref, vs_ref, mask_ref, o_ref,
+         m_scr, l_scr, acc_scr) = refs
+    else:
+        (q_ref, k_ref, v_ref, mask_ref, o_ref, m_scr, l_scr, acc_scr) = refs
     kb = pl.program_id(2)
 
     @pl.when(kb == 0)
@@ -77,37 +89,82 @@ def _qkernel(q_ref, k_ref, v_ref, ks_ref, vs_ref, mask_ref, o_ref,
         l_scr[...] = jnp.zeros_like(l_scr)
         acc_scr[...] = jnp.zeros_like(acc_scr)
 
-    q = q_ref[0, :, 0, :].astype(jnp.float32)         # [W, dh]
-    bs, dh = k_ref.shape[1], k_ref.shape[3]
-    g = ks_ref.shape[3]                               # scale groups per head
-    ks = ks_ref[0, :, 0, :]                           # [bs, G]
-    vs = vs_ref[0, :, 0, :]
-    # dequant in VMEM: int8 tile -> [bs, G, dh/G] * scale -> [bs, dh]
-    k = (k_ref[0, :, 0, :].astype(jnp.float32).reshape(bs, g, dh // g)
-         * ks[:, :, None]).reshape(bs, dh)
-    v = (v_ref[0, :, 0, :].astype(jnp.float32).reshape(bs, g, dh // g)
-         * vs[:, :, None]).reshape(bs, dh)
-    mask = mask_ref[0, :, :]                          # [W, bs]
+    q = q_ref[0, 0].astype(jnp.float32)               # [G·W, dh]
+    if quantized:
+        k = _dequant_tile(k_ref, ks_ref)              # [bs, dh]
+        v = _dequant_tile(v_ref, vs_ref)
+    else:
+        k = k_ref[0, :, 0, :].astype(jnp.float32)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+    mask = mask_ref[0]                                # [W, bs]
+    bs = k.shape[0]
 
     s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
-    s = jnp.where(mask, s, NEG_INF)
-
-    m_prev = m_scr[...]
-    m_new = jnp.maximum(m_prev[:, 0], s.max(-1))[:, None]
-    alpha = jnp.exp(m_prev - m_new)
-    p = jnp.exp(s - m_new)
-    l_new = l_scr[...] * alpha + p.sum(-1, keepdims=True)
-    acc_new = acc_scr[...] * alpha + jnp.dot(p, v,
-                                             preferred_element_type=jnp.float32)
-
-    m_scr[...] = m_new
-    l_scr[...] = l_new
-    acc_scr[...] = acc_new
+    s = jnp.where(mask[None], s.reshape(g, w, bs), NEG_INF).reshape(g * w, bs)
+    _flash_update(s, v, m_scr, l_scr, acc_scr)
 
     @pl.when(kb == n_kb - 1)
     def _done():
-        o_ref[0, :, 0, :] = (acc_scr[...] /
-                             jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+        _normalize_out(o_ref, m_scr, l_scr, acc_scr)
+
+
+def _masked_call(q, k, v, mask, scales, *, block_s: int, interpret: bool):
+    B, W, H, dh = q.shape
+    S, KV = k.shape[1], k.shape[2]
+    assert H % KV == 0, (H, KV)
+    G = H // KV
+    bs = min(block_s, S)
+    assert S % bs == 0, (S, bs)
+    n_kb = S // bs
+    scale = 1.0 / (dh ** 0.5)
+    # fold the G query heads of each kv-head into the row axis: [B,KV,G·W,dh]
+    qt = q.reshape(B, W, KV, G, dh).transpose(0, 2, 3, 1, 4).reshape(
+        B, KV, G * W, dh)
+
+    kernel = functools.partial(_masked_kernel, scale=scale, n_kb=n_kb,
+                               g=G, w=W, quantized=scales is not None)
+    in_specs = [
+        pl.BlockSpec((1, 1, G * W, dh), lambda b, h, kb: (b, h, 0, 0)),
+        pl.BlockSpec((1, bs, 1, dh), lambda b, h, kb: (b, kb, h, 0)),
+        pl.BlockSpec((1, bs, 1, dh), lambda b, h, kb: (b, kb, h, 0)),
+    ]
+    args = [qt, k, v]
+    if scales is not None:
+        gs = scales[0].shape[-1]
+        in_specs += [
+            pl.BlockSpec((1, bs, 1, gs), lambda b, h, kb: (b, kb, h, 0)),
+            pl.BlockSpec((1, bs, 1, gs), lambda b, h, kb: (b, kb, h, 0)),
+        ]
+        args += list(scales)
+    in_specs.append(pl.BlockSpec((1, W, bs), lambda b, h, kb: (b, 0, kb)))
+    args.append(mask)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, KV, n_kb),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, 1, G * W, dh), lambda b, h, kb: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, KV, G * W, dh), q.dtype),
+        scratch_shapes=[
+            _vmem((G * W, 1), jnp.float32),
+            _vmem((G * W, 1), jnp.float32),
+            _vmem((G * W, dh), jnp.float32),
+        ],
+        interpret=interpret,
+    )(*args)
+    return out.reshape(B, KV, G, W, dh).transpose(0, 3, 1, 2, 4).reshape(
+        B, W, H, dh)
+
+
+@functools.partial(jax.jit, static_argnames=("block_s", "interpret"))
+def tree_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                   mask: jax.Array, *, block_s: int = 256,
+                   interpret: bool = True) -> jax.Array:
+    """q: [B, W, H, dh]; k/v: [B, S, KV, dh] **un-repeated** (KV divides H);
+    mask: [B, W, S] visibility (tree + causality merged by the caller).
+    Returns [B, W, H, dh] at q's dtype."""
+    return _masked_call(q, k, v, mask, None, block_s=block_s,
+                        interpret=interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("block_s", "interpret"))
@@ -115,74 +172,174 @@ def tree_attention_int8(q: jax.Array, k: jax.Array, v: jax.Array,
                         k_scale: jax.Array, v_scale: jax.Array,
                         mask: jax.Array, *, block_s: int = 256,
                         interpret: bool = True) -> jax.Array:
-    """q: [B, W, H, dh] fp; k/v: [B, S, H, dh] int8 (head-repeated);
-    k_scale/v_scale: [B, S, H, G] fp32 per-slot, per-head scale groups
-    (G divides dh); mask: [B, W, S]. Returns [B, W, H, dh] at q's dtype."""
+    """int8 variant: k/v [B, S, KV, dh] int8 with fp32 per-slot scale groups
+    k_scale/v_scale [B, S, KV, G] (G divides dh), dequantized in VMEM so the
+    bandwidth-bound hot spot reads ~4x fewer HBM bytes. Accumulation is
+    identical fp32 online softmax."""
     assert k.dtype == jnp.int8 and v.dtype == jnp.int8, (k.dtype, v.dtype)
+    assert q.shape[-1] % k_scale.shape[-1] == 0, (q.shape, k_scale.shape)
+    return _masked_call(q, k, v, mask, (k_scale, v_scale), block_s=block_s,
+                        interpret=interpret)
+
+
+# --------------------------------------------- fused verify (hot path) ----
+def _verify_kernel(len_ref, *refs, scale: float, n_kb: int, block_s: int,
+                   g: int, w: int, t: int, quantized: bool):
+    if quantized:
+        (q_ref, k_ref, v_ref, ks_ref, vs_ref, kpos_ref, qpos_ref,
+         kn_ref, vn_ref, tm_ref, o_ref, m_scr, l_scr, acc_scr) = refs
+    else:
+        (q_ref, k_ref, v_ref, kpos_ref, qpos_ref,
+         kn_ref, vn_ref, tm_ref, o_ref, m_scr, l_scr, acc_scr) = refs
+    b = pl.program_id(0)
+    kb = pl.program_id(2)
+    length = len_ref[b]
+
+    @pl.when(kb == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32)               # [G·W, dh]
+
+    # committed-cache blocks: skipped entirely (compute AND fetch — the
+    # index map clamps dead blocks onto the last live one, which Pallas
+    # does not re-copy) once past the committed length
+    @pl.when((kb < n_kb) & (kb * block_s < length))
+    def _cache_block():
+        if quantized:
+            k = _dequant_tile(k_ref, ks_ref)          # [bs, dh]
+            v = _dequant_tile(v_ref, vs_ref)
+        else:
+            k = k_ref[0, :, 0, :].astype(jnp.float32)
+            v = v_ref[0, :, 0, :].astype(jnp.float32)
+        kp = kpos_ref[0]                              # [bs]
+        qp = qpos_ref[0]                              # [W]
+        # committed-prefix visibility, computed in VMEM instead of read
+        # from a materialized [B, W, S] mask
+        mask = ((kp[None, :] >= 0) & (kp[None, :] < length)
+                & (kp[None, :] < qp[:, None]))        # [W, bs]
+        bs = k.shape[0]
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+        s = jnp.where(mask[None], s.reshape(g, w, bs),
+                      NEG_INF).reshape(g * w, bs)
+        _flash_update(s, v, m_scr, l_scr, acc_scr)
+
+    # final grid step: the W in-flight tree tokens under the ancestor mask,
+    # fused into the same online softmax; output normalized here
+    @pl.when(kb == n_kb)
+    def _tree_segment():
+        kt = kn_ref[0, :, 0, :].astype(jnp.float32)   # [T, dh]
+        vt = vn_ref[0, :, 0, :].astype(jnp.float32)
+        tm = tm_ref[0]                                # [W, T]
+        s = jnp.dot(q, kt.T, preferred_element_type=jnp.float32) * scale
+        s = jnp.where(tm[None], s.reshape(g, w, t), NEG_INF).reshape(g * w, t)
+        _flash_update(s, vt, m_scr, l_scr, acc_scr)
+        _normalize_out(o_ref, m_scr, l_scr, acc_scr)
+
+
+def _verify_call(q, k, v, kv_pos, q_pos, lengths, k_new, v_new, tree_mask,
+                 scales, *, block_s: int, interpret: bool):
     B, W, H, dh = q.shape
-    S = k.shape[1]
-    G = k_scale.shape[-1]
-    assert dh % G == 0, (dh, G)
+    S, KV = k.shape[1], k.shape[2]
+    T = k_new.shape[1]
+    assert H % KV == 0, (H, KV)
+    G = H // KV
     bs = min(block_s, S)
     assert S % bs == 0, (S, bs)
     n_kb = S // bs
     scale = 1.0 / (dh ** 0.5)
+    qt = q.reshape(B, W, KV, G, dh).transpose(0, 2, 3, 1, 4).reshape(
+        B, KV, G * W, dh)
+    lengths = lengths.astype(jnp.int32)
 
-    kernel = functools.partial(_qkernel, scale=scale, n_kb=n_kb)
+    def live(lens, b):
+        # index of the last kv-block holding committed tokens (>= 0)
+        return jnp.maximum(pl.cdiv(lens[b], bs), 1) - 1
+
+    def cache_ix(b, h, kb, lens):
+        # clamp dead blocks (and the tree step) onto the last live block so
+        # their HBM fetch degenerates to a no-op repeat
+        return (b, jnp.minimum(kb, live(lens, b)), h, 0)
+
+    kernel = functools.partial(_verify_kernel, scale=scale, n_kb=n_kb,
+                               block_s=bs, g=G, w=W, t=T,
+                               quantized=scales is not None)
+    in_specs = [
+        pl.BlockSpec((1, 1, G * W, dh), lambda b, h, kb, lens: (b, h, 0, 0)),
+        pl.BlockSpec((1, bs, 1, dh), cache_ix),
+        pl.BlockSpec((1, bs, 1, dh), cache_ix),
+    ]
+    args = [qt, k, v]
+    if scales is not None:
+        gs = scales[0].shape[-1]
+        in_specs += [pl.BlockSpec((1, bs, 1, gs), cache_ix),
+                     pl.BlockSpec((1, bs, 1, gs), cache_ix)]
+        args += list(scales)
+    in_specs += [
+        pl.BlockSpec((1, bs),
+                     lambda b, h, kb, lens: (b, jnp.minimum(kb, live(lens, b)))),
+        pl.BlockSpec((1, W), lambda b, h, kb, lens: (b, 0)),
+        pl.BlockSpec((1, T, 1, dh), lambda b, h, kb, lens: (b, 0, h, 0)),
+        pl.BlockSpec((1, T, 1, dh), lambda b, h, kb, lens: (b, 0, h, 0)),
+        pl.BlockSpec((1, W, T), lambda b, h, kb, lens: (b, 0, 0)),
+    ]
+    args += [kv_pos, q_pos, k_new, v_new, tree_mask]
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, KV, n_kb + 1),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, 1, G * W, dh),
+                               lambda b, h, kb, lens: (b, h, 0, 0)),
+        scratch_shapes=[
+            _vmem((G * W, 1), jnp.float32),
+            _vmem((G * W, 1), jnp.float32),
+            _vmem((G * W, dh), jnp.float32),
+        ],
+    )
     out = pl.pallas_call(
         kernel,
-        grid=(B * H, 1, n_kb),
-        in_specs=[
-            pl.BlockSpec((1, W, 1, dh), lambda bh, _, kb: (bh // H, 0, bh % H, 0)),
-            pl.BlockSpec((1, bs, 1, dh), lambda bh, _, kb: (bh // H, kb, bh % H, 0)),
-            pl.BlockSpec((1, bs, 1, dh), lambda bh, _, kb: (bh // H, kb, bh % H, 0)),
-            pl.BlockSpec((1, bs, 1, G), lambda bh, _, kb: (bh // H, kb, bh % H, 0)),
-            pl.BlockSpec((1, bs, 1, G), lambda bh, _, kb: (bh // H, kb, bh % H, 0)),
-            pl.BlockSpec((1, W, bs), lambda bh, _, kb: (bh // H, 0, kb)),
-        ],
-        out_specs=pl.BlockSpec((1, W, 1, dh), lambda bh, _, kb: (bh // H, 0, bh % H, 0)),
-        out_shape=jax.ShapeDtypeStruct((B, W, H, dh), q.dtype),
-        scratch_shapes=[
-            _vmem((W, 1), jnp.float32),
-            _vmem((W, 1), jnp.float32),
-            _vmem((W, dh), jnp.float32),
-        ],
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, KV, G * W, dh), q.dtype),
         interpret=interpret,
-    )(q, k, v, k_scale, v_scale, mask)
-    return out
+    )(lengths, *args)
+    return out.reshape(B, KV, G, W, dh).transpose(0, 3, 1, 2, 4).reshape(
+        B, W, H, dh)
 
 
 @functools.partial(jax.jit, static_argnames=("block_s", "interpret"))
-def tree_attention(q: jax.Array, k: jax.Array, v: jax.Array,
-                   mask: jax.Array, *, block_s: int = 256,
-                   interpret: bool = True) -> jax.Array:
-    """q: [B, W, H, dh]; k/v: [B, S, H, dh] (kv already head-repeated);
-    mask: [B, W, S] visibility (tree + causality merged). Returns [B, W, H, dh].
-    """
-    B, W, H, dh = q.shape
-    S = k.shape[1]
-    bs = min(block_s, S)
-    assert S % bs == 0, (S, bs)
-    n_kb = S // bs
-    scale = 1.0 / (dh ** 0.5)
+def verify_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                     kv_pos: jax.Array, q_pos: jax.Array, lengths: jax.Array,
+                     k_new: jax.Array, v_new: jax.Array,
+                     tree_mask: jax.Array, *, block_s: int = 256,
+                     interpret: bool = True) -> jax.Array:
+    """Fused, length-aware verification attention (the megastep hot path).
 
-    kernel = functools.partial(_kernel, scale=scale, n_kb=n_kb)
-    out = pl.pallas_call(
-        kernel,
-        grid=(B * H, 1, n_kb),
-        in_specs=[
-            pl.BlockSpec((1, W, 1, dh), lambda bh, _, kb: (bh // H, 0, bh % H, 0)),
-            pl.BlockSpec((1, bs, 1, dh), lambda bh, _, kb: (bh // H, kb, bh % H, 0)),
-            pl.BlockSpec((1, bs, 1, dh), lambda bh, _, kb: (bh // H, kb, bh % H, 0)),
-            pl.BlockSpec((1, W, bs), lambda bh, _, kb: (bh // H, 0, kb)),
-        ],
-        out_specs=pl.BlockSpec((1, W, 1, dh), lambda bh, _, kb: (bh // H, 0, bh % H, 0)),
-        out_shape=jax.ShapeDtypeStruct((B, W, H, dh), q.dtype),
-        scratch_shapes=[
-            _vmem((W, 1), jnp.float32),
-            _vmem((W, 1), jnp.float32),
-            _vmem((W, dh), jnp.float32),
-        ],
-        interpret=interpret,
-    )(q, k, v, mask)
-    return out
+    q: [B, W, H, dh] tree queries; k/v: [B, S, KV, dh] the committed cache,
+    un-repeated; kv_pos: [B, S] absolute position per slot (-1 empty);
+    q_pos: [B, W] query positions; lengths: [B] committed lengths (drives
+    kv-block skipping — HBM traffic scales with the committed length, not
+    S); k_new/v_new: [B, T, KV, dh] in-flight tree-node K/V; tree_mask:
+    [B, W, T] ancestor-or-self. Returns [B, W, H, dh] at q's dtype.
+    """
+    return _verify_call(q, k, v, kv_pos, q_pos, lengths, k_new, v_new,
+                        tree_mask, None, block_s=block_s, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("block_s", "interpret"))
+def verify_attention_int8(q: jax.Array, k: jax.Array, v: jax.Array,
+                          k_scale: jax.Array, v_scale: jax.Array,
+                          kv_pos: jax.Array, q_pos: jax.Array,
+                          lengths: jax.Array, k_new: jax.Array,
+                          v_new: jax.Array, tree_mask: jax.Array, *,
+                          block_s: int = 256,
+                          interpret: bool = True) -> jax.Array:
+    """``verify_attention`` over an int8 cache: k/v int8 payload with fp32
+    scale groups [B, S, KV, G] dequantized in VMEM; the tree-scratch K/V
+    (in-flight, never quantized) stay at their own dtype."""
+    assert k.dtype == jnp.int8 and v.dtype == jnp.int8, (k.dtype, v.dtype)
+    return _verify_call(q, k, v, kv_pos, q_pos, lengths, k_new, v_new,
+                        tree_mask, (k_scale, v_scale), block_s=block_s,
+                        interpret=interpret)

@@ -78,6 +78,12 @@ def main() -> None:
                     help="int8-kv: both KV caches int8 with per-slot scales "
                          "(greedy decode stays token-exact on the testbed); "
                          "+w8 adds int8 weight-only params")
+    ap.add_argument("--verify-kernel", default="auto",
+                    choices=["auto", "fused", "xla"],
+                    help="decode/verify attention hot path: 'fused' = the "
+                         "GQA-native length-aware Pallas kernel (interpret "
+                         "mode on CPU), 'xla' = the einsum oracle path, "
+                         "'auto' = fused on accelerators, xla on CPU")
     args = ap.parse_args()
 
     mesh = make_serving_mesh(args.mesh)
@@ -89,8 +95,10 @@ def main() -> None:
         buckets=buckets_for_depths((2, 4, 8), width=2, verify_frac=0.75),
         depth_options=(2, 4, 8),
         config=EngineConfig(temperature=args.temperature, plan=args.plan,
-                            quant=QuantConfig.parse(args.quantize)),
+                            quant=QuantConfig.parse(args.quantize),
+                            verify_kernel=args.verify_kernel),
         mesh=mesh)
+    print(f"verify path: {engine.verify_path()}")
     if mesh is not None:
         info = engine.mesh_info()
         print(f"mesh: {info['shape']} over {info['devices']} devices")

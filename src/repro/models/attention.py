@@ -21,6 +21,7 @@ from repro.models import cache as cache_lib
 from repro.models.layers import apply_rope, rms_norm
 from repro.models.params import ParamDef
 from repro.sharding import shard
+from repro.sharding import specs as shard_lib
 
 NEG_INF = -1e9
 
@@ -230,6 +231,53 @@ def grouped_flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
 
 
 # ------------------------------------------------------ cached decode ----
+def use_verify_kernel(cfg: ModelConfig) -> bool:
+    """Resolve cfg.verify_kernel: is the fused Pallas kernel the decode/
+    verify hot path? "auto" picks it on accelerator backends and keeps the
+    XLA einsum path on CPU, where the kernel would run in (slow) interpret
+    mode — tests opt in explicitly via cfg.replace(verify_kernel="fused")."""
+    mode = getattr(cfg, "verify_kernel", "auto")
+    if mode == "xla":
+        return False
+    if mode == "fused":
+        return True
+    if mode != "auto":
+        raise ValueError(f"verify_kernel must be auto|fused|xla, got {mode}")
+    return jax.default_backend() != "cpu"
+
+
+def fused_dispatch_ok(cfg: ModelConfig, *, mesh_active: bool) -> bool:
+    """THE fused-kernel dispatch predicate (minus the per-call ``k_new is
+    not None``): kernel enabled, no ring-buffer sliding window, no mesh
+    (Pallas calls aren't SPMD-partitioned). ``cached_attention`` and
+    ``engine.verify_path()`` both consult this so the reported hot path
+    can never drift from the dispatched one."""
+    return (use_verify_kernel(cfg) and not cfg.sliding_window
+            and not mesh_active)
+
+
+def _fused_verify_path(q, entry, cfg, q_pos, lengths, k_new, v_new,
+                       tree_mask):
+    """Route one cached-attention call through the fused verify kernel.
+
+    The kernel owns the committed-prefix mask (computed in VMEM from
+    entry["pos"]/q_pos/lengths), the length-aware kv-block skip, and the
+    tree-scratch segment — nothing is repeated, concatenated or
+    materialized here."""
+    from repro.kernels import ops as kernel_ops
+    B, W = q.shape[:2]
+    if tree_mask is None:  # plain decode: each token attends to itself only
+        tree_mask = jnp.broadcast_to(jnp.eye(W, dtype=bool)[None],
+                                     (B, W, W))
+    ek, ev, ks, vs = cache_lib.entry_kernel_kv(entry)
+    # the wrapper's own kv-block default (256) sets the skip granularity;
+    # cfg.attn_chunk stays the *prefill* block knob — at max_target_len=512
+    # it would make the whole cache one block and disable the early-out
+    return kernel_ops.verify_attention(
+        q, ek, ev, entry["pos"], q_pos, lengths, k_new, v_new, tree_mask,
+        k_scale=ks, v_scale=vs)
+
+
 def cached_attention(q: jax.Array, entry: Dict, cfg: ModelConfig,
                      q_pos: jax.Array, lengths: jax.Array,
                      k_new: Optional[jax.Array] = None,
@@ -241,10 +289,20 @@ def cached_attention(q: jax.Array, entry: Dict, cfg: ModelConfig,
     q: [B, W, H, Dh]; q_pos: [B, W] absolute positions; lengths: [B];
     k_new/v_new: [B, W, KV, Dh] the queries' own K/V (tree scratch);
     tree_mask: [B, W, W] ancestor-or-self visibility (None for plain decode).
+
+    Hot path (cfg.verify_kernel): the fused GQA-native Pallas kernel, which
+    reads the cache un-repeated at its storage dtype and skips kv-blocks
+    past the committed length. Falls back to the XLA einsum paths (the
+    selectable oracle) under a mesh (Pallas calls aren't SPMD-partitioned),
+    with sliding windows (ring-buffer slots), or when k_new is absent.
     """
     B, W, H, Dh = q.shape
     G = cfg.num_q_per_kv
     scale = 1.0 / math.sqrt(Dh)
+    if k_new is not None and fused_dispatch_ok(
+            cfg, mesh_active=shard_lib.current_mesh() is not None):
+        return _fused_verify_path(q, entry, cfg, q_pos, lengths, k_new,
+                                  v_new, tree_mask)
     # int8 caches dequantize here (per-layer slice, inside the block scan,
     # so XLA cannot hoist a whole-stack fp32 copy); fp caches pass through
     ek, ev = cache_lib.entry_kv(entry)
@@ -312,8 +370,17 @@ def cached_attention(q: jax.Array, entry: Dict, cfg: ModelConfig,
     s_all = jnp.concatenate(parts, axis=-1)
     probs = jax.nn.softmax(s_all, axis=-1)
     pc, pt = probs[..., : kc.shape[1]], probs[..., kc.shape[1]:]
-    out = jnp.einsum("bhqs,bshd->bqhd", pc, vc.astype(jnp.float32))
+    # §Perf it4 (as on the grouped path): contract P·V at the cache's own
+    # precision with f32 accumulation — `vc.astype(f32)` would materialize
+    # a full fp32 copy of the (repeated) cache, and XLA hoists that above
+    # the per-layer slice, converting the whole stacked cache per step.
+    # Probs are downcast (tiny [B,H,W,S] tensor) instead of V.
+    pv = pc.astype(vc.dtype) if vc.dtype != jnp.float32 else pc
+    out = jnp.einsum("bhqs,bshd->bqhd", pv, vc,
+                     preferred_element_type=jnp.float32)
     if k_new is not None:
+        # the tree scratch is a tiny fresh tensor — no whole-cache hoisting
+        # to dodge, so keep the probs at f32 here (as the grouped path does)
         vt = _repeat_kv(v_new, G)
         out = out + jnp.einsum("bhqs,bshd->bqhd", pt, vt.astype(jnp.float32))
     return out.astype(q.dtype)

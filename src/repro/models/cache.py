@@ -287,6 +287,20 @@ def entry_kv(entry: Dict) -> Tuple[jax.Array, jax.Array]:
     return entry["k"], entry["v"]
 
 
+def entry_kernel_kv(entry: Dict):
+    """The entry's K/V in the fused verify kernel's contract: the raw
+    **un-repeated** ``[B, S_cache, KV, Dh]`` arrays exactly as stored —
+    still int8 for a quantized entry, with their fp32 scale groups
+    alongside (``(k, v, k_scale, v_scale)``; scales are None for fp).
+
+    The kernel dequantizes tiles in VMEM and repeats nothing, so handing it
+    the storage layout directly is what keeps the verify megastep's HBM
+    traffic at the cache's true byte size (no materialized fp32 copy, no
+    ``repeat_kv`` G× blow-up)."""
+    return (entry["k"], entry["v"],
+            entry.get("k_scale"), entry.get("v_scale"))
+
+
 def write_tokens(entry: Dict, k_new: jax.Array, v_new: jax.Array,
                  positions: jax.Array, cfg: ModelConfig,
                  valid: Optional[jax.Array] = None) -> Dict:

@@ -19,18 +19,20 @@ def _tol(dtype):
 
 
 # ---------------------------------------------------------------- tree ----
+# k/v are the cache's own un-repeated [B, S, KV, dh] layout; the kernel
+# tiles a [G·W, dh] query block per kv-head (G = H // KV)
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
-@pytest.mark.parametrize("B,W,S,H,dh", [
-    (1, 8, 64, 2, 64),
-    (2, 16, 128, 4, 64),
-    (2, 5, 96, 2, 128),     # W not MXU-aligned, S not block-aligned
-    (1, 64, 512, 1, 64),
+@pytest.mark.parametrize("B,W,S,KV,G,dh", [
+    (1, 8, 64, 2, 1, 64),
+    (2, 16, 128, 2, 2, 64),
+    (2, 5, 96, 2, 4, 128),  # GQA, W not MXU-aligned, S not block-aligned
+    (1, 64, 512, 1, 8, 64),  # MQA
 ])
-def test_tree_attention_matches_ref(B, W, S, H, dh, dtype):
+def test_tree_attention_matches_ref(B, W, S, KV, G, dh, dtype):
     ks = jax.random.split(jax.random.PRNGKey(0), 4)
-    q = _rand(ks[0], (B, W, H, dh), dtype)
-    k = _rand(ks[1], (B, S, H, dh), dtype)
-    v = _rand(ks[2], (B, S, H, dh), dtype)
+    q = _rand(ks[0], (B, W, KV * G, dh), dtype)
+    k = _rand(ks[1], (B, S, KV, dh), dtype)
+    v = _rand(ks[2], (B, S, KV, dh), dtype)
     # random visibility mask with at least one visible slot per query
     mask = jax.random.bernoulli(ks[3], 0.4, (B, W, S))
     mask = mask.at[:, :, 0].set(True)
@@ -40,19 +42,19 @@ def test_tree_attention_matches_ref(B, W, S, H, dh, dtype):
                                np.asarray(want, np.float32), **_tol(dtype))
 
 
-@pytest.mark.parametrize("B,W,S,H,dh", [
-    (1, 8, 64, 2, 64),
-    (2, 5, 96, 2, 128),     # W not MXU-aligned, S not block-aligned
-    (1, 16, 128, 2, 32),    # dh below one full scale group size
+@pytest.mark.parametrize("B,W,S,KV,G,dh", [
+    (1, 8, 64, 2, 1, 64),
+    (2, 5, 96, 2, 2, 128),  # GQA, W not MXU-aligned, S not block-aligned
+    (1, 16, 128, 2, 1, 32),  # dh below one full scale group size
 ])
-def test_tree_attention_int8_matches_ref(B, W, S, H, dh):
+def test_tree_attention_int8_matches_ref(B, W, S, KV, G, dh):
     """The dequantizing kernel against its oracle: identical int8 payload +
     scales through both, so the comparison is tight (same dequant math)."""
     from repro.quant import quantize_kv
     ks = jax.random.split(jax.random.PRNGKey(5), 4)
-    q = _rand(ks[0], (B, W, H, dh), jnp.float32)
-    kq, k_scale = quantize_kv(_rand(ks[1], (B, S, H, dh), jnp.float32))
-    vq, v_scale = quantize_kv(_rand(ks[2], (B, S, H, dh), jnp.float32))
+    q = _rand(ks[0], (B, W, KV * G, dh), jnp.float32)
+    kq, k_scale = quantize_kv(_rand(ks[1], (B, S, KV, dh), jnp.float32))
+    vq, v_scale = quantize_kv(_rand(ks[2], (B, S, KV, dh), jnp.float32))
     mask = jax.random.bernoulli(ks[3], 0.4, (B, W, S))
     mask = mask.at[:, :, 0].set(True)
     out = ops.tree_attention(q, kq, vq, mask, k_scale=k_scale,
@@ -66,11 +68,11 @@ def test_tree_attention_int8_close_to_fp32():
     """End-to-end quantization error: int8 path vs the fp32 kernel on the
     same K/V stays within the per-group absmax rounding budget."""
     from repro.quant import quantize_kv
-    B, W, S, H, dh = 2, 8, 64, 2, 64
+    B, W, S, KV, dh = 2, 8, 64, 2, 64
     ks = jax.random.split(jax.random.PRNGKey(6), 4)
-    q = _rand(ks[0], (B, W, H, dh), jnp.float32)
-    k = _rand(ks[1], (B, S, H, dh), jnp.float32)
-    v = _rand(ks[2], (B, S, H, dh), jnp.float32)
+    q = _rand(ks[0], (B, W, KV, dh), jnp.float32)
+    k = _rand(ks[1], (B, S, KV, dh), jnp.float32)
+    v = _rand(ks[2], (B, S, KV, dh), jnp.float32)
     mask = jax.random.bernoulli(ks[3], 0.5, (B, W, S)).at[:, :, 0].set(True)
     kq, k_scale = quantize_kv(k)
     vq, v_scale = quantize_kv(v)
@@ -100,6 +102,48 @@ def test_tree_attention_fully_masked_rows_are_finite():
     mask = jnp.zeros((B, W, S), bool)
     out = ops.tree_attention(q, k, v, mask)
     assert bool(jnp.all(jnp.isfinite(out)))
+
+
+# ------------------------------------------------------ block-size guard ----
+def test_block_pad_never_degrades_to_scalar_blocks():
+    """Regression: the old wrapper halved the block size until it divided S,
+    collapsing to bs=1 (scalar blocks, thousands of grid steps) for odd or
+    prime S. The fix pads S up to a block multiple instead."""
+    bs, pad = ops.block_pad(257, 256)        # prime, > one block
+    assert bs == 256 and (257 + pad) % 256 == 0
+    bs, pad = ops.block_pad(97, 256)         # prime, < one block: exact fit
+    assert bs == 97 and pad == 0
+    bs, pad = ops.block_pad(300, 256)        # old loop fell to bs=4 here
+    assert bs == 256 and (300 + pad) % bs == 0
+    bs, pad = ops.block_pad(512, 256)        # multiples stay pad-free
+    assert bs == 256 and pad == 0
+
+
+def test_tree_attention_prime_s_matches_ref():
+    """Prime S larger than one block exercises the pad-up path end to end
+    (the masked pad slots must not perturb the softmax)."""
+    B, W, S, KV, G, dh = 2, 4, 257, 2, 2, 64
+    ks = jax.random.split(jax.random.PRNGKey(8), 4)
+    q = _rand(ks[0], (B, W, KV * G, dh), jnp.float32)
+    k = _rand(ks[1], (B, S, KV, dh), jnp.float32)
+    v = _rand(ks[2], (B, S, KV, dh), jnp.float32)
+    mask = jax.random.bernoulli(ks[3], 0.4, (B, W, S)).at[:, :, 0].set(True)
+    out = ops.tree_attention(q, k, v, mask)
+    want = ref.tree_attention_ref(q, k, v, mask)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_flash_prefill_prime_s_matches_ref():
+    B, S, H, dh = 1, 131, 2, 64   # prime S > block 64
+    ks = jax.random.split(jax.random.PRNGKey(9), 3)
+    q = _rand(ks[0], (B, S, H, dh), jnp.float32)
+    k = _rand(ks[1], (B, S, H, dh), jnp.float32)
+    v = _rand(ks[2], (B, S, H, dh), jnp.float32)
+    out = ops.flash_prefill(q, k, v, block_q=64, block_k=64)
+    want = ref.flash_prefill_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
 
 
 # -------------------------------------------------------------- prefill ----

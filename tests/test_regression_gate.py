@@ -25,6 +25,12 @@ GOOD_CURRENT = {
         "int8-kv": {"aal": 3.5, "recompiles_after_warmup": 0},
         "slots_ratio": 3.4,
     },
+    "kernel_traffic": {
+        "gqa_bytes_ratio": 3.8,
+        "len_scaling_ratio": 3.4,
+        "kernel_path": {"verify_path": "fused",
+                        "recompiles_after_warmup": 0},
+    },
 }
 
 
@@ -61,6 +67,21 @@ def test_gate_fails_on_slots_ratio_regression():
     cur = copy.deepcopy(GOOD_CURRENT)
     cur["quant_sweep"]["slots_ratio"] = 1.2
     assert any("slots_ratio" in f for f in compare(_baseline(), cur))
+
+
+def test_gate_fails_on_kernel_traffic_regression():
+    """Reintroducing repeat_kv (gqa ratio -> ~1) or dropping the kv-block
+    early-out (length scaling -> 1) must trip the gate."""
+    cur = copy.deepcopy(GOOD_CURRENT)
+    cur["kernel_traffic"]["gqa_bytes_ratio"] = 1.0
+    assert any("gqa_bytes_ratio" in f for f in compare(_baseline(), cur))
+    cur = copy.deepcopy(GOOD_CURRENT)
+    cur["kernel_traffic"]["len_scaling_ratio"] = 1.0
+    assert any("len_scaling_ratio" in f for f in compare(_baseline(), cur))
+    cur = copy.deepcopy(GOOD_CURRENT)
+    cur["kernel_traffic"]["kernel_path"]["recompiles_after_warmup"] = 1
+    assert any("kernel_path" in f and "recompiles" in f
+               for f in compare(_baseline(), cur))
 
 
 def test_gate_fails_on_missing_metric_not_vacuously():
