@@ -8,7 +8,13 @@ The gate only reads metrics that are deterministic on CI runners:
   * AAL and the fixed-cache-bytes slot ratio from ``quant_sweep`` (the
     sweep drains an upfront queue — no wall-clock admission races);
   * every ``recompiles_after_warmup`` anywhere in the artifact must be 0
-    (compile stability is a hard invariant, not a percentage).
+    (compile stability is a hard invariant, not a percentage);
+  * the ``telemetry`` sweep's absolute contracts (HARD_BOUNDS): telemetry
+    enabled must leave greedy outputs token-exact, exported traces must
+    validate, emulated-clock snapshots must be bit-reproducible, and the
+    measured telemetry self-time must stay under 2% of decode time. These
+    are baseline-independent — a missing key fails the gate rather than
+    passing vacuously.
 
 Wall-clock throughputs (the ``servers``/``mesh_sweep`` rows) are recorded
 in the artifact for humans but NOT gated — shared CI runners jitter far
@@ -46,6 +52,17 @@ GATED_METRICS: Tuple[Tuple[str, str], ...] = (
     ("kernel_traffic.len_scaling_ratio", "higher"),
 )
 DEFAULT_THRESHOLD = 0.10
+
+# absolute contracts from the telemetry sweep — not relative-to-baseline
+# (determinism and exactness are 1.0 or broken; the overhead budget is the
+# documented <2% contract). Checked against the CURRENT artifact only, so
+# the committed baseline never needs regenerating for these.
+HARD_BOUNDS: Tuple[Tuple[str, str, float], ...] = (
+    ("telemetry.token_exact", "==", 1.0),
+    ("telemetry.trace_valid", "==", 1.0),
+    ("telemetry.emulated_snapshot_deterministic", "==", 1.0),
+    ("telemetry.overhead_frac", "<", 0.02),
+)
 
 
 def lookup(blob: Dict, dotted: str) -> Any:
@@ -106,6 +123,17 @@ def compare(baseline: Dict, current: Dict,
     for path, val in recompiles:
         if val != 0:
             failures.append(f"{path}: {val} recompiles after warmup (must be 0)")
+    for key, op, bound in HARD_BOUNDS:
+        try:
+            val = float(lookup(current, key))
+        except KeyError:
+            failures.append(f"{key}: missing from the current artifact — "
+                            f"hard bound {op} {bound:g} went unmeasured")
+            continue
+        ok = (val == bound) if op == "==" else (val < bound)
+        if not ok:
+            failures.append(
+                f"{key}: {val:.4g} violates the hard bound ({op} {bound:g})")
     return failures
 
 

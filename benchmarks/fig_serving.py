@@ -44,6 +44,7 @@ report zero recompiles after warmup despite switching buckets mid-trace.
 from __future__ import annotations
 
 import argparse
+import json
 import time
 from typing import Dict, List, Optional, Tuple
 
@@ -61,6 +62,7 @@ from repro.serving.continuous import ContinuousServer, slots_at_budget
 from repro.serving.controller import BucketController
 from repro.serving.emulation import drive_trace
 from repro.serving.server import BatchedServer, Request
+from repro.telemetry import EmulatedClock, Telemetry, validate_chrome_trace
 
 
 SPEC, VERIFY_V = egt_spec(4, 2), 6
@@ -378,6 +380,148 @@ def kernel_traffic(tb) -> Dict:
     return out
 
 
+def _trace_lifecycle_checks(trace: Dict) -> Dict[str, bool]:
+    """Scan an exported Chrome trace for the acceptance-criterion shapes:
+    per-megastep draft/verify/accept stage spans (staged plan) and at least
+    one full request lifecycle (queued span -> active span -> retired
+    instant on one ``req:*`` track)."""
+    tid_name: Dict[int, str] = {}
+    per_tid_names: Dict[int, set] = {}
+    all_names: set = set()
+    for ev in trace.get("traceEvents", []):
+        if ev.get("ph") == "M" and ev.get("name") == "thread_name":
+            tid_name[ev["tid"]] = ev["args"]["name"]
+        else:
+            per_tid_names.setdefault(ev["tid"], set()).add(ev["name"])
+            all_names.add(ev["name"])
+    lifecycle = any(name.startswith("req:")
+                    and {"queued", "active", "retired"}
+                    <= per_tid_names.get(tid, set())
+                    for tid, name in tid_name.items())
+    return {"stage_spans": {"draft", "verify", "accept",
+                            "commit"} <= all_names,
+            "request_lifecycle": lifecycle}
+
+
+def telemetry_sweep(tb, n: int, max_new: int, batch: int,
+                    prompt_pad: int = 16, rate_hz: float = 0.6) -> Dict:
+    """The observability layer's gated contracts, measured end-to-end:
+
+      * token_exact       — the emulated Poisson trace served with telemetry
+                            fully enabled emits the exact token sequences of
+                            the telemetry-off run (greedy decode);
+      * overhead_frac     — telemetry self-time (every tracer/registry call
+                            carries a perf_counter pair) over wall decode
+                            time on an upfront-drained queue, gated < 2%;
+      * emulated_snapshot_deterministic — two identical emulated drives
+                            export byte-identical registry snapshots AND
+                            Chrome traces (the clock-mixing fix: no wall
+                            timestamps leak into emulated artifacts);
+      * trace_valid       — a staged-plan run's Chrome-trace export passes
+                            ``validate_chrome_trace`` and contains the
+                            stage spans + one full request lifecycle; the
+                            trace is saved to results/serving_trace.json
+                            for the CI artifact upload.
+
+    All four land in HARD_BOUNDS in check_regression.py.
+    """
+    profile = emulated_profile()
+
+    def spec_engine(plan: str = "fused") -> SpeculativeEngine:
+        return SpeculativeEngine(
+            tb.drafter, tb.d_params, tb.verifier, tb.v_params,
+            profile=profile,
+            buckets=buckets_for_depths((4,), width=2, verify_frac=0.75),
+            depth_options=(4,), config=EngineConfig(plan=plan))
+
+    def emu_drive(telemetry: Optional[Telemetry]) -> ContinuousServer:
+        # fresh engine per drive: shared compile caches would make the two
+        # determinism runs' compile counters (snapshotted via callback
+        # gauges) differ
+        server = ContinuousServer(spec_engine(), batch_size=batch,
+                                  prompt_pad=prompt_pad, spec=SPEC,
+                                  verify_v=VERIFY_V, telemetry=telemetry)
+        drive_trace(server, make_trace(tb, n, rate_hz, max_new, seed=7),
+                    profile)
+        return server
+
+    out: Dict = {"config": {"n": n, "max_new": max_new, "batch": batch,
+                            "rate_hz": rate_hz}}
+
+    # -- token exactness: telemetry off vs fully on, same emulated trace --
+    srv_off = emu_drive(None)
+    tel_on = Telemetry(clock=EmulatedClock())
+    srv_on = emu_drive(tel_on)
+    out["token_exact"] = float(
+        set(srv_off.done) == set(srv_on.done)
+        and all(np.array_equal(srv_off.done[u].result, srv_on.done[u].result)
+                for u in srv_off.done))
+    out["off"] = {"recompiles_after_warmup":
+                  srv_off.metrics.summary()["recompiles_after_warmup"]}
+    out["on"] = {"recompiles_after_warmup":
+                 srv_on.metrics.summary()["recompiles_after_warmup"]}
+
+    # -- emulated determinism: a second identical drive must export the --
+    # -- byte-identical snapshot and trace                              --
+    tel_on2 = Telemetry(clock=EmulatedClock())
+    emu_drive(tel_on2)
+
+    def exports(tel: Telemetry) -> Tuple[str, str]:
+        snap = json.dumps(tel.registry.snapshot(), sort_keys=True,
+                          default=float)
+        return snap, json.dumps(tel.tracer.to_chrome_trace(), sort_keys=True)
+
+    s1, t1 = exports(tel_on)
+    s2, t2 = exports(tel_on2)
+    out["emulated_snapshot_deterministic"] = float(s1 == s2 and t1 == t2)
+
+    # -- overhead: wall-clock upfront-drained queue, self-time / decode --
+    src = MarkovSource(vocab=tb.spec.vocab,
+                       concentration=tb.data_cfg.concentration,
+                       seed=tb.data_cfg.seed)
+    plens = np.random.default_rng(23).integers(8, 14, size=n)
+    prompts = [src.sample(np.random.default_rng(700 + uid), int(plens[uid]))
+               for uid in range(n)]
+    tel_wall = Telemetry()
+    srv_wall = ContinuousServer(spec_engine(), batch_size=batch,
+                                prompt_pad=prompt_pad, spec=SPEC,
+                                verify_v=VERIFY_V, telemetry=tel_wall)
+    srv_wall.warmup()
+    for uid in range(n):
+        srv_wall.submit(Request(uid=uid, prompt=prompts[uid].copy(),
+                                max_new=max_new))
+    srv_wall.run()
+    decode_s = srv_wall.metrics.iter_times.total
+    out["overhead_seconds"] = tel_wall.overhead_seconds()
+    out["decode_seconds"] = decode_s
+    out["overhead_frac"] = tel_wall.overhead_seconds() / max(decode_s, 1e-9)
+    out["wall"] = {"recompiles_after_warmup":
+                   srv_wall.metrics.summary()["recompiles_after_warmup"]}
+
+    # -- staged-plan mini-run: host-visible draft/verify/accept/commit --
+    # -- spans + a full request lifecycle, exported and validated      --
+    tel_staged = Telemetry()
+    srv_staged = ContinuousServer(spec_engine(plan="staged"),
+                                  batch_size=2, prompt_pad=prompt_pad,
+                                  spec=SPEC, verify_v=VERIFY_V,
+                                  telemetry=tel_staged)
+    srv_staged.warmup()
+    for uid in range(2):
+        srv_staged.submit(Request(uid=uid, prompt=prompts[uid].copy(),
+                                  max_new=min(max_new, 8)))
+    srv_staged.run()
+    trace = tel_staged.tracer.to_chrome_trace()
+    errs = validate_chrome_trace(trace)
+    checks = _trace_lifecycle_checks(trace)
+    out["trace_errors"] = errs[:5]
+    out["trace_checks"] = checks
+    out["trace_valid"] = float(not errs and all(checks.values()))
+    out["staged"] = {"recompiles_after_warmup":
+                     srv_staged.metrics.summary()["recompiles_after_warmup"]}
+    common.save("serving_trace", trace)
+    return out
+
+
 def sweep_meshes(tb, n: int, rate_hz: float, max_new: int, batch: int,
                  prompt_pad: int,
                  shapes: Optional[List[Tuple[int, int]]] = None,
@@ -432,6 +576,9 @@ def run(quick: bool = True, mesh_sweep: bool = True):
     out["quant_sweep"] = quant_sweep(tb, max(6, n // 2), max_new, batch)
     # fused verify-kernel traffic model + kernel-path recompile probe
     out["kernel_traffic"] = kernel_traffic(tb)
+    # observability contracts: token-exactness, overhead, determinism,
+    # trace validity (also writes results/serving_trace.json)
+    out["telemetry"] = telemetry_sweep(tb, max(6, n // 2), max_new, batch)
     common.save("fig_serving", out)
     return out
 
@@ -486,3 +633,9 @@ if __name__ == "__main__":
               f"{kt['gqa_bytes_ratio']:.2f}x  length scaling "
               f"{kt['len_scaling_ratio']:.2f}x  "
               f"recompiles={kt['kernel_path']['recompiles_after_warmup']}")
+    tm = res.get("telemetry")
+    if tm:
+        print(f"telemetry: token_exact={tm['token_exact']:.0f}  "
+              f"overhead={tm['overhead_frac'] * 100:.2f}% of decode  "
+              f"deterministic={tm['emulated_snapshot_deterministic']:.0f}  "
+              f"trace_valid={tm['trace_valid']:.0f}")

@@ -42,6 +42,7 @@ Stepwise API (continuous batching):
 from __future__ import annotations
 
 import time
+from contextlib import nullcontext
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional, Tuple
 
@@ -197,6 +198,50 @@ class SpeculativeEngine:
             self.v_params = quantize_params(self.v_params)
         self._step_cache: Dict[Any, Any] = {}
         self._compile_count = 0
+        self.telemetry = None  # opt-in: see attach_telemetry
+
+    # ----------------------------------------------------------- telemetry --
+    def attach_telemetry(self, telemetry) -> None:
+        """Bind a :class:`repro.telemetry.Telemetry` bundle. Engine counters
+        become registry callback gauges (evaluated lazily at collection —
+        zero hot-path cost), and every executable build is stamped as a
+        tracer instant on the ``engine`` track, tied to the enclosing span
+        (so a recompile shows up INSIDE the megastep that caused it)."""
+        self.telemetry = telemetry
+        if telemetry is None:
+            return
+        reg = telemetry.registry
+        reg.callback_gauge("engine_executable_count", self.executable_count,
+                           "traced executables across the step cache")
+        reg.callback_gauge("engine_compile_count",
+                           lambda: float(self._compile_count),
+                           "builder-level executable compiles")
+        b = self.cache_bytes_per_slot()
+        g = reg.gauge("engine_cache_bytes_per_slot",
+                      "device bytes one decode slot pins in both caches")
+        for which in ("total", "verifier", "drafter"):
+            g.set(b[which], which=which)
+        info = reg.gauge("engine_info",
+                         "static engine configuration (labels carry values)")
+        info.set(1.0, plan=self.cfg.plan, verify_path=self.verify_path(),
+                 quant_mode=self.cfg.quant.mode,
+                 accept=self.cfg.resolve_accept())
+
+    def _note_compile(self, kind: str) -> None:
+        """Every executable build funnels through here: bump the honest
+        builder counter, and — when telemetry is attached — count it by
+        kind and stamp it into the trace."""
+        self._compile_count += 1
+        tel = self.telemetry
+        if tel is None:
+            return
+        tel.registry.counter("engine_compiles_total",
+                             "executable builds by kind").inc(kind=kind)
+        if tel.tracer is not None:
+            tel.tracer.instant("compile", track="engine", kind=kind)
+
+    def _tracer(self):
+        return self.telemetry.tracer if self.telemetry is not None else None
 
     # ---------------------------------------------------------------- mesh --
     def _ctx(self):
@@ -354,10 +399,13 @@ class SpeculativeEngine:
         prompt length. The slot's first generated token (sampled from the
         prompt's last-position logits) lands in ``state.root[slot]``."""
         pad = int(np.shape(tokens)[-1])
+        tr = self._tracer()
+        if tr is not None:
+            tr.begin("slot_prefill", track="engine", slot=int(slot), pad=pad)
         ck = ("slot_prefill", pad, self.cfg.temperature)
         if ck not in self._step_cache:
             self._step_cache[ck] = self._build_slot_prefill()
-            self._compile_count += 1
+            self._note_compile("slot_prefill")
         fn = self._step_cache[ck]
         key, sk = jax.random.split(state.key)
         with self._ctx():
@@ -367,6 +415,8 @@ class SpeculativeEngine:
                 jnp.asarray(tokens, jnp.int32).reshape(1, pad),
                 jnp.asarray([length], jnp.int32),
                 jnp.asarray(slot, jnp.int32), sk)
+        if tr is not None:
+            tr.end(track="engine")
         produced = state.produced.copy()
         produced[slot] = 1  # the root token is the slot's first output
         return DecodeState(dcache, vcache, root, h_last, key, produced)
@@ -383,7 +433,7 @@ class SpeculativeEngine:
                 return (cache_lib.shard_cache(cache_lib.reset_slot(dc, s)),
                         cache_lib.shard_cache(cache_lib.reset_slot(vc, s)))
             self._step_cache[ck] = jax.jit(_reset, donate_argnums=(0, 1))
-            self._compile_count += 1
+            self._note_compile("slot_reset")
         with self._ctx():
             dcache, vcache = self._step_cache[ck](
                 state.dcache, state.vcache, jnp.asarray(slot, jnp.int32))
@@ -422,19 +472,34 @@ class SpeculativeEngine:
         else:
             use_spec, use_v = self._select(state.h_last)
         key, sk = jax.random.split(state.key)
+        tr = self._tracer()
+        if tr is not None:
+            # opened before _get_step so a (contract-violating) compile's
+            # instant nests inside the megastep it happened in
+            tr.begin("megastep", track="engine", plan=cfg.plan,
+                     bucket=f"{use_spec.depth}x{use_spec.width}x{use_v}")
         t0 = time.perf_counter()
         with self._ctx():
             if cfg.plan == "fused":
                 step = self._get_step(use_spec, use_v)
+                if tr is not None:
+                    # fused has no host-visible stage boundaries by design:
+                    # one span from dispatch to the accept-length sync
+                    tr.begin("device", track="engine")
                 (dcache, vcache, bonus, toks, alen, h_last) = step(
                     self.d_params, self.v_params, state.dcache, state.vcache,
                     state.root, sk)
             else:
                 parts = self._get_staged_parts(use_spec, use_v)
                 (dcache, vcache, bonus, toks, alen, h_last) = self._run_staged(
-                    parts, state.dcache, state.vcache, state.root, sk)
+                    parts, state.dcache, state.vcache, state.root, sk,
+                    tracer=tr)
         alen_np = np.asarray(alen)
+        if tr is not None and cfg.plan == "fused":
+            tr.end(track="engine")  # device: closes at the accept-len sync
         t1 = time.perf_counter()
+        if tr is not None:
+            tr.begin("host", track="engine")
         toks_np, bonus_np = np.asarray(toks), np.asarray(bonus)
         B, a_max = toks_np.shape
         emit = np.full((B, a_max), -1, np.int64)
@@ -447,6 +512,9 @@ class SpeculativeEngine:
         res = StepResult(tokens=emit, accept_len=alen_np,
                          bucket=(use_spec.depth, use_spec.width, use_v),
                          iter_time=t1 - t0)
+        if tr is not None:
+            tr.end(track="engine")  # host bookkeeping
+            tr.end(track="engine", accept_mean=float(alen_np.mean()))
         return new_state, res
 
     def slot_lengths(self, state: DecodeState) -> np.ndarray:
@@ -575,35 +643,50 @@ class SpeculativeEngine:
         return {"draft": draft_fn, "verify": verify_fn, "accept": accept_fn,
                 "commit": commit_fn, "a_max": a_max}
 
-    def _run_staged(self, parts, dcache, vcache, root, key):
+    def _run_staged(self, parts, dcache, vcache, root, key, tracer=None):
         """One iteration under the staged plans, with the host boundary the
-        paper identifies: acceptance management on CPU + conditional logic."""
+        paper identifies: acceptance management on CPU + conditional logic.
+        With a tracer, each stage gets a span on the ``engine`` track — the
+        spans bound the host-side dispatch windows (the accept span includes
+        the readback sync, i.e. the CPU bubble the fused plan eliminates)."""
         from repro.core import scheduler as sched
+
+        def _sp(name):
+            return (tracer.span(name, track="engine") if tracer is not None
+                    else nullcontext())
+
         kd, ka = jax.random.split(key)
-        res = parts["draft"](self.d_params, dcache, root, kd)
-        sub, select_idx, t_logits, scratch, h_nodes = parts["verify"](
-            self.v_params, vcache, res)
-        if self.cfg.plan == "staged" and self.cfg.resolve_accept() == "greedy":
-            # host-side accept management (numpy) — the CPU bubble
-            tgt = np.asarray(jnp.argmax(t_logits, -1))
-            node_idx, accept_len, bonus, last = sched.greedy_accept_host(
-                np.asarray(sub.tokens), np.asarray(sub.parents),
-                np.asarray(sub.depths), np.asarray(sub.live), tgt,
-                parts["a_max"])
-            # conditional tail-draft decision happens here on the host in the
-            # naive pipeline; the fused plan eliminates this branch entirely
-            node_idx, accept_len = jnp.asarray(node_idx), jnp.asarray(accept_len)
-            bonus, last = jnp.asarray(bonus), jnp.asarray(last)
-        else:  # staged_device: accept on device, but sync to read the result
-            acc = parts["accept"](sub, t_logits, res, select_idx, ka)
-            node_idx, accept_len, bonus, last = acc
-            jax.block_until_ready(accept_len)  # control readback boundary
-        dcache, vcache, out_tokens, h_last = parts["commit"](
-            dcache, vcache, res, scratch, sub, select_idx, node_idx,
-            accept_len, last, h_nodes)
-        # `bonus` becomes next step's root: pin its placement so the staged
-        # parts (and a later fused megastep) never see a drifting sharding
-        bonus = self._put(jnp.asarray(bonus), "batch")
+        with _sp("draft"):
+            res = parts["draft"](self.d_params, dcache, root, kd)
+        with _sp("verify"):
+            sub, select_idx, t_logits, scratch, h_nodes = parts["verify"](
+                self.v_params, vcache, res)
+        with _sp("accept"):
+            if (self.cfg.plan == "staged"
+                    and self.cfg.resolve_accept() == "greedy"):
+                # host-side accept management (numpy) — the CPU bubble
+                tgt = np.asarray(jnp.argmax(t_logits, -1))
+                node_idx, accept_len, bonus, last = sched.greedy_accept_host(
+                    np.asarray(sub.tokens), np.asarray(sub.parents),
+                    np.asarray(sub.depths), np.asarray(sub.live), tgt,
+                    parts["a_max"])
+                # conditional tail-draft decision happens here on the host in
+                # the naive pipeline; the fused plan eliminates this branch
+                node_idx, accept_len = (jnp.asarray(node_idx),
+                                        jnp.asarray(accept_len))
+                bonus, last = jnp.asarray(bonus), jnp.asarray(last)
+            else:  # staged_device: accept on device, sync to read the result
+                acc = parts["accept"](sub, t_logits, res, select_idx, ka)
+                node_idx, accept_len, bonus, last = acc
+                jax.block_until_ready(accept_len)  # control readback boundary
+        with _sp("commit"):
+            dcache, vcache, out_tokens, h_last = parts["commit"](
+                dcache, vcache, res, scratch, sub, select_idx, node_idx,
+                accept_len, last, h_nodes)
+            # `bonus` becomes next step's root: pin its placement so the
+            # staged parts (and a later fused megastep) never see a drifting
+            # sharding
+            bonus = self._put(jnp.asarray(bonus), "batch")
         return dcache, vcache, bonus, out_tokens, accept_len, h_last
 
     def _get_staged_parts(self, spec: DraftSpec, verify_v: int):
@@ -611,7 +694,7 @@ class SpeculativeEngine:
                self.cfg.temperature, self.cfg.prune, self.cfg.sample_draft)
         if key not in self._step_cache:
             self._step_cache[key] = self._build_staged_parts(spec, verify_v)
-            self._compile_count += 1
+            self._note_compile("staged")
         return self._step_cache[key]
 
     def _get_step(self, spec: DraftSpec, verify_v: int):
@@ -619,7 +702,7 @@ class SpeculativeEngine:
                self.cfg.temperature, self.cfg.prune, self.cfg.sample_draft)
         if key not in self._step_cache:
             self._step_cache[key] = self._build_step(spec, verify_v)
-            self._compile_count += 1
+            self._note_compile("megastep")
         return self._step_cache[key]
 
     # ----------------------------------------------------------- generate --

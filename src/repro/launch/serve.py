@@ -18,16 +18,29 @@ whatever devices exist; an infeasible request falls back to the host mesh.
 On a CPU-only box, emulate devices first:
 ``XLA_FLAGS=--xla_force_host_platform_device_count=8``.
 
+Observability: all output goes through a ``logging``-based event log —
+one event per line, ``key=value`` text by default or JSON lines with
+``--log-json`` — sharing the tracer's event schema (admission, park,
+truncation, retirement, bucket_switch come from the server itself).
+``--trace-dir DIR`` enables full telemetry and writes ``trace.json``
+(Chrome trace — load it at https://ui.perfetto.dev), ``metrics.prom``
+(Prometheus text) and ``metrics.json`` (registry snapshot) on exit;
+``--jax-profile N`` additionally captures a ``jax.profiler`` device trace
+around the first N continuous megasteps under ``DIR/jax``.
+
 Usage:
   PYTHONPATH=src python -m repro.launch.serve --requests 8 --max-new 48
   PYTHONPATH=src python -m repro.launch.serve --server continuous \
-      --requests 16 --batch 4
+      --requests 16 --batch 4 --trace-dir /tmp/ygg-trace --log-json
   XLA_FLAGS=--xla_force_host_platform_device_count=8 PYTHONPATH=src \
       python -m repro.launch.serve --server continuous --mesh 4x2
 """
 from __future__ import annotations
 
 import argparse
+import json
+import logging
+import os
 
 import numpy as np
 
@@ -42,6 +55,19 @@ from repro.serving.continuous import ContinuousServer
 from repro.serving.controller import BucketController
 from repro.serving.server import BatchedServer, Request
 from repro.serving.testbed import TestbedSpec, build_testbed
+from repro.telemetry import EventLog, Telemetry, configure_logging
+
+
+def _write_artifacts(tel: Telemetry, trace_dir: str, ev: EventLog) -> None:
+    os.makedirs(trace_dir, exist_ok=True)
+    trace_p = os.path.join(trace_dir, "trace.json")
+    tel.tracer.save(trace_p)
+    with open(os.path.join(trace_dir, "metrics.prom"), "w") as f:
+        f.write(tel.registry.to_prometheus())
+    with open(os.path.join(trace_dir, "metrics.json"), "w") as f:
+        json.dump(tel.registry.snapshot(), f, indent=1, default=float)
+    ev.emit("artifacts_written", dir=trace_dir,
+            overhead_s=round(tel.overhead_seconds(), 6))
 
 
 def main() -> None:
@@ -70,6 +96,9 @@ def main() -> None:
                          "beat the incumbent by before switching")
     ap.add_argument("--profile", default=None,
                     help="LatencyProfile JSON (default: synthetic)")
+    ap.add_argument("--train-steps", type=int, default=240,
+                    help="testbed training steps (checkpoint-cached per "
+                         "value; 160 matches the benchmark/CI testbed)")
     ap.add_argument("--mesh", default=None,
                     help="device mesh: DxM (data x model, e.g. 4x2) or "
                          "'host'; default unsharded")
@@ -84,10 +113,29 @@ def main() -> None:
                          "GQA-native length-aware Pallas kernel (interpret "
                          "mode on CPU), 'xla' = the einsum oracle path, "
                          "'auto' = fused on accelerators, xla on CPU")
+    ap.add_argument("--log-level", default="INFO",
+                    help="logging level for the event log (DEBUG..ERROR)")
+    ap.add_argument("--log-json", action="store_true",
+                    help="emit the event log as JSON lines instead of "
+                         "key=value text")
+    ap.add_argument("--trace-dir", default=None,
+                    help="enable full telemetry and write trace.json "
+                         "(Chrome/Perfetto), metrics.prom and metrics.json "
+                         "to this directory on exit")
+    ap.add_argument("--jax-profile", type=int, default=0, metavar="N",
+                    help="with --trace-dir and --server continuous: capture "
+                         "a jax.profiler device trace around the first N "
+                         "megasteps (written under TRACE_DIR/jax)")
     args = ap.parse_args()
 
+    configure_logging(args.log_level, args.log_json)
+    # tracing only when asked (--trace-dir); the event log always runs —
+    # continuous-server lifecycle events route through the same Telemetry
+    telemetry = Telemetry(trace=args.trace_dir is not None)
+    ev = telemetry.log
+
     mesh = make_serving_mesh(args.mesh)
-    tb = build_testbed(TestbedSpec())
+    tb = build_testbed(TestbedSpec(train_steps=args.train_steps))
     prof = (LatencyProfile.load(args.profile) if args.profile
             else LatencyProfile.synthetic())
     engine = SpeculativeEngine(
@@ -98,15 +146,18 @@ def main() -> None:
                             quant=QuantConfig.parse(args.quantize),
                             verify_kernel=args.verify_kernel),
         mesh=mesh)
-    print(f"verify path: {engine.verify_path()}")
+    cfg_fields = {"server": args.server, "plan": args.plan,
+                  "verify_path": engine.verify_path(),
+                  "requests": args.requests, "batch": args.batch,
+                  "max_new": args.max_new}
     if mesh is not None:
         info = engine.mesh_info()
-        print(f"mesh: {info['shape']} over {info['devices']} devices")
+        cfg_fields["mesh"] = f"{info['shape']} over {info['devices']} devices"
     if args.quantize != "none":
         bps = engine.cache_bytes_per_slot()
-        print(f"quantize: {args.quantize}  "
-              f"cache bytes/slot={bps['total']}  "
-              f"(verifier {bps['verifier']}, drafter {bps['drafter']})")
+        cfg_fields.update(quantize=args.quantize,
+                          cache_bytes_per_slot=bps["total"])
+    ev.emit("serve_config", **cfg_fields)
 
     if args.server == "continuous" and args.adaptive:
         ladder = parse_buckets(args.buckets)
@@ -114,14 +165,16 @@ def main() -> None:
                                       hysteresis=args.hysteresis)
         server = ContinuousServer(engine, batch_size=args.batch,
                                   prompt_pad=24, buckets=ladder,
-                                  controller=controller)
-        print("adaptive ladder: "
-              + ", ".join("x".join(map(str, b.key())) for b in ladder))
+                                  controller=controller,
+                                  telemetry=telemetry)
+        ev.emit("adaptive_ladder",
+                ladder=",".join("x".join(map(str, b.key())) for b in ladder))
     elif args.server == "continuous":
         spec = egt_spec(args.depth, args.width)
         server = ContinuousServer(engine, batch_size=args.batch,
                                   prompt_pad=24, spec=spec,
-                                  verify_v=max(2, (3 * spec.num_nodes) // 4))
+                                  verify_v=max(2, (3 * spec.num_nodes) // 4),
+                                  telemetry=telemetry)
     else:
         server = BatchedServer(engine, batch_size=args.batch, prompt_pad=24)
 
@@ -132,34 +185,53 @@ def main() -> None:
         plen = int(rng.integers(8, 20))
         server.submit(Request(uid=uid, prompt=src.sample(rng, plen),
                               max_new=args.max_new))
-    done = server.run()
+
+    if (args.jax_profile > 0 and args.trace_dir
+            and args.server == "continuous"):
+        import jax.profiler
+        server.warmup()
+        jax_dir = os.path.join(args.trace_dir, "jax")
+        try:
+            jax.profiler.start_trace(jax_dir)
+            server.run(max_steps=args.jax_profile)
+            jax.profiler.stop_trace()
+            ev.emit("jax_profile_written", dir=jax_dir,
+                    megasteps=args.jax_profile)
+        except Exception as e:  # profiler backends vary; never kill serving
+            ev.emit("jax_profile_failed", level=logging.WARNING, error=str(e))
+        done = server.run()
+    else:
+        done = server.run()
 
     if args.server == "continuous":
         for uid, req in sorted(done.items()):
-            print(f"req {uid}: {len(req.result)} tokens  "
-                  f"queue={req.stats['queue_s'] * 1e3:.0f}ms  "
-                  f"latency={req.stats['latency_s'] * 1e3:.0f}ms")
+            ev.emit("request_done", uid=uid, tokens=len(req.result),
+                    queue_ms=round(req.stats["queue_s"] * 1e3, 1),
+                    latency_ms=round(req.stats["latency_s"] * 1e3, 1))
         m = server.metrics.summary()
-        print(f"served {m['completed']} requests in {m['steps']} steps; "
-              f"{m['throughput_tok_s']:.0f} tok/s  "
-              f"tpot={m['tpot_ms']:.1f}ms  aal={m['aal']:.2f}  "
-              f"occupancy={m['occupancy']:.2f}  refills={m['refills']}  "
-              f"recompiles_after_warmup={m['recompiles_after_warmup']}")
+        ev.emit("summary", completed=m["completed"], steps=m["steps"],
+                throughput_tok_s=round(m["throughput_tok_s"], 1),
+                tpot_ms=round(m["tpot_ms"], 2), aal=round(m["aal"], 3),
+                occupancy=round(m["occupancy"], 3), refills=m["refills"],
+                recompiles_after_warmup=m["recompiles_after_warmup"])
         if args.adaptive:
-            print(f"bucket switches: {m['bucket_switches']}")
-            for bk, bs in m["buckets"].items():
-                print(f"  bucket {bk}: {bs['steps']} steps  "
-                      f"aal={bs['aal']:.2f}  iter={bs['iter_ms']:.1f}ms")
+            ev.emit("bucket_summary", switches=m["bucket_switches"],
+                    **{f"bucket_{bk}": f"{bs['steps']} steps "
+                       f"aal={bs['aal']:.2f} iter={bs['iter_ms']:.1f}ms"
+                       for bk, bs in m["buckets"].items()})
     else:
         tot_tok, tot_t = 0, 0.0
         for uid, req in sorted(done.items()):
             s = req.stats
-            print(f"req {uid}: {len(req.result)} tokens  "
-                  f"aal={s['aal']:.2f}  tpot={s['tpot_ms']:.1f}ms")
+            ev.emit("request_done", uid=uid, tokens=len(req.result),
+                    aal=round(s["aal"], 3), tpot_ms=round(s["tpot_ms"], 2))
             tot_tok += s["tokens"]
             tot_t += s["time_s"]
-        print(f"served {len(done)} requests; aggregate TPOT "
-              f"{1e3 * tot_t / max(tot_tok, 1):.1f} ms/token")
+        ev.emit("summary", completed=len(done),
+                tpot_ms=round(1e3 * tot_t / max(tot_tok, 1), 2))
+
+    if args.trace_dir:
+        _write_artifacts(telemetry, args.trace_dir, ev)
 
 
 if __name__ == "__main__":

@@ -32,10 +32,9 @@ they could overflow the cache.
 """
 from __future__ import annotations
 
-import time
 from collections import deque
 from dataclasses import dataclass, field
-from typing import Deque, Dict, List, Optional, Sequence, Tuple
+from typing import Callable, Deque, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -44,16 +43,47 @@ from repro.core.egt import DraftSpec, egt_spec
 from repro.core.engine import DecodeState, SpeculativeEngine
 from repro.serving.controller import BucketController
 from repro.serving.server import Request, cut_at_eos, pad_prompt
+from repro.telemetry import (BoundedSeries, Clock, EmulatedClock, Histogram,
+                             Registry, RunningMean, Telemetry, WallClock,
+                             linear_buckets)
+
+# raw-sample window per series; running aggregates stay exact past this
+SERIES_WINDOW = 4096
+
+
+def _series(name: str, help: str, bounds=None) -> Callable[[], BoundedSeries]:
+    """Dataclass default factory: a bounded window backed by a histogram so
+    quantiles survive the window wrapping."""
+    def make() -> BoundedSeries:
+        return BoundedSeries(maxlen=SERIES_WINDOW,
+                             hist=Histogram(name, help, bounds=bounds))
+    return make
 
 
 @dataclass
 class ServingMetrics:
-    """Live counters for a continuous serving run."""
+    """Live counters for a continuous serving run.
+
+    Memory-bounded by construction: every per-step/per-request series is a
+    ``BoundedSeries`` (exact running aggregates over the FULL run + a
+    bounded window of recent raw samples + a fixed-bucket histogram for
+    quantiles once the window wraps), per-bucket rollups are ``RunningMean``
+    and the step-by-step ``bucket_history`` is a bounded deque — nothing
+    here grows with the number of requests served. ``summary()`` keys are
+    unchanged from the list-backed version and numerically identical while
+    a run fits the window (which every test and benchmark does).
+    """
     steps: int = 0
-    iter_times: List[float] = field(default_factory=list)
-    prefill_times: List[float] = field(default_factory=list)  # refills/parks
-    occupancy: List[float] = field(default_factory=list)   # active/B per step
-    accept_lens: List[np.ndarray] = field(default_factory=list)  # active only
+    iter_times: BoundedSeries = field(default_factory=_series(
+        "serving_iter_seconds", "decode megastep duration"))
+    prefill_times: BoundedSeries = field(default_factory=_series(
+        "serving_prefill_seconds", "slot prefill/park duration"))
+    occupancy: BoundedSeries = field(default_factory=_series(
+        "serving_occupancy", "active slots / pool size, per step",
+        bounds=linear_buckets(0.05, 0.05, 20)))
+    accept_lens: BoundedSeries = field(default_factory=_series(
+        "serving_accept_len", "accepted chain length, per active slot-step",
+        bounds=linear_buckets(1.0, 1.0, 16)))
     tokens_out: int = 0          # tokens credited to real requests
     admissions: int = 0
     refills: int = 0             # admissions into a previously-used slot
@@ -64,31 +94,46 @@ class ServingMetrics:
     mesh_devices: int = 1        # devices the engine's mesh spans (1 = unsharded)
     quant_mode: str = "none"     # engine QuantConfig mode string
     kv_bytes_per_slot: int = 0   # both caches' bytes ONE slot pins
-    latencies: List[float] = field(default_factory=list)   # submit -> finish
+    latencies: BoundedSeries = field(default_factory=_series(
+        "serving_request_latency_seconds", "request submit -> finish"))
     # adaptive scheduling: the bucket each step ran, and per-bucket rollups
-    bucket_history: List[Tuple[int, int, int]] = field(default_factory=list)
+    bucket_history: Deque[Tuple[int, int, int]] = field(
+        default_factory=lambda: deque(maxlen=SERIES_WINDOW))
     bucket_steps: Dict[Tuple[int, int, int], int] = field(default_factory=dict)
-    bucket_accept: Dict[Tuple[int, int, int], List[float]] = field(
+    bucket_accept: Dict[Tuple[int, int, int], RunningMean] = field(
         default_factory=dict)
-    bucket_iter: Dict[Tuple[int, int, int], List[float]] = field(
+    bucket_iter: Dict[Tuple[int, int, int], RunningMean] = field(
         default_factory=dict)
     bucket_switches: int = 0
 
     @property
     def aal(self) -> float:
-        if not self.accept_lens:
-            return 0.0
-        flat = np.concatenate([a.reshape(-1) for a in self.accept_lens])
-        return float(flat.mean()) if flat.size else 0.0
+        # BoundedSeries counts array appends element-wise, so this is the
+        # same number the old concatenate-then-mean produced
+        return self.accept_lens.mean
 
     @property
     def total_time(self) -> float:
         # decode megasteps AND slot prefills: throughput/TPOT must charge
         # the refill overhead, or continuous wins by metric definition
-        return float(sum(self.iter_times) + sum(self.prefill_times))
+        return self.iter_times.total + self.prefill_times.total
+
+    def bind(self, registry: Registry) -> None:
+        """Expose these counters through a telemetry registry: the series'
+        backing histograms register directly (shared objects — one
+        observation feeds both views) and the scalar counters become
+        callback gauges read lazily at collection time."""
+        for s in (self.iter_times, self.prefill_times, self.occupancy,
+                  self.accept_lens, self.latencies):
+            s.hist = registry.register(s.hist)  # type: ignore[assignment]
+        for name in ("tokens_out", "admissions", "refills", "parks",
+                     "completed", "truncated_prompts",
+                     "recompiles_after_warmup", "bucket_switches", "steps"):
+            registry.callback_gauge(
+                f"serving_{name}", lambda n=name: float(getattr(self, n)),
+                f"ServingMetrics.{name}")
 
     def summary(self) -> Dict[str, float]:
-        lat = np.asarray(self.latencies) if self.latencies else np.zeros(1)
         return {
             "steps": self.steps,
             "completed": self.completed,
@@ -97,7 +142,7 @@ class ServingMetrics:
             "throughput_tok_s": self.tokens_out / max(self.total_time, 1e-9),
             "tpot_ms": 1e3 * self.total_time / max(self.tokens_out, 1),
             "aal": self.aal,
-            "occupancy": float(np.mean(self.occupancy)) if self.occupancy else 0.0,
+            "occupancy": self.occupancy.mean,
             "admissions": self.admissions,
             "refills": self.refills,
             "parks": self.parks,
@@ -106,16 +151,16 @@ class ServingMetrics:
             "mesh_devices": self.mesh_devices,
             "quant_mode": self.quant_mode,
             "kv_bytes_per_slot": self.kv_bytes_per_slot,
-            "latency_p50_s": float(np.percentile(lat, 50)),
-            "latency_p95_s": float(np.percentile(lat, 95)),
+            "latency_p50_s": self.latencies.quantile(0.50),
+            "latency_p95_s": self.latencies.quantile(0.95),
             "bucket_switches": self.bucket_switches,
             "buckets": {
                 "x".join(map(str, k)): {
                     "steps": self.bucket_steps[k],
-                    "aal": float(np.mean(self.bucket_accept[k]))
-                    if self.bucket_accept.get(k) else 0.0,
-                    "iter_ms": 1e3 * float(np.mean(self.bucket_iter[k]))
-                    if self.bucket_iter.get(k) else 0.0,
+                    "aal": self.bucket_accept[k].mean
+                    if k in self.bucket_accept else 0.0,
+                    "iter_ms": 1e3 * self.bucket_iter[k].mean
+                    if k in self.bucket_iter else 0.0,
                 } for k in self.bucket_steps},
         }
 
@@ -144,11 +189,23 @@ class ContinuousServer:
                  spec: Optional[DraftSpec] = None,
                  verify_v: Optional[int] = None,
                  buckets: Optional[Sequence[Bucket]] = None,
-                 controller: Optional[BucketController] = None):
+                 controller: Optional[BucketController] = None,
+                 clock: Optional[Clock] = None,
+                 telemetry: Optional[Telemetry] = None):
         self.engine = engine
         self.batch_size = batch_size
         self.prompt_pad = prompt_pad
         self.eos_id = eos_id
+        # ONE clock for every timestamp this server takes (request stamps,
+        # prefill timing): wall by default, the telemetry bundle's when one
+        # is attached, or an EmulatedClock under an emulation driver — which
+        # flips the server into deferred-timing mode (see set_clock)
+        self.telemetry = telemetry
+        self.clock: Clock = clock or (telemetry.clock if telemetry is not None
+                                      else WallClock())
+        self._defer_timing = isinstance(self.clock, EmulatedClock)
+        self._tr = telemetry.tracer if telemetry is not None else None
+        self._ev = telemetry.log if telemetry is not None else None
         self.ladder: Optional[Tuple[Bucket, ...]] = None
         self.controller: Optional[BucketController] = None
         if buckets is not None:
@@ -184,6 +241,29 @@ class ContinuousServer:
         bytes_fn = getattr(engine, "cache_bytes_per_slot", None)
         self.metrics.kv_bytes_per_slot = (bytes_fn()["total"]
                                           if callable(bytes_fn) else 0)
+        if telemetry is not None:
+            self.metrics.bind(telemetry.registry)
+            # getattr-guarded like the quant fields above: fake engines in
+            # the scheduler tests have no telemetry hooks
+            attach = getattr(engine, "attach_telemetry", None)
+            if callable(attach):
+                attach(telemetry)
+            reg = telemetry.registry
+            self._h_spec_ratio = reg.histogram(
+                "spec_accept_ratio",
+                "per-slot accepted/(depth+1) chain-utilisation ratio",
+                bounds=linear_buckets(0.05, 0.05, 20))
+            self._c_wasted = reg.counter(
+                "spec_wasted_draft_tokens_total",
+                "verified tree nodes not committed (verify_v - accept_len), "
+                "summed over active slot-steps")
+            self._g_bucket_aal = reg.gauge(
+                "controller_bucket_aal",
+                "controller per-bucket AAL EMA estimate")
+        else:
+            self._h_spec_ratio = None
+            self._c_wasted = None
+            self._g_bucket_aal = None
 
         self.state: DecodeState = engine.init_decode_state(batch_size)
         self.slots: List[Optional[Request]] = [None] * batch_size
@@ -203,8 +283,34 @@ class ContinuousServer:
         self.warmed_buckets: set = set()  # bucket keys compiled at warmup
 
     # ---------------------------------------------------------- lifecycle --
+    def set_clock(self, clock: Clock) -> None:
+        """Swap the timestamp source (an emulation driver installs its
+        EmulatedClock here before replaying a trace). Under an emulated
+        clock the server defers all duration metrics to the driver — wall
+        time on the testbed is interpreter noise, so the driver charges
+        profile costs via ``observe_prefill``/``charge_step`` instead and
+        the exported numbers become bit-reproducible."""
+        self.clock = clock
+        self._defer_timing = isinstance(clock, EmulatedClock)
+
+    def observe_prefill(self, dt: float) -> None:
+        """Driver-charged cost of one slot prefill (deferred-timing mode)."""
+        self.metrics.prefill_times.append(float(dt))
+
+    def charge_step(self, iter_time: float) -> None:
+        """Driver-charged cost of the decode step that just ran (deferred-
+        timing mode): lands in the same series/rollups/controller EMA the
+        wall measurement would have fed."""
+        key = self.metrics.bucket_history[-1]
+        self.metrics.iter_times.append(float(iter_time))
+        self.metrics.bucket_iter.setdefault(key, RunningMean()).add(iter_time)
+        if self.controller is not None:
+            self.controller.observe_iter(key, iter_time)
+
     def submit(self, req: Request):
-        req.t_submit = req.t_submit or time.perf_counter()
+        req.t_submit = req.t_submit or self.clock.now()
+        if self._tr is not None:
+            self._tr.begin("queued", track=f"req:{req.uid}", uid=req.uid)
         self.queue.append(req)
 
     def warmup(self):
@@ -237,9 +343,10 @@ class ContinuousServer:
     def _park(self, slot: int):
         """Empty an idle slot (length 0, stale entries invisible); it keeps
         decoding garbage, which is cheaper than breaking the batch shape."""
-        t0 = time.perf_counter()
+        t0 = self.clock.now()
         self.state = self.engine.reset_state_slot(self.state, slot)
-        self.metrics.prefill_times.append(time.perf_counter() - t0)
+        if not self._defer_timing:   # emulated runs: driver charges costs
+            self.metrics.prefill_times.append(self.clock.now() - t0)
         self._slot_len[slot] = 0
         self.slots[slot] = None
 
@@ -257,12 +364,25 @@ class ContinuousServer:
                 toks, plen = pad_prompt(req, self.prompt_pad)
                 if req.truncated:
                     self.metrics.truncated_prompts += 1
-                req.t_start = time.perf_counter()  # before engine work, like
+                    if self._ev is not None:
+                        self._ev.emit("truncation", uid=req.uid,
+                                      prompt_pad=self.prompt_pad)
+                req.t_start = self.clock.now()     # before engine work, like
                 t0 = req.t_start                   # BatchedServer.step
+                if self._tr is not None:
+                    self._tr.end(track=f"req:{req.uid}")  # queued ends
+                    self._tr.begin("active", track=f"req:{req.uid}",
+                                   uid=req.uid, slot=i)
                 self.state = self.engine.prefill_into_slot(
                     self.state, i, toks, plen)
-                self.metrics.prefill_times.append(time.perf_counter() - t0)
+                if not self._defer_timing:
+                    self.metrics.prefill_times.append(self.clock.now() - t0)
                 self._slot_len[i] = plen
+                if self._ev is not None:
+                    self._ev.emit("admission", uid=req.uid, slot=i,
+                                  prompt_len=plen,
+                                  refill=self._used[i],
+                                  queue_s=req.t_start - req.t_submit)
                 # cap generation so commits can never run past the cache;
                 # clamp at 0 so a prompt with no headroom left retires
                 # immediately (a negative budget would slip tokens through
@@ -279,6 +399,8 @@ class ContinuousServer:
             elif self._slot_len[i] > L - 2 * self._headroom:
                 self._park(i)  # idle slot drifting toward the cache cap
                 self.metrics.parks += 1
+                if self._ev is not None:
+                    self._ev.emit("park", slot=i)
         if newly:
             # one host sync: each admitted slot's first token is its root
             roots = np.asarray(self.state.root)
@@ -315,17 +437,26 @@ class ContinuousServer:
     def _retire(self, slot: int):
         req = self.slots[slot]
         req.result = np.asarray(self._buffers[slot], np.int64)
-        req.t_finish = time.perf_counter()
+        req.t_finish = self.clock.now()
         req.stats = {"tokens": len(req.result),
                      "latency_s": req.t_finish - req.t_submit,
                      "queue_s": req.t_start - req.t_submit,
                      "prompt_truncated": req.truncated,
-                     "length_capped": self._budget[slot] < req.max_new}
+                     "length_capped": bool(self._budget[slot] < req.max_new)}
         self.done[req.uid] = req
         self._just_finished.append(req)
         self.slots[slot] = None  # slot refills at the next _admit
         self.metrics.completed += 1
         self.metrics.latencies.append(req.stats["latency_s"])
+        if self._tr is not None:
+            self._tr.end(track=f"req:{req.uid}",
+                         tokens=req.stats["tokens"])  # active ends
+            self._tr.instant("retired", track=f"req:{req.uid}", uid=req.uid)
+        if self._ev is not None:
+            self._ev.emit("retirement", uid=req.uid, slot=slot,
+                          tokens=req.stats["tokens"],
+                          latency_s=req.stats["latency_s"],
+                          length_capped=req.stats["length_capped"])
 
     # --------------------------------------------------------------- step --
     def step(self) -> List[Request]:
@@ -341,25 +472,43 @@ class ContinuousServer:
             # occupancy-aware online bucket selection; every ladder bucket
             # was compiled at warmup, so this only changes WHICH cached
             # executable the megastep below replays
+            sw0 = self.controller.switches
             b = self.controller.choose(n_active=len(active))
             self.spec, self.verify_v = egt_spec(b.depth, b.width), b.verify
+            if self._ev is not None and self.controller.switches > sw0:
+                self._ev.emit("bucket_switch", **self.controller.last_switch)
         self.state, res = self.engine.decode_step(
             self.state, spec=self.spec, verify_v=self.verify_v)
         self._slot_len += res.accept_len
         self.metrics.steps += 1
-        self.metrics.iter_times.append(res.iter_time)
-        self.metrics.occupancy.append(len(active) / self.batch_size)
-        self.metrics.accept_lens.append(res.accept_len[active])
         key = res.bucket
         self.metrics.bucket_history.append(key)
+        if not self._defer_timing:   # emulated runs: driver charges costs
+            self.metrics.iter_times.append(res.iter_time)
+            self.metrics.bucket_iter.setdefault(key, RunningMean()).add(
+                res.iter_time)
+        self.metrics.occupancy.append(len(active) / self.batch_size)
+        self.metrics.accept_lens.append(res.accept_len[active])
         self.metrics.bucket_steps[key] = self.metrics.bucket_steps.get(key, 0) + 1
-        self.metrics.bucket_accept.setdefault(key, []).append(
+        self.metrics.bucket_accept.setdefault(key, RunningMean()).add(
             res.mean_accept(active))
-        self.metrics.bucket_iter.setdefault(key, []).append(res.iter_time)
         if self.controller is not None:
-            self.controller.observe(key, res.mean_accept(active),
-                                    res.iter_time)
+            self.controller.observe(
+                key, res.mean_accept(active),
+                0.0 if self._defer_timing else res.iter_time)
             self.metrics.bucket_switches = self.controller.switches
+            if self._g_bucket_aal is not None:
+                self._g_bucket_aal.set(self.controller.aal.estimate(key),
+                                       bucket="x".join(map(str, key)))
+        if self._h_spec_ratio is not None:
+            # speculation efficiency, per active slot: how much of the max
+            # chain (depth+1) was accepted, and how many verified tree nodes
+            # were wasted
+            depth = key[0]
+            for a in res.accept_len[active]:
+                self._h_spec_ratio.observe(float(a) / (depth + 1))
+            self._c_wasted.inc(float(np.sum(self.verify_v
+                                            - res.accept_len[active])))
         for i in active:
             toks = res.tokens[i]
             self._credit(i, toks[toks >= 0])

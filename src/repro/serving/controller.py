@@ -55,6 +55,9 @@ class BucketController:
         self.current: Optional[Bucket] = None
         self.switches = 0
         self._dwell = 0
+        # why the most recent switch happened (scores, occupancy, dwell) —
+        # surfaced as a structured `bucket_switch` event by the server
+        self.last_switch: Optional[Dict[str, object]] = None
 
     # ------------------------------------------------------------ telemetry --
     def seed_iter_times(self, times: Dict[BucketKey, float]):
@@ -67,6 +70,13 @@ class BucketController:
                 iter_time: float):
         """Feed one megastep's outcome back into the estimators."""
         self.aal.update(key, mean_accept_len)
+        if iter_time > 0:
+            ema_update(self._iter_ema, key, iter_time, self.iter_alpha)
+
+    def observe_iter(self, key: BucketKey, iter_time: float):
+        """Feed an iteration time alone — the deferred-timing path, where an
+        emulation driver charges the profile cost after the step ran (the
+        AAL half of that step was already fed through ``observe``)."""
         if iter_time > 0:
             ema_update(self._iter_ema, key, iter_time, self.iter_alpha)
 
@@ -98,6 +108,13 @@ class BucketController:
               and self._dwell >= self.min_dwell
               and scores[best.key()]
               > scores[self.current.key()] * (1.0 + self.hysteresis)):
+            self.last_switch = {
+                "from": "x".join(map(str, self.current.key())),
+                "to": "x".join(map(str, best.key())),
+                "score_from": scores[self.current.key()],
+                "score_to": scores[best.key()],
+                "n_active": n_active, "dwell": self._dwell,
+            }
             self.current, self._dwell = best, 0
             self.switches += 1
         else:

@@ -10,6 +10,23 @@ call, accumulating an emulated clock. Used by benchmarks/fig_serving.py's
 ``adaptive_sweep`` and tests/test_adaptive_serving.py — one implementation,
 so the acceptance test and the benchmark artifact cannot disagree about
 what a step costs.
+
+Clock integration: ``drive_trace`` installs an ``EmulatedClock`` on the
+server (reusing the server's own if it already runs one, e.g. from an
+attached ``Telemetry(clock=EmulatedClock())``), which flips the server into
+deferred-timing mode — it stops recording wall durations and the driver
+charges the profile costs back through ``observe_prefill``/``charge_step``.
+Every timestamp the server takes (request submit/start/finish, tracer
+spans, event log) then reads emulated seconds, so two identical drives
+export bit-identical metrics snapshots and traces. ``charged_step`` called
+directly on a wall-clock server (the adaptive tests do this) leaves the
+server's own timing untouched, exactly as before.
+
+Note on latencies: a request's ``t_finish`` is stamped DURING the step that
+retires it, i.e. before that step's cost is charged to the clock, so
+``metrics.latencies`` runs one step-cost behind the driver-side
+``latencies_s`` (which is stamped after the charge). Both are deterministic;
+the driver-side numbers are what the benchmark artifact reports.
 """
 from __future__ import annotations
 
@@ -17,6 +34,7 @@ from typing import Dict, List, Tuple
 
 from repro.core.objective import LatencyProfile, step_latency
 from repro.serving.continuous import ContinuousServer
+from repro.telemetry import EmulatedClock
 
 
 def charged_step(server: ContinuousServer, profile: LatencyProfile
@@ -24,16 +42,27 @@ def charged_step(server: ContinuousServer, profile: LatencyProfile
     """Run one ``server.step()`` and return (emulated cost, finished
     requests): admissions this call are charged a prefill-width verifier
     call each; a decode step is charged the profile latency of the bucket
-    it ran at the occupancy it ran at."""
+    it ran at the occupancy it ran at. On a deferred-timing server the
+    charges are also fed back into its metrics/controller, and its
+    EmulatedClock is advanced by the total."""
     adm0, steps0 = server.metrics.admissions, server.metrics.steps
     finished = server.step()
-    cost = ((server.metrics.admissions - adm0)
-            * profile.t_verify(server.prompt_pad))
+    n_adm = server.metrics.admissions - adm0
+    prefill_cost = profile.t_verify(server.prompt_pad)
+    cost = n_adm * prefill_cost
+    if server._defer_timing:
+        for _ in range(n_adm):
+            server.observe_prefill(prefill_cost)
     if server.metrics.steps > steps0:
         d, w, v = server.metrics.bucket_history[-1]
         n_active = int(round(server.metrics.occupancy[-1]
                              * server.batch_size))
-        cost += step_latency(profile, d, w, v, batch=max(1, n_active))
+        step_cost = step_latency(profile, d, w, v, batch=max(1, n_active))
+        cost += step_cost
+        if server._defer_timing:
+            server.charge_step(step_cost)
+    if isinstance(server.clock, EmulatedClock):
+        server.clock.advance(cost)
     return cost, finished
 
 
@@ -43,24 +72,27 @@ def drive_trace(server: ContinuousServer, trace, profile: LatencyProfile
     the emulated clock until everything retires. Warmup is charged nothing
     (it is off the steady-state path). Returns busy/makespan times and
     per-request submit->finish latencies in emulated seconds."""
+    clock = (server.clock if isinstance(server.clock, EmulatedClock)
+             else EmulatedClock())
+    server.set_clock(clock)
     server.warmup()
-    emu_t, busy = 0.0, 0.0
+    busy = 0.0
     submit_at: Dict[int, float] = {}
     finish_at: Dict[int, float] = {}
     pending: List = list(trace)
     while pending or server.queue or any(s is not None for s in server.slots):
-        while pending and pending[0][0] <= emu_t:
+        while pending and pending[0][0] <= clock.now():
             arr, req = pending.pop(0)
             submit_at[req.uid] = arr
+            req.t_submit = arr  # queue latency measured in emulated seconds
             server.submit(req)
         if not (server.queue or any(s is not None for s in server.slots)):
-            emu_t = pending[0][0]       # idle: jump to the next arrival
+            clock.advance_to(pending[0][0])   # idle: jump to the next arrival
             continue
         cost, finished = charged_step(server, profile)
-        emu_t += cost
         busy += cost
         for req in finished:
-            finish_at[req.uid] = emu_t
-    return {"busy_s": busy, "makespan_s": emu_t,
+            finish_at[req.uid] = clock.now()
+    return {"busy_s": busy, "makespan_s": clock.now(),
             "latencies_s": {u: finish_at[u] - submit_at[u]
                             for u in finish_at}}

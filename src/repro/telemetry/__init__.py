@@ -1,0 +1,43 @@
+"""End-to-end telemetry: span tracing, metrics registry, event log.
+
+``Telemetry`` is the bundle the engine and server consume: one clock
+(wall or emulated), one tracer, one registry, one event log, and one
+shared :class:`SelfTime` accumulator that sums the host seconds spent
+inside every telemetry call. ``overhead_seconds()`` is that sum — the
+<2% of iter-time contract is asserted against it in
+``benchmarks/check_regression.py``.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+from .clock import Clock, EmulatedClock, WallClock
+from .events import EventLog, configure_logging
+from .metrics import (BoundedSeries, Counter, Gauge, Histogram, Registry,
+                      RunningMean, SelfTime, exponential_buckets,
+                      linear_buckets)
+from .trace import Tracer, validate_chrome_trace
+
+__all__ = [
+    "BoundedSeries", "Clock", "Counter", "EmulatedClock", "EventLog",
+    "Gauge", "Histogram", "Registry", "RunningMean", "SelfTime",
+    "Telemetry", "Tracer", "WallClock", "configure_logging",
+    "exponential_buckets", "linear_buckets", "validate_chrome_trace",
+]
+
+
+class Telemetry:
+    """One per server/engine pairing. Construct with an ``EmulatedClock``
+    for deterministic testbed runs; default is live wall time."""
+
+    def __init__(self, clock: Optional[Clock] = None, trace: bool = True,
+                 trace_maxlen: int = 200_000):
+        self.clock = clock or WallClock()
+        self.self_time = SelfTime()
+        self.registry = Registry(self_time=self.self_time)
+        self.tracer = (Tracer(self.clock, self_time=self.self_time,
+                              maxlen=trace_maxlen) if trace else None)
+        self.log = EventLog(clock=self.clock, tracer=self.tracer)
+
+    def overhead_seconds(self) -> float:
+        return self.self_time.seconds

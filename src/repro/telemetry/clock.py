@@ -1,0 +1,58 @@
+"""Clock abstraction shared by every telemetry consumer.
+
+The serving layer runs in two timing regimes: live (wall clock) and the
+emulated testbed (profile-charged costs accumulated by a driver — see
+serving/emulation.py). Telemetry must record the regime's OWN time, or the
+deterministic benchmark artifacts get polluted with wall-clock noise: a
+span recorded at ``perf_counter()`` inside an emulated run would make two
+identical runs export different traces. Everything that stamps a time —
+the tracer, the event log, request timestamps, ServingMetrics — therefore
+goes through one injected ``Clock``.
+
+``WallClock`` is ``time.perf_counter``. ``EmulatedClock`` only moves when
+the driver advances it, so all timestamps taken between advances are
+identical and bit-reproducible across runs.
+"""
+from __future__ import annotations
+
+import time
+
+
+class Clock:
+    """Minimal interface: ``now()`` in (fractional) seconds."""
+
+    def now(self) -> float:  # pragma: no cover - interface
+        raise NotImplementedError
+
+
+class WallClock(Clock):
+    """Live time: a monotonic high-resolution wall clock."""
+
+    def now(self) -> float:
+        return time.perf_counter()
+
+
+class EmulatedClock(Clock):
+    """Manually-advanced clock for deterministic emulated-testbed runs.
+
+    ``now()`` never moves on its own; the emulation driver calls
+    ``advance(cost)`` with each profile-charged step cost (and
+    ``advance_to(t)`` to jump over idle gaps to the next arrival).
+    """
+
+    def __init__(self, start: float = 0.0):
+        self._t = float(start)
+
+    def now(self) -> float:
+        return self._t
+
+    def advance(self, dt: float) -> float:
+        if dt < 0:
+            raise ValueError(f"cannot advance an EmulatedClock by {dt}")
+        self._t += float(dt)
+        return self._t
+
+    def advance_to(self, t: float) -> float:
+        """Jump forward to absolute time ``t`` (never backwards)."""
+        self._t = max(self._t, float(t))
+        return self._t

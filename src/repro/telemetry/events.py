@@ -1,0 +1,77 @@
+"""Structured event log sharing the tracer's schema.
+
+One lifecycle event (admission, park, truncation, retirement,
+bucket_switch, compile, ...) goes three places from a single ``emit``:
+
+  * the Python ``logging`` tree — as a JSON line (``--log-json``) or
+    ``key=value`` text, under logger ``repro.serving``;
+  * the tracer — as an instant on the ``events`` track, so the same
+    events line up against spans in the Perfetto timeline;
+  * nowhere else: metrics are the registry's job, not the log's.
+
+Timestamps come from the injected clock, so emulated runs log emulated
+seconds and stay deterministic (modulo the logging sink, which CI points
+at a file).
+"""
+from __future__ import annotations
+
+import json
+import logging
+from typing import Any, Dict, Optional
+
+from .clock import Clock, WallClock
+from .trace import Tracer
+
+
+class JsonLineFormatter(logging.Formatter):
+    """Formats records whose msg is a dict as one JSON line; falls back to
+    plain formatting for foreign records."""
+
+    def format(self, record: logging.LogRecord) -> str:
+        if isinstance(record.msg, dict):
+            return json.dumps(record.msg, sort_keys=True, default=str)
+        return super().format(record)
+
+
+class KeyValueFormatter(logging.Formatter):
+    def format(self, record: logging.LogRecord) -> str:
+        if isinstance(record.msg, dict):
+            d = record.msg
+            head = f"[{d.get('ts', 0.0):.6f}] {d.get('event', '?')}"
+            rest = " ".join(f"{k}={v}" for k, v in sorted(d.items())
+                            if k not in ("ts", "event"))
+            return f"{head} {rest}".rstrip()
+        return super().format(record)
+
+
+class EventLog:
+    def __init__(self, logger: Optional[logging.Logger] = None,
+                 clock: Optional[Clock] = None,
+                 tracer: Optional[Tracer] = None):
+        self.logger = logger or logging.getLogger("repro.serving")
+        self.clock = clock or WallClock()
+        self.tracer = tracer
+
+    def emit(self, event: str, level: int = logging.INFO,
+             **fields) -> Dict[str, Any]:
+        rec = {"ts": self.clock.now(), "event": event, **fields}
+        self.logger.log(level, rec)
+        if self.tracer is not None:
+            self.tracer.instant(event, track="events", **fields)
+        return rec
+
+
+def configure_logging(level: str = "INFO", json_lines: bool = False,
+                      stream=None) -> logging.Logger:
+    """Set up the ``repro`` logger tree for the CLI: one handler, chosen
+    formatter, no propagation to the root logger."""
+    logger = logging.getLogger("repro")
+    logger.setLevel(getattr(logging, level.upper(), logging.INFO))
+    logger.propagate = False
+    for h in list(logger.handlers):
+        logger.removeHandler(h)
+    handler = logging.StreamHandler(stream)
+    handler.setFormatter(JsonLineFormatter() if json_lines
+                         else KeyValueFormatter("%(message)s"))
+    logger.addHandler(handler)
+    return logger

@@ -1,0 +1,370 @@
+"""Metrics registry: counters, gauges and fixed-bucket histograms.
+
+Design constraints, in order:
+
+  1. **Bounded memory.** Nothing in here grows with the number of requests
+     or steps served. Histograms are fixed bucket arrays; ``BoundedSeries``
+     keeps running aggregates over the full history plus a bounded window
+     of recent raw values (exact quantiles while the window still holds
+     everything, histogram-estimated after it wraps). This is what fixes
+     the append-forever lists ``ServingMetrics`` used to carry.
+  2. **Cheap on the hot path.** An observation is a few float ops and dict
+     writes — no locks, no allocation beyond the first labelset. The
+     optional ``SelfTime`` accumulator measures the telemetry layer's own
+     host cost so the <2% overhead contract can be asserted from inside
+     (see benchmarks/fig_serving.py ``telemetry_sweep``).
+  3. **Deterministic exposition.** ``snapshot()`` (JSON) and
+     ``to_prometheus()`` (text format) iterate in insertion order with
+     sorted labels, so two identical runs — e.g. on the emulated clock —
+     export byte-identical artifacts (asserted in tests/test_telemetry.py).
+"""
+from __future__ import annotations
+
+import math
+import time
+from collections import deque
+from typing import Any, Callable, Dict, Iterable, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+LabelKey = Tuple[Tuple[str, str], ...]
+
+
+class SelfTime:
+    """Accumulates the host seconds spent inside telemetry calls."""
+
+    __slots__ = ("seconds",)
+
+    def __init__(self):
+        self.seconds = 0.0
+
+    def add(self, dt: float):
+        self.seconds += dt
+
+
+def _labelkey(labels: Dict[str, Any]) -> LabelKey:
+    return tuple(sorted((k, str(v)) for k, v in labels.items()))
+
+
+def _labelstr(key: LabelKey) -> str:
+    if not key:
+        return ""
+    esc = [(k, v.replace("\\", r"\\").replace('"', r"\"").replace("\n", r"\n"))
+           for k, v in key]
+    return "{" + ",".join(f'{k}="{v}"' for k, v in esc) + "}"
+
+
+def exponential_buckets(start: float, factor: float, count: int) -> List[float]:
+    return [start * factor ** i for i in range(count)]
+
+
+def linear_buckets(start: float, width: float, count: int) -> List[float]:
+    return [start + width * i for i in range(count)]
+
+
+# 1µs .. ~530s in ~1.78x steps: covers interpreter-scale testbed iterations
+# and accelerator-scale microseconds with <2x relative quantile error
+DEFAULT_TIME_BUCKETS = exponential_buckets(1e-6, 10 ** 0.25, 35)
+
+
+class Metric:
+    """Base: a named family holding one value per labelset."""
+
+    kind = "untyped"
+
+    def __init__(self, name: str, help: str = "",
+                 self_time: Optional[SelfTime] = None):
+        self.name = name
+        self.help = help
+        self._st = self_time
+
+    def snapshot_values(self) -> Dict[str, Any]:  # pragma: no cover
+        raise NotImplementedError
+
+    def expose(self) -> List[str]:  # pragma: no cover
+        raise NotImplementedError
+
+
+class Counter(Metric):
+    kind = "counter"
+
+    def __init__(self, name: str, help: str = "",
+                 self_time: Optional[SelfTime] = None):
+        super().__init__(name, help, self_time)
+        self._v: Dict[LabelKey, float] = {}
+
+    def inc(self, amount: float = 1.0, **labels):
+        t0 = time.perf_counter() if self._st is not None else 0.0
+        k = _labelkey(labels)
+        self._v[k] = self._v.get(k, 0.0) + amount
+        if self._st is not None:
+            self._st.add(time.perf_counter() - t0)
+
+    def value(self, **labels) -> float:
+        return self._v.get(_labelkey(labels), 0.0)
+
+    def snapshot_values(self) -> Dict[str, Any]:
+        return {_labelstr(k) or "": v for k, v in sorted(self._v.items())}
+
+    def expose(self) -> List[str]:
+        return [f"{self.name}{_labelstr(k)} {v:g}"
+                for k, v in sorted(self._v.items())]
+
+
+class Gauge(Metric):
+    kind = "gauge"
+
+    def __init__(self, name: str, help: str = "",
+                 self_time: Optional[SelfTime] = None,
+                 fn: Optional[Callable[[], float]] = None):
+        super().__init__(name, help, self_time)
+        self._v: Dict[LabelKey, float] = {}
+        self._fn = fn  # callback gauge: evaluated at collection time
+
+    def set(self, value: float, **labels):
+        t0 = time.perf_counter() if self._st is not None else 0.0
+        self._v[_labelkey(labels)] = float(value)
+        if self._st is not None:
+            self._st.add(time.perf_counter() - t0)
+
+    def value(self, **labels) -> float:
+        if self._fn is not None:
+            return float(self._fn())
+        return self._v.get(_labelkey(labels), 0.0)
+
+    def _items(self) -> List[Tuple[LabelKey, float]]:
+        if self._fn is not None:
+            return [((), float(self._fn()))]
+        return sorted(self._v.items())
+
+    def snapshot_values(self) -> Dict[str, Any]:
+        return {_labelstr(k) or "": v for k, v in self._items()}
+
+    def expose(self) -> List[str]:
+        return [f"{self.name}{_labelstr(k)} {v:g}" for k, v in self._items()]
+
+
+class Histogram(Metric):
+    """Fixed-bucket histogram with p50/p95/p99-style quantile estimation.
+
+    ``bounds`` are ascending bucket upper edges; an implicit +inf bucket
+    catches the tail. Quantiles interpolate linearly inside the selected
+    bucket, clamped to the observed min/max — on distributions wider than
+    one bucket the estimate is within one bucket width of numpy's
+    percentile (asserted against known distributions in
+    tests/test_telemetry.py).
+    """
+
+    kind = "histogram"
+
+    def __init__(self, name: str, help: str = "",
+                 bounds: Optional[Sequence[float]] = None,
+                 self_time: Optional[SelfTime] = None):
+        super().__init__(name, help, self_time)
+        bs = list(bounds if bounds is not None else DEFAULT_TIME_BUCKETS)
+        if any(b2 <= b1 for b1, b2 in zip(bs, bs[1:])):
+            raise ValueError(f"histogram bounds must be ascending: {bs}")
+        self.bounds = bs
+        self.counts = [0] * (len(bs) + 1)
+        self.sum = 0.0
+        self.count = 0
+        self._min = math.inf
+        self._max = -math.inf
+
+    def observe(self, value: float):
+        t0 = time.perf_counter() if self._st is not None else 0.0
+        v = float(value)
+        # binary search beats linear scan once bounds get long
+        lo, hi = 0, len(self.bounds)
+        while lo < hi:
+            mid = (lo + hi) // 2
+            if v <= self.bounds[mid]:
+                hi = mid
+            else:
+                lo = mid + 1
+        self.counts[lo] += 1
+        self.sum += v
+        self.count += 1
+        self._min = min(self._min, v)
+        self._max = max(self._max, v)
+        if self._st is not None:
+            self._st.add(time.perf_counter() - t0)
+
+    @property
+    def mean(self) -> float:
+        return self.sum / self.count if self.count else 0.0
+
+    def quantile(self, q: float) -> float:
+        if not 0.0 <= q <= 1.0:
+            raise ValueError(f"quantile {q} outside [0, 1]")
+        if self.count == 0:
+            return 0.0
+        target = q * self.count
+        cum = 0
+        for i, c in enumerate(self.counts):
+            if c == 0:
+                continue
+            if cum + c >= target:
+                lo = self.bounds[i - 1] if i > 0 else self._min
+                hi = self.bounds[i] if i < len(self.bounds) else self._max
+                lo, hi = max(lo, self._min), min(hi, self._max)
+                if hi <= lo:
+                    return lo
+                frac = (target - cum) / c
+                return lo + frac * (hi - lo)
+            cum += c
+        return self._max
+
+    def snapshot_values(self) -> Dict[str, Any]:
+        return {"buckets": dict(zip([f"{b:g}" for b in self.bounds] + ["+Inf"],
+                                    self.counts)),
+                "sum": self.sum, "count": self.count,
+                "p50": self.quantile(0.5), "p95": self.quantile(0.95),
+                "p99": self.quantile(0.99)}
+
+    def expose(self) -> List[str]:
+        lines, cum = [], 0
+        for b, c in zip(self.bounds, self.counts):
+            cum += c
+            lines.append(f'{self.name}_bucket{{le="{b:g}"}} {cum}')
+        lines.append(f'{self.name}_bucket{{le="+Inf"}} {self.count}')
+        lines.append(f"{self.name}_sum {self.sum:g}")
+        lines.append(f"{self.name}_count {self.count}")
+        return lines
+
+
+class Registry:
+    """Named metric families, exposed as Prometheus text or a JSON dict."""
+
+    def __init__(self, self_time: Optional[SelfTime] = None):
+        self._metrics: Dict[str, Metric] = {}
+        self._st = self_time
+
+    def register(self, metric: Metric) -> Metric:
+        """Adopt an externally-built metric (idempotent per name; the
+        registered instance wins so late registration cannot fork a
+        family). Also stitches the registry's self-time accumulator in."""
+        existing = self._metrics.get(metric.name)
+        if existing is not None:
+            if type(existing) is not type(metric):
+                raise ValueError(
+                    f"metric {metric.name!r} re-registered as a different "
+                    f"type ({existing.kind} vs {metric.kind})")
+            return existing
+        if metric._st is None:
+            metric._st = self._st
+        self._metrics[metric.name] = metric
+        return metric
+
+    def counter(self, name: str, help: str = "") -> Counter:
+        return self.register(Counter(name, help))  # type: ignore[return-value]
+
+    def gauge(self, name: str, help: str = "") -> Gauge:
+        return self.register(Gauge(name, help))  # type: ignore[return-value]
+
+    def histogram(self, name: str, help: str = "",
+                  bounds: Optional[Sequence[float]] = None) -> Histogram:
+        return self.register(Histogram(name, help, bounds=bounds))  # type: ignore[return-value]
+
+    def callback_gauge(self, name: str, fn: Callable[[], float],
+                       help: str = "") -> Gauge:
+        """A gauge evaluated lazily at collection time — zero hot-path cost
+        for engine-side counters like ``executable_count``."""
+        return self.register(Gauge(name, help, fn=fn))  # type: ignore[return-value]
+
+    def get(self, name: str) -> Optional[Metric]:
+        return self._metrics.get(name)
+
+    def snapshot(self) -> Dict[str, Any]:
+        return {name: {"type": m.kind, "help": m.help,
+                       "values": m.snapshot_values()}
+                for name, m in self._metrics.items()}
+
+    def to_prometheus(self) -> str:
+        lines: List[str] = []
+        for name, m in self._metrics.items():
+            if m.help:
+                lines.append(f"# HELP {name} {m.help}")
+            lines.append(f"# TYPE {name} {m.kind}")
+            lines.extend(m.expose())
+        return "\n".join(lines) + "\n"
+
+
+class RunningMean:
+    """Exact mean over the full history in O(1) memory."""
+
+    __slots__ = ("total", "count")
+
+    def __init__(self):
+        self.total = 0.0
+        self.count = 0
+
+    def add(self, value: float):
+        self.total += float(value)
+        self.count += 1
+
+    @property
+    def mean(self) -> float:
+        return self.total / self.count if self.count else 0.0
+
+
+class BoundedSeries:
+    """Append-only numeric series with O(maxlen) memory.
+
+    Running aggregates (sum/count/mean) are exact over the FULL history;
+    the window keeps the most recent ``maxlen`` raw values. ``quantile``
+    is exact (numpy, linear interpolation) while the history still fits
+    the window and falls back to the backing histogram's estimate once it
+    has wrapped — the memory-bounded replacement for ServingMetrics'
+    append-forever lists. Arrays append element-wise into the aggregates
+    (an accept-length vector counts each slot), so ``mean`` reproduces
+    ``np.concatenate(...).mean()`` bit-for-bit.
+    """
+
+    def __init__(self, maxlen: int = 4096,
+                 hist: Optional[Histogram] = None):
+        self._window: deque = deque(maxlen=maxlen)
+        self.hist = hist
+        self.total = 0.0
+        self.count = 0
+
+    def append(self, value):
+        a = np.asarray(value)
+        self.total += float(a.sum())
+        self.count += int(a.size)
+        self._window.append(value)
+        if self.hist is not None:
+            for v in a.reshape(-1):
+                self.hist.observe(float(v))
+
+    @property
+    def mean(self) -> float:
+        return self.total / self.count if self.count else 0.0
+
+    @property
+    def last(self):
+        return self._window[-1]
+
+    def quantile(self, q: float) -> float:
+        if self.count == 0:
+            return 0.0
+        if self.count <= self._window.maxlen:
+            flat = np.concatenate([np.asarray(v).reshape(-1)
+                                   for v in self._window])
+            return float(np.percentile(flat, 100.0 * q))
+        if self.hist is None:
+            raise ValueError("series wrapped and has no backing histogram")
+        return self.hist.quantile(q)
+
+    # list-compatibility shims: emulation reads [-1], tests iterate/set()
+    def __getitem__(self, idx):
+        return self._window[idx]
+
+    def __iter__(self) -> Iterable:
+        return iter(self._window)
+
+    def __len__(self) -> int:
+        return len(self._window)
+
+    def __bool__(self) -> bool:
+        return self.count > 0

@@ -1,0 +1,192 @@
+"""Span tracer with Chrome-trace / Perfetto JSON export.
+
+A ``Tracer`` records the request lifecycle (queued → admitted → prefill →
+decode megasteps → retired) and per-megastep stages (draft, verify,
+accept, commit, host) as *complete* spans on named tracks. Tracks map to
+Chrome-trace threads: one per request (``req:<uid>``), one for the engine
+megasteps (``engine``), one for instant events. Time comes from the
+injected :class:`~repro.telemetry.clock.Clock` — emulated-testbed seconds
+on the testbed (where spans between driver advances collapse to zero
+duration but keep their causal order), wall ``perf_counter`` live.
+
+Spans are bounded (``maxlen``): the tracer is a flight recorder, not a
+log — old events fall off rather than leaking. Export follows the Trace
+Event Format: ``ph:"X"`` complete events with ``ts``/``dur`` in
+microseconds relative to tracer start, ``ph:"i"`` instants, and ``ph:"M"``
+``thread_name`` metadata so Perfetto labels the tracks. ``ts`` within a
+track is monotonic by construction (single clock, sorted export);
+``validate_chrome_trace`` asserts that plus JSON-loadability and proper
+nesting, and is what CI runs against the uploaded artifact.
+"""
+from __future__ import annotations
+
+import json
+import time
+from collections import deque
+from contextlib import contextmanager
+from typing import Any, Dict, List, Optional, Tuple
+
+from .clock import Clock, WallClock
+from .metrics import SelfTime
+
+PID = 1
+
+
+class _Span:
+    __slots__ = ("name", "track", "t0", "args")
+
+    def __init__(self, name: str, track: str, t0: float,
+                 args: Dict[str, Any]):
+        self.name = name
+        self.track = track
+        self.t0 = t0
+        self.args = args
+
+
+class Tracer:
+    def __init__(self, clock: Optional[Clock] = None,
+                 self_time: Optional[SelfTime] = None,
+                 maxlen: int = 200_000):
+        self.clock = clock or WallClock()
+        self._st = self_time
+        self._t0 = self.clock.now()
+        # finished events: (kind, name, track, ts, dur, args); kind X or i
+        self._events: deque = deque(maxlen=maxlen)
+        self._stacks: Dict[str, List[_Span]] = {}
+        self._tids: Dict[str, int] = {}
+        self.dropped = 0
+
+    # -- recording ---------------------------------------------------------
+    def begin(self, name: str, track: str = "main", **args):
+        t0 = time.perf_counter() if self._st is not None else 0.0
+        self._stacks.setdefault(track, []).append(
+            _Span(name, track, self.clock.now(), args))
+        if self._st is not None:
+            self._st.add(time.perf_counter() - t0)
+
+    def end(self, track: str = "main", **args):
+        t0 = time.perf_counter() if self._st is not None else 0.0
+        stack = self._stacks.get(track)
+        if not stack:
+            raise RuntimeError(f"end() with no open span on track {track!r}")
+        sp = stack.pop()
+        if args:
+            sp.args.update(args)
+        self._push(("X", sp.name, track, sp.t0, self.clock.now() - sp.t0,
+                    sp.args))
+        if self._st is not None:
+            self._st.add(time.perf_counter() - t0)
+
+    @contextmanager
+    def span(self, name: str, track: str = "main", **args):
+        self.begin(name, track, **args)
+        try:
+            yield self
+        finally:
+            self.end(track)
+
+    def instant(self, name: str, track: str = "main", **args):
+        """Point event; records the enclosing open span's name (so e.g. a
+        compile instant is attributable to the megastep it happened in)."""
+        t0 = time.perf_counter() if self._st is not None else 0.0
+        stack = self._stacks.get(track)
+        if stack:
+            args = dict(args, enclosing=stack[-1].name)
+        self._push(("i", name, track, self.clock.now(), 0.0, args))
+        if self._st is not None:
+            self._st.add(time.perf_counter() - t0)
+
+    def current(self, track: str = "main") -> Optional[str]:
+        stack = self._stacks.get(track)
+        return stack[-1].name if stack else None
+
+    def _push(self, ev: Tuple):
+        if len(self._events) == self._events.maxlen:
+            self.dropped += 1
+        self._events.append(ev)
+
+    # -- export ------------------------------------------------------------
+    def _tid(self, track: str) -> int:
+        if track not in self._tids:
+            self._tids[track] = len(self._tids) + 1
+        return self._tids[track]
+
+    def to_chrome_trace(self) -> Dict[str, Any]:
+        rows = []
+        for kind, name, track, ts, dur, args in self._events:
+            tid = self._tid(track)
+            us = (ts - self._t0) * 1e6
+            ev: Dict[str, Any] = {"name": name, "ph": kind, "pid": PID,
+                                  "tid": tid, "ts": us}
+            if kind == "X":
+                ev["dur"] = dur * 1e6
+            else:
+                ev["s"] = "t"
+            if args:
+                ev["args"] = dict(args)
+            rows.append(ev)
+        # stable within-track ordering: by ts, outer (longer) spans first so
+        # Perfetto nests them; instants after spans at equal ts
+        rows.sort(key=lambda e: (e["tid"], e["ts"], -e.get("dur", -1.0)))
+        meta = [{"name": "thread_name", "ph": "M", "pid": PID, "tid": tid,
+                 "args": {"name": track}}
+                for track, tid in sorted(self._tids.items(),
+                                         key=lambda kv: kv[1])]
+        return {"traceEvents": meta + rows, "displayTimeUnit": "ms"}
+
+    def save(self, path) -> None:
+        with open(path, "w") as f:
+            json.dump(self.to_chrome_trace(), f)
+
+
+def validate_chrome_trace(blob: Any) -> List[str]:
+    """Return a list of problems (empty ⇒ valid Chrome/Perfetto trace).
+
+    Checks: JSON round-trip, required event fields, per-track monotonic
+    ``ts``, and well-nested ``X`` spans (a child must end no later than its
+    parent). This is the validator CI runs on the uploaded artifact.
+    """
+    errs: List[str] = []
+    try:
+        blob = json.loads(json.dumps(blob))
+    except (TypeError, ValueError) as e:
+        return [f"not JSON-serialisable: {e}"]
+    evs = blob.get("traceEvents")
+    if not isinstance(evs, list) or not evs:
+        return ["traceEvents missing or empty"]
+    last_ts: Dict[int, float] = {}
+    open_spans: Dict[int, List[float]] = {}
+    for i, ev in enumerate(evs):
+        ph = ev.get("ph")
+        if ph not in ("X", "i", "M", "B", "E"):
+            errs.append(f"event {i}: unknown ph {ph!r}")
+            continue
+        if "name" not in ev or "pid" not in ev or "tid" not in ev:
+            errs.append(f"event {i}: missing name/pid/tid")
+            continue
+        if ph == "M":
+            continue
+        ts = ev.get("ts")
+        if not isinstance(ts, (int, float)):
+            errs.append(f"event {i}: non-numeric ts {ts!r}")
+            continue
+        tid = ev["tid"]
+        if ts < last_ts.get(tid, float("-inf")):
+            errs.append(f"event {i}: ts {ts} < previous {last_ts[tid]} "
+                        f"on tid {tid}")
+        last_ts[tid] = ts
+        if ph == "X":
+            dur = ev.get("dur")
+            if not isinstance(dur, (int, float)) or dur < 0:
+                errs.append(f"event {i}: bad dur {dur!r}")
+                continue
+            ends = open_spans.setdefault(tid, [])
+            # epsilon absorbs float rounding of (ts - t0) * 1e6: adjacent
+            # spans sharing a boundary are siblings, not parent/child
+            while ends and ts >= ends[-1] - 1e-6:
+                ends.pop()          # previous span closed before we start
+            if ends and ts + dur > ends[-1] + 1e-6:
+                errs.append(f"event {i}: span [{ts}, {ts + dur}] overflows "
+                            f"enclosing span ending {ends[-1]} on tid {tid}")
+            ends.append(ts + dur)
+    return errs

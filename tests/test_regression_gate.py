@@ -31,6 +31,14 @@ GOOD_CURRENT = {
         "kernel_path": {"verify_path": "fused",
                         "recompiles_after_warmup": 0},
     },
+    "telemetry": {
+        "token_exact": 1.0,
+        "trace_valid": 1.0,
+        "emulated_snapshot_deterministic": 1.0,
+        "overhead_frac": 0.004,
+        "on": {"recompiles_after_warmup": 0},
+        "off": {"recompiles_after_warmup": 0},
+    },
 }
 
 
@@ -82,6 +90,28 @@ def test_gate_fails_on_kernel_traffic_regression():
     cur["kernel_traffic"]["kernel_path"]["recompiles_after_warmup"] = 1
     assert any("kernel_path" in f and "recompiles" in f
                for f in compare(_baseline(), cur))
+
+
+def test_gate_fails_on_telemetry_hard_bounds():
+    """Hard bounds are absolute: token-exactness/validity/determinism must
+    be exactly 1.0 and overhead must stay under 2% — regardless of what the
+    baseline says."""
+    for key, bad in (("token_exact", 0.0), ("trace_valid", 0.0),
+                     ("emulated_snapshot_deterministic", 0.0),
+                     ("overhead_frac", 0.05)):
+        cur = copy.deepcopy(GOOD_CURRENT)
+        cur["telemetry"][key] = bad
+        fails = compare(_baseline(), cur)
+        assert any(key in f and "hard bound" in f for f in fails), (key, fails)
+
+
+def test_gate_fails_when_telemetry_section_missing():
+    """A doctored artifact with the whole telemetry sweep gone must fail
+    loudly, not pass vacuously."""
+    cur = copy.deepcopy(GOOD_CURRENT)
+    del cur["telemetry"]
+    fails = compare(_baseline(), cur)
+    assert any("telemetry" in f and "unmeasured" in f for f in fails)
 
 
 def test_gate_fails_on_missing_metric_not_vacuously():

@@ -1,0 +1,346 @@
+"""Telemetry: metric/registry semantics, tracer invariants, Chrome-trace
+export validity, and the serving contracts (telemetry on/off token-exactness,
+recompile parity, emulated-clock determinism of exported snapshots)."""
+import io
+import json
+import logging
+
+import numpy as np
+import pytest
+
+from repro.core.buckets import buckets_for_depths
+from repro.core.egt import egt_spec
+from repro.core.engine import EngineConfig, SpeculativeEngine
+from repro.core.objective import LatencyProfile
+from repro.serving.continuous import ContinuousServer
+from repro.serving.emulation import drive_trace
+from repro.serving.server import Request
+from repro.serving.testbed import Testbed, TestbedSpec, build_testbed
+from repro.telemetry import (BoundedSeries, Counter, EmulatedClock, EventLog,
+                             Gauge, Histogram, Registry, Telemetry, Tracer,
+                             WallClock, linear_buckets,
+                             validate_chrome_trace)
+from repro.telemetry.events import JsonLineFormatter
+
+
+# ------------------------------------------------------------- clocks ------
+def test_emulated_clock_advances_monotonically():
+    c = EmulatedClock(start=2.0)
+    c.advance(0.5)
+    assert c.now() == 2.5
+    c.advance_to(1.0)                      # backward advance_to is a no-op
+    assert c.now() == 2.5
+    c.advance_to(3.0)
+    assert c.now() == 3.0
+    with pytest.raises(ValueError):
+        c.advance(-0.1)
+
+
+def test_wall_clock_moves_forward():
+    c = WallClock()
+    a, b = c.now(), c.now()
+    assert b >= a
+
+
+# ------------------------------------------------------ counters/gauges ----
+def test_counter_accumulates_per_label():
+    c = Counter("reqs_total", "requests")
+    c.inc()
+    c.inc(2.0, route="a")
+    c.inc(route="a")
+    assert c.value() == 1.0
+    assert c.value(route="a") == 3.0
+
+
+def test_gauge_set_and_callback():
+    g = Gauge("depth", "current depth")
+    g.set(4.0)
+    g.set(8.0, bucket="8x2")
+    snap = g.snapshot_values()
+    assert snap[""] == 4.0
+    assert snap['{bucket="8x2"}'] == 8.0
+    lazy = Gauge("lazy", "callback gauge", fn=lambda: 7.0)
+    assert lazy.snapshot_values()[""] == 7.0
+
+
+# ---------------------------------------------------------- histograms -----
+def test_histogram_quantiles_match_numpy_within_bucket_width():
+    width = 0.1
+    h = Histogram("lat", "latency", bounds=linear_buckets(width, width, 60))
+    rng = np.random.default_rng(0)
+    xs = rng.uniform(0.05, 5.5, size=5000)
+    for x in xs:
+        h.observe(float(x))
+    for q in (0.50, 0.95, 0.99):
+        est = h.quantile(q)
+        exact = float(np.percentile(xs, 100 * q))
+        assert abs(est - exact) <= width + 1e-9, (q, est, exact)
+    assert abs(h.mean - xs.mean()) < 0.01
+
+
+def test_histogram_quantile_clamped_to_observed_range():
+    h = Histogram("x", "x", bounds=[1.0, 10.0, 100.0])
+    h.observe(3.0)
+    h.observe(4.0)
+    # bucket upper bounds are coarse; estimates must stay inside [min, max]
+    assert 3.0 <= h.quantile(0.5) <= 4.0
+    assert h.quantile(0.99) <= 4.0
+    empty = Histogram("y", "y", bounds=[1.0])
+    assert empty.quantile(0.5) == 0.0
+
+
+def test_histogram_rejects_unsorted_bounds():
+    with pytest.raises(ValueError):
+        Histogram("bad", "bad", bounds=[2.0, 1.0])
+
+
+# ------------------------------------------------------------ registry -----
+def test_registry_register_is_idempotent_by_name():
+    reg = Registry()
+    c1 = reg.counter("hits", "hits")
+    c2 = reg.counter("hits", "hits")
+    assert c1 is c2
+    with pytest.raises(ValueError):
+        reg.gauge("hits", "now a gauge?!")
+
+
+def test_prometheus_exposition_format():
+    reg = Registry()
+    reg.counter("requests_total", "requests served").inc(3, route="a b")
+    h = reg.histogram("iter_seconds", "iteration time",
+                      bounds=[0.1, 1.0])
+    h.observe(0.05)
+    h.observe(0.5)
+    h.observe(5.0)
+    text = reg.to_prometheus()
+    assert "# HELP requests_total requests served" in text
+    assert "# TYPE requests_total counter" in text
+    assert 'requests_total{route="a b"} 3' in text
+    # cumulative buckets + implicit +Inf, sum and count
+    assert 'iter_seconds_bucket{le="0.1"} 1' in text
+    assert 'iter_seconds_bucket{le="1"} 2' in text
+    assert 'iter_seconds_bucket{le="+Inf"} 3' in text
+    assert "iter_seconds_count 3" in text
+
+
+def test_registry_snapshot_has_quantiles():
+    reg = Registry()
+    h = reg.histogram("t", "t", bounds=linear_buckets(1.0, 1.0, 10))
+    for v in range(1, 9):
+        h.observe(float(v))
+    snap = reg.snapshot()
+    vals = snap["t"]["values"]
+    assert {"count", "sum", "p50", "p95", "p99"} <= set(vals)
+    assert vals["count"] == 8
+
+
+# ------------------------------------------------------- bounded series ----
+def test_bounded_series_window_and_exact_totals():
+    s = BoundedSeries(maxlen=8, hist=Histogram("s", "s",
+                                               bounds=linear_buckets(1, 1, 40)))
+    for v in range(1, 21):
+        s.append(float(v))
+    assert len(s) == 8                       # window is bounded ...
+    assert s.count == 20                     # ... aggregates are exact
+    assert s.total == sum(range(1, 21))
+    assert s.mean == pytest.approx(sum(range(1, 21)) / 20)
+    assert s.last == 20.0
+    # wrapped: quantile comes from the histogram, still well-defined
+    assert 0 < s.quantile(0.5) <= 40
+
+
+def test_bounded_series_exact_quantile_before_wrap():
+    s = BoundedSeries(maxlen=64)
+    xs = [3.0, 1.0, 4.0, 1.5, 9.0]
+    for v in xs:
+        s.append(v)
+    assert s.quantile(0.5) == float(np.percentile(xs, 50))
+
+
+def test_bounded_series_wrap_without_hist_refuses_quantile():
+    s = BoundedSeries(maxlen=2)
+    for v in (1.0, 2.0, 3.0):
+        s.append(v)
+    with pytest.raises(ValueError):
+        s.quantile(0.5)
+
+
+# --------------------------------------------------------------- tracer ----
+def _traced_clock():
+    clk = EmulatedClock()
+    return clk, Tracer(clock=clk)
+
+
+def test_span_nesting_and_ordering():
+    clk, tr = _traced_clock()
+    tr.begin("outer", track="engine")
+    clk.advance(1.0)
+    tr.begin("inner", track="engine", bucket="4x2")
+    clk.advance(0.5)
+    tr.instant("compile", track="engine")
+    tr.end(track="engine")                   # inner
+    clk.advance(0.25)
+    tr.end(track="engine", accept=3)         # outer picks up closing args
+    blob = tr.to_chrome_trace()
+    assert validate_chrome_trace(blob) == []
+    evs = [e for e in blob["traceEvents"] if e["ph"] == "X"]
+    names = [e["name"] for e in evs]
+    assert names == ["outer", "inner"]       # parent sorted before child
+    outer, inner = evs
+    assert outer["ts"] <= inner["ts"]
+    assert inner["ts"] + inner["dur"] <= outer["ts"] + outer["dur"] + 1
+    assert outer["args"]["accept"] == 3
+    inst = [e for e in blob["traceEvents"] if e["ph"] == "i"]
+    assert inst[0]["args"]["enclosing"] == "inner"
+
+
+def test_end_without_begin_raises():
+    _, tr = _traced_clock()
+    with pytest.raises(RuntimeError):
+        tr.end(track="engine")
+
+
+def test_span_contextmanager_closes_on_exception():
+    clk, tr = _traced_clock()
+    with pytest.raises(RuntimeError, match="boom"):
+        with tr.span("work", track="t"):
+            clk.advance(1.0)
+            raise RuntimeError("boom")
+    assert tr.current("t") is None           # span closed despite the raise
+    assert validate_chrome_trace(tr.to_chrome_trace()) == []
+
+
+def test_validator_rejects_overflowing_child_span():
+    doctored = {"traceEvents": [
+        {"ph": "X", "name": "parent", "pid": 1, "tid": 2, "ts": 0, "dur": 10},
+        {"ph": "X", "name": "child", "pid": 1, "tid": 2, "ts": 5, "dur": 50},
+    ]}
+    errs = validate_chrome_trace(doctored)
+    assert any("overflows" in e or "nest" in e for e in errs)
+
+
+def test_tracer_bounded_buffer_drops_and_counts():
+    clk, _ = _traced_clock()
+    tr = Tracer(clock=clk, maxlen=4)
+    for i in range(10):
+        tr.instant(f"e{i}", track="t")
+    assert tr.dropped == 6
+    assert len(tr.to_chrome_trace()["traceEvents"]) <= 4 + 1  # + M metadata
+
+
+# ------------------------------------------------------------ event log ----
+def test_event_log_json_lines_share_tracer_schema():
+    clk = EmulatedClock(start=5.0)
+    tr = Tracer(clock=clk)
+    buf = io.StringIO()
+    handler = logging.StreamHandler(buf)
+    handler.setFormatter(JsonLineFormatter())
+    logger = logging.getLogger("repro.test.events")
+    logger.handlers = [handler]
+    logger.setLevel(logging.INFO)
+    logger.propagate = False
+    ev = EventLog(logger=logger, clock=clk, tracer=tr)
+    ev.emit("admission", uid=3, slot=1)
+    rec = json.loads(buf.getvalue().strip())
+    assert rec == {"event": "admission", "slot": 1, "ts": 5.0, "uid": 3}
+    # mirrored onto the tracer's events track as an instant
+    inst = [e for e in tr.to_chrome_trace()["traceEvents"] if e["ph"] == "i"]
+    assert inst and inst[0]["name"] == "admission"
+    assert inst[0]["args"]["uid"] == 3
+
+
+# ---------------------------------------------- serving contracts (slow) ----
+SPEC, VERIFY_V = egt_spec(3, 2), 5
+
+
+@pytest.fixture(scope="module")
+def tb() -> Testbed:
+    return build_testbed(TestbedSpec(train_steps=160))
+
+
+def _engine(tb):
+    return SpeculativeEngine(tb.drafter, tb.d_params, tb.verifier,
+                             tb.v_params,
+                             buckets=buckets_for_depths((3,), width=2,
+                                                        verify_frac=0.75),
+                             depth_options=(3,), config=EngineConfig())
+
+
+def _trace(tb, n, seed=11):
+    rng = np.random.default_rng(seed)
+    t, out = 0.0, []
+    for uid in range(n):
+        t += float(rng.exponential(1.0 / 0.8))
+        plen = int(rng.integers(6, 14))
+        prompt = rng.integers(1, tb.spec.vocab, size=plen).astype(np.int32)
+        out.append((t, Request(uid=uid, prompt=prompt, max_new=10)))
+    return out
+
+
+def _drive(tb, telemetry):
+    srv = ContinuousServer(_engine(tb), batch_size=2, prompt_pad=16,
+                           spec=SPEC, verify_v=VERIFY_V, telemetry=telemetry)
+    drive_trace(srv, _trace(tb, 4), LatencyProfile.synthetic())
+    return srv
+
+
+def _exports(tel):
+    snap = json.dumps(tel.registry.snapshot(), sort_keys=True, default=float)
+    trace = json.dumps(tel.tracer.to_chrome_trace(), sort_keys=True)
+    return snap, trace
+
+
+@pytest.fixture(scope="module")
+def drives(tb):
+    off = _drive(tb, None)
+    on = _drive(tb, Telemetry(clock=EmulatedClock()))
+    on2 = _drive(tb, Telemetry(clock=EmulatedClock()))
+    return off, on, on2
+
+
+def test_telemetry_is_token_invisible(drives):
+    """Full telemetry (registry + tracer + event mirror) must not change a
+    single emitted token, nor introduce a recompile."""
+    off, on, _ = drives
+    assert sorted(off.done) == sorted(on.done)
+    for uid in off.done:
+        np.testing.assert_array_equal(off.done[uid].result,
+                                      on.done[uid].result)
+    assert off.metrics.summary()["recompiles_after_warmup"] == 0
+    assert on.metrics.summary()["recompiles_after_warmup"] == 0
+
+
+def test_emulated_clock_exports_are_deterministic(drives):
+    """Two identical emulated drives export byte-identical registry
+    snapshots AND Chrome traces — no wall-clock leaks anywhere."""
+    _, on, on2 = drives
+    assert _exports(on.telemetry) == _exports(on2.telemetry)
+
+
+def test_serving_trace_exports_valid_request_lifecycle(drives):
+    _, on, _ = drives
+    blob = on.telemetry.tracer.to_chrome_trace()
+    assert validate_chrome_trace(blob) == []
+    names = {}                                # tid -> thread_name
+    for e in blob["traceEvents"]:
+        if e["ph"] == "M":
+            names[e["tid"]] = e["args"]["name"]
+    by_track = {}
+    for e in blob["traceEvents"]:
+        if e["ph"] in ("X", "i"):
+            by_track.setdefault(names[e["tid"]], set()).add(e["name"])
+    req_tracks = [v for k, v in by_track.items() if k.startswith("req:")]
+    assert req_tracks and any({"queued", "active", "retired"} <= v
+                              for v in req_tracks)
+    assert "megastep" in by_track.get("engine", set())
+
+
+def test_serving_metrics_exposition_covers_engine_and_spec(drives):
+    _, on, _ = drives
+    text = on.telemetry.registry.to_prometheus()
+    for name in ("serving_iter_seconds", "serving_request_latency_seconds",
+                 "engine_executable_count", "engine_compiles_total",
+                 "spec_accept_ratio", "spec_wasted_draft_tokens_total"):
+        assert f"# TYPE {name}" in text, name
+    snap = on.telemetry.registry.snapshot()
+    assert snap["serving_accept_len"]["values"]["count"] > 0
