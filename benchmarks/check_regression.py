@@ -50,6 +50,11 @@ GATED_METRICS: Tuple[Tuple[str, str], ...] = (
     # early-out collapses these toward 1.0 and fails the gate
     ("kernel_traffic.gqa_bytes_ratio", "higher"),
     ("kernel_traffic.len_scaling_ratio", "higher"),
+    # async front-end (emulated clock, deterministic): the fraction of
+    # tokens delivered within SLO through the 2-replica router, and its
+    # margin over the single scale-up replica at equal slot count
+    ("frontend_sweep.router.goodput_under_slo", "higher"),
+    ("frontend_sweep.router_over_single", "higher"),
 )
 DEFAULT_THRESHOLD = 0.10
 
@@ -62,6 +67,12 @@ HARD_BOUNDS: Tuple[Tuple[str, str, float], ...] = (
     ("telemetry.trace_valid", "==", 1.0),
     ("telemetry.emulated_snapshot_deterministic", "==", 1.0),
     ("telemetry.overhead_frac", "<", 0.02),
+    # the async front-end's acceptance criteria are absolute: two identical
+    # emulated drives must be byte-identical WITH the event loop in the
+    # path, and routing over 2 replicas must strictly beat the single
+    # scale-up replica on goodput under SLO at equal slot count
+    ("frontend_sweep.deterministic", "==", 1.0),
+    ("frontend_sweep.router_over_single", ">", 1.0),
 )
 
 
@@ -130,7 +141,8 @@ def compare(baseline: Dict, current: Dict,
             failures.append(f"{key}: missing from the current artifact — "
                             f"hard bound {op} {bound:g} went unmeasured")
             continue
-        ok = (val == bound) if op == "==" else (val < bound)
+        ok = {"==": val == bound, "<": val < bound,
+              ">": val > bound}[op]
         if not ok:
             failures.append(
                 f"{key}: {val:.4g} violates the hard bound ({op} {bound:g})")

@@ -58,9 +58,11 @@ from repro.core.engine import EngineConfig, SpeculativeEngine
 from repro.core.objective import LatencyProfile
 from repro.data.pipeline import MarkovSource
 from repro.quant import QuantConfig
+from repro.serving.config import ServeConfig
 from repro.serving.continuous import ContinuousServer, slots_at_budget
 from repro.serving.controller import BucketController
 from repro.serving.emulation import drive_trace
+from repro.serving.frontend import drive_frontend_trace
 from repro.serving.server import BatchedServer, Request
 from repro.telemetry import EmulatedClock, Telemetry, validate_chrome_trace
 
@@ -306,7 +308,7 @@ def quant_sweep(tb, n: int, max_new: int, batch: int,
         server.warmup()
         for req in requests():
             server.submit(req)
-        server.run()
+        server.serve()
         m = server.metrics.summary()
         out[mode] = {
             "throughput_tok_s": m["throughput_tok_s"],
@@ -490,7 +492,7 @@ def telemetry_sweep(tb, n: int, max_new: int, batch: int,
     for uid in range(n):
         srv_wall.submit(Request(uid=uid, prompt=prompts[uid].copy(),
                                 max_new=max_new))
-    srv_wall.run()
+    srv_wall.serve()
     decode_s = srv_wall.metrics.iter_times.total
     out["overhead_seconds"] = tel_wall.overhead_seconds()
     out["decode_seconds"] = decode_s
@@ -509,7 +511,7 @@ def telemetry_sweep(tb, n: int, max_new: int, batch: int,
     for uid in range(2):
         srv_staged.submit(Request(uid=uid, prompt=prompts[uid].copy(),
                                   max_new=min(max_new, 8)))
-    srv_staged.run()
+    srv_staged.serve()
     trace = tel_staged.tracer.to_chrome_trace()
     errs = validate_chrome_trace(trace)
     checks = _trace_lifecycle_checks(trace)
@@ -520,6 +522,77 @@ def telemetry_sweep(tb, n: int, max_new: int, batch: int,
                      srv_staged.metrics.summary()["recompiles_after_warmup"]}
     common.save("serving_trace", trace)
     return out
+
+
+def make_slo_trace(tb, n: int, rate_hz: float, deadline_s: float = 40.0,
+                   short_new: int = 8, long_new: int = 32,
+                   p_short: float = 0.7, sessions: int = 4, seed: int = 3):
+    """Bimodal Poisson arrivals with per-request SLO deadlines and session
+    ids — rows ``(arrival_emu_s, Request, extras)`` for the front-end's
+    emulated drive. Same seed -> byte-identical trace (requests are
+    stateful, so every drive builds its own copy)."""
+    rng = np.random.default_rng(seed)
+    src = MarkovSource(vocab=tb.spec.vocab,
+                       concentration=tb.data_cfg.concentration,
+                       seed=tb.data_cfg.seed)
+    arrivals = np.cumsum(rng.exponential(1.0 / rate_hz, size=n))
+    out = []
+    for uid in range(n):
+        plen = int(rng.integers(6, 12))
+        max_new = short_new if rng.random() < p_short else long_new
+        out.append((float(arrivals[uid]),
+                    Request(uid=uid, prompt=src.sample(rng, plen),
+                            max_new=max_new),
+                    {"deadline_s": deadline_s,
+                     "session": f"sess-{uid % sessions}"}))
+    return out
+
+
+def _build_frontend(tb, profile: LatencyProfile, replicas: int, batch: int):
+    # built through the same ServeConfig helpers the launcher uses, so the
+    # bench measures exactly the topology `--server frontend` serves
+    cfg = ServeConfig(server="frontend", replicas=replicas, batch=batch,
+                      depth=SPEC.depth, width=SPEC.width, prompt_pad=12)
+    return cfg.build_frontend(tb, profile=profile)
+
+
+def frontend_sweep(tb, n: int, rate_hz: float = 0.25,
+                   deadline_s: float = 40.0) -> Dict:
+    """Goodput-under-SLO: one async front-end, two topologies, same trace.
+
+      * ``single`` — 1 replica x batch 4 (scale-UP: all slots share one
+        engine, so a full pool runs 4x6=24 concurrent tree tokens — past
+        the emulated profile's saturation knee at 16, ~9 emu-s per step);
+      * ``router`` — 2 replicas x batch 2 (scale-OUT: 2x6=12 tokens per
+        replica stays under the knee, ~1.3 emu-s per step) behind the
+        session-affine router, with a drain + scale-up event mid-trace.
+
+    Same slot count, same requests, same deadlines — the router side must
+    deliver a strictly higher fraction of tokens within SLO
+    (``router_over_single`` > 1, hard-bounded in check_regression.py), and
+    two identical router drives must produce the byte-identical artifact
+    (``deterministic``). Every replica must report zero recompiles across
+    admission, affinity re-pins and the drain/scale-up cycle."""
+    profile = emulated_profile()
+    mk = lambda: make_slo_trace(tb, n, rate_hz, deadline_s=deadline_s)
+    events = ((15.0, "drain", 1), (30.0, "scale_up", 1))
+    single = drive_frontend_trace(_build_frontend(tb, profile, 1, 4),
+                                  mk(), profile)
+    router = drive_frontend_trace(_build_frontend(tb, profile, 2, 2),
+                                  mk(), profile, events=events)
+    rerun = drive_frontend_trace(_build_frontend(tb, profile, 2, 2),
+                                 mk(), profile, events=events)
+    blob = lambda r: json.dumps(r, sort_keys=True, default=float)
+    return {
+        "config": {"n": n, "rate_hz": rate_hz, "deadline_s": deadline_s,
+                   "events": [list(e) for e in events],
+                   "spec": {"depth": SPEC.depth, "width": SPEC.width}},
+        "single": single,
+        "router": router,
+        "deterministic": float(blob(router) == blob(rerun)),
+        "router_over_single": (router["goodput_under_slo"]
+                               / max(single["goodput_under_slo"], 1e-9)),
+    }
 
 
 def sweep_meshes(tb, n: int, rate_hz: float, max_new: int, batch: int,
@@ -579,6 +652,9 @@ def run(quick: bool = True, mesh_sweep: bool = True):
     # observability contracts: token-exactness, overhead, determinism,
     # trace validity (also writes results/serving_trace.json)
     out["telemetry"] = telemetry_sweep(tb, max(6, n // 2), max_new, batch)
+    # async front-end: scale-out router vs scale-up single replica on
+    # goodput under SLO (emulated clock; drain/scale-up event mid-trace)
+    out["frontend_sweep"] = frontend_sweep(tb, n)
     common.save("fig_serving", out)
     return out
 
@@ -639,3 +715,12 @@ if __name__ == "__main__":
               f"overhead={tm['overhead_frac'] * 100:.2f}% of decode  "
               f"deterministic={tm['emulated_snapshot_deterministic']:.0f}  "
               f"trace_valid={tm['trace_valid']:.0f}")
+    fs = res.get("frontend_sweep")
+    if fs:
+        s, r = fs["single"], fs["router"]
+        print(f"frontend: router 2x2 goodput={r['goodput_under_slo']:.3f} "
+              f"vs single 1x4 {s['goodput_under_slo']:.3f} "
+              f"({fs['router_over_single']:.2f}x)  "
+              f"deterministic={fs['deterministic']:.0f}  "
+              f"repins={r['router']['repins']}  "
+              f"affinity_hits={r['router']['affinity_hits']}")

@@ -2,29 +2,34 @@
 
 Builds (or restores) the aligned drafter/verifier pair, measures the
 latency profile, and serves a queue of requests through the speculative
-engine — the full Yggdrasil runtime at laptop scale. Two serving modes:
+engine — the full Yggdrasil runtime at laptop scale. Three serving modes:
 
   * ``--server batched``    — one padded batch to completion per step (the
     single-tenant latency-optimal regime of §9).
   * ``--server continuous`` — continuous batching: a fixed pool of decode
     slots, retired requests replaced mid-flight via single-slot prefill,
     one pinned megastep executable replayed across slot churn.
+  * ``--server frontend``   — the async serving front-end: ``--replicas N``
+    continuous engines behind a session-affine SLO-aware router, each
+    replica stepping in its own executor lane of one asyncio event loop.
 
-Both servers also run mesh-sharded: ``--mesh DxM`` (e.g. ``--mesh 4x2``)
-places the engine on a data×model device mesh — verifier/drafter params
-tensor-parallel over ``model``, decode slots data-parallel over ``data`` —
-via the logical-axis rules in sharding/specs.py. ``--mesh host`` spans
-whatever devices exist; an infeasible request falls back to the host mesh.
-On a CPU-only box, emulate devices first:
+Every flag is a field of :class:`repro.serving.ServeConfig` — the CLI is
+generated from the dataclass, and ``benchmarks/fig_serving.py`` builds its
+engines through the same ``ServeConfig.build_*`` helpers, so the launcher
+and the benchmark cannot drift apart.
+
+Both single-server modes also run mesh-sharded: ``--mesh DxM`` (e.g.
+``--mesh 4x2``) places the engine on a data×model device mesh —
+verifier/drafter params tensor-parallel over ``model``, decode slots
+data-parallel over ``data`` — via the logical-axis rules in
+sharding/specs.py. On a CPU-only box, emulate devices first:
 ``XLA_FLAGS=--xla_force_host_platform_device_count=8``.
 
 Observability: all output goes through a ``logging``-based event log —
 one event per line, ``key=value`` text by default or JSON lines with
-``--log-json`` — sharing the tracer's event schema (admission, park,
-truncation, retirement, bucket_switch come from the server itself).
-``--trace-dir DIR`` enables full telemetry and writes ``trace.json``
-(Chrome trace — load it at https://ui.perfetto.dev), ``metrics.prom``
-(Prometheus text) and ``metrics.json`` (registry snapshot) on exit;
+``--log-json``. ``--trace-dir DIR`` enables full telemetry and writes
+``trace.json`` (Chrome trace — load it at https://ui.perfetto.dev),
+``metrics.prom`` (Prometheus text) and ``metrics.json`` on exit;
 ``--jax-profile N`` additionally captures a ``jax.profiler`` device trace
 around the first N continuous megasteps under ``DIR/jax``.
 
@@ -32,28 +37,24 @@ Usage:
   PYTHONPATH=src python -m repro.launch.serve --requests 8 --max-new 48
   PYTHONPATH=src python -m repro.launch.serve --server continuous \
       --requests 16 --batch 4 --trace-dir /tmp/ygg-trace --log-json
-  XLA_FLAGS=--xla_force_host_platform_device_count=8 PYTHONPATH=src \
-      python -m repro.launch.serve --server continuous --mesh 4x2
+  PYTHONPATH=src python -m repro.launch.serve --server frontend \
+      --replicas 2 --batch 2 --requests 12 --slo-s 30
 """
 from __future__ import annotations
 
 import argparse
+import asyncio
 import json
 import logging
 import os
 
 import numpy as np
 
-from repro.core.buckets import buckets_for_depths, parse_buckets
-from repro.core.egt import egt_spec
-from repro.core.engine import EngineConfig, SpeculativeEngine
 from repro.core.objective import LatencyProfile
 from repro.data.pipeline import MarkovSource
 from repro.launch.mesh import make_serving_mesh
-from repro.quant import QuantConfig
-from repro.serving.continuous import ContinuousServer
-from repro.serving.controller import BucketController
-from repro.serving.server import BatchedServer, Request
+from repro.serving.config import ServeConfig
+from repro.serving.server import Request
 from repro.serving.testbed import TestbedSpec, build_testbed
 from repro.telemetry import EventLog, Telemetry, configure_logging
 
@@ -70,141 +71,115 @@ def _write_artifacts(tel: Telemetry, trace_dir: str, ev: EventLog) -> None:
             overhead_s=round(tel.overhead_seconds(), 6))
 
 
-def main() -> None:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--server", default="batched",
-                    choices=["batched", "continuous"])
-    ap.add_argument("--requests", type=int, default=8)
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--max-new", type=int, default=48)
-    ap.add_argument("--temperature", type=float, default=0.0)
-    ap.add_argument("--plan", default="fused",
-                    choices=["fused", "staged", "staged_device"])
-    ap.add_argument("--depth", type=int, default=4,
-                    help="pinned speculation depth (continuous mode)")
-    ap.add_argument("--width", type=int, default=2,
-                    help="pinned speculation width (continuous mode)")
-    ap.add_argument("--adaptive", action="store_true",
-                    help="continuous mode: precompile a bucket ladder and "
-                         "let the online controller re-pick the bucket each "
-                         "megastep (zero recompiles after warmup)")
-    ap.add_argument("--buckets", default="2x2x4,4x2x7,8x2x13",
-                    help="adaptive bucket ladder, comma-separated DxW or "
-                         "DxWxV entries (e.g. 2x2,4x2x7)")
-    ap.add_argument("--hysteresis", type=float, default=0.1,
-                    help="relative score margin a challenger bucket must "
-                         "beat the incumbent by before switching")
-    ap.add_argument("--profile", default=None,
-                    help="LatencyProfile JSON (default: synthetic)")
-    ap.add_argument("--train-steps", type=int, default=240,
-                    help="testbed training steps (checkpoint-cached per "
-                         "value; 160 matches the benchmark/CI testbed)")
-    ap.add_argument("--mesh", default=None,
-                    help="device mesh: DxM (data x model, e.g. 4x2) or "
-                         "'host'; default unsharded")
-    ap.add_argument("--quantize", default="none",
-                    choices=["none", "int8-kv", "int8-kv+w8"],
-                    help="int8-kv: both KV caches int8 with per-slot scales "
-                         "(greedy decode stays token-exact on the testbed); "
-                         "+w8 adds int8 weight-only params")
-    ap.add_argument("--verify-kernel", default="auto",
-                    choices=["auto", "fused", "xla"],
-                    help="decode/verify attention hot path: 'fused' = the "
-                         "GQA-native length-aware Pallas kernel (interpret "
-                         "mode on CPU), 'xla' = the einsum oracle path, "
-                         "'auto' = fused on accelerators, xla on CPU")
-    ap.add_argument("--log-level", default="INFO",
-                    help="logging level for the event log (DEBUG..ERROR)")
-    ap.add_argument("--log-json", action="store_true",
-                    help="emit the event log as JSON lines instead of "
-                         "key=value text")
-    ap.add_argument("--trace-dir", default=None,
-                    help="enable full telemetry and write trace.json "
-                         "(Chrome/Perfetto), metrics.prom and metrics.json "
-                         "to this directory on exit")
-    ap.add_argument("--jax-profile", type=int, default=0, metavar="N",
-                    help="with --trace-dir and --server continuous: capture "
-                         "a jax.profiler device trace around the first N "
-                         "megasteps (written under TRACE_DIR/jax)")
-    args = ap.parse_args()
-
-    configure_logging(args.log_level, args.log_json)
-    # tracing only when asked (--trace-dir); the event log always runs —
-    # continuous-server lifecycle events route through the same Telemetry
-    telemetry = Telemetry(trace=args.trace_dir is not None)
-    ev = telemetry.log
-
-    mesh = make_serving_mesh(args.mesh)
-    tb = build_testbed(TestbedSpec(train_steps=args.train_steps))
-    prof = (LatencyProfile.load(args.profile) if args.profile
-            else LatencyProfile.synthetic())
-    engine = SpeculativeEngine(
-        tb.drafter, tb.d_params, tb.verifier, tb.v_params, profile=prof,
-        buckets=buckets_for_depths((2, 4, 8), width=2, verify_frac=0.75),
-        depth_options=(2, 4, 8),
-        config=EngineConfig(temperature=args.temperature, plan=args.plan,
-                            quant=QuantConfig.parse(args.quantize),
-                            verify_kernel=args.verify_kernel),
-        mesh=mesh)
-    cfg_fields = {"server": args.server, "plan": args.plan,
-                  "verify_path": engine.verify_path(),
-                  "requests": args.requests, "batch": args.batch,
-                  "max_new": args.max_new}
-    if mesh is not None:
-        info = engine.mesh_info()
-        cfg_fields["mesh"] = f"{info['shape']} over {info['devices']} devices"
-    if args.quantize != "none":
-        bps = engine.cache_bytes_per_slot()
-        cfg_fields.update(quantize=args.quantize,
-                          cache_bytes_per_slot=bps["total"])
-    ev.emit("serve_config", **cfg_fields)
-
-    if args.server == "continuous" and args.adaptive:
-        ladder = parse_buckets(args.buckets)
-        controller = BucketController(ladder, profile=prof,
-                                      hysteresis=args.hysteresis)
-        server = ContinuousServer(engine, batch_size=args.batch,
-                                  prompt_pad=24, buckets=ladder,
-                                  controller=controller,
-                                  telemetry=telemetry)
-        ev.emit("adaptive_ladder",
-                ladder=",".join("x".join(map(str, b.key())) for b in ladder))
-    elif args.server == "continuous":
-        spec = egt_spec(args.depth, args.width)
-        server = ContinuousServer(engine, batch_size=args.batch,
-                                  prompt_pad=24, spec=spec,
-                                  verify_v=max(2, (3 * spec.num_nodes) // 4),
-                                  telemetry=telemetry)
-    else:
-        server = BatchedServer(engine, batch_size=args.batch, prompt_pad=24)
-
+def _requests(cfg: ServeConfig, tb) -> list:
     src = MarkovSource(vocab=tb.spec.vocab,
                        concentration=tb.data_cfg.concentration)
     rng = np.random.default_rng(0)
-    for uid in range(args.requests):
-        plen = int(rng.integers(8, 20))
-        server.submit(Request(uid=uid, prompt=src.sample(rng, plen),
-                              max_new=args.max_new))
+    return [Request(uid=uid, prompt=src.sample(rng, int(rng.integers(8, 20))),
+                    max_new=cfg.max_new)
+            for uid in range(cfg.requests)]
 
-    if (args.jax_profile > 0 and args.trace_dir
-            and args.server == "continuous"):
+
+def _serve_frontend(cfg: ServeConfig, tb, prof, mesh, ev: EventLog) -> None:
+    """Async multi-replica path: wall-clock event loop, executor lanes."""
+    fe = cfg.build_frontend(tb, profile=prof, mesh=mesh)
+    sessions = max(1, cfg.replicas)
+    handles = [fe.submit(req, session=f"sess-{req.uid % sessions}",
+                         deadline_s=cfg.slo_s or None)
+               for req in _requests(cfg, tb)]
+    asyncio.run(fe.run_until_drained())
+    for h in handles:
+        ev.emit("request_done", uid=h.uid, tokens=len(h.tokens),
+                replica=h.replica, session=h.session, shed=h.shed)
+    s = fe.summary()
+    ev.emit("summary", completed=s["completed"], sheds=s["sheds"],
+            goodput_under_slo=round(s["goodput_under_slo"], 4),
+            tokens_delivered=s["tokens_delivered"],
+            affinity_hits=s["router"]["affinity_hits"],
+            routed=json.dumps(s["router"]["routed"]))
+    for idx, rs in sorted(s["router"]["replicas"].items()):
+        ev.emit("replica_summary", replica=idx, state=rs["state"],
+                routed=rs["routed"], steps=rs["steps"],
+                tokens=rs["tokens"],
+                recompiles_after_warmup=rs["recompiles_after_warmup"])
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ServeConfig.add_args(ap)
+    ap.add_argument("--config", default=None,
+                    help="load a ServeConfig JSON; explicit flags override")
+    args = ap.parse_args()
+    if args.config:
+        with open(args.config) as f:
+            cfg = ServeConfig.from_json(json.load(f))
+        # flags given on the command line win over the JSON file
+        sentinel = argparse.ArgumentParser()
+        ServeConfig.add_args(sentinel)
+        defaults = vars(sentinel.parse_args([]))
+        for k, v in vars(args).items():
+            if k != "config" and v != defaults.get(k):
+                setattr(cfg, k, v)
+    else:
+        cfg = ServeConfig.from_args(args)
+
+    configure_logging(cfg.log_level, cfg.log_json)
+    # tracing only when asked (--trace-dir); the event log always runs —
+    # continuous-server lifecycle events route through the same Telemetry
+    telemetry = Telemetry(trace=cfg.trace_dir is not None)
+    ev = telemetry.log
+
+    mesh = make_serving_mesh(cfg.mesh)
+    tb = build_testbed(TestbedSpec(train_steps=cfg.train_steps))
+    prof = (LatencyProfile.load(cfg.profile) if cfg.profile
+            else LatencyProfile.synthetic())
+
+    ev.emit("serve_config", **{k: v for k, v in cfg.to_json().items()
+                               if v is not None})
+
+    if cfg.server == "frontend":
+        _serve_frontend(cfg, tb, prof, mesh, ev)
+        if cfg.trace_dir:
+            _write_artifacts(telemetry, cfg.trace_dir, ev)
+        return
+
+    engine = cfg.build_engine(tb, profile=prof, mesh=mesh)
+    extra = {"verify_path": engine.verify_path()}
+    if mesh is not None:
+        info = engine.mesh_info()
+        extra["mesh_placement"] = (f"{info['shape']} over "
+                                   f"{info['devices']} devices")
+    if cfg.quantize != "none":
+        extra["cache_bytes_per_slot"] = engine.cache_bytes_per_slot()["total"]
+    ev.emit("engine_built", **extra)
+
+    server = cfg.build_server(engine, telemetry=telemetry)
+    if cfg.server == "continuous" and cfg.adaptive:
+        ev.emit("adaptive_ladder",
+                ladder=",".join("x".join(map(str, b.key()))
+                                for b in cfg.ladder()))
+
+    for req in _requests(cfg, tb):
+        server.submit(req)
+
+    if (cfg.jax_profile > 0 and cfg.trace_dir
+            and cfg.server == "continuous"):
         import jax.profiler
         server.warmup()
-        jax_dir = os.path.join(args.trace_dir, "jax")
+        jax_dir = os.path.join(cfg.trace_dir, "jax")
         try:
             jax.profiler.start_trace(jax_dir)
-            server.run(max_steps=args.jax_profile)
+            server.serve(max_steps=cfg.jax_profile)
             jax.profiler.stop_trace()
             ev.emit("jax_profile_written", dir=jax_dir,
-                    megasteps=args.jax_profile)
+                    megasteps=cfg.jax_profile)
         except Exception as e:  # profiler backends vary; never kill serving
             ev.emit("jax_profile_failed", level=logging.WARNING, error=str(e))
-        done = server.run()
-    else:
-        done = server.run()
 
-    if args.server == "continuous":
-        for uid, req in sorted(done.items()):
+    if cfg.server == "continuous":
+        handles = server.serve()
+        for uid, h in sorted(handles.items()):
+            req = h.request
             ev.emit("request_done", uid=uid, tokens=len(req.result),
                     queue_ms=round(req.stats["queue_s"] * 1e3, 1),
                     latency_ms=round(req.stats["latency_s"] * 1e3, 1))
@@ -214,12 +189,13 @@ def main() -> None:
                 tpot_ms=round(m["tpot_ms"], 2), aal=round(m["aal"], 3),
                 occupancy=round(m["occupancy"], 3), refills=m["refills"],
                 recompiles_after_warmup=m["recompiles_after_warmup"])
-        if args.adaptive:
+        if cfg.adaptive:
             ev.emit("bucket_summary", switches=m["bucket_switches"],
                     **{f"bucket_{bk}": f"{bs['steps']} steps "
                        f"aal={bs['aal']:.2f} iter={bs['iter_ms']:.1f}ms"
                        for bk, bs in m["buckets"].items()})
     else:
+        done = server.run()
         tot_tok, tot_t = 0, 0.0
         for uid, req in sorted(done.items()):
             s = req.stats
@@ -230,8 +206,8 @@ def main() -> None:
         ev.emit("summary", completed=len(done),
                 tpot_ms=round(1e3 * tot_t / max(tot_tok, 1), 2))
 
-    if args.trace_dir:
-        _write_artifacts(telemetry, args.trace_dir, ev)
+    if cfg.trace_dir:
+        _write_artifacts(telemetry, cfg.trace_dir, ev)
 
 
 if __name__ == "__main__":

@@ -1,4 +1,48 @@
+"""Public serving API.
+
+The stable surface of ``repro.serving`` is exactly ``__all__`` below —
+``tests/test_public_api.py`` pins it. Three layers, composable top-down:
+
+* **engines in a loop** — :class:`BatchedServer` (padded run-to-completion)
+  and :class:`ContinuousServer` (slot pool, mid-flight refill, optional
+  :class:`BucketController` adaptivity). ``submit()`` returns a
+  :class:`RequestHandle`; ``serve()`` drains the pool. ``run()`` survives
+  only as a deprecated ``Dict[int, Request]`` shim.
+* **the async front-end** — :class:`ServingFrontend` multiplexes N
+  continuous replicas behind a session-affine SLO-aware :class:`Router`
+  with :class:`AdmissionConfig`-controlled admission; emulated-clock runs
+  go through :func:`drive_frontend_trace`.
+* **configuration** — :class:`ServeConfig` is the one CLI/JSON-
+  round-trippable config the launcher and the benchmarks both build from.
+
+Anything not exported here (``repro.serving.emulation`` internals, the
+``_``-prefixed server machinery) may change without notice.
+"""
+from repro.serving.config import ServeConfig
 from repro.serving.continuous import ContinuousServer, ServingMetrics
 from repro.serving.controller import BucketController
+from repro.serving.frontend import (AdmissionConfig, FrontendMetrics,
+                                    ServingFrontend, drive_frontend_trace)
+from repro.serving.handle import RequestHandle
+from repro.serving.router import Replica, Router, RouterMetrics
 from repro.serving.sampling import mask_padded_vocab, sample
 from repro.serving.server import BatchedServer, Request
+
+__all__ = [
+    "AdmissionConfig",
+    "BatchedServer",
+    "BucketController",
+    "ContinuousServer",
+    "FrontendMetrics",
+    "Replica",
+    "Request",
+    "RequestHandle",
+    "Router",
+    "RouterMetrics",
+    "ServeConfig",
+    "ServingFrontend",
+    "ServingMetrics",
+    "drive_frontend_trace",
+    "mask_padded_vocab",
+    "sample",
+]

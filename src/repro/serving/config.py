@@ -1,0 +1,233 @@
+"""One serving configuration surface: ``ServeConfig``.
+
+Six PRs of organic growth left ``launch/serve.py`` with a dozen accreted
+flags and the benchmarks quietly rebuilding similar-but-not-identical
+engines by hand. ``ServeConfig`` collapses that: ONE dataclass that
+
+* round-trips to/from argv (``add_args``/``parse``/``to_argv``) — the CLI
+  is generated from the dataclass, so a new knob is one field, and a
+  config can be re-serialized into the exact command line reproducing it;
+* round-trips to/from JSON (``to_json``/``from_json``) — benchmark
+  artifacts can embed the config that produced them;
+* builds the actual objects (``build_engine``/``build_server``/
+  ``build_frontend``) — the CLI and ``benchmarks/fig_serving.py`` call the
+  same constructors, so the bench can no longer drift from what the
+  launcher serves.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+from dataclasses import dataclass
+from typing import Dict, List, Optional
+
+# option vocabularies shared by the CLI and validation
+CHOICES: Dict[str, tuple] = {
+    "server": ("batched", "continuous", "frontend"),
+    "plan": ("fused", "staged", "staged_device"),
+    "quantize": ("none", "int8-kv", "int8-kv+w8"),
+    "verify_kernel": ("auto", "fused", "xla"),
+    "overload": ("park", "shed"),
+}
+
+_HELP: Dict[str, str] = {
+    "server": "batched (padded run-to-completion), continuous (slot pool), "
+              "or frontend (async multi-replica router over N continuous "
+              "engines)",
+    "adaptive": "continuous mode: precompile a bucket ladder and let the "
+                "online controller re-pick the bucket each megastep",
+    "buckets": "adaptive bucket ladder, comma-separated DxW or DxWxV",
+    "hysteresis": "relative score margin before an adaptive bucket switch",
+    "profile": "LatencyProfile JSON path (default: synthetic)",
+    "train_steps": "testbed training steps (checkpoint-cached per value)",
+    "mesh": "device mesh: DxM (data x model) or 'host'; default unsharded",
+    "quantize": "int8-kv: int8 KV caches; +w8 adds int8 weight-only params",
+    "verify_kernel": "verify attention hot path: fused Pallas | xla | auto",
+    "replicas": "frontend mode: number of engine replicas behind the router",
+    "slo_s": "frontend mode: per-request deadline in seconds after submit "
+             "(0 = no SLO)",
+    "max_queue": "frontend mode: admission bound on the front queue",
+    "overload": "frontend mode: park (hold under backpressure) or shed "
+                "requests past the admission bound",
+    "affinity": "frontend mode: pin sessions to replicas",
+    "depth": "pinned speculation depth (continuous mode)",
+    "width": "pinned speculation width (continuous mode)",
+    "prompt_pad": "static prompt slot width (tokens)",
+    "log_json": "emit the event log as JSON lines instead of key=value",
+    "trace_dir": "enable full telemetry; write trace.json/metrics.* here",
+    "jax_profile": "with --trace-dir: jax.profiler trace around N megasteps",
+}
+
+
+@dataclass
+class ServeConfig:
+    """Everything the serving stack needs, CLI- and JSON-round-trippable."""
+    server: str = "batched"
+    requests: int = 8
+    batch: int = 4
+    max_new: int = 48
+    temperature: float = 0.0
+    plan: str = "fused"
+    depth: int = 4
+    width: int = 2
+    adaptive: bool = False
+    buckets: str = "2x2x4,4x2x7,8x2x13"
+    hysteresis: float = 0.1
+    profile: Optional[str] = None
+    train_steps: int = 240
+    mesh: Optional[str] = None
+    quantize: str = "none"
+    verify_kernel: str = "auto"
+    prompt_pad: int = 24
+    # frontend (async multi-replica) mode
+    replicas: int = 2
+    slo_s: float = 0.0
+    max_queue: int = 64
+    overload: str = "park"
+    affinity: bool = True
+    # observability
+    log_level: str = "INFO"
+    log_json: bool = False
+    trace_dir: Optional[str] = None
+    jax_profile: int = 0
+
+    def __post_init__(self):
+        for name, opts in CHOICES.items():
+            if getattr(self, name) not in opts:
+                raise ValueError(f"{name}={getattr(self, name)!r} not in "
+                                 f"{opts}")
+
+    # ------------------------------------------------------ argv round-trip --
+    @classmethod
+    def add_args(cls, ap: argparse.ArgumentParser) -> None:
+        """Generate the CLI from the dataclass — one flag per field."""
+        for f in dataclasses.fields(cls):
+            flag = "--" + f.name.replace("_", "-")
+            help_ = _HELP.get(f.name, f.name.replace("_", " "))
+            if isinstance(f.default, bool):
+                if f.default:      # True-default bools get a --no- switch
+                    ap.add_argument("--no-" + f.name.replace("_", "-"),
+                                    dest=f.name, action="store_false",
+                                    help=f"disable: {help_}")
+                else:
+                    ap.add_argument(flag, action="store_true", help=help_)
+            else:
+                typ = str if f.default is None else type(f.default)
+                ap.add_argument(flag, type=typ, default=f.default,
+                                choices=CHOICES.get(f.name), help=help_)
+
+    @classmethod
+    def from_args(cls, ns: argparse.Namespace) -> "ServeConfig":
+        return cls(**{f.name: getattr(ns, f.name)
+                      for f in dataclasses.fields(cls)})
+
+    @classmethod
+    def parse(cls, argv: Optional[List[str]] = None) -> "ServeConfig":
+        ap = argparse.ArgumentParser()
+        cls.add_args(ap)
+        return cls.from_args(ap.parse_args(argv))
+
+    def to_argv(self) -> List[str]:
+        """The minimal argv reproducing this config (non-default fields
+        only). ``ServeConfig.parse(cfg.to_argv()) == cfg`` always holds —
+        asserted in tests/test_public_api.py."""
+        ref = type(self)()
+        out: List[str] = []
+        for f in dataclasses.fields(self):
+            v, d = getattr(self, f.name), getattr(ref, f.name)
+            if v == d:
+                continue
+            name = f.name.replace("_", "-")
+            if isinstance(d, bool):
+                out.append(("--" + name) if v else ("--no-" + name))
+            else:
+                out += ["--" + name, str(v)]
+        return out
+
+    # ------------------------------------------------------ json round-trip --
+    def to_json(self) -> Dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_json(cls, blob: Dict) -> "ServeConfig":
+        names = {f.name for f in dataclasses.fields(cls)}
+        unknown = set(blob) - names
+        if unknown:
+            raise ValueError(f"unknown ServeConfig fields: {sorted(unknown)}")
+        return cls(**blob)
+
+    # ----------------------------------------------------------- builders --
+    def ladder(self):
+        from repro.core.buckets import parse_buckets
+        return parse_buckets(self.buckets)
+
+    def pinned_spec(self):
+        from repro.core.egt import egt_spec
+        spec = egt_spec(self.depth, self.width)
+        return spec, max(2, (3 * spec.num_nodes) // 4)
+
+    def build_engine(self, tb, profile=None, mesh=None):
+        """The one engine constructor the CLI and the benches share."""
+        from repro.core.buckets import buckets_for_depths
+        from repro.core.engine import EngineConfig, SpeculativeEngine
+        from repro.quant import QuantConfig
+        if self.server == "batched":
+            depths: tuple = (2, 4, 8)          # dynamic per-batch selection
+        elif self.adaptive:
+            depths = tuple(sorted({b.depth for b in self.ladder()}))
+        else:
+            depths = (self.depth,)
+        return SpeculativeEngine(
+            tb.drafter, tb.d_params, tb.verifier, tb.v_params,
+            profile=profile,
+            buckets=buckets_for_depths(depths, width=self.width,
+                                       verify_frac=0.75),
+            depth_options=depths,
+            config=EngineConfig(temperature=self.temperature, plan=self.plan,
+                                quant=QuantConfig.parse(self.quantize),
+                                verify_kernel=self.verify_kernel),
+            mesh=mesh)
+
+    def build_server(self, engine, telemetry=None):
+        """A single server of the configured kind over ``engine``."""
+        from repro.serving.continuous import ContinuousServer
+        from repro.serving.controller import BucketController
+        from repro.serving.server import BatchedServer
+        if self.server == "batched":
+            return BatchedServer(engine, batch_size=self.batch,
+                                 prompt_pad=self.prompt_pad)
+        if self.adaptive:
+            ladder = self.ladder()
+            return ContinuousServer(
+                engine, batch_size=self.batch, prompt_pad=self.prompt_pad,
+                buckets=ladder,
+                controller=BucketController(ladder, profile=engine.profile,
+                                            hysteresis=self.hysteresis),
+                telemetry=telemetry)
+        spec, verify_v = self.pinned_spec()
+        return ContinuousServer(engine, batch_size=self.batch,
+                                prompt_pad=self.prompt_pad, spec=spec,
+                                verify_v=verify_v, telemetry=telemetry)
+
+    def build_frontend(self, tb, profile=None, mesh=None):
+        """The async multi-replica topology: ``replicas`` pinned continuous
+        engines behind a session-affine SLO-aware router."""
+        from repro.serving.frontend import AdmissionConfig, ServingFrontend
+        if self.server != "frontend":
+            raise ValueError("build_frontend needs server='frontend'")
+        spec, verify_v = self.pinned_spec()
+        from repro.serving.continuous import ContinuousServer
+        servers = [
+            ContinuousServer(self.build_engine(tb, profile=profile,
+                                               mesh=mesh),
+                             batch_size=self.batch,
+                             prompt_pad=self.prompt_pad, spec=spec,
+                             verify_v=verify_v)
+            for _ in range(self.replicas)]
+        admission = AdmissionConfig(max_pending=self.max_queue,
+                                    on_overload=self.overload,
+                                    slo_s=self.slo_s)
+        from repro.serving.router import Router
+        router = Router(servers, profile=profile, affinity=self.affinity)
+        return ServingFrontend(servers, profile=profile,
+                               admission=admission, router=router)

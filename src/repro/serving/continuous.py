@@ -32,6 +32,7 @@ they could overflow the cache.
 """
 from __future__ import annotations
 
+import warnings
 from collections import deque
 from dataclasses import dataclass, field
 from typing import Callable, Deque, Dict, List, Optional, Sequence, Tuple
@@ -42,6 +43,7 @@ from repro.core.buckets import Bucket, ladder_headroom, validate_ladder
 from repro.core.egt import DraftSpec, egt_spec
 from repro.core.engine import DecodeState, SpeculativeEngine
 from repro.serving.controller import BucketController
+from repro.serving.handle import RequestHandle
 from repro.serving.server import Request, cut_at_eos, pad_prompt
 from repro.telemetry import (BoundedSeries, Clock, EmulatedClock, Histogram,
                              Registry, RunningMean, Telemetry, WallClock,
@@ -232,6 +234,7 @@ class ContinuousServer:
             self.verify_v = verify_v or self.spec.num_nodes
         self.queue: Deque[Request] = deque()
         self.done: Dict[int, Request] = {}
+        self.handles: Dict[int, RequestHandle] = {}
         self.metrics = ServingMetrics()
         self.metrics.mesh_devices = engine.mesh_info()["devices"]
         # getattr-guarded: the host-side scheduler tests drive a fake engine
@@ -307,11 +310,36 @@ class ContinuousServer:
         if self.controller is not None:
             self.controller.observe_iter(key, iter_time)
 
-    def submit(self, req: Request):
+    def submit(self, req: Request,
+               handle: Optional[RequestHandle] = None) -> RequestHandle:
+        """Queue a request and return its :class:`RequestHandle` — the
+        redesigned lifecycle API (``done()``/``result()``/``tokens``/token
+        streaming). ``handle`` lets a front-end that created the handle at
+        admission time (before routing picked this server) reuse it."""
         req.t_submit = req.t_submit or self.clock.now()
+        h = handle if handle is not None else RequestHandle(req)
+        h._pump = self._pump_once
+        self.handles[req.uid] = h
+        user_stream = req.stream
+
+        def _chain(uid, toks, _h=h, _user=user_stream):
+            _h._on_tokens(toks)
+            if _user is not None:
+                _user(uid, toks)
+
+        req.stream = _chain
         if self._tr is not None:
             self._tr.begin("queued", track=f"req:{req.uid}", uid=req.uid)
         self.queue.append(req)
+        return h
+
+    def _pump_once(self) -> None:
+        """One unit of forward progress for handle-driven consumption
+        (``RequestHandle.result()`` / sync iteration): warm up on first use,
+        then run one scheduler step."""
+        if self._compile_base is None:
+            self.warmup()
+        self.step()
 
     def warmup(self):
         """Compile the steady-state executables (slot prefill, slot reset,
@@ -528,8 +556,12 @@ class ContinuousServer:
                     self.engine._compile_count - self._compile_base)
         return self._just_finished
 
-    def run(self, max_steps: Optional[int] = None) -> Dict[int, Request]:
-        """Serve until the queue drains and every slot retires."""
+    def serve(self, max_steps: Optional[int] = None
+              ) -> Dict[int, RequestHandle]:
+        """Serve until the queue drains and every slot retires; returns the
+        completed :class:`RequestHandle` objects keyed by uid. This is the
+        canonical drain loop — ``run()`` is its deprecated dict-returning
+        compatibility wrapper."""
         if self._compile_base is None:
             self.warmup()
         steps = 0
@@ -538,4 +570,18 @@ class ContinuousServer:
             steps += 1
             if max_steps is not None and steps >= max_steps:
                 break
+        return {u: h for u, h in self.handles.items() if h.done()}
+
+    def run(self, max_steps: Optional[int] = None) -> Dict[int, Request]:
+        """Deprecated: serve until drained and return mutated ``Request``s.
+
+        The redesigned lifecycle API is ``submit() -> RequestHandle`` plus
+        ``serve()``; this wrapper keeps the historical ``Dict[int, Request]``
+        contract for existing callers."""
+        warnings.warn(
+            "ContinuousServer.run() is deprecated: submit() now returns a "
+            "RequestHandle and serve() drains the pool returning handles; "
+            "the Dict[int, Request] return survives only as a compatibility "
+            "shim", DeprecationWarning, stacklevel=2)
+        self.serve(max_steps=max_steps)
         return self.done

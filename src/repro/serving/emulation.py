@@ -37,14 +37,16 @@ from repro.serving.continuous import ContinuousServer
 from repro.telemetry import EmulatedClock
 
 
-def charged_step(server: ContinuousServer, profile: LatencyProfile
-                 ) -> Tuple[float, List]:
+def charged_step(server: ContinuousServer, profile: LatencyProfile,
+                 advance_clock: bool = True) -> Tuple[float, List]:
     """Run one ``server.step()`` and return (emulated cost, finished
     requests): admissions this call are charged a prefill-width verifier
     call each; a decode step is charged the profile latency of the bucket
     it ran at the occupancy it ran at. On a deferred-timing server the
     charges are also fed back into its metrics/controller, and its
-    EmulatedClock is advanced by the total."""
+    EmulatedClock is advanced by the total — unless ``advance_clock`` is
+    False, which a multi-replica driver uses to advance ONE shared clock
+    by the max (not the sum) of concurrent replica step costs."""
     adm0, steps0 = server.metrics.admissions, server.metrics.steps
     finished = server.step()
     n_adm = server.metrics.admissions - adm0
@@ -61,7 +63,7 @@ def charged_step(server: ContinuousServer, profile: LatencyProfile
         cost += step_cost
         if server._defer_timing:
             server.charge_step(step_cost)
-    if isinstance(server.clock, EmulatedClock):
+    if advance_clock and isinstance(server.clock, EmulatedClock):
         server.clock.advance(cost)
     return cost, finished
 

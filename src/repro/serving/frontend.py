@@ -1,0 +1,370 @@
+"""Async serving front-end: admission, priorities, deadlines, backpressure.
+
+``ContinuousServer`` is an engine loop driven by a synchronous caller. The
+:class:`ServingFrontend` is the production topology above it — an asyncio
+event-loop orchestrator that multiplexes request submission over N engine
+replicas (routed by :class:`~repro.serving.router.Router`), streams tokens
+back through async iterators, and owns the request-level scheduling the
+paper's latency-optimal megastep cannot see:
+
+* **admission control** — a bounded priority queue in front of the
+  replica pool; requests are released into a replica only when the pool
+  has capacity, ordered by (priority, deadline, arrival);
+* **backpressure** — load beyond the bound is *parked* (held, served
+  when capacity frees) or *shed* (rejected with a terminal handle),
+  and a request whose deadline is provably unmeetable at the modeled
+  time-to-slot (``objective.step_latency`` priced, via
+  ``Router.est_wait``) can be shed at admission instead of burning slots
+  on tokens that will miss their SLO;
+* **replica stepping** — each replica's blocking ``step()`` runs in an
+  executor lane while the event loop keeps accepting submissions; on the
+  emulated testbed the same code path is driven deterministically
+  (sequential executor awaits, one shared ``EmulatedClock`` advanced by
+  the max of concurrent replica step costs), so two identical drives are
+  byte-identical.
+
+The service-level number this layer optimizes is **goodput under SLO** —
+the fraction of tokens delivered within their request's deadline (tokens
+a shed request never got count against it) — not raw throughput: a
+saturated pool generating late tokens is wasted work.
+"""
+from __future__ import annotations
+
+import asyncio
+import functools
+import hashlib
+import heapq
+import json
+from concurrent.futures import ThreadPoolExecutor
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.objective import LatencyProfile
+from repro.serving.continuous import ContinuousServer
+from repro.serving.emulation import charged_step
+from repro.serving.handle import RequestHandle
+from repro.serving.router import RETIRED, Replica, Router
+from repro.serving.server import Request
+from repro.telemetry import Clock, EmulatedClock, WallClock
+
+
+@dataclass
+class AdmissionConfig:
+    """Admission-control knobs for the front-end."""
+    max_pending: int = 64          # front-queue bound before overload policy
+    on_overload: str = "park"      # "park" (hold + backpressure) | "shed"
+    shed_infeasible: bool = False  # shed when the deadline cannot be met
+    queue_allowance: int = 0       # per-replica queued requests beyond free
+    #                                slots before the pool counts as full
+    slo_s: float = 0.0             # default deadline (s after submit); 0=none
+
+
+@dataclass
+class FrontendMetrics:
+    """Request- and token-level service counters (SLO accounting)."""
+    submitted: int = 0
+    dispatched: int = 0
+    completed: int = 0
+    parks: int = 0                # submissions that had to wait in the front
+    sheds: int = 0
+    shed_overload: int = 0
+    shed_infeasible: int = 0
+    deadline_misses: int = 0      # completed, but last token was late
+    tokens_delivered: int = 0
+    tokens_in_slo: int = 0
+    tokens_late: int = 0
+    tokens_lost: int = 0          # requested tokens of shed requests
+    latencies: List[float] = field(default_factory=list)
+
+    @property
+    def goodput_under_slo(self) -> float:
+        """In-SLO tokens over every token the trace asked for — delivered
+        (on time or late) plus the ones shed requests never got."""
+        denom = self.tokens_delivered + self.tokens_lost
+        return self.tokens_in_slo / max(1, denom)
+
+    def summary(self) -> Dict:
+        lat = np.asarray(self.latencies) if self.latencies else np.zeros(1)
+        return {"submitted": self.submitted, "dispatched": self.dispatched,
+                "completed": self.completed, "parks": self.parks,
+                "sheds": self.sheds, "shed_overload": self.shed_overload,
+                "shed_infeasible": self.shed_infeasible,
+                "deadline_misses": self.deadline_misses,
+                "tokens_delivered": self.tokens_delivered,
+                "tokens_in_slo": self.tokens_in_slo,
+                "tokens_late": self.tokens_late,
+                "tokens_lost": self.tokens_lost,
+                "goodput_under_slo": self.goodput_under_slo,
+                "latency_p50_s": float(np.percentile(lat, 50)),
+                "latency_p95_s": float(np.percentile(lat, 95))}
+
+
+class _Live:
+    """Front-end-side delivery cursor for one in-flight handle."""
+
+    __slots__ = ("handle", "chunks_seen", "deadline", "finished")
+
+    def __init__(self, handle: RequestHandle):
+        self.handle = handle
+        self.chunks_seen = 0
+        self.deadline = handle.deadline
+        self.finished = False
+
+
+class ServingFrontend:
+    """Asyncio front-end multiplexing requests over N engine replicas."""
+
+    def __init__(self, servers: Sequence[ContinuousServer],
+                 profile: Optional[LatencyProfile] = None,
+                 admission: Optional[AdmissionConfig] = None,
+                 router: Optional[Router] = None,
+                 clock: Optional[Clock] = None):
+        self.router = router if router is not None else Router(
+            servers, profile=profile)
+        self.profile = profile
+        self.admission = admission or AdmissionConfig()
+        self.clock: Clock = clock or WallClock()
+        self.metrics = FrontendMetrics()
+        # front queue: (-priority, deadline-or-inf, seq) -> handle
+        self._pending: List[Tuple[float, float, int, RequestHandle]] = []
+        self._seq = 0
+        self._live: Dict[int, _Live] = {}
+        self._all: Dict[int, RequestHandle] = {}   # every handle ever issued
+
+    # ---------------------------------------------------------- admission --
+    def submit(self, req: Request, session: Optional[str] = None,
+               priority: int = 0,
+               deadline_s: Optional[float] = None) -> RequestHandle:
+        """Admit one request. Returns a handle immediately — possibly
+        already terminal (``handle.shed``) if admission control rejected
+        it. Higher ``priority`` dispatches first; ``deadline_s`` is seconds
+        from now (defaults to the admission config's SLO, 0 = none)."""
+        now = self.clock.now()
+        req.t_submit = req.t_submit or now
+        handle = RequestHandle(req)
+        handle.session = session
+        handle.priority = priority
+        slo = deadline_s if deadline_s is not None else (
+            self.admission.slo_s or None)
+        handle.deadline = (now + slo) if slo else None
+        handle._aqueue = asyncio.Queue()
+        self._all[req.uid] = handle
+        self.metrics.submitted += 1
+
+        if len(self._pending) >= self.admission.max_pending:
+            if self.admission.on_overload == "shed":
+                self._shed(handle, "overload")
+                self.metrics.shed_overload += 1
+                return handle
+            self.metrics.parks += 1     # park: hold it, count backpressure
+        heapq.heappush(self._pending,
+                       (-float(priority),
+                        handle.deadline if handle.deadline is not None
+                        else float("inf"),
+                        self._seq, handle))
+        self._seq += 1
+        self._dispatch()
+        return handle
+
+    def _shed(self, handle: RequestHandle, reason: str) -> None:
+        handle._mark_shed(reason)
+        self.metrics.sheds += 1
+        self.metrics.tokens_lost += int(handle.request.max_new)
+        if handle._aqueue is not None:
+            handle._aqueue.put_nowait(None)
+
+    def _has_capacity(self) -> bool:
+        allow = self.admission.queue_allowance
+        return any(r.free_slots() + allow - r.queued() > 0
+                   for r in self.router.active())
+
+    def _dispatch(self) -> int:
+        """Release front-queued requests into replicas while the pool has
+        capacity; shed provably-infeasible deadlines when configured.
+        Returns how many requests were dispatched."""
+        n = 0
+        while self._pending and self.router.active():
+            if not self._has_capacity():
+                break
+            _, _, _, handle = heapq.heappop(self._pending)
+            if handle.shed:      # shed while parked (overload race) — skip
+                continue
+            if (handle.deadline is not None
+                    and self.admission.shed_infeasible):
+                best = min(self.router.est_wait(r)
+                           for r in self.router.active())
+                if self.clock.now() + best > handle.deadline:
+                    self._shed(handle, "deadline-infeasible")
+                    self.metrics.shed_infeasible += 1
+                    continue
+            rep, _ = self.router.submit(handle.request, handle=handle,
+                                        session=handle.session)
+            tr = rep.server._tr
+            if tr is not None:   # span edge: this request -> its replica
+                tr.instant(f"routed→replica:{rep.idx}",
+                           track=f"req:{handle.uid}", replica=rep.idx)
+            self._live[handle.uid] = _Live(handle)
+            self.metrics.dispatched += 1
+            n += 1
+        return n
+
+    # ----------------------------------------------------------- delivery --
+    def _drain_handles(self, rep: Replica) -> None:
+        """Move newly committed chunks from this replica's handles to their
+        async consumers and do the SLO token accounting. Delivery time is
+        the front-end clock NOW — after the step (and, emulated, its
+        charged cost), which is when a real client would see the bytes."""
+        t = self.clock.now()
+        for uid in list(rep.server.handles):
+            live = self._live.get(uid)
+            if live is None or live.finished:
+                continue
+            h = live.handle
+            while live.chunks_seen < len(h._chunks):
+                chunk = h._chunks[live.chunks_seen]
+                live.chunks_seen += 1
+                k = len(chunk)
+                self.metrics.tokens_delivered += k
+                if live.deadline is None or t <= live.deadline:
+                    self.metrics.tokens_in_slo += k
+                else:
+                    self.metrics.tokens_late += k
+                if h._aqueue is not None:
+                    h._aqueue.put_nowait(chunk)
+            if h.done():
+                live.finished = True
+                self.metrics.completed += 1
+                self.metrics.latencies.append(t - h.request.t_submit)
+                if live.deadline is not None and t > live.deadline:
+                    self.metrics.deadline_misses += 1
+                if h._aqueue is not None:
+                    h._aqueue.put_nowait(None)
+
+    def _drained(self) -> bool:
+        return (not self._pending
+                and not any(r.has_work() for r in self.router.live()))
+
+    # ---------------------------------------------------- wall-clock mode --
+    async def run_until_drained(self, poll_s: float = 0.001) -> Dict:
+        """Serve until every submitted request completes (live wall-clock
+        mode): one executor lane per replica runs the blocking ``step()``
+        off the event loop while submissions keep landing."""
+        loop = asyncio.get_running_loop()
+        pool = ThreadPoolExecutor(
+            max_workers=max(1, len(self.router.replicas)),
+            thread_name_prefix="replica-step")
+        try:
+            for rep in self.router.replicas:   # compile before serving
+                if rep.server._compile_base is None:
+                    await loop.run_in_executor(pool, rep.server.warmup)
+
+            async def lane(rep: Replica):
+                while True:
+                    self._dispatch()
+                    if rep.state != RETIRED and rep.has_work():
+                        await loop.run_in_executor(pool, rep.server.step)
+                        self._drain_handles(rep)
+                        self.router.reap()
+                    elif self._drained():
+                        return
+                    else:
+                        await asyncio.sleep(poll_s)
+
+            await asyncio.gather(*(lane(r) for r in self.router.replicas))
+        finally:
+            pool.shutdown(wait=True)
+        return self.summary()
+
+    # ------------------------------------------------------ emulated mode --
+    async def serve_trace(self, trace, profile: LatencyProfile,
+                          events: Sequence[Tuple[float, str, int]] = ()
+                          ) -> Dict:
+        """Deterministic emulated drive: replay ``trace`` (arrival-sorted
+        ``(t, Request)`` or ``(t, Request, extras)`` rows, extras =
+        ``{"deadline_s", "session", "priority"}``) against the replica
+        pool on ONE shared ``EmulatedClock``. Per round every replica with
+        work runs one profile-charged step in the executor lane; the clock
+        advances by the MAX of the concurrent step costs (replicas run in
+        parallel in the topology this emulates). ``events`` injects
+        ``(t, "drain"|"scale_down"|"scale_up", replica_idx)`` lifecycle
+        transitions at emulated times."""
+        clock = (self.clock if isinstance(self.clock, EmulatedClock)
+                 else EmulatedClock())
+        self.clock = clock
+        for rep in self.router.replicas:
+            rep.server.set_clock(clock)
+            rep.server.warmup()            # uncharged, off the traced path
+        loop = asyncio.get_running_loop()
+        arrivals = [(row[0], row[1], row[2] if len(row) > 2 else {})
+                    for row in trace]
+        arrivals.sort(key=lambda r: r[0])
+        todo = sorted(events, key=lambda e: e[0])
+        busy = {rep.idx: 0.0 for rep in self.router.replicas}
+
+        while (arrivals or todo or self._pending
+               or any(r.has_work() for r in self.router.live())):
+            now = clock.now()
+            while todo and todo[0][0] <= now:
+                _, kind, idx = todo.pop(0)
+                getattr(self.router, kind)(idx)
+            while arrivals and arrivals[0][0] <= now:
+                _, req, extra = arrivals.pop(0)
+                self.submit(req, session=extra.get("session"),
+                            priority=extra.get("priority", 0),
+                            deadline_s=extra.get("deadline_s"))
+            self._dispatch()
+            workers = [r for r in self.router.replicas
+                       if r.state != RETIRED and r.has_work()]
+            if not workers:
+                horizon = [t for t, *_ in arrivals[:1]] + \
+                          [t for t, *_ in todo[:1]]
+                if not horizon:
+                    break
+                clock.advance_to(min(horizon))
+                continue
+            costs = []
+            for rep in workers:      # sequential awaits: deterministic
+                cost, _ = await loop.run_in_executor(
+                    None, functools.partial(charged_step, rep.server,
+                                            profile, advance_clock=False))
+                busy[rep.idx] += cost
+                costs.append(cost)
+            clock.advance(max(costs))
+            for rep in workers:
+                self._drain_handles(rep)
+            self.router.reap()
+        out = self.summary()
+        out["makespan_s"] = clock.now()
+        out["busy_s"] = {str(k): v for k, v in busy.items()}
+        out["throughput_tok_s"] = (self.metrics.tokens_delivered
+                                   / max(out["makespan_s"], 1e-9))
+        return out
+
+    # ------------------------------------------------------------ results --
+    def handles(self) -> Dict[int, RequestHandle]:
+        return dict(self._all)
+
+    def results_digest(self) -> str:
+        """SHA-1 over every request's uid -> emitted tokens (shed included,
+        empty) — the byte-determinism witness two identical emulated drives
+        must agree on."""
+        blob = {str(u): h.tokens for u, h in self._all.items()}
+        return hashlib.sha1(
+            json.dumps(blob, sort_keys=True).encode()).hexdigest()
+
+    def summary(self) -> Dict:
+        return {**self.metrics.summary(),
+                "goodput_under_slo": self.metrics.goodput_under_slo,
+                "router": self.router.summary(),
+                "results_digest": self.results_digest()}
+
+
+def drive_frontend_trace(frontend: ServingFrontend, trace,
+                         profile: LatencyProfile,
+                         events: Sequence[Tuple[float, str, int]] = ()
+                         ) -> Dict:
+    """Sync entry point for benchmarks/tests: run the front-end's emulated
+    drive to completion on a private event loop."""
+    return asyncio.run(frontend.serve_trace(trace, profile, events=events))

@@ -1,0 +1,131 @@
+"""Request lifecycle handle — the redesigned submission API.
+
+``ContinuousServer.submit()`` (and ``ServingFrontend.submit()``) return a
+:class:`RequestHandle` instead of asking the caller to hold onto a mutable
+``Request`` and poll ``server.done``. The handle is the one object a client
+needs: completion (`done()`), the final sequence (`result()`), everything
+streamed so far (`tokens`), and token streaming — a sync iterator that
+drives the owning server forward on demand, and an async iterator fed by
+the serving front-end's event loop.
+
+The handle never copies token flow out of band: the server's ``_credit``
+path streams chunks into the handle (chained with any user ``stream``
+callback), so sync and async consumers observe the exact committed tokens
+in commit order.
+"""
+from __future__ import annotations
+
+from typing import Callable, Iterator, List, Optional
+
+import numpy as np
+
+
+class RequestHandle:
+    """Lifecycle view of one submitted request.
+
+    * ``done()``    — has the request retired (or been shed)?
+    * ``result()``  — final token array; on a sync server this PUMPS the
+      server (``step()`` under the hood) until the request retires.
+    * ``tokens``    — all tokens streamed so far, as a list of ints.
+    * ``iter(handle)``  — sync streaming: yields tokens as they commit,
+      pumping the server between chunks.
+    * ``async for``     — async streaming under a ``ServingFrontend``; the
+      front-end feeds the handle's queue from its event loop.
+    """
+
+    def __init__(self, request, pump: Optional[Callable[[], None]] = None):
+        self.request = request
+        self._pump = pump
+        self._chunks: List[np.ndarray] = []
+        self._shed = False
+        self.shed_reason: Optional[str] = None
+        # front-end attachments (set by ServingFrontend when routed)
+        self.replica: Optional[int] = None
+        self.session: Optional[str] = None
+        self.priority: int = 0
+        self.deadline: Optional[float] = None
+        self._aqueue = None  # asyncio.Queue, attached by the front-end
+
+    # ------------------------------------------------------------- state --
+    @property
+    def uid(self) -> int:
+        return self.request.uid
+
+    def done(self) -> bool:
+        """True once the request retired (EOS / budget) or was shed."""
+        return self._shed or self.request.result is not None
+
+    @property
+    def shed(self) -> bool:
+        """True if admission control rejected the request before decode."""
+        return self._shed
+
+    @property
+    def tokens(self) -> List[int]:
+        """Every token streamed so far (commit order)."""
+        return [int(t) for c in self._chunks for t in c]
+
+    # ------------------------------------------------------------ results --
+    def result(self) -> np.ndarray:
+        """The final emitted sequence. If the request is still in flight and
+        the handle is bound to a sync server, steps that server until the
+        request retires; under a front-end (no pump), raises instead — await
+        the async iterator or poll ``done()`` there."""
+        while not self.done():
+            if self._pump is None:
+                raise RuntimeError(
+                    "request is still in flight and this handle has no "
+                    "server to pump — consume it via the front-end instead")
+            self._pump()
+        return self.request.result
+
+    # ---------------------------------------------------------- streaming --
+    def __iter__(self) -> Iterator[int]:
+        """Sync streaming: yield committed tokens, pumping the server
+        whenever the buffer runs dry and the request is still in flight."""
+        sent = 0
+        while True:
+            toks = self.tokens
+            while sent < len(toks):
+                yield toks[sent]
+                sent += 1
+            if self.done():
+                return
+            if self._pump is None:
+                raise RuntimeError(
+                    "sync iteration needs a server-bound handle — under a "
+                    "front-end, use `async for` instead")
+            self._pump()
+
+    def __aiter__(self):
+        if self._aqueue is None:
+            raise RuntimeError(
+                "async streaming requires a ServingFrontend-managed handle")
+        return self._astream()
+
+    async def _astream(self):
+        while True:
+            chunk = await self._aqueue.get()
+            if chunk is None:     # completion sentinel from the front-end
+                return
+            for t in chunk:
+                yield int(t)
+
+    # -------------------------------------------- server/front-end hooks --
+    def _on_tokens(self, toks: np.ndarray) -> None:
+        """Called from the owning server's commit path with each chunk."""
+        if len(toks):
+            self._chunks.append(np.asarray(toks, np.int64))
+
+    def _mark_shed(self, reason: str) -> None:
+        """Admission control rejected this request: terminal, empty result."""
+        self._shed = True
+        self.shed_reason = reason
+        self.request.result = np.zeros(0, np.int64)
+        self.request.stats = {"tokens": 0, "shed": True, "reason": reason}
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging nicety
+        state = ("shed" if self._shed else
+                 "done" if self.done() else "in-flight")
+        return (f"RequestHandle(uid={self.uid}, {state}, "
+                f"tokens={sum(len(c) for c in self._chunks)})")

@@ -1,0 +1,237 @@
+"""SLO-aware request routing over a pool of engine replicas.
+
+One :class:`ContinuousServer` is one engine replica: a slot pool over one
+compiled megastep family (possibly mesh-sharded). The :class:`Router` is
+the layer that turns N of them into a service — it decides, per request,
+WHICH replica admits it, and it owns the replica lifecycle (drain /
+scale-down / scale-up) the front-end emulates on the testbed clock.
+
+Placement policy, in priority order:
+
+1. **Session affinity** — requests carrying a session id stay pinned to
+   the replica that served the session before (KV-prefix locality: at
+   millions-of-users scale, re-routing a session re-prefills its whole
+   context on a cold replica). A pin to a draining or retired replica is
+   re-pinned to the best live replica and counted (``repins``).
+2. **SLO-aware least-cost** — among active replicas, pick the one whose
+   *modeled* time-to-slot is smallest: queued work ahead of the request,
+   priced by ``objective.step_latency`` at the replica's bucket and
+   projected occupancy (so a replica past its saturation knee looks as
+   expensive as it actually is). Without a profile this degrades to
+   least-loaded. Ties break on the lowest replica index — routing is a
+   pure function of queue state, which is what keeps emulated-clock runs
+   byte-deterministic.
+
+Drain/scale semantics: ``drain()`` stops new admissions while in-flight
+slots retire on the replica's own warmup-compiled executables (NO
+recompile — the pool shape never changes, the slots simply empty out);
+``scale_down()`` is drain plus retirement once empty; ``scale_up()``
+reactivates a retired replica whose executable cache is still warm.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence
+
+from repro.core.objective import LatencyProfile, step_latency
+from repro.serving.continuous import ContinuousServer
+
+# replica lifecycle states
+ACTIVE = "active"
+DRAINING = "draining"
+RETIRED = "retired"
+
+
+class Replica:
+    """One engine replica in the router's pool."""
+
+    def __init__(self, idx: int, server: ContinuousServer):
+        self.idx = idx
+        self.server = server
+        self.state = ACTIVE
+        self.routed = 0          # requests this replica admitted, lifetime
+
+    # ------------------------------------------------------------- load --
+    def in_flight(self) -> int:
+        """Requests occupying slots right now."""
+        return sum(1 for r in self.server.slots if r is not None)
+
+    def queued(self) -> int:
+        return len(self.server.queue)
+
+    def load(self) -> int:
+        return self.in_flight() + self.queued()
+
+    def free_slots(self) -> int:
+        return self.server.batch_size - self.in_flight()
+
+    def has_work(self) -> bool:
+        """Anything left to step — draining replicas keep stepping until
+        their in-flight slots retire."""
+        return bool(self.server.queue) or self.in_flight() > 0
+
+    def accepting(self) -> bool:
+        return self.state == ACTIVE
+
+    def summary(self) -> Dict:
+        m = self.server.metrics.summary()
+        return {"state": self.state, "routed": self.routed,
+                "steps": m["steps"], "completed": m["completed"],
+                "tokens": m["tokens"], "occupancy": m["occupancy"],
+                "recompiles_after_warmup": m["recompiles_after_warmup"]}
+
+
+@dataclass
+class RouterMetrics:
+    """Routing decisions and replica lifecycle events, by count."""
+    routed: Dict[int, int] = field(default_factory=dict)
+    affinity_hits: int = 0    # session routed to its pinned replica
+    repins: int = 0           # pin moved off a draining/retired replica
+    drains: int = 0
+    scale_downs: int = 0
+    scale_ups: int = 0
+
+    def summary(self) -> Dict:
+        return {"routed": {str(k): v for k, v in sorted(self.routed.items())},
+                "affinity_hits": self.affinity_hits, "repins": self.repins,
+                "drains": self.drains, "scale_downs": self.scale_downs,
+                "scale_ups": self.scale_ups}
+
+
+class Router:
+    """Session-affine, SLO-aware placement over N engine replicas."""
+
+    def __init__(self, servers: Sequence[ContinuousServer],
+                 profile: Optional[LatencyProfile] = None,
+                 affinity: bool = True):
+        if not servers:
+            raise ValueError("router needs at least one replica")
+        self.replicas: List[Replica] = [Replica(i, s)
+                                        for i, s in enumerate(servers)]
+        self.profile = profile
+        self.affinity = affinity
+        self.metrics = RouterMetrics()
+        self._pins: Dict[str, int] = {}   # session id -> replica idx
+
+    # --------------------------------------------------------- topology --
+    def active(self) -> List[Replica]:
+        return [r for r in self.replicas if r.accepting()]
+
+    def live(self) -> List[Replica]:
+        return [r for r in self.replicas if r.state != RETIRED]
+
+    def total_slots(self) -> int:
+        return sum(r.server.batch_size for r in self.active())
+
+    def total_load(self) -> int:
+        return sum(r.load() for r in self.live())
+
+    def occupancy(self) -> float:
+        """Live load over active slot capacity — the number admission
+        control compares against the deadline-feasibility bound."""
+        return self.total_load() / max(1, self.total_slots())
+
+    # ---------------------------------------------------------- scoring --
+    def est_wait(self, rep: Replica, extra: int = 1) -> float:
+        """Modeled seconds until ``extra`` more requests reach a slot on
+        this replica: full-queue waves ahead of them, each priced at the
+        replica's bucket via ``step_latency`` at projected occupancy. An
+        AAL of ~2 tokens/step means a request occupies its slot for about
+        ``max_new / 2`` steps; we fold that into a per-wave service time of
+        a few steps rather than modeling each request's length (admission
+        needs an ordering signal, not a simulator)."""
+        B = rep.server.batch_size
+        q = rep.queued() + extra
+        waves = max(0.0, (rep.in_flight() + q - B) / B)
+        if self.profile is None:
+            return waves + rep.load() / max(1, B)   # unitless least-loaded
+        d = rep.server.spec.depth
+        w = rep.server.spec.width
+        v = rep.server.verify_v
+        occ = min(B, max(1, rep.in_flight() + q))
+        return step_latency(self.profile, d, w, v, batch=occ) * (1.0 + waves)
+
+    def _best(self) -> Replica:
+        pool = self.active()
+        if not pool:
+            raise RuntimeError("no active replica to route to "
+                               "(all draining/retired)")
+        # load before idx in the tie-break: below the saturation knee the
+        # modeled wait is FLAT in occupancy, and an idx-only tie-break
+        # would pile every session onto replica 0
+        return min(pool, key=lambda r: (self.est_wait(r), r.load(), r.idx))
+
+    # ---------------------------------------------------------- routing --
+    def route(self, session: Optional[str] = None) -> Replica:
+        """Pick the replica for one request (no submission side effects
+        beyond pin bookkeeping and routing counters)."""
+        rep: Optional[Replica] = None
+        if self.affinity and session is not None:
+            pin = self._pins.get(session)
+            if pin is not None:
+                pinned = self.replicas[pin]
+                if pinned.accepting():
+                    rep = pinned
+                    self.metrics.affinity_hits += 1
+                else:                      # pinned replica is going away
+                    rep = self._best()
+                    self._pins[session] = rep.idx
+                    self.metrics.repins += 1
+            else:
+                rep = self._best()
+                self._pins[session] = rep.idx
+        if rep is None:
+            rep = self._best()
+        rep.routed += 1
+        self.metrics.routed[rep.idx] = self.metrics.routed.get(rep.idx, 0) + 1
+        return rep
+
+    def submit(self, req, handle=None, session: Optional[str] = None):
+        """Route and enqueue: returns ``(replica, handle)``."""
+        rep = self.route(session=session)
+        h = rep.server.submit(req, handle=handle)
+        h.replica = rep.idx
+        h.session = session
+        return rep, h
+
+    # ------------------------------------------------------- drain/scale --
+    def drain(self, idx: int) -> Replica:
+        """Stop routing to replica ``idx``; its in-flight slots retire on
+        the already-compiled executables (pool shape unchanged — this is
+        why a drain can never recompile)."""
+        rep = self.replicas[idx]
+        if rep.state == ACTIVE:
+            rep.state = DRAINING
+            self.metrics.drains += 1
+        return rep
+
+    def scale_down(self, idx: int) -> Replica:
+        """Drain and mark for retirement once empty (an emulated
+        autoscaler removing capacity)."""
+        rep = self.drain(idx)
+        self.metrics.scale_downs += 1
+        return rep
+
+    def scale_up(self, idx: int) -> Replica:
+        """Reactivate a drained/retired replica. Its executable cache is
+        still warm from the original warmup, so rejoining the pool costs
+        zero compiles."""
+        rep = self.replicas[idx]
+        if rep.state != ACTIVE:
+            rep.state = ACTIVE
+            self.metrics.scale_ups += 1
+        return rep
+
+    def reap(self) -> List[int]:
+        """Retire replicas that finished draining (no queue, no slots).
+        Returns the indices retired by this call."""
+        out = []
+        for rep in self.replicas:
+            if rep.state == DRAINING and not rep.has_work():
+                rep.state = RETIRED
+                out.append(rep.idx)
+        return out
+
+    def summary(self) -> Dict:
+        return {**self.metrics.summary(),
+                "replicas": {str(r.idx): r.summary() for r in self.replicas}}

@@ -66,7 +66,7 @@ def test_continuous_matches_batched_with_zero_recompiles(tb):
     for r in _requests(tb, n):
         r.stream = on_tokens
         cont.submit(r)
-    done = cont.run()
+    done = {uid: h.request for uid, h in cont.serve().items()}
 
     assert sorted(done) == sorted(ref)
     for uid in ref:
@@ -94,7 +94,7 @@ def test_slot_lengths_and_long_run_parking(tb):
     cont.warmup()
     for r in _requests(tb, 8, seed=3):
         cont.submit(r)
-    done = cont.run()
+    done = {uid: h.request for uid, h in cont.serve().items()}
     assert len(done) == 8
     np.testing.assert_array_equal(cont._slot_len,
                                   eng.slot_lengths(cont.state))
@@ -336,7 +336,7 @@ def test_quantized_continuous_serving_zero_recompiles(tb):
     cont.warmup()
     for r in _requests(tb, n, seed=5):
         cont.submit(r)
-    done = cont.run()
+    done = {uid: h.request for uid, h in cont.serve().items()}
     m = cont.metrics.summary()
     assert m["completed"] == n
     assert m["refills"] >= n - B

@@ -1,0 +1,72 @@
+"""The stable ``repro.serving`` surface: explicit ``__all__``, no private
+leaks, and the ServeConfig argv/JSON round-trip contract the CLI and the
+benchmarks both depend on."""
+import argparse
+import dataclasses
+import json
+
+import pytest
+
+import repro.serving as serving
+from repro.serving import ServeConfig
+
+
+def test_all_is_sorted_explicit_and_importable():
+    assert serving.__all__ == sorted(serving.__all__)
+    for name in serving.__all__:
+        assert hasattr(serving, name), f"__all__ exports missing {name}"
+    assert not any(n.startswith("_") for n in serving.__all__)
+
+
+def test_star_import_matches_all():
+    ns = {}
+    exec("from repro.serving import *", ns)
+    public = {k for k in ns if not k.startswith("_")}
+    assert public == set(serving.__all__)
+
+
+def test_expected_surface_is_pinned():
+    # the redesigned API: additions here are deliberate, removals breaking
+    assert set(serving.__all__) == {
+        "AdmissionConfig", "BatchedServer", "BucketController",
+        "ContinuousServer", "FrontendMetrics", "Replica", "Request",
+        "RequestHandle", "Router", "RouterMetrics", "ServeConfig",
+        "ServingFrontend", "ServingMetrics", "drive_frontend_trace",
+        "mask_padded_vocab", "sample",
+    }
+
+
+# ----------------------------------------------------- ServeConfig ---------
+def test_serveconfig_argv_roundtrip_defaults_and_overrides():
+    assert ServeConfig().to_argv() == []          # defaults -> empty argv
+    cfg = ServeConfig(server="frontend", replicas=3, batch=2, slo_s=30.0,
+                      adaptive=True, affinity=False, temperature=0.5,
+                      quantize="int8-kv", trace_dir="/tmp/t")
+    argv = cfg.to_argv()
+    assert "--no-affinity" in argv                # True-default bool flips
+    assert "--adaptive" in argv
+    assert ServeConfig.parse(argv) == cfg
+
+
+def test_serveconfig_json_roundtrip_and_unknown_key_rejection():
+    cfg = ServeConfig(server="continuous", adaptive=True, hysteresis=0.2)
+    blob = json.loads(json.dumps(cfg.to_json()))
+    assert ServeConfig.from_json(blob) == cfg
+    with pytest.raises(ValueError, match="unknown"):
+        ServeConfig.from_json({**blob, "typo_field": 1})
+
+
+def test_serveconfig_validates_choices():
+    with pytest.raises(ValueError, match="server="):
+        ServeConfig(server="nope")
+    with pytest.raises(ValueError, match="overload="):
+        ServeConfig(overload="drop")
+
+
+def test_serveconfig_cli_covers_every_field():
+    ap = argparse.ArgumentParser()
+    ServeConfig.add_args(ap)
+    ns = ap.parse_args([])
+    field_names = {f.name for f in dataclasses.fields(ServeConfig)}
+    assert set(vars(ns)) == field_names           # one flag per field
+    assert ServeConfig.from_args(ns) == ServeConfig()

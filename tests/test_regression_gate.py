@@ -39,6 +39,19 @@ GOOD_CURRENT = {
         "on": {"recompiles_after_warmup": 0},
         "off": {"recompiles_after_warmup": 0},
     },
+    "frontend_sweep": {
+        "deterministic": 1.0,
+        "router_over_single": 1.8,
+        "single": {"goodput_under_slo": 0.55,
+                   "recompiles_after_warmup": 0},
+        "router": {
+            "goodput_under_slo": 1.0,
+            "router": {"replicas": {
+                "0": {"recompiles_after_warmup": 0},
+                "1": {"recompiles_after_warmup": 0},
+            }},
+        },
+    },
 }
 
 
@@ -103,6 +116,28 @@ def test_gate_fails_on_telemetry_hard_bounds():
         cur["telemetry"][key] = bad
         fails = compare(_baseline(), cur)
         assert any(key in f and "hard bound" in f for f in fails), (key, fails)
+
+
+def test_gate_fails_on_frontend_hard_bounds():
+    """The router must strictly beat the single-engine baseline and the
+    emulated drive must be byte-deterministic — both absolute bounds, and
+    ``>`` means equality fails too."""
+    for key, bad in (("router_over_single", 1.0),   # == 1 is NOT > 1
+                     ("router_over_single", 0.8),
+                     ("deterministic", 0.0)):
+        cur = copy.deepcopy(GOOD_CURRENT)
+        cur["frontend_sweep"][key] = bad
+        fails = compare(_baseline(), cur)
+        assert any(key in f and "hard bound" in f for f in fails), (key, fails)
+
+
+def test_gate_fails_on_replica_recompiles():
+    """The walked recompile check reaches the router's per-replica
+    counters — a single recompiling replica trips the gate."""
+    cur = copy.deepcopy(GOOD_CURRENT)
+    cur["frontend_sweep"]["router"]["router"]["replicas"]["1"][
+        "recompiles_after_warmup"] = 1
+    assert any("recompiles" in f for f in compare(_baseline(), cur))
 
 
 def test_gate_fails_when_telemetry_section_missing():

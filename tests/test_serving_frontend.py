@@ -1,0 +1,347 @@
+"""Async serving front-end: RequestHandle lifecycle, SLO-aware routing,
+admission control, drain/scale events and the byte-determinism contract
+with the event loop in the path.
+
+Host-side scheduling logic (routing, admission, handles, asyncio plumbing)
+runs on a deterministic fake engine — no jit, no testbed. The acceptance
+criteria (goodput-under-SLO win of scale-out over scale-up, zero recompiles
+across drain/scale, byte-identical emulated drives) run on the real
+testbed engine at the bottom of the file.
+"""
+import asyncio
+import json
+
+import numpy as np
+import pytest
+
+from repro.core.buckets import buckets_for_depths
+from repro.core.egt import egt_spec
+from repro.core.engine import EngineConfig, SpeculativeEngine
+from repro.core.objective import LatencyProfile
+from repro.serving import (AdmissionConfig, ContinuousServer, Request,
+                           RequestHandle, Router, ServingFrontend,
+                           drive_frontend_trace)
+from repro.serving.router import ACTIVE, DRAINING, RETIRED
+from repro.serving.testbed import Testbed, TestbedSpec, build_testbed
+
+
+# --------------------------------------------------- deterministic fake ----
+class _FakeState:
+    def __init__(self, batch_size):
+        self.root = np.zeros(batch_size, np.int64)
+
+
+class _FakeResult:
+    def __init__(self, tokens, accept_len, bucket):
+        self.tokens = tokens
+        self.accept_len = accept_len
+        self.bucket = bucket
+        self.iter_time = 1e-5
+
+    def mean_accept(self, slots=None):
+        a = self.accept_len if slots is None else self.accept_len[slots]
+        return float(np.mean(a)) if np.size(a) else 0.0
+
+
+class _FakeEngine:
+    """Enough engine for the full ContinuousServer step loop, host-only:
+    every slot emits one deterministic token per step (1000 + step#)."""
+
+    class cfg:
+        max_target_len = 4096
+
+    _compile_count = 0
+    profile = None
+
+    def __init__(self):
+        self._steps = 0
+
+    def init_decode_state(self, batch_size):
+        return _FakeState(batch_size)
+
+    def prefill_into_slot(self, state, slot, tokens, length):
+        return state
+
+    def reset_state_slot(self, state, slot):
+        return state
+
+    def decode_step(self, state, spec=None, verify_v=None):
+        self._steps += 1
+        B = len(state.root)
+        toks = np.full((B, 2), -1, np.int64)
+        toks[:, 0] = 1000 + self._steps
+        return state, _FakeResult(toks, np.ones(B, np.int64),
+                                  (spec.depth, spec.width, verify_v))
+
+    def executable_count(self):
+        return 0
+
+    def mesh_info(self):
+        return {"devices": 1, "shape": None}
+
+
+def _fake_server(batch=2):
+    return ContinuousServer(_FakeEngine(), batch_size=batch, prompt_pad=4,
+                            spec=egt_spec(2, 2))
+
+
+def _req(uid, max_new=4):
+    return Request(uid=uid, prompt=np.array([1, 2, 3]), max_new=max_new)
+
+
+# ------------------------------------------------------ RequestHandle ------
+def test_submit_returns_handle_result_pumps_server():
+    srv = _fake_server()
+    handles = [srv.submit(_req(u)) for u in range(3)]
+    assert all(isinstance(h, RequestHandle) for h in handles)
+    assert not handles[0].done()
+    out = handles[0].result()          # pumps warmup + steps on demand
+    assert handles[0].done()
+    np.testing.assert_array_equal(out, handles[0].request.result)
+    assert len(out) == 4               # root + 3 steps = max_new
+    assert handles[0].tokens == [int(t) for t in out]
+
+
+def test_handle_sync_streaming_yields_committed_tokens_in_order():
+    srv = _fake_server()
+    h = srv.submit(_req(0, max_new=5))
+    srv.submit(_req(1, max_new=5))
+    streamed = list(h)                 # pumps between chunks when dry
+    assert h.done()
+    assert streamed == [int(t) for t in h.request.result]
+
+
+def test_serve_returns_done_handles_and_run_is_deprecated_shim():
+    srv = _fake_server()
+    hs = {u: srv.submit(_req(u)) for u in range(3)}
+    done = srv.serve()
+    assert sorted(done) == [0, 1, 2]
+    assert all(done[u] is hs[u] and hs[u].done() for u in hs)
+
+    srv2 = _fake_server()
+    for u in range(3):
+        srv2.submit(_req(u))
+    with pytest.warns(DeprecationWarning, match="RequestHandle"):
+        legacy = srv2.run()
+    assert sorted(legacy) == [0, 1, 2]           # Dict[int, Request] shim
+    assert all(legacy[u].result is not None for u in legacy)
+
+
+# ------------------------------------------------------------- Router ------
+def test_router_spreads_load_and_honours_affinity():
+    router = Router([_fake_server(), _fake_server()])
+    rep, _ = router.submit(_req(0), session="a")
+    assert rep.idx == 0                # empty tie breaks to the lowest idx
+    rep, _ = router.submit(_req(1))
+    assert rep.idx == 1                # least-loaded beats idx
+    rep, _ = router.submit(_req(2), session="a")
+    assert rep.idx == 0                # affinity pin beats load
+    assert router.metrics.affinity_hits == 1
+    assert router.metrics.routed == {0: 2, 1: 1}
+
+
+def test_router_repins_sessions_off_a_draining_replica():
+    router = Router([_fake_server(), _fake_server()])
+    rep, _ = router.submit(_req(0), session="a")
+    router.submit(_req(1), session="b")
+    assert router._pins == {"a": 0, "b": 1}
+    router.drain(1)
+    rep, _ = router.submit(_req(2), session="b")  # pinned replica going away
+    assert rep.idx == 0
+    assert router._pins["b"] == 0
+    assert router.metrics.repins == 1
+    assert router.metrics.drains == 1
+
+
+def test_drain_retires_in_flight_then_reap_then_scale_up():
+    router = Router([_fake_server(), _fake_server()])
+    _, h = router.submit(_req(0))
+    rep = router.replicas[0]
+    router.drain(0)
+    assert rep.state == DRAINING
+    assert router.reap() == []         # still has work: must keep stepping
+    rep.server.serve()                 # in-flight retires on warm executables
+    assert h.done() and len(h.tokens) == 4
+    assert router.reap() == [0]
+    assert rep.state == RETIRED
+    router.scale_up(0)
+    assert rep.state == ACTIVE
+    assert router.metrics.scale_ups == 1
+    assert rep.server.metrics.summary()["recompiles_after_warmup"] == 0
+
+
+def test_est_wait_prices_saturation_knee():
+    """With a profile, a replica pushed past the knee must look more
+    expensive than an idle one even before queue waves kick in."""
+    prof = LatencyProfile.synthetic(base_verify=1.0, slope=1.0,
+                                    draft_frac=0.1, saturate_at=16,
+                                    overhead=0.2)
+    busy, idle = _fake_server(batch=4), _fake_server(batch=4)
+    router = Router([busy, idle], profile=prof)
+    for u in range(4):
+        router.replicas[0].server.submit(_req(u))
+    # verify_v = egt_spec(2,2).num_nodes -> 4+ tokens/slot; 4 slots on the
+    # busy replica projects past saturate_at=16 while idle stays at batch 1
+    assert (router.est_wait(router.replicas[0])
+            > router.est_wait(router.replicas[1]))
+    rep = router.route()
+    assert rep.idx == 1
+
+
+# ----------------------------------------------------- admission control ---
+def test_admission_sheds_past_the_bound():
+    fe = ServingFrontend([_fake_server(batch=1)],
+                         admission=AdmissionConfig(max_pending=1,
+                                                   on_overload="shed"))
+    h0 = fe.submit(_req(0))            # dispatched straight into the replica
+    h1 = fe.submit(_req(1))            # parked in the front queue
+    h2 = fe.submit(_req(2))            # queue full -> shed, terminal handle
+    assert not h0.shed and not h1.shed
+    assert h2.shed and h2.done() and h2.shed_reason == "overload"
+    assert len(h2.result()) == 0       # terminal: empty, never raises
+    m = fe.metrics
+    assert m.sheds == 1 and m.shed_overload == 1
+    assert m.tokens_lost == 4          # the shed request's whole budget
+    assert fe.summary()["goodput_under_slo"] < 1.0
+
+
+def test_admission_parks_under_backpressure_by_default():
+    fe = ServingFrontend([_fake_server(batch=1)],
+                         admission=AdmissionConfig(max_pending=1))
+    for u in range(4):
+        fe.submit(_req(u))
+    assert fe.metrics.sheds == 0
+    assert fe.metrics.parks >= 2       # held, not rejected
+
+
+def test_priority_dispatch_order():
+    fe = ServingFrontend([_fake_server(batch=1)])
+    h0 = fe.submit(_req(0))            # occupies the only capacity
+    hlow = fe.submit(_req(1), priority=0)
+    hhigh = fe.submit(_req(2), priority=5)
+    rep = fe.router.replicas[0]
+    while not h0.done():
+        rep.server.step()
+    fe._dispatch()
+    assert hhigh.replica == 0          # higher priority released first
+    assert hlow.replica is None        # still parked: capacity is one deep
+
+
+# ------------------------------------------------- asyncio wall-clock mode --
+def test_run_until_drained_completes_and_streams_async():
+    fe = ServingFrontend([_fake_server(), _fake_server()])
+    hs = [fe.submit(_req(u), session=f"s{u % 2}") for u in range(5)]
+
+    async def consume(h):
+        return [t async for t in h]
+
+    async def main():
+        streamed, summary = await asyncio.gather(
+            consume(hs[0]), fe.run_until_drained())
+        return streamed, summary
+
+    streamed, summary = asyncio.run(main())
+    assert all(h.done() for h in hs)
+    assert streamed == hs[0].tokens and len(streamed) == 4
+    assert summary["completed"] == 5
+    assert summary["goodput_under_slo"] == 1.0   # no deadlines -> all in SLO
+    assert sum(summary["router"]["routed"].values()) == 5
+    for rs in summary["router"]["replicas"].values():
+        assert rs["recompiles_after_warmup"] == 0
+
+
+# ==================================================== real-testbed tests ===
+@pytest.fixture(scope="module")
+def tb() -> Testbed:
+    return build_testbed(TestbedSpec(train_steps=160))
+
+
+def _profile() -> LatencyProfile:
+    # pronounced saturation knee at 16 concurrent tree tokens (the
+    # emulated-profile economics of benchmarks/fig_serving.py)
+    return LatencyProfile.synthetic(base_verify=1.0, slope=1.0,
+                                    draft_frac=0.1, saturate_at=16,
+                                    overhead=0.2)
+
+
+def _frontend(tb, replicas, batch, profile):
+    spec = egt_spec(4, 2)
+
+    def engine():
+        return SpeculativeEngine(
+            tb.drafter, tb.d_params, tb.verifier, tb.v_params,
+            profile=profile,
+            buckets=buckets_for_depths((4,), width=2, verify_frac=0.75),
+            depth_options=(4,), config=EngineConfig())
+
+    servers = [ContinuousServer(engine(), batch_size=batch, prompt_pad=12,
+                                spec=spec, verify_v=6)
+               for _ in range(replicas)]
+    return ServingFrontend(servers, profile=profile)
+
+
+def _trace(tb, n=8, deadline_s=25.0, sessions=2):
+    rng = np.random.default_rng(9)
+    rows = []
+    for uid in range(n):
+        prompt = rng.integers(1, tb.spec.vocab, size=8).astype(np.int32)
+        rows.append((float(uid), Request(uid=uid, prompt=prompt, max_new=16),
+                     {"deadline_s": deadline_s,
+                      "session": f"s{uid % sessions}"}))
+    return rows
+
+
+def test_scale_out_beats_scale_up_on_goodput_under_slo(tb):
+    """The tentpole acceptance criterion: at EQUAL slot count, 2 replicas x
+    batch 2 behind the router must beat 1 replica x batch 4 on the fraction
+    of tokens delivered within deadline — batch 4 runs 24 concurrent tree
+    tokens, past the knee, so its steps cost ~7x more."""
+    prof = _profile()
+    single = drive_frontend_trace(_frontend(tb, 1, 4, prof),
+                                  _trace(tb), prof)
+    routed = drive_frontend_trace(_frontend(tb, 2, 2, prof),
+                                  _trace(tb), prof)
+    assert routed["goodput_under_slo"] > single["goodput_under_slo"]
+    assert routed["goodput_under_slo"] > 0.9
+    assert routed["deadline_misses"] < single["deadline_misses"]
+    for res in (single, routed):
+        for rs in res["router"]["replicas"].values():
+            assert rs["recompiles_after_warmup"] == 0
+
+
+def test_drain_scale_cycle_repins_sessions_zero_recompiles(tb):
+    """scale_down(1) mid-trace: replica 1's in-flight work retires on its
+    warm executables, sessions pinned to it re-pin to replica 0, and
+    scale_up(1) rejoins the pool — all with zero recompiles anywhere."""
+    prof = _profile()
+    fe = _frontend(tb, 2, 2, prof)
+    # the window stays open past the last arrival: every s1 request that
+    # lands while replica 1 drains MUST re-pin rather than wait it out
+    events = ((4.0, "scale_down", 1), (30.0, "scale_up", 1))
+    out = drive_frontend_trace(fe, _trace(tb, n=10, deadline_s=60.0),
+                               prof, events=events)
+    r = out["router"]
+    assert r["scale_downs"] == 1 and r["scale_ups"] == 1
+    assert r["repins"] >= 1            # a pinned session crossed the drain
+    assert out["completed"] == 10      # nothing lost across the cycle
+    assert fe.router.replicas[1].state == ACTIVE
+    for rs in r["replicas"].values():
+        assert rs["recompiles_after_warmup"] == 0
+    # replica 1 served work before the drain and finished it (drain never
+    # drops in-flight requests)
+    assert r["replicas"]["1"]["completed"] >= 1
+
+
+def test_emulated_drive_is_byte_deterministic_with_frontend_in_loop(tb):
+    """Two identical emulated drives THROUGH the asyncio front-end (event
+    loop, executor lane, router, admission control all in the path) must
+    produce byte-identical artifacts: same token digest, same summary."""
+    prof = _profile()
+    events = ((4.0, "drain", 1), (9.0, "scale_up", 1))
+    a = drive_frontend_trace(_frontend(tb, 2, 2, prof),
+                             _trace(tb), prof, events=events)
+    b = drive_frontend_trace(_frontend(tb, 2, 2, prof),
+                             _trace(tb), prof, events=events)
+    assert a["results_digest"] == b["results_digest"]
+    assert (json.dumps(a, sort_keys=True, default=float)
+            == json.dumps(b, sort_keys=True, default=float))
