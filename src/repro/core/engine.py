@@ -197,6 +197,17 @@ class SpeculativeEngine:
             self.d_params = quantize_params(self.d_params)
             self.v_params = quantize_params(self.v_params)
         self._step_cache: Dict[Any, Any] = {}
+        # Executable-cache identity of the sampling config. Keys must carry
+        # no raw floats: two bit-different-but-equal temperatures would mint
+        # duplicate executables and skew executable_count(), the honest
+        # recompile signal. repr() is the canonical shortest form, and
+        # temperature 0 collapses to the "greedy" token the sampler
+        # special-cases anyway. cfg is frozen after construction (every
+        # compiled graph bakes it in), so this is computed once.
+        self._cfg_key = (self.cfg.resolve_accept(),
+                         "greedy" if self.cfg.temperature == 0.0
+                         else repr(float(self.cfg.temperature)),
+                         bool(self.cfg.prune), bool(self.cfg.sample_draft))
         self._compile_count = 0
         self.telemetry = None  # opt-in: see attach_telemetry
 
@@ -399,10 +410,16 @@ class SpeculativeEngine:
         prompt length. The slot's first generated token (sampled from the
         prompt's last-position logits) lands in ``state.root[slot]``."""
         pad = int(np.shape(tokens)[-1])
+        if not 0 <= int(length) <= pad:
+            # the scalar-prefetched `lengths` driving kv-block skipping in
+            # the fused kernel derive from this value: a length past the
+            # written token extent would make invisible garbage visible
+            raise ValueError(f"prompt length {length} disagrees with the "
+                             f"padded prompt width {pad}")
         tr = self._tracer()
         if tr is not None:
             tr.begin("slot_prefill", track="engine", slot=int(slot), pad=pad)
-        ck = ("slot_prefill", pad, self.cfg.temperature)
+        ck = ("slot_prefill", pad, self._cfg_key)
         if ck not in self._step_cache:
             self._step_cache[ck] = self._build_slot_prefill()
             self._note_compile("slot_prefill")
@@ -419,6 +436,130 @@ class SpeculativeEngine:
             tr.end(track="engine")
         produced = state.produced.copy()
         produced[slot] = 1  # the root token is the slot's first output
+        return DecodeState(dcache, vcache, root, h_last, key, produced)
+
+    def _build_slot_prefill_chunk(self, chunk_len: int):
+        """One compiled executable that advances a single slot's prefill by
+        one fixed-width chunk. The chunk is run as a depth-``chunk_len``
+        CHAIN through ``tree_verify`` (depths = arange, causal lower-
+        triangular tree mask), so RoPE positions and attention visibility
+        are exactly what a monolithic prefill computes for the same tokens,
+        and ``commit`` lands the accepted prefix in the slot's caches at
+        positions ``start + j``. Everything that varies per call — tokens,
+        start cursor, valid count, slot, finality, PRNG key — is traced, so
+        one chunk length compiles exactly once.
+
+        The slot's committed length is pinned to the host-side ``start``
+        cursor on entry: decode megasteps keep running over mid-prefill
+        slots (garbage output, static batch shape), advancing the device
+        length counter and scribbling entries at positions >= start — all
+        of which the next chunk overwrites position-for-position before
+        ``visible_mask`` could ever expose it (an entry is visible only
+        below the committed length, and committing position p rewrites
+        cache slot p in the same dispatch that makes it visible).
+        """
+        if self.verifier.cfg.is_encoder_decoder:
+            raise NotImplementedError(
+                "chunked prefill does not support encoder-decoder models")
+        for m in (self.verifier, self.drafter):
+            if any(m.cfg.layer_mixer(i) == "ssm"
+                   for i in range(m.cfg.num_layers)):
+                raise NotImplementedError(
+                    "chunked prefill requires attention-only models: SSM "
+                    "recurrent state is not position-addressed, so the "
+                    "garbage decode megasteps interleaved between chunks "
+                    "could not be overwritten by the next chunk")
+            if m.cfg.sliding_window:
+                raise NotImplementedError(
+                    "chunked prefill does not support sliding-window "
+                    "caches: a garbage decode entry at position g wraps "
+                    "onto ring slot g %% S and destroys the committed "
+                    "entry at g - S, which queries below g still attend")
+        C = chunk_len
+        depths = jnp.arange(C, dtype=jnp.int32)[None]          # [1, C] chain
+        amask = jnp.tril(jnp.ones((C, C), bool))[None]         # causal
+        node_idx = jnp.arange(C, dtype=jnp.int32)[None]
+
+        def fn(d_params, v_params, dcache, vcache, root, h_last,
+               chunk, start, valid, slot, is_final, key):
+            d_params = dequant_params(d_params)
+            v_params = dequant_params(v_params)
+            vc1 = cache_lib.slot_slice(vcache, slot)
+            dc1 = cache_lib.slot_slice(dcache, slot)
+            start_b = jnp.reshape(start, (1,)).astype(jnp.int32)
+            vc1 = {**vc1, "length": start_b}   # pin to the host cursor (see
+            dc1 = {**dc1, "length": start_b}   # docstring: garbage decode)
+            valid_b = jnp.reshape(valid, (1,)).astype(jnp.int32)
+            v_logits, v_scratch, h_nodes = self.verifier.tree_verify(
+                v_params, chunk, depths, amask, vc1)
+            vc1 = self.verifier.commit(vc1, v_scratch, node_idx, valid_b)
+            _, d_scratch, _ = self.drafter.tree_verify(
+                d_params, chunk, depths, amask, dc1)
+            dc1 = self.drafter.commit(dc1, d_scratch, node_idx, valid_b)
+            vcache = cache_lib.slot_update(vcache, slot, vc1)
+            dcache = cache_lib.slot_update(dcache, slot, dc1)
+            # the final chunk samples the slot's first output token from the
+            # last VALID node's logits (a partial tail chunk pads past it;
+            # padded nodes never feed anything — causal mask) and lands it
+            # in root/h_last; non-final chunks leave both untouched so the
+            # same executable serves every chunk of the prompt
+            last = jnp.clip(valid - 1, 0, C - 1)
+            tok = self._sample(jnp.take(v_logits[0], last, axis=0)[None], key)
+            h1 = jnp.take(h_nodes[0], last, axis=0)
+            fin = jnp.reshape(is_final, ())
+            root = jnp.where(
+                fin, jax.lax.dynamic_update_index_in_dim(root, tok[0], slot, 0),
+                root)
+            h_last = jnp.where(
+                fin, jax.lax.dynamic_update_index_in_dim(
+                    h_last, h1.astype(h_last.dtype), slot, 0),
+                h_last)
+            return self._constrain_state(dcache, vcache, root, h_last)
+
+        return jax.jit(fn, donate_argnums=(2, 3, 4, 5))
+
+    def prefill_chunk_into_slot(self, state: DecodeState, slot: int,
+                                chunk_tokens: np.ndarray, start: int,
+                                valid: int, final: bool) -> DecodeState:
+        """Advance slot ``slot``'s prefill by one chunk: commit
+        ``chunk_tokens[:valid]`` at positions ``start..start+valid`` of both
+        caches. ``final=True`` additionally samples the slot's first output
+        token into ``state.root[slot]`` (and its hidden state into
+        ``h_last``), exactly like the tail of ``prefill_into_slot``.
+
+        The executable-cache key is ``(kind, chunk_len)`` ONLY — start,
+        valid, slot, finality and the key are traced — so a serving loop
+        that warms each chunk length once replays cached executables for
+        any prompt length, chunk count or slot thereafter.
+        """
+        C = int(np.shape(chunk_tokens)[-1])
+        if not 0 <= int(valid) <= C:
+            raise ValueError(f"valid={valid} outside the chunk width {C}")
+        if int(start) < 0 or int(start) + int(valid) > self.cfg.max_target_len:
+            raise ValueError(f"chunk [{start}, {start}+{valid}) overflows "
+                             f"max_target_len={self.cfg.max_target_len}")
+        tr = self._tracer()
+        if tr is not None:
+            tr.begin("slot_prefill_chunk", track="engine", slot=int(slot),
+                     chunk=C, start=int(start), final=bool(final))
+        ck = ("slot_prefill_chunk", C)
+        if ck not in self._step_cache:
+            self._step_cache[ck] = self._build_slot_prefill_chunk(C)
+            self._note_compile("slot_prefill_chunk")
+        fn = self._step_cache[ck]
+        key, sk = jax.random.split(state.key)
+        with self._ctx():
+            dcache, vcache, root, h_last = fn(
+                self.d_params, self.v_params, state.dcache, state.vcache,
+                state.root, state.h_last,
+                jnp.asarray(chunk_tokens, jnp.int32).reshape(1, C),
+                jnp.asarray(start, jnp.int32), jnp.asarray(valid, jnp.int32),
+                jnp.asarray(slot, jnp.int32), jnp.asarray(bool(final)), sk)
+        if tr is not None:
+            tr.end(track="engine")
+        produced = state.produced.copy()
+        if final:
+            produced[slot] = 1  # the root token is the slot's first output
         return DecodeState(dcache, vcache, root, h_last, key, produced)
 
     def reset_state_slot(self, state: DecodeState, slot: int) -> DecodeState:
@@ -690,16 +831,14 @@ class SpeculativeEngine:
         return dcache, vcache, bonus, out_tokens, accept_len, h_last
 
     def _get_staged_parts(self, spec: DraftSpec, verify_v: int):
-        key = ("staged", spec, verify_v, self.cfg.resolve_accept(),
-               self.cfg.temperature, self.cfg.prune, self.cfg.sample_draft)
+        key = ("staged", spec, verify_v, self._cfg_key)
         if key not in self._step_cache:
             self._step_cache[key] = self._build_staged_parts(spec, verify_v)
             self._note_compile("staged")
         return self._step_cache[key]
 
     def _get_step(self, spec: DraftSpec, verify_v: int):
-        key = (spec, verify_v, self.cfg.plan, self.cfg.resolve_accept(),
-               self.cfg.temperature, self.cfg.prune, self.cfg.sample_draft)
+        key = ("megastep", spec, verify_v, self.cfg.plan, self._cfg_key)
         if key not in self._step_cache:
             self._step_cache[key] = self._build_step(spec, verify_v)
             self._note_compile("megastep")

@@ -53,6 +53,11 @@ _HELP: Dict[str, str] = {
     "depth": "pinned speculation depth (continuous mode)",
     "width": "pinned speculation width (continuous mode)",
     "prompt_pad": "static prompt slot width (tokens)",
+    "prefill_chunk": "chunked prefill: comma-separated static chunk widths "
+                     "(e.g. 8,16); empty = monolithic prompt-width prefill",
+    "prefill_budget": "chunked prefill: prompt tokens the lane may advance "
+                      "per megastep (0 = occupancy-priced by the "
+                      "controller)",
     "log_json": "emit the event log as JSON lines instead of key=value",
     "trace_dir": "enable full telemetry; write trace.json/metrics.* here",
     "jax_profile": "with --trace-dir: jax.profiler trace around N megasteps",
@@ -79,6 +84,9 @@ class ServeConfig:
     quantize: str = "none"
     verify_kernel: str = "auto"
     prompt_pad: int = 24
+    # chunked prefill lane ("" = off, monolithic prefill)
+    prefill_chunk: str = ""
+    prefill_budget: int = 0
     # frontend (async multi-replica) mode
     replicas: int = 2
     slo_s: float = 0.0
@@ -96,6 +104,23 @@ class ServeConfig:
             if getattr(self, name) not in opts:
                 raise ValueError(f"{name}={getattr(self, name)!r} not in "
                                  f"{opts}")
+        self.chunk_lens()  # fail fast on a malformed --prefill-chunk
+        if self.prefill_budget < 0:
+            raise ValueError("prefill_budget must be >= 0")
+
+    def chunk_lens(self) -> tuple:
+        """The parsed static chunk-width set ('' = chunking off)."""
+        if not self.prefill_chunk:
+            return ()
+        try:
+            lens = tuple(sorted({int(c) for c in
+                                 self.prefill_chunk.split(",")}))
+        except ValueError:
+            raise ValueError(f"prefill_chunk={self.prefill_chunk!r}: "
+                             "expected comma-separated ints") from None
+        if lens and lens[0] < 1:
+            raise ValueError("prefill chunk widths must be >= 1")
+        return lens
 
     # ------------------------------------------------------ argv round-trip --
     @classmethod
@@ -196,6 +221,7 @@ class ServeConfig:
         if self.server == "batched":
             return BatchedServer(engine, batch_size=self.batch,
                                  prompt_pad=self.prompt_pad)
+        chunks = self.chunk_lens()
         if self.adaptive:
             ladder = self.ladder()
             return ContinuousServer(
@@ -203,11 +229,14 @@ class ServeConfig:
                 buckets=ladder,
                 controller=BucketController(ladder, profile=engine.profile,
                                             hysteresis=self.hysteresis),
-                telemetry=telemetry)
+                telemetry=telemetry, prefill_chunks=chunks or None,
+                prefill_budget=self.prefill_budget)
         spec, verify_v = self.pinned_spec()
         return ContinuousServer(engine, batch_size=self.batch,
                                 prompt_pad=self.prompt_pad, spec=spec,
-                                verify_v=verify_v, telemetry=telemetry)
+                                verify_v=verify_v, telemetry=telemetry,
+                                prefill_chunks=chunks or None,
+                                prefill_budget=self.prefill_budget)
 
     def build_frontend(self, tb, profile=None, mesh=None):
         """The async multi-replica topology: ``replicas`` pinned continuous
@@ -217,12 +246,15 @@ class ServeConfig:
             raise ValueError("build_frontend needs server='frontend'")
         spec, verify_v = self.pinned_spec()
         from repro.serving.continuous import ContinuousServer
+        chunks = self.chunk_lens()
         servers = [
             ContinuousServer(self.build_engine(tb, profile=profile,
                                                mesh=mesh),
                              batch_size=self.batch,
                              prompt_pad=self.prompt_pad, spec=spec,
-                             verify_v=verify_v)
+                             verify_v=verify_v,
+                             prefill_chunks=chunks or None,
+                             prefill_budget=self.prefill_budget)
             for _ in range(self.replicas)]
         admission = AdmissionConfig(max_pending=self.max_queue,
                                     on_overload=self.overload,

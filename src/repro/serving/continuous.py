@@ -29,6 +29,22 @@ Idle slots (no request waiting) keep decoding garbage — discarding their
 output is cheaper than breaking the static batch shape. Their cache growth
 is tracked host-side and they are re-parked (dummy 1-token prefill) before
 they could overflow the cache.
+
+Chunked prefill (``prefill_chunks=``) removes the remaining head-of-line
+stall: instead of one monolithic prompt-width prefill blocking every decode
+slot behind each admission, prompts advance through a budgeted **prefill
+lane** of fixed-width chunk executables (each chunk length compiled once at
+warmup, key ``("slot_prefill_chunk", C)`` — the zero-recompile contract
+survives chunk-count churn by construction) interleaved with the decode
+megasteps. Mid-prefill slots keep riding the batched megastep producing
+garbage; each chunk re-pins the slot's committed length to the host-side
+cursor, so the garbage is never visible and is overwritten position-for-
+position as the real prompt lands (see ``engine._build_slot_prefill_chunk``
+for the soundness argument). The lane is round-robin across mid-prefill
+slots under a per-step token budget — explicit (``prefill_budget=``) or
+priced by the controller against pool occupancy via ``objective.
+step_latency`` — and the controller's bucket choice sees the lane's cost,
+leaning deeper when prefill taxes every step.
 """
 from __future__ import annotations
 
@@ -92,6 +108,8 @@ class ServingMetrics:
     parks: int = 0               # idle-slot dummy prefills (overflow guard)
     completed: int = 0
     truncated_prompts: int = 0
+    prefill_chunks: int = 0      # chunk executables dispatched by the lane
+    prefill_chunk_tokens: int = 0  # chunk widths summed (incl. tail padding)
     recompiles_after_warmup: int = 0
     mesh_devices: int = 1        # devices the engine's mesh spans (1 = unsharded)
     quant_mode: str = "none"     # engine QuantConfig mode string
@@ -129,7 +147,8 @@ class ServingMetrics:
                   self.accept_lens, self.latencies):
             s.hist = registry.register(s.hist)  # type: ignore[assignment]
         for name in ("tokens_out", "admissions", "refills", "parks",
-                     "completed", "truncated_prompts",
+                     "completed", "truncated_prompts", "prefill_chunks",
+                     "prefill_chunk_tokens",
                      "recompiles_after_warmup", "bucket_switches", "steps"):
             registry.callback_gauge(
                 f"serving_{name}", lambda n=name: float(getattr(self, n)),
@@ -149,6 +168,8 @@ class ServingMetrics:
             "refills": self.refills,
             "parks": self.parks,
             "truncated_prompts": self.truncated_prompts,
+            "prefill_chunks": self.prefill_chunks,
+            "prefill_chunk_tokens": self.prefill_chunk_tokens,
             "recompiles_after_warmup": self.recompiles_after_warmup,
             "mesh_devices": self.mesh_devices,
             "quant_mode": self.quant_mode,
@@ -193,7 +214,9 @@ class ContinuousServer:
                  buckets: Optional[Sequence[Bucket]] = None,
                  controller: Optional[BucketController] = None,
                  clock: Optional[Clock] = None,
-                 telemetry: Optional[Telemetry] = None):
+                 telemetry: Optional[Telemetry] = None,
+                 prefill_chunks: Optional[Sequence[int]] = None,
+                 prefill_budget: int = 0):
         self.engine = engine
         self.batch_size = batch_size
         self.prompt_pad = prompt_pad
@@ -232,6 +255,25 @@ class ContinuousServer:
                 raise ValueError("a controller needs a bucket ladder")
             self.spec = spec if spec is not None else egt_spec(4, 2)
             self.verify_v = verify_v or self.spec.num_nodes
+        # chunked-prefill lane: a sorted set of static chunk widths (each
+        # compiled once at warmup) and an optional explicit per-step token
+        # budget (0 = let the controller price it from occupancy; without a
+        # controller, drain-fast-while-idle / trickle-while-busy)
+        self.chunked = bool(prefill_chunks)
+        if self.chunked:
+            self.prefill_chunks: Tuple[int, ...] = tuple(
+                sorted({int(c) for c in prefill_chunks}))
+            if self.prefill_chunks[0] < 1:
+                raise ValueError("prefill chunk lengths must be >= 1")
+        else:
+            self.prefill_chunks = ()
+        if prefill_budget < 0:
+            raise ValueError("prefill_budget must be >= 0")
+        self.prefill_budget = int(prefill_budget)
+        # slot -> {"toks": padded prompt, "plen": int, "pos": cursor}
+        self._prefill: Dict[int, Dict] = {}
+        self._prefill_order: Deque[int] = deque()   # round-robin lane order
+        self._last_chunks: List[int] = []  # chunk widths issued this step
         self.queue: Deque[Request] = deque()
         self.done: Dict[int, Request] = {}
         self.handles: Dict[int, RequestHandle] = {}
@@ -346,8 +388,16 @@ class ContinuousServer:
         one megastep per bucket — the whole ladder in adaptive mode) on
         dummy traffic, then snapshot the compile counter: any later compile
         counts as a recompile-after-warmup."""
-        dummy = np.zeros(self.prompt_pad, np.int32)
-        self.state = self.engine.prefill_into_slot(self.state, 0, dummy, 1)
+        if self.chunked:
+            # compile every static chunk width once; the lane only ever
+            # replays these, so chunk-count churn can never trace
+            for c in self.prefill_chunks:
+                self.state = self.engine.prefill_chunk_into_slot(
+                    self.state, 0, np.zeros(c, np.int32),
+                    start=0, valid=1, final=True)
+        else:
+            dummy = np.zeros(self.prompt_pad, np.int32)
+            self.state = self.engine.prefill_into_slot(self.state, 0, dummy, 1)
         for i in range(self.batch_size):
             self._park(i)
         if self.ladder is not None:
@@ -401,11 +451,19 @@ class ContinuousServer:
                     self._tr.end(track=f"req:{req.uid}")  # queued ends
                     self._tr.begin("active", track=f"req:{req.uid}",
                                    uid=req.uid, slot=i)
-                self.state = self.engine.prefill_into_slot(
-                    self.state, i, toks, plen)
-                if not self._defer_timing:
-                    self.metrics.prefill_times.append(self.clock.now() - t0)
-                self._slot_len[i] = plen
+                if self.chunked:
+                    # the prompt enters the prefill lane instead of running
+                    # monolithically here; clear the slot so the lane's
+                    # first chunk starts from committed length 0
+                    self.state = self.engine.reset_state_slot(self.state, i)
+                    self._slot_len[i] = 0
+                else:
+                    self.state = self.engine.prefill_into_slot(
+                        self.state, i, toks, plen)
+                    if not self._defer_timing:
+                        self.metrics.prefill_times.append(
+                            self.clock.now() - t0)
+                    self._slot_len[i] = plen
                 if self._ev is not None:
                     self._ev.emit("admission", uid=req.uid, slot=i,
                                   prompt_len=plen,
@@ -423,7 +481,18 @@ class ContinuousServer:
                 if self._used[i]:
                     self.metrics.refills += 1
                 self._used[i] = True
-                newly.append(i)
+                if self.chunked:
+                    if self._budget[i] == 0:
+                        # no headroom: retire with 0 tokens, exactly like
+                        # the monolithic path (whose root token _credit's
+                        # zero-room slice drops) — skip the prefill work
+                        self._credit(i, np.empty(0, np.int64))
+                    else:
+                        self._prefill[i] = {"toks": toks, "plen": plen,
+                                            "pos": 0}
+                        self._prefill_order.append(i)
+                else:
+                    newly.append(i)
             elif self._slot_len[i] > L - 2 * self._headroom:
                 self._park(i)  # idle slot drifting toward the cache cap
                 self.metrics.parks += 1
@@ -435,6 +504,75 @@ class ContinuousServer:
             for i in newly:
                 self._credit(i, np.asarray([roots[i]], np.int64))
         return newly
+
+    # ------------------------------------------------------- prefill lane --
+    def _pick_chunk(self, remaining: int) -> int:
+        """Widest configured chunk that `remaining` prompt tokens fill;
+        the narrowest chunk (right-padded) covers the tail."""
+        fit = [c for c in self.prefill_chunks if c <= remaining]
+        return fit[-1] if fit else self.prefill_chunks[0]
+
+    def _lane_budget(self, n_active: int) -> int:
+        """Prompt-token budget for this step's prefill lane: the explicit
+        ``prefill_budget`` when set, else controller-priced from occupancy,
+        else drain-fast-while-idle / trickle-while-busy."""
+        if self.prefill_budget > 0:
+            return self.prefill_budget
+        if self.controller is not None:
+            return self.controller.prefill_budget(
+                n_active, self.batch_size, self.prefill_chunks)
+        return (self.prefill_chunks[-1] if n_active < self.batch_size
+                else self.prefill_chunks[0])
+
+    def _run_prefill_lane(self, n_active: int) -> List[int]:
+        """Advance mid-prefill slots round-robin under the step budget;
+        returns the slots whose prompt finished (root token credited).
+
+        Budget semantics: at least one chunk is always issued while any
+        prefill is pending (the lane must not stall), further chunks issue
+        while their width still fits the remaining budget."""
+        self._last_chunks = []
+        if not self._prefill_order:
+            return []
+        budget = self._lane_budget(n_active)
+        t0 = self.clock.now()
+        spent = 0
+        finished: List[int] = []
+        while self._prefill_order:
+            slot = self._prefill_order[0]
+            cur = self._prefill[slot]
+            remaining = cur["plen"] - cur["pos"]
+            c = self._pick_chunk(remaining)
+            if spent and spent + c > budget:
+                break
+            valid = min(remaining, c)
+            chunk = np.zeros(c, np.int32)
+            chunk[:valid] = cur["toks"][cur["pos"]:cur["pos"] + valid]
+            final = cur["pos"] + valid >= cur["plen"]
+            self.state = self.engine.prefill_chunk_into_slot(
+                self.state, slot, chunk, cur["pos"], valid, final)
+            self._last_chunks.append(c)
+            spent += c
+            cur["pos"] += valid
+            # the host cursor IS the slot's committed length: each chunk
+            # re-pins the device counter to it, erasing garbage-decode drift
+            self._slot_len[slot] = cur["pos"]
+            self.metrics.prefill_chunks += 1
+            self.metrics.prefill_chunk_tokens += c
+            self._prefill_order.popleft()
+            if final:
+                del self._prefill[slot]
+                finished.append(slot)
+            else:
+                self._prefill_order.append(slot)
+        if self._last_chunks and not self._defer_timing:
+            self.metrics.prefill_times.append(self.clock.now() - t0)
+        if finished:
+            # one host sync: each finished prompt's first token is its root
+            roots = np.asarray(self.state.root)
+            for i in finished:
+                self._credit(i, np.asarray([roots[i]], np.int64))
+        return finished
 
     # --------------------------------------------------------- token flow --
     def _credit(self, slot: int, tokens: np.ndarray):
@@ -493,21 +631,41 @@ class ContinuousServer:
         Returns the requests completed during this step."""
         self._just_finished = []
         self._admit()
-        active = [i for i, r in enumerate(self.slots) if r is not None]
+        n_decode = sum(1 for i, r in enumerate(self.slots)
+                       if r is not None and i not in self._prefill)
+        if self.chunked:
+            # budgeted chunk quanta BEFORE the megastep: a prompt whose
+            # final chunk lands here decodes in the same step
+            self._run_prefill_lane(n_decode)
+        active = [i for i, r in enumerate(self.slots)
+                  if r is not None and i not in self._prefill]
         if not active:
+            self._note_recompiles()  # chunk dispatches above must be seen
             return self._just_finished
         if self.controller is not None:
             # occupancy-aware online bucket selection; every ladder bucket
             # was compiled at warmup, so this only changes WHICH cached
-            # executable the megastep below replays
+            # executable the megastep below replays. The lane's profiled
+            # cost rides along so bucket choice sees the prefill tax.
+            lane_cost = 0.0
+            if self.controller.profile is not None:
+                lane_cost = sum(self.controller.profile.t_verify(c)
+                                for c in self._last_chunks)
             sw0 = self.controller.switches
-            b = self.controller.choose(n_active=len(active))
+            b = self.controller.choose(n_active=len(active),
+                                       lane_cost=lane_cost)
             self.spec, self.verify_v = egt_spec(b.depth, b.width), b.verify
             if self._ev is not None and self.controller.switches > sw0:
                 self._ev.emit("bucket_switch", **self.controller.last_switch)
         self.state, res = self.engine.decode_step(
             self.state, spec=self.spec, verify_v=self.verify_v)
-        self._slot_len += res.accept_len
+        adv = np.asarray(res.accept_len, np.int64)
+        if self._prefill:
+            # mid-prefill slots ran garbage this megastep; their committed
+            # length stays the lane cursor (the next chunk re-pins it)
+            adv = adv.copy()
+            adv[list(self._prefill)] = 0
+        self._slot_len += adv
         self.metrics.steps += 1
         key = res.bucket
         self.metrics.bucket_history.append(key)
@@ -540,21 +698,25 @@ class ContinuousServer:
         for i in active:
             toks = res.tokens[i]
             self._credit(i, toks[toks >= 0])
-        if self._compile_base is not None:
-            # the executable counter is the honest zero-recompile signal: it
-            # also sees silent jit retraces (a sharding drifting under a mesh
-            # retraces without any builder call) and subsumes builder-level
-            # compiles, whose new wrappers trace on first call. It reads a
-            # private jax attribute, so when it yielded nothing at warmup
-            # (warmup always traces several executables) fall back to
-            # builder-level counting rather than passing vacuously.
-            if self._exec_base > 0:
-                self.metrics.recompiles_after_warmup = max(
-                    0, self.engine.executable_count() - self._exec_base)
-            else:
-                self.metrics.recompiles_after_warmup = (
-                    self.engine._compile_count - self._compile_base)
+        self._note_recompiles()
         return self._just_finished
+
+    def _note_recompiles(self) -> None:
+        """Refresh the zero-recompile signal. The executable counter is the
+        honest one: it also sees silent jit retraces (a sharding drifting
+        under a mesh retraces without any builder call) and subsumes
+        builder-level compiles, whose new wrappers trace on first call. It
+        reads a private jax attribute, so when it yielded nothing at warmup
+        (warmup always traces several executables) fall back to builder-
+        level counting rather than passing vacuously."""
+        if self._compile_base is None:
+            return
+        if self._exec_base > 0:
+            self.metrics.recompiles_after_warmup = max(
+                0, self.engine.executable_count() - self._exec_base)
+        else:
+            self.metrics.recompiles_after_warmup = (
+                self.engine._compile_count - self._compile_base)
 
     def serve(self, max_steps: Optional[int] = None
               ) -> Dict[int, RequestHandle]:

@@ -31,7 +31,7 @@ from typing import Dict, Optional, Sequence, Tuple
 
 from repro.core.buckets import Bucket
 from repro.core.objective import (AALEstimator, LatencyProfile, ema_update,
-                                  speedup_objective)
+                                  speedup_objective, step_latency)
 
 BucketKey = Tuple[int, int, int]
 
@@ -81,26 +81,68 @@ class BucketController:
             ema_update(self._iter_ema, key, iter_time, self.iter_alpha)
 
     # -------------------------------------------------------------- scoring --
-    def score(self, bucket: Bucket, n_active: int = 1) -> float:
+    def score(self, bucket: Bucket, n_active: int = 1,
+              lane_cost: float = 0.0) -> float:
         """Estimated speedup of running `bucket` at the current occupancy.
 
         Profile mode predicts the cost at ``n_active`` explicitly. Online
         mode (no profile) scores AAL per observed second and necessarily
         ignores ``n_active`` — the iter-time EMA embeds the occupancy its
-        observations ran at (see the module docstring, item c)."""
+        observations ran at (see the module docstring, item c).
+
+        ``lane_cost`` is the emulated/profiled seconds the step will ALSO
+        spend on interleaved prefill chunks: a shared per-step tax that
+        dilutes every bucket's tokens-per-second, but dilutes a cheap
+        shallow step proportionally more than an expensive deep one — so
+        under prefill pressure the controller leans deep, amortizing the
+        lane over more accepted tokens per dispatch."""
         aal = self.aal.estimate(bucket.key())
         if self.profile is not None:
-            return speedup_objective(self.profile, aal, bucket.depth,
-                                     bucket.width, bucket.verify,
-                                     batch=max(1, n_active))
+            s = speedup_objective(self.profile, aal, bucket.depth,
+                                  bucket.width, bucket.verify,
+                                  batch=max(1, n_active))
+            if lane_cost > 0.0:
+                t = step_latency(self.profile, bucket.depth, bucket.width,
+                                 bucket.verify, batch=max(1, n_active))
+                s *= t / (t + lane_cost)
+            return s
         t = self._iter_ema.get(bucket.key())
         if t is None:
             return float("inf")     # unvisited: explore it once
-        return aal / t
+        return aal / (t + max(0.0, lane_cost))
 
-    def choose(self, n_active: int = 1) -> Bucket:
+    def prefill_budget(self, n_active: int, pool: int,
+                       chunks: Sequence[int]) -> int:
+        """Token budget for the interleaved prefill lane this step.
+
+        With a latency profile the budget is priced against the decode work
+        it taxes: the lane may spend a fraction of the incumbent bucket's
+        step latency that scales with pool idleness (25% under a full pool —
+        prefill must not starve, or admissions never finish — up to 125%
+        when the pool sits empty and decode has nothing better to do). The
+        largest configured chunk whose verifier cost fits that allowance
+        wins; the smallest chunk is the floor, so prefill always advances.
+
+        Without a profile there is nothing to price against, so the policy
+        degenerates to the same shape: drain fast while slots idle, trickle
+        at minimum width once the pool is busy."""
+        chunks = sorted(int(c) for c in chunks)
+        if not chunks:
+            return 0
+        if self.profile is None:
+            return chunks[-1] if n_active < pool else chunks[0]
+        cur = self.current if self.current is not None else self.ladder[0]
+        t_step = step_latency(self.profile, cur.depth, cur.width, cur.verify,
+                              batch=max(1, n_active))
+        idle_frac = 1.0 - n_active / max(1, pool)
+        allow = t_step * (0.25 + idle_frac)
+        fit = [c for c in chunks if self.profile.t_verify(c) <= allow]
+        return fit[-1] if fit else chunks[0]
+
+    def choose(self, n_active: int = 1, lane_cost: float = 0.0) -> Bucket:
         """Bucket for the next megastep, with hysteresis on the incumbent."""
-        scores = {b.key(): self.score(b, n_active) for b in self.ladder}
+        scores = {b.key(): self.score(b, n_active, lane_cost)
+                  for b in self.ladder}
         best = max(self.ladder, key=lambda b: scores[b.key()])  # first wins ties
         if self.current is None:
             self.current, self._dwell = best, 0

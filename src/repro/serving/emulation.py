@@ -49,12 +49,23 @@ def charged_step(server: ContinuousServer, profile: LatencyProfile,
     by the max (not the sum) of concurrent replica step costs."""
     adm0, steps0 = server.metrics.admissions, server.metrics.steps
     finished = server.step()
-    n_adm = server.metrics.admissions - adm0
-    prefill_cost = profile.t_verify(server.prompt_pad)
-    cost = n_adm * prefill_cost
-    if server._defer_timing:
-        for _ in range(n_adm):
-            server.observe_prefill(prefill_cost)
+    if getattr(server, "chunked", False):
+        # chunked prefill: the lane's actual chunk widths are the prefill
+        # work this step did — a short prompt is charged short chunks, not
+        # one prompt-pad-width verifier call per admission
+        cost = 0.0
+        for c in server._last_chunks:
+            chunk_cost = profile.t_verify(c)
+            cost += chunk_cost
+            if server._defer_timing:
+                server.observe_prefill(chunk_cost)
+    else:
+        n_adm = server.metrics.admissions - adm0
+        prefill_cost = profile.t_verify(server.prompt_pad)
+        cost = n_adm * prefill_cost
+        if server._defer_timing:
+            for _ in range(n_adm):
+                server.observe_prefill(prefill_cost)
     if server.metrics.steps > steps0:
         d, w, v = server.metrics.bucket_history[-1]
         n_active = int(round(server.metrics.occupancy[-1]

@@ -1,0 +1,444 @@
+"""Chunked prefill: token-exactness vs monolithic prefill (engine- and
+server-level, truncation and fused-kernel parity included), the
+zero-recompile contract across chunk-count churn and bucket switches, the
+head-of-line-stall win on an emulated clock, EOS-at-root retirement, the
+controller's prefill-budget/lane-cost pricing, and the ServeConfig surface.
+"""
+import numpy as np
+import pytest
+
+from repro.core.buckets import buckets_for_depths
+from repro.core.egt import egt_spec
+from repro.core.engine import EngineConfig, SpeculativeEngine
+from repro.core.objective import LatencyProfile
+from repro.serving.config import ServeConfig
+from repro.serving.continuous import ContinuousServer
+from repro.serving.controller import BucketController
+from repro.serving.emulation import drive_trace
+from repro.serving.server import Request
+from repro.serving.testbed import Testbed, TestbedSpec, build_testbed
+
+SPEC, VERIFY_V = egt_spec(3, 2), 5
+CHUNKS = (4, 8)
+
+
+@pytest.fixture(scope="module")
+def tb() -> Testbed:
+    return build_testbed(TestbedSpec(train_steps=160))
+
+
+def _engine(tb, depths=(3,), **cfg_kw) -> SpeculativeEngine:
+    return SpeculativeEngine(tb.drafter, tb.d_params, tb.verifier,
+                             tb.v_params,
+                             buckets=buckets_for_depths(depths, width=2,
+                                                        verify_frac=0.75),
+                             depth_options=depths,
+                             config=EngineConfig(**cfg_kw))
+
+
+def _chunked_prefill(eng, state, slot, prompt, chunk_len):
+    """Feed `prompt` into `slot` through the chunk executable, the way the
+    serving lane does (fixed width, right-padded tail, final flag)."""
+    plen, pos = len(prompt), 0
+    while pos < plen:
+        valid = min(chunk_len, plen - pos)
+        chunk = np.zeros(chunk_len, np.int32)
+        chunk[:valid] = prompt[pos:pos + valid]
+        state = eng.prefill_chunk_into_slot(state, slot, chunk, pos, valid,
+                                            pos + valid >= plen)
+        pos += valid
+    return state
+
+
+def _prompt(tb, n, seed=0):
+    rng = np.random.default_rng(seed)
+    return rng.integers(1, tb.spec.vocab, size=n).astype(np.int32)
+
+
+def _decode_tokens(eng, state, slot, steps=4):
+    out = []
+    for _ in range(steps):
+        state, res = eng.decode_step(state, spec=SPEC, verify_v=VERIFY_V)
+        t = res.tokens[slot]
+        out.extend(t[t >= 0].tolist())
+    return state, out
+
+
+# ------------------------------------------------- engine-level exactness --
+@pytest.mark.parametrize("chunk_len", [4, 5, 8, 16])
+def test_chunked_prefill_token_exact(tb, chunk_len):
+    """Chunked prefill must reproduce monolithic prefill EXACTLY: same root
+    token and same greedy decode continuation, for chunk widths that divide
+    the prompt, straddle it, and swallow it whole (prompt length 13)."""
+    prompt = _prompt(tb, 13, seed=0)
+    pad = np.zeros(16, np.int32)
+    pad[:13] = prompt
+
+    eng_m = _engine(tb)
+    st_m = eng_m.init_decode_state(2)
+    st_m = eng_m.prefill_into_slot(st_m, 1, pad, 13)
+
+    eng_c = _engine(tb)
+    st_c = eng_c.init_decode_state(2)
+    st_c = _chunked_prefill(eng_c, st_c, 1, prompt, chunk_len)
+
+    assert int(np.asarray(st_c.root)[1]) == int(np.asarray(st_m.root)[1])
+    assert st_c.produced[1] == st_m.produced[1] == 1
+    # committed lengths agree with the prompt length on both paths
+    assert int(eng_c.slot_lengths(st_c)[1]) == 13
+    assert int(eng_m.slot_lengths(st_m)[1]) == 13
+    _, toks_m = _decode_tokens(eng_m, st_m, 1)
+    _, toks_c = _decode_tokens(eng_c, st_c, 1)
+    assert toks_c == toks_m
+
+
+def test_chunk_interleaved_with_decode_is_exact(tb):
+    """The serving regime: decode megasteps RUN between chunks (mid-prefill
+    slots produce garbage on the batched step). The garbage must be
+    invisible — same root and continuation as an uninterrupted prefill."""
+    prompt = _prompt(tb, 11, seed=4)
+    other = _prompt(tb, 8, seed=5)
+
+    eng_m = _engine(tb)
+    st_m = eng_m.init_decode_state(2)
+    pad_o = np.zeros(16, np.int32)
+    pad_o[:8] = other
+    st_m = eng_m.prefill_into_slot(st_m, 0, pad_o, 8)
+    pad_p = np.zeros(16, np.int32)
+    pad_p[:11] = prompt
+    st_m = eng_m.prefill_into_slot(st_m, 1, pad_p, 11)
+    _, ref = _decode_tokens(eng_m, st_m, 1, steps=3)
+
+    eng_c = _engine(tb)
+    st_c = eng_c.init_decode_state(2)
+    st_c = eng_c.prefill_into_slot(st_c, 0, pad_o, 8)
+    pos = 0
+    C = 4
+    while pos < 11:
+        valid = min(C, 11 - pos)
+        chunk = np.zeros(C, np.int32)
+        chunk[:valid] = prompt[pos:pos + valid]
+        st_c = eng_c.prefill_chunk_into_slot(st_c, 1, chunk, pos, valid,
+                                             pos + valid >= 11)
+        pos += valid
+        if pos < 11:
+            # a full-batch megastep runs between chunks: slot 1 is garbage,
+            # but slot 0 keeps decoding real tokens — and slot 1's next
+            # chunk must re-pin its length and overwrite the garbage
+            st_c, _ = eng_c.decode_step(st_c, spec=SPEC,
+                                        verify_v=VERIFY_V)
+    assert int(np.asarray(st_c.root)[1]) == int(np.asarray(st_m.root)[1])
+    # re-pinning erased the garbage drift for the freshly-prefilled slot
+    assert int(eng_c.slot_lengths(st_c)[1]) == 11
+    _, toks = _decode_tokens(eng_c, st_c, 1, steps=3)
+    assert toks == ref
+
+
+def test_chunk_executable_input_validation(tb):
+    eng = _engine(tb)
+    st = eng.init_decode_state(2)
+    with pytest.raises(ValueError, match="outside the chunk width"):
+        eng.prefill_chunk_into_slot(st, 0, np.zeros(4, np.int32), 0, 5, True)
+    with pytest.raises(ValueError, match="overflows"):
+        eng.prefill_chunk_into_slot(st, 0, np.zeros(4, np.int32), -1, 2,
+                                    False)
+    with pytest.raises(ValueError, match="overflows"):
+        eng.prefill_chunk_into_slot(st, 0, np.zeros(4, np.int32),
+                                    eng.cfg.max_target_len - 1, 4, True)
+
+
+# -------------------------------------------- truncated-prompt agreement --
+def test_monolithic_prefill_rejects_length_past_pad(tb):
+    """Bug sweep: the scalar-prefetched `lengths` driving fused-kernel
+    kv-block skipping derive from the prefill `length` — a length past the
+    padded token extent must be rejected, not silently committed."""
+    eng = _engine(tb)
+    st = eng.init_decode_state(2)
+    with pytest.raises(ValueError, match="disagrees"):
+        eng.prefill_into_slot(st, 0, np.zeros(8, np.int32), 9)
+    with pytest.raises(ValueError, match="disagrees"):
+        eng.prefill_into_slot(st, 0, np.zeros(8, np.int32), -1)
+
+
+@pytest.mark.parametrize("kernel", ["xla", "fused"])
+def test_truncated_prompt_length_agreement(tb, kernel):
+    """A prompt longer than prompt_pad is truncated at admission: the
+    prefill length, the host mirror `_slot_len`, and the device `length`
+    feeding the fused kernel's kv-block skipping must all agree — and the
+    truncated request must decode token-identically to submitting the
+    pre-truncated prompt, on the XLA and fused verify paths alike."""
+    pad = 12
+    long_prompt = _prompt(tb, 20, seed=7)
+
+    def serve(prompt, chunks):
+        eng = _engine(tb, verify_kernel=kernel)
+        srv = ContinuousServer(eng, batch_size=2, prompt_pad=pad,
+                               spec=SPEC, verify_v=VERIFY_V,
+                               prefill_chunks=chunks)
+        srv.warmup()
+        srv.submit(Request(uid=0, prompt=prompt.copy(), max_new=8))
+        srv.serve()
+        return srv
+
+    srv_t = serve(long_prompt, CHUNKS)            # truncated in pad_prompt
+    srv_p = serve(long_prompt[:pad], CHUNKS)      # pre-truncated by hand
+    srv_m = serve(long_prompt, None)              # monolithic reference
+    assert srv_t.metrics.truncated_prompts == 1
+    assert srv_t.done[0].truncated
+    for other in (srv_p, srv_m):
+        np.testing.assert_array_equal(srv_t.done[0].result,
+                                      other.done[0].result)
+    # three-way length agreement at drain: host mirror == device length,
+    # and both track prompt_pad + generated, never the raw prompt length
+    np.testing.assert_array_equal(
+        srv_t._slot_len, np.asarray(srv_t.engine.slot_lengths(srv_t.state)))
+    assert srv_t.metrics.recompiles_after_warmup == 0
+
+
+# --------------------------------------------------- executable-cache keys --
+def _flatten_key(k):
+    if isinstance(k, tuple):
+        for x in k:
+            yield from _flatten_key(x)
+    else:
+        yield k
+
+
+def test_step_cache_keys_are_float_free(tb):
+    """Bug sweep: float-bearing executable-cache keys (a raw temperature)
+    let near-equal floats mint duplicate executables and skew
+    executable_count(), the honest recompile signal. Every key must reduce
+    to ints/strings/bools/specs — and chunk keys are (kind, chunk_len)
+    ONLY, so chunk-count churn can never widen the cache."""
+    eng = _engine(tb, temperature=0.7)
+    st = eng.init_decode_state(2)
+    st = eng.prefill_into_slot(st, 0, np.zeros(8, np.int32), 4)
+    st = _chunked_prefill(eng, st, 1, _prompt(tb, 6, seed=2), 4)
+    st, _ = eng.decode_step(st, spec=SPEC, verify_v=VERIFY_V)
+    assert eng._step_cache, "nothing compiled?"
+    for key in eng._step_cache:
+        for leaf in _flatten_key(key):
+            assert not isinstance(leaf, float), (
+                f"float {leaf!r} in executable-cache key {key!r}")
+    chunk_keys = [k for k in eng._step_cache
+                  if k[0] == "slot_prefill_chunk"]
+    assert chunk_keys == [("slot_prefill_chunk", 4)]
+
+
+def test_equal_temperatures_share_executables(tb):
+    """0.7 vs 0.7 + 0.0 must map to the SAME cache key (config identity,
+    not float identity)."""
+    e1 = _engine(tb, temperature=0.7)
+    e2 = _engine(tb, temperature=0.7 + 0.0)
+    assert e1._cfg_key == e2._cfg_key
+    e3 = _engine(tb, temperature=0.0)
+    assert e3._cfg_key != e1._cfg_key
+    assert "greedy" in e3._cfg_key
+
+
+# ------------------------------------------------- zero-recompile contract --
+def test_zero_recompiles_across_chunk_churn_and_bucket_switches(tb):
+    """Chunk-count churn (prompt lengths from 3 to 16 → 1..4 chunks per
+    admission), slot churn (6 requests through 2 slots) and bucket switches
+    must all replay warmup-compiled executables."""
+    depths = (2, 3)
+    eng = _engine(tb, depths=depths)
+    ladder = buckets_for_depths(depths, width=2, verify_frac=0.75)
+    srv = ContinuousServer(eng, batch_size=2, prompt_pad=16, buckets=ladder,
+                           prefill_chunks=CHUNKS)
+    srv.warmup()
+    exec_after_warmup = eng.executable_count()
+    rng = np.random.default_rng(9)
+    for uid in range(6):
+        plen = int(rng.integers(3, 17))
+        srv.submit(Request(uid=uid, prompt=_prompt(tb, plen, seed=20 + uid),
+                           max_new=int(rng.integers(4, 10))))
+    srv.serve()
+    assert srv.metrics.completed == 6
+    assert srv.metrics.prefill_chunks > 0
+    assert srv.metrics.recompiles_after_warmup == 0
+    # drive BOTH warmed buckets explicitly — a bucket switch replays a
+    # cached executable, it never compiles
+    st = srv.state
+    for b in ladder:
+        st, _ = eng.decode_step(st, spec=egt_spec(b.depth, b.width),
+                                verify_v=b.verify)
+    # and one more chunk after all that churn
+    st = _chunked_prefill(eng, st, 0, _prompt(tb, 5, seed=99), 4)
+    assert eng.executable_count() == exec_after_warmup
+
+
+# ------------------------------------------------ server-level equivalence --
+def test_server_chunked_matches_monolithic(tb):
+    """One request set drained through a chunked and a monolithic server:
+    identical token streams, zero recompiles, exact host/device length
+    agreement at drain."""
+    rng = np.random.default_rng(1)
+    prompts = [_prompt(tb, int(n), seed=50 + i)
+               for i, n in enumerate(rng.integers(4, 15, size=5))]
+
+    def drain(chunks):
+        eng = _engine(tb)
+        srv = ContinuousServer(eng, batch_size=2, prompt_pad=16,
+                               spec=SPEC, verify_v=VERIFY_V,
+                               prefill_chunks=chunks)
+        srv.warmup()
+        for uid, p in enumerate(prompts):
+            srv.submit(Request(uid=uid, prompt=p.copy(), max_new=10))
+        srv.serve()
+        return srv
+
+    mono, chunk = drain(None), drain(CHUNKS)
+    assert set(mono.done) == set(chunk.done)
+    for uid in mono.done:
+        np.testing.assert_array_equal(
+            chunk.done[uid].result, mono.done[uid].result,
+            err_msg=f"chunked diverged from monolithic for uid {uid}")
+    assert chunk.metrics.recompiles_after_warmup == 0
+    assert chunk.metrics.prefill_chunks > 0
+    assert chunk.metrics.prefill_chunk_tokens >= sum(len(p) for p in prompts)
+    np.testing.assert_array_equal(
+        chunk._slot_len, np.asarray(chunk.engine.slot_lengths(chunk.state)))
+
+
+def test_eos_at_root_retires_with_one_token_chunked_and_monolithic(tb):
+    """Bug sweep (real engine): a request whose FIRST sampled token is EOS
+    retires with exactly one delivered token on both prefill paths — in
+    the chunked case the root is credited at final-chunk completion, the
+    exact seam where the token could have been dropped."""
+    prompt = _prompt(tb, 9, seed=3)
+    eng = _engine(tb)
+    st = eng.init_decode_state(1)
+    pad = np.zeros(16, np.int32)
+    pad[:9] = prompt
+    st = eng.prefill_into_slot(st, 0, pad, 9)
+    first_tok = int(np.asarray(st.root)[0])
+
+    for chunks in (None, CHUNKS):
+        srv = ContinuousServer(_engine(tb), batch_size=2, prompt_pad=16,
+                               spec=SPEC, verify_v=VERIFY_V,
+                               prefill_chunks=chunks, eos_id=first_tok)
+        srv.warmup()
+        streamed = []
+        srv.submit(Request(uid=0, prompt=prompt.copy(), max_new=10,
+                           stream=lambda u, t: streamed.extend(t.tolist())))
+        srv.serve(max_steps=20)
+        assert 0 in srv.done, f"chunks={chunks}: did not retire"
+        np.testing.assert_array_equal(srv.done[0].result, [first_tok])
+        assert srv.done[0].stats["tokens"] == 1
+        assert streamed == [first_tok]
+        assert srv.slots[0] is None
+
+
+# --------------------------------------------- emulated-clock interleaving --
+def _profile() -> LatencyProfile:
+    return LatencyProfile.synthetic(base_verify=1.0, slope=1.0,
+                                    draft_frac=0.1, saturate_at=16,
+                                    overhead=0.2)
+
+
+def test_interleaving_beats_stall_on_emulated_clock(tb):
+    """The tentpole economics, deterministically: on a bimodal short/long
+    prompt trace the monolithic path charges every admission one
+    prompt-pad-width verifier call (the head-of-line stall), the chunked
+    lane charges the chunk widths it actually ran — strictly better p95
+    AND makespan at identical token output."""
+    profile = _profile()
+    pad = 32
+    rng = np.random.default_rng(13)
+    arrivals = np.cumsum(rng.exponential(2.0, size=8))
+    prompts = [_prompt(tb, 6 if rng.random() < 0.7 else 28, seed=60 + i)
+               for i in range(8)]
+
+    def drive(chunks):
+        eng = SpeculativeEngine(
+            tb.drafter, tb.d_params, tb.verifier, tb.v_params,
+            profile=profile,
+            buckets=buckets_for_depths((3,), width=2, verify_frac=0.75),
+            depth_options=(3,), config=EngineConfig())
+        srv = ContinuousServer(eng, batch_size=2, prompt_pad=pad,
+                               spec=SPEC, verify_v=VERIFY_V,
+                               prefill_chunks=chunks)
+        trace = [(float(arrivals[i]),
+                  Request(uid=i, prompt=prompts[i].copy(), max_new=8))
+                 for i in range(8)]
+        emu = drive_trace(srv, trace, profile)
+        lat = np.asarray(list(emu["latencies_s"].values()))
+        return srv, float(np.percentile(lat, 95)), emu["makespan_s"]
+
+    srv_m, p95_m, span_m = drive(None)
+    srv_c, p95_c, span_c = drive(CHUNKS)
+    assert srv_c.metrics.tokens_out == srv_m.metrics.tokens_out
+    assert p95_c < p95_m, (p95_c, p95_m)
+    assert span_c < span_m, (span_c, span_m)
+    assert srv_c.metrics.recompiles_after_warmup == 0
+    # the lane padded the tail, so chunk tokens >= real prompt tokens
+    assert (srv_c.metrics.prefill_chunk_tokens
+            >= sum(len(p) for p in prompts))
+
+
+# ----------------------------------------------------- controller pricing --
+def test_controller_prefill_budget_prices_occupancy():
+    ladder = buckets_for_depths((2, 4), width=2, verify_frac=0.75)
+    chunks = (8, 16, 32)
+    # no profile: drain fast while slots idle, trickle at minimum width once
+    # the pool is busy
+    ctl = BucketController(ladder)
+    assert ctl.prefill_budget(0, 4, chunks) == 32
+    assert ctl.prefill_budget(4, 4, chunks) == 8
+    # profile mode: budget is monotone non-increasing in occupancy and
+    # always one of the configured widths
+    ctl_p = BucketController(ladder, profile=_profile())
+    budgets = [ctl_p.prefill_budget(n, 4, chunks) for n in range(5)]
+    assert all(b in chunks for b in budgets)
+    assert all(a >= b for a, b in zip(budgets, budgets[1:])), budgets
+    assert ctl_p.prefill_budget(0, 4, chunks) >= ctl_p.prefill_budget(
+        4, 4, chunks)
+    assert BucketController(ladder).prefill_budget(0, 4, ()) == 0
+
+
+def test_controller_lane_cost_leans_deep():
+    """A shared per-step lane tax dilutes a cheap shallow step more than an
+    expensive deep one: the shallow bucket's score must drop by a larger
+    factor, and choose() must accept the lane_cost keyword."""
+    ladder = buckets_for_depths((2, 8), width=2, verify_frac=0.75)
+    ctl = BucketController(ladder, profile=_profile())
+    shallow, deep = ladder
+    lane = 5.0
+    ratio_shallow = (ctl.score(shallow, 1, lane_cost=lane)
+                     / ctl.score(shallow, 1))
+    ratio_deep = ctl.score(deep, 1, lane_cost=lane) / ctl.score(deep, 1)
+    assert ratio_shallow < ratio_deep < 1.0
+    assert ctl.choose(n_active=1, lane_cost=lane) in ladder
+    # online mode (no profile): lane cost still taxes the denominator
+    ctl_o = BucketController(ladder)
+    ctl_o.seed_iter_times({shallow.key(): 1.0, deep.key(): 4.0})
+    assert (ctl_o.score(shallow, 1, lane_cost=2.0)
+            < ctl_o.score(shallow, 1))
+
+
+# ------------------------------------------------------------ ServeConfig --
+def test_serveconfig_chunk_fields_roundtrip():
+    cfg = ServeConfig(server="continuous", prefill_chunk="16,8",
+                      prefill_budget=16)
+    assert cfg.chunk_lens() == (8, 16)
+    assert ServeConfig.parse(cfg.to_argv()) == cfg
+    assert ServeConfig.from_json(cfg.to_json()) == cfg
+    assert ServeConfig().chunk_lens() == ()    # default: chunking off
+    with pytest.raises(ValueError, match="comma-separated ints"):
+        ServeConfig(prefill_chunk="8,x")
+    with pytest.raises(ValueError, match=">= 1"):
+        ServeConfig(prefill_chunk="0,8")
+    with pytest.raises(ValueError, match=">= 0"):
+        ServeConfig(prefill_budget=-1)
+
+
+def test_serveconfig_builds_chunked_server(tb):
+    cfg = ServeConfig(server="continuous", batch=2, prompt_pad=16,
+                      depth=3, prefill_chunk="4,8", train_steps=160)
+    eng = _engine(tb)
+    srv = cfg.build_server(eng)
+    assert srv.chunked and srv.prefill_chunks == (4, 8)
+    cfg_off = ServeConfig(server="continuous", batch=2, prompt_pad=16,
+                          depth=3, train_steps=160)
+    assert not cfg_off.build_server(_engine(tb)).chunked

@@ -151,6 +151,27 @@ def test_credit_retires_on_eos():
     assert srv.metrics.tokens_out == 3               # post-EOS token dropped
 
 
+def test_eos_at_root_retires_at_admission_with_one_token():
+    """Bug sweep: a request whose FIRST sampled token (the prefill root,
+    credited at admission) is EOS must retire immediately with exactly one
+    delivered token — streamed, counted, slot freed in the same call. The
+    fake engine's roots are all zeros, so eos_id=0 makes every admission
+    hit this path."""
+    srv = _server(eos_id=0)
+    streamed = []
+    req = Request(uid=3, prompt=np.array([1, 2, 3]), max_new=10,
+                  stream=lambda uid, toks: streamed.extend(toks.tolist()))
+    srv.submit(req)
+    srv._admit()
+    assert srv.slots[0] is None                 # slot freed same call
+    assert 3 in srv.done
+    np.testing.assert_array_equal(srv.done[3].result, [0])  # exactly the EOS
+    assert srv.done[3].stats["tokens"] == 1
+    assert streamed == [0]                      # delivered to the stream too
+    assert srv.metrics.completed == 1
+    assert srv.metrics.tokens_out == 1
+
+
 def test_credit_retires_on_budget():
     srv = _server()
     _occupy(srv, 0, max_new=4)

@@ -9,8 +9,8 @@ from pathlib import Path
 
 import pytest
 
-from benchmarks.check_regression import (compare, extract_baseline, lookup,
-                                         main)
+from benchmarks.check_regression import (GATE_RTOL, compare, extract_baseline,
+                                         lookup, main)
 
 GOOD_CURRENT = {
     "servers": {"rate_4hz": {"continuous": {"throughput_tok_s": 999.0,
@@ -50,6 +50,20 @@ GOOD_CURRENT = {
                 "0": {"recompiles_after_warmup": 0},
                 "1": {"recompiles_after_warmup": 0},
             }},
+        },
+    },
+    "chunked_prefill_sweep": {
+        "token_exact": 1.0,
+        "p95_speedup": 6.3,
+        "p99_speedup": 6.2,
+        "throughput_ratio": 5.2,
+        "monolithic": {"throughput_tok_s": 0.3,
+                       "recompiles_after_warmup": 0},
+        "chunked": {"throughput_tok_s": 1.5,
+                    "recompiles_after_warmup": 0},
+        "exactness_check": {
+            "monolithic": {"recompiles_after_warmup": 0},
+            "chunked": {"recompiles_after_warmup": 0},
         },
     },
 }
@@ -129,6 +143,63 @@ def test_gate_fails_on_frontend_hard_bounds():
         cur["frontend_sweep"][key] = bad
         fails = compare(_baseline(), cur)
         assert any(key in f and "hard bound" in f for f in fails), (key, fails)
+
+
+def test_gate_fails_on_chunked_prefill_hard_bounds():
+    """Chunked prefill's absolute contracts: greedy must stay token-exact,
+    and p95/throughput must strictly beat monolithic — landing AT 1.0
+    (or within float noise of it) is a loss, not a win."""
+    for key, bad in (("token_exact", 0.0),
+                     ("p95_speedup", 1.0),       # == 1 is NOT > 1
+                     ("p95_speedup", 0.7),
+                     ("throughput_ratio", 1.0)):
+        cur = copy.deepcopy(GOOD_CURRENT)
+        cur["chunked_prefill_sweep"][key] = bad
+        fails = compare(_baseline(), cur)
+        assert any(key in f and "hard bound" in f for f in fails), (key, fails)
+
+
+def test_gate_fails_on_chunked_p95_regression():
+    cur = copy.deepcopy(GOOD_CURRENT)
+    cur["chunked_prefill_sweep"]["p95_speedup"] = 4.0   # -36% vs baseline
+    assert any("p95_speedup" in f for f in compare(_baseline(), cur))
+
+
+def test_strict_op_tolerance_semantics():
+    """The defined float semantics of the hard-bound ops (GATE_RTOL band):
+
+      * "==" passes within the band — a token_exact of 1.0 reached through
+        float accumulation must not flap;
+      * ">" / "<" fail AT the bound and anywhere inside the band around it
+        (a margin of 1 + 1e-16 is rounding noise posing as a win), and pass
+        only with a real margin beyond the band.
+    """
+    def with_margin(m):
+        cur = copy.deepcopy(GOOD_CURRENT)
+        cur["frontend_sweep"]["router_over_single"] = m
+        return compare(_baseline(), cur)
+
+    # inside the tolerance band: all fail deterministically
+    for val in (1.0, 1.0 + 1e-16, 1.0 - 1e-16, 1.0 + GATE_RTOL / 2):
+        assert any("router_over_single" in f and "hard bound" in f
+                   for f in with_margin(val)), val
+    # real margin: passes (this is also the baseline's -10% window)
+    assert with_margin(1.7) == []
+
+    # "==" tolerates accumulated float noise but not real deviations
+    for val, ok in ((1.0, True), (1.0 - 1e-12, True), (0.98, False)):
+        cur = copy.deepcopy(GOOD_CURRENT)
+        cur["telemetry"]["token_exact"] = val
+        fails = [f for f in compare(_baseline(), cur) if "token_exact" in f]
+        assert (fails == []) is ok, (val, fails)
+
+    # "<" fails at the bound, passes strictly below the band
+    for val, ok in ((0.02, False), (0.02 - 1e-15, False), (0.004, True)):
+        cur = copy.deepcopy(GOOD_CURRENT)
+        cur["telemetry"]["overhead_frac"] = val
+        fails = [f for f in compare(_baseline(), cur)
+                 if "overhead_frac" in f]
+        assert (fails == []) is ok, (val, fails)
 
 
 def test_gate_fails_on_replica_recompiles():
