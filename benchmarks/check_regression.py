@@ -61,6 +61,11 @@ GATED_METRICS: Tuple[Tuple[str, str], ...] = (
     ("chunked_prefill_sweep.chunked.throughput_tok_s", "higher"),
     ("chunked_prefill_sweep.p95_speedup", "higher"),
     ("chunked_prefill_sweep.p99_speedup", "higher"),
+    # paged KV cache on the shared-prefix trace (emulated clock,
+    # deterministic): the prefix store must keep hitting and the paged
+    # pool's high-water usage must stay far under the contiguous pin
+    ("paged_sweep.prefix_hit_rate", "higher"),
+    ("paged_sweep.slots_at_fixed_hbm_ratio", "higher"),
 )
 DEFAULT_THRESHOLD = 0.10
 
@@ -99,6 +104,13 @@ HARD_BOUNDS: Tuple[Tuple[str, str, float], ...] = (
     ("chunked_prefill_sweep.token_exact", "==", 1.0),
     ("chunked_prefill_sweep.p95_speedup", ">", 1.0),
     ("chunked_prefill_sweep.throughput_ratio", ">", 1.0),
+    # paged KV cache: greedy decode must be token-exact vs the contiguous
+    # layout, the prefix store must actually skip prefill work, and the
+    # pool's high-water bytes must fit >1.5x more slots than the
+    # contiguous layout pins into the same HBM
+    ("paged_sweep.token_exact", "==", 1.0),
+    ("paged_sweep.prefix_hit_rate", ">", 0.0),
+    ("paged_sweep.slots_at_fixed_hbm_ratio", ">", 1.5),
 )
 
 

@@ -85,13 +85,13 @@ def measure_profile(tb: Testbed, widths=(1, 2, 4, 8, 16, 32, 64),
     cached = load(cache_name)
     if cached is not None:
         return LatencyProfile(**cached)
-    from repro.models.cache import init_cache
+    from repro.models.cache import make_kv_cache
 
     def bench_model(model, params) -> List[float]:
         times = []
         B, L = 2, 256
         prompt, lengths = prompts_for(tb)
-        cache = init_cache(model.cfg, B, L)
+        cache = make_kv_cache(model.cfg).init(B, L)
         _, cache, _ = model.prefill(params, prompt, lengths, cache)
         for w in widths:
             toks = jnp.zeros((B, w), jnp.int32)

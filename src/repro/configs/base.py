@@ -88,6 +88,12 @@ class ModelConfig:
                                    # oracle path, "auto" = fused on an
                                    # accelerator backend, xla on CPU (where
                                    # the kernel would run interpreted)
+    cache_layout: str = "contiguous"  # decode-cache storage: "contiguous"
+                                   # per-slot [B, max_len, KV, dh] rows, or
+                                   # "paged" fixed page pool + per-slot page
+                                   # table (see repro.models.cache)
+    page_len: int = 64             # tokens per pool page (paged layout);
+                                   # must divide the engine max_target_len
     attn_chunk: int = 512          # flash prefill query/kv block
     loss_chunk: int = 512          # chunked cross-entropy sequence block
     vocab_pad_to: int = 1          # pad vocab to a multiple (256 for dry-run)

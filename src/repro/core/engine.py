@@ -57,7 +57,7 @@ from repro.core.egt import DraftSpec, draft_tree, egt_spec
 from repro.core.objective import LatencyProfile
 from repro.core.tree import ancestor_paths
 from repro.models import cache as cache_lib
-from repro.models.cache import init_cache, place_cache
+from repro.models.cache import PageState, place_cache
 from repro.models.model import Model
 from repro.quant import QuantConfig, dequant_params, quantize_params
 from repro.sharding import specs as sharding
@@ -78,6 +78,15 @@ class EngineConfig:
                                    # length-aware Pallas kernel) | "xla"
                                    # (einsum oracle) | "auto"; None keeps
                                    # each ModelConfig's own setting
+    cache_layout: Optional[str] = None  # override BOTH models' decode-cache
+                                   # storage: "contiguous" | "paged" (page
+                                   # pool + per-slot table with cross-request
+                                   # prefix sharing); None keeps each
+                                   # ModelConfig's own setting
+    page_len: Optional[int] = None  # tokens per pool page (paged layout);
+                                   # must divide max_target_len
+    cache_pages: int = 0           # paged pool size in pages; 0 = full
+                                   # coverage (batch * pages_per_slot + 1)
 
     def resolve_accept(self) -> str:
         if self.accept_mode != "auto":
@@ -129,6 +138,8 @@ class DecodeState:
     h_last: jax.Array      # [B, d_verifier] hidden at the last confirmed token
     key: jax.Array
     produced: np.ndarray   # [B] int64 tokens emitted per slot (incl. root)
+    pages: Optional[PageState] = None  # host page allocator (paged layout);
+                                       # one instance shared by both caches
 
     @property
     def batch_size(self) -> int:
@@ -181,6 +192,31 @@ class SpeculativeEngine:
                 self.drafter = Model(drafter.cfg.replace(verify_kernel=vk))
             if verifier.cfg.verify_kernel != vk:
                 self.verifier = Model(verifier.cfg.replace(verify_kernel=vk))
+        cache_kw = {}
+        if self.cfg.cache_layout is not None:
+            cache_kw["cache_layout"] = self.cfg.cache_layout
+        if self.cfg.page_len is not None:
+            cache_kw["page_len"] = self.cfg.page_len
+        if cache_kw:
+            # cache layout is a runtime choice, not an architecture one: the
+            # engine stamps it into both model configs (same rebuild idiom as
+            # verify_kernel) so every cache op dispatches consistently
+            for attr in ("drafter", "verifier"):
+                m = getattr(self, attr)
+                if any(getattr(m.cfg, k) != v for k, v in cache_kw.items()):
+                    setattr(self, attr, Model(m.cfg.replace(**cache_kw)))
+        self.kv_d = cache_lib.make_kv_cache(self.drafter.cfg)
+        self.kv_v = cache_lib.make_kv_cache(self.verifier.cfg)
+        if self.kv_d.layout != self.kv_v.layout:
+            raise ValueError(
+                "drafter and verifier must share a cache layout "
+                f"({self.kv_d.layout} vs {self.kv_v.layout}) — they commit "
+                "identical positions and share one page table")
+        self.paged = self.kv_v.layout == "paged"
+        if self.paged and self.drafter.cfg.page_len != self.verifier.cfg.page_len:
+            raise ValueError("drafter and verifier must share page_len")
+        if self.paged:
+            self.kv_v.pages_per_slot(self.cfg.max_target_len)  # divisibility
         if mesh is not None:
             # tensor-parallel placement via the logical-axis rules; GQA archs
             # whose kv_heads don't divide the model axis fall back to
@@ -294,19 +330,41 @@ class SpeculativeEngine:
 
     # ------------------------------------------------------------- quant --
     def _kv_dtype(self):
-        """KV-cache storage dtype for init_cache (None = compute dtype)."""
+        """KV-cache storage dtype for KVCache.init (None = compute dtype)."""
         return jnp.int8 if self.cfg.quant.kv_int8 else None
 
-    def cache_bytes_per_slot(self) -> Dict[str, int]:
-        """Device bytes ONE decode slot pins in both caches at
-        ``max_target_len`` — the quantity serving capacity planning divides
-        an HBM budget by (see serving.continuous.slots_at_budget)."""
+    def cache_bytes_per_slot(self, live_tokens: Optional[int] = None
+                             ) -> Dict[str, int]:
+        """Device bytes ONE decode slot pins in both caches — the quantity
+        serving capacity planning divides an HBM budget by (see
+        serving.continuous.slots_at_budget).
+
+        Contiguous slots pin their full ``max_target_len`` row regardless of
+        occupancy. Paged slots pin only mapped pages, so the price is
+        ``ceil(live_tokens / page_len)`` pages (``live_tokens=None`` prices
+        worst case: full virtual coverage) plus the per-slot table row —
+        this repricing is where the paged layout's capacity win comes from.
+        """
         L = self.cfg.max_target_len
-        v = cache_lib.cache_nbytes(self.verifier.cfg, 1, L,
-                                   kv_dtype=self._kv_dtype())
-        d = cache_lib.cache_nbytes(self.drafter.cfg, 1, L,
-                                   kv_dtype=self._kv_dtype())
+        kv_dt = self._kv_dtype()
+        if self.paged:
+            t_rows = self.kv_v.pages_per_slot(L)
+            if live_tokens is None:
+                pages = t_rows
+            else:
+                pages = min(-(-int(live_tokens) // self.kv_v.page_len), t_rows)
+            row = 4 * t_rows + 4  # table row + length
+            v = pages * self.kv_v.page_nbytes(kv_dtype=kv_dt) + row
+            d = pages * self.kv_d.page_nbytes(kv_dtype=kv_dt) + row
+        else:
+            v = self.kv_v.nbytes(1, L, kv_dtype=kv_dt)
+            d = self.kv_d.nbytes(1, L, kv_dtype=kv_dt)
         return {"verifier": v, "drafter": d, "total": v + d}
+
+    def _n_pages(self, batch: int) -> int:
+        """Pool size for a batch-``batch`` paged decode state."""
+        return (self.cfg.cache_pages
+                or self.kv_v.default_pages(batch, self.cfg.max_target_len))
 
     def executable_count(self) -> int:
         """Total traced executables across the step cache — unlike
@@ -324,16 +382,21 @@ class SpeculativeEngine:
     # ------------------------------------------------------------ prefill --
     def prefill(self, tokens: jax.Array, lengths: jax.Array,
                 enc_feats: Optional[jax.Array] = None):
+        if self.paged:
+            raise NotImplementedError(
+                "batched prefill requires the contiguous layout — paged "
+                "serving admits through the stepwise slot API "
+                "(prefill_into_slot / prefill_chunk_into_slot)")
         B = tokens.shape[0]
         L = self.cfg.max_target_len
         kv_dt = self._kv_dtype()
         with self._ctx():
             tokens = self._put(jnp.asarray(tokens), "batch", None)
             lengths = self._put(jnp.asarray(lengths), "batch")
-            vcache = place_cache(init_cache(self.verifier.cfg, B, L,
-                                            kv_dtype=kv_dt), self.mesh)
-            dcache = place_cache(init_cache(self.drafter.cfg, B, L,
-                                            kv_dtype=kv_dt), self.mesh)
+            vcache = place_cache(self.kv_v.init(B, L, kv_dtype=kv_dt),
+                                 self.mesh)
+            dcache = place_cache(self.kv_d.init(B, L, kv_dtype=kv_dt),
+                                 self.mesh)
             # batch prefill runs eagerly (it always has), so in w8 mode this
             # dequant materializes a transient fp32 param copy for the call;
             # the hot paths — megastep, staged parts, slot prefill — all
@@ -355,21 +418,114 @@ class SpeculativeEngine:
     # ------------------------------------------------------ stepwise API --
     def init_decode_state(self, batch_size: int,
                           key: Optional[jax.Array] = None) -> DecodeState:
-        """Empty decode state: zeroed caches, no slot holds a request yet."""
+        """Empty decode state: zeroed caches, no slot holds a request yet.
+        Under the paged layout both caches share one pool geometry and one
+        host ``PageState`` (drafter and verifier commit identical
+        positions, so a single page table serves both pools)."""
         L = self.cfg.max_target_len
         kv_dt = self._kv_dtype()
+        pages = None
+        n_pages = self._n_pages(batch_size) if self.paged else 0
+        if self.paged:
+            pages = self.kv_v.make_page_state(batch_size, L, pages=n_pages)
         with self._ctx():
             return DecodeState(
-                dcache=place_cache(init_cache(self.drafter.cfg, batch_size, L,
-                                              kv_dtype=kv_dt), self.mesh),
-                vcache=place_cache(init_cache(self.verifier.cfg, batch_size, L,
-                                              kv_dtype=kv_dt), self.mesh),
+                dcache=place_cache(
+                    self.kv_d.init(batch_size, L, kv_dtype=kv_dt,
+                                   pages=n_pages), self.mesh),
+                vcache=place_cache(
+                    self.kv_v.init(batch_size, L, kv_dtype=kv_dt,
+                                   pages=n_pages), self.mesh),
                 root=self._put(jnp.zeros((batch_size,), jnp.int32), "batch"),
                 h_last=self._put(
                     jnp.zeros((batch_size, self.verifier.cfg.d_model),
                               jnp.float32), "batch", None),
                 key=key if key is not None else jax.random.PRNGKey(0),
-                produced=np.zeros((batch_size,), np.int64))
+                produced=np.zeros((batch_size,), np.int64),
+                pages=pages)
+
+    # ------------------------------------------------------- paged sync --
+    PAGE_CLEAR_CHUNK = 64  # fixed clear-executable width (static shape)
+
+    def _drain_page_clears(self, state: DecodeState) -> None:
+        """Run queued device pos-clears for freed pages — the device half of
+        the 'free pages are always clean' invariant. Must complete before a
+        recycled page's new mapping is dispatched; every paged dispatch
+        funnels through ``_paged_sync`` which calls this first. One fixed-
+        width executable (ids padded with the trash page, whose pos lanes
+        are clear-safe by construction), so drains never retrace."""
+        ps = state.pages
+        if not ps.pending_clear:
+            return
+        ck = ("page_clear",)
+        if ck not in self._step_cache:
+            def _clear(dc, vc, ids):
+                return (cache_lib.shard_cache(self.kv_d.clear_pages(dc, ids)),
+                        cache_lib.shard_cache(self.kv_v.clear_pages(vc, ids)))
+            self._step_cache[ck] = jax.jit(_clear, donate_argnums=(0, 1))
+            self._note_compile("page_clear")
+        fn = self._step_cache[ck]
+        todo, ps.pending_clear = ps.pending_clear, []
+        K = self.PAGE_CLEAR_CHUNK
+        with self._ctx():
+            for i in range(0, len(todo), K):
+                chunk = todo[i:i + K]
+                ids = np.full((K,), cache_lib.TRASH_PAGE, np.int32)
+                ids[:len(chunk)] = chunk
+                state.dcache, state.vcache = fn(state.dcache, state.vcache,
+                                                jnp.asarray(ids))
+
+    def _push_tables(self, state: DecodeState) -> None:
+        """Refresh the device page-table leaf of BOTH caches from the host
+        allocator. Two separate device arrays on purpose: the megastep
+        donates both cache pytrees, and a shared buffer would be donated
+        twice. Dict-level update — no executable, no retrace (the pytree
+        structure and the [B, T] shape never change)."""
+        ps = state.pages
+        tbl = np.ascontiguousarray(ps.table)
+        state.dcache = {**state.dcache,
+                        "table": self._put(jnp.asarray(tbl), "batch", None)}
+        state.vcache = {**state.vcache,
+                        "table": self._put(jnp.asarray(np.array(tbl)),
+                                           "batch", None)}
+
+    def _paged_sync(self, state: DecodeState, grow: int = 0) -> None:
+        """Pre-dispatch barrier for every paged executable: grow live
+        slots' mappings to cover the tokens the dispatch may commit
+        (``host_len + grow``), clear recycled pages, and mirror the table
+        to the device."""
+        ps = state.pages
+        if grow:
+            for b in range(ps.batch):
+                if ps.live[b]:
+                    ps.ensure(b, int(ps.host_len[b]) + grow)
+        self._drain_page_clears(state)
+        self._push_tables(state)
+
+    def adopt_prefix(self, state: DecodeState, slot: int,
+                     tokens: np.ndarray, length: int) -> int:
+        """Paged admission: map the longest resident shared-prefix pages
+        into (freshly reset) slot ``slot`` and return the hit length in
+        tokens — prefill then starts at ``hit`` instead of 0. Remembers the
+        prompt so the finishing prefill chunk can publish the slot's own
+        full pages to the ``PrefixStore``. Contiguous layout: no-op, 0.
+
+        A serving loop that chunks the prefill MUST call this immediately
+        before dispatching the slot's FIRST chunk (not earlier): until the
+        first chunk pins the slot's committed length past the shared rows,
+        an interleaved garbage megastep over the empty slot would write
+        positions 0.. straight into the shared pages.
+        """
+        if not self.paged:
+            return 0
+        ps = state.pages
+        if ps.mapped[slot] or ps.live[slot]:
+            ps.release(slot)  # stale mapping from an un-reset slot
+        toks = [int(t) for t in np.asarray(tokens).reshape(-1)[:int(length)]]
+        hit = ps.store.adopt(slot, toks)
+        ps.pending_prompt[slot] = toks
+        ps.host_len[slot] = hit
+        return hit
 
     def _build_slot_prefill(self):
         """One compiled executable that prefills a batch-1 prompt and
@@ -380,6 +536,10 @@ class SpeculativeEngine:
         if self.verifier.cfg.is_encoder_decoder:
             raise NotImplementedError(
                 "slot prefill does not support encoder-decoder models yet")
+        assert not self.paged, (
+            "monolithic slot prefill builds a private B=1 cache and cannot "
+            "target the shared page pool; paged prefill_into_slot routes "
+            "through the chunk executable instead")
         L = self.cfg.max_target_len
         kv_dt = self._kv_dtype()
 
@@ -387,14 +547,14 @@ class SpeculativeEngine:
                tokens, length, slot, key):
             d_params = dequant_params(d_params)
             v_params = dequant_params(v_params)
-            vc1 = init_cache(self.verifier.cfg, 1, L, kv_dtype=kv_dt)
-            dc1 = init_cache(self.drafter.cfg, 1, L, kv_dtype=kv_dt)
+            vc1 = self.kv_v.init(1, L, kv_dtype=kv_dt)
+            dc1 = self.kv_d.init(1, L, kv_dtype=kv_dt)
             v_logits, vc1, h1 = self.verifier.prefill(
                 v_params, tokens, length, vc1)
             _, dc1, _ = self.drafter.prefill(d_params, tokens, length, dc1)
             tok = self._sample(v_logits, key)
-            vcache = cache_lib.slot_update(vcache, slot, vc1)
-            dcache = cache_lib.slot_update(dcache, slot, dc1)
+            vcache = self.kv_v.merge_slot(vcache, slot, vc1)
+            dcache = self.kv_d.merge_slot(dcache, slot, dc1)
             root = jax.lax.dynamic_update_index_in_dim(root, tok[0], slot, 0)
             h_last = jax.lax.dynamic_update_index_in_dim(
                 h_last, h1[0].astype(h_last.dtype), slot, 0)
@@ -416,6 +576,18 @@ class SpeculativeEngine:
             # written token extent would make invisible garbage visible
             raise ValueError(f"prompt length {length} disagrees with the "
                              f"padded prompt width {pad}")
+        if self.paged:
+            # the shared pool can't be populated from a private B=1 cache;
+            # run the prompt as a single final chunk through the slot-view
+            # machinery, skipping any resident shared prefix. One executable
+            # per pad width, exactly like the monolithic path.
+            hit = self.adopt_prefix(state, slot, tokens, length)
+            chunk = np.zeros((pad,), np.int32)
+            valid = int(length) - hit
+            chunk[:valid] = np.asarray(tokens).reshape(-1)[hit:length]
+            return self.prefill_chunk_into_slot(state, slot, chunk,
+                                                start=hit, valid=valid,
+                                                final=True)
         tr = self._tracer()
         if tr is not None:
             tr.begin("slot_prefill", track="engine", slot=int(slot), pad=pad)
@@ -484,8 +656,8 @@ class SpeculativeEngine:
                chunk, start, valid, slot, is_final, key):
             d_params = dequant_params(d_params)
             v_params = dequant_params(v_params)
-            vc1 = cache_lib.slot_slice(vcache, slot)
-            dc1 = cache_lib.slot_slice(dcache, slot)
+            vc1 = self.kv_v.slot_view(vcache, slot)
+            dc1 = self.kv_d.slot_view(dcache, slot)
             start_b = jnp.reshape(start, (1,)).astype(jnp.int32)
             vc1 = {**vc1, "length": start_b}   # pin to the host cursor (see
             dc1 = {**dc1, "length": start_b}   # docstring: garbage decode)
@@ -496,8 +668,8 @@ class SpeculativeEngine:
             _, d_scratch, _ = self.drafter.tree_verify(
                 d_params, chunk, depths, amask, dc1)
             dc1 = self.drafter.commit(dc1, d_scratch, node_idx, valid_b)
-            vcache = cache_lib.slot_update(vcache, slot, vc1)
-            dcache = cache_lib.slot_update(dcache, slot, dc1)
+            vcache = self.kv_v.merge_slot(vcache, slot, vc1)
+            dcache = self.kv_d.merge_slot(dcache, slot, dc1)
             # the final chunk samples the slot's first output token from the
             # last VALID node's logits (a partial tail chunk pads past it;
             # padded nodes never feed anything — causal mask) and lands it
@@ -547,6 +719,10 @@ class SpeculativeEngine:
             self._step_cache[ck] = self._build_slot_prefill_chunk(C)
             self._note_compile("slot_prefill_chunk")
         fn = self._step_cache[ck]
+        if self.paged:
+            ps = state.pages
+            ps.ensure(slot, int(start) + int(valid))
+            self._paged_sync(state)
         key, sk = jax.random.split(state.key)
         with self._ctx():
             dcache, vcache, root, h_last = fn(
@@ -560,28 +736,45 @@ class SpeculativeEngine:
         produced = state.produced.copy()
         if final:
             produced[slot] = 1  # the root token is the slot's first output
-        return DecodeState(dcache, vcache, root, h_last, key, produced)
+        if self.paged:
+            ps.host_len[slot] = int(start) + int(valid)
+            if final:
+                ps.live[slot] = True
+                toks = ps.pending_prompt.pop(slot, None)
+                if toks is not None:
+                    ps.store.register(slot, toks)
+        return DecodeState(dcache, vcache, root, h_last, key, produced,
+                           pages=state.pages)
 
     def reset_state_slot(self, state: DecodeState, slot: int) -> DecodeState:
         """Clear batch slot `slot` of both caches (length 0, positions -1,
         SSM state zeroed) without touching the other slots. The emptied slot
         keeps decoding harmlessly (tree nodes always see themselves, so no
         all-masked attention rows); its output is garbage until the next
-        ``prefill_into_slot``. One compiled executable, slot index traced."""
+        ``prefill_into_slot``. One compiled executable, slot index traced.
+
+        Paged: the slot's pages are released on the host allocator first —
+        pages whose refcount drops to zero (not shared via the prefix
+        store) queue a device pos-clear that the same call drains — then
+        the executable zeroes the length and points the slot's table row at
+        the trash page."""
         ck = ("slot_reset",)
         if ck not in self._step_cache:
             def _reset(dc, vc, s):
-                return (cache_lib.shard_cache(cache_lib.reset_slot(dc, s)),
-                        cache_lib.shard_cache(cache_lib.reset_slot(vc, s)))
+                return (cache_lib.shard_cache(self.kv_d.reset_slot(dc, s)),
+                        cache_lib.shard_cache(self.kv_v.reset_slot(vc, s)))
             self._step_cache[ck] = jax.jit(_reset, donate_argnums=(0, 1))
             self._note_compile("slot_reset")
+        if self.paged:
+            state.pages.release(slot)
+            self._paged_sync(state)
         with self._ctx():
             dcache, vcache = self._step_cache[ck](
                 state.dcache, state.vcache, jnp.asarray(slot, jnp.int32))
         produced = state.produced.copy()
         produced[slot] = 0
         return DecodeState(dcache, vcache, state.root, state.h_last,
-                           state.key, produced)
+                           state.key, produced, pages=state.pages)
 
     def warmup_buckets(self, state: DecodeState,
                        buckets: Tuple[Bucket, ...],
@@ -612,6 +805,12 @@ class SpeculativeEngine:
             use_spec, use_v = spec, (verify_v or spec.num_nodes)
         else:
             use_spec, use_v = self._select(state.h_last)
+        if self.paged:
+            # live slots may commit up to depth+1 tokens this step: map the
+            # covering pages now (host allocator), clear recycled ones, and
+            # mirror the table. Parked/mid-prefill slots stay unmapped —
+            # their garbage writes land in the trash page.
+            self._paged_sync(state, grow=use_spec.depth + 1)
         key, sk = jax.random.split(state.key)
         tr = self._tracer()
         if tr is not None:
@@ -648,8 +847,11 @@ class SpeculativeEngine:
             a = int(alen_np[b])
             emit[b, : a - 1] = toks_np[b, 1: a]
             emit[b, a - 1] = bonus_np[b]
+        if self.paged:
+            live = state.pages.live
+            state.pages.host_len[live] += alen_np[live]
         new_state = DecodeState(dcache, vcache, bonus, h_last, key,
-                                state.produced + alen_np)
+                                state.produced + alen_np, pages=state.pages)
         res = StepResult(tokens=emit, accept_len=alen_np,
                          bucket=(use_spec.depth, use_spec.width, use_v),
                          iter_time=t1 - t0)
@@ -928,7 +1130,12 @@ def generate_autoregressive(model: Model, params, prompt: jax.Array,
     """Plain AR decoding baseline (one jitted decode step, replayed)."""
     key = key if key is not None else jax.random.PRNGKey(0)
     B = prompt.shape[0]
-    cache = init_cache(model.cfg, B, max_target_len)
+    kv = cache_lib.make_kv_cache(model.cfg)
+    if kv.layout != "contiguous":
+        raise NotImplementedError(
+            "the AR baseline decodes on a contiguous cache — paged storage "
+            "is a serving-runtime layout (stepwise slot API)")
+    cache = kv.init(B, max_target_len)
     logits, cache, _ = model.prefill(params, prompt, lengths, cache,
                                      enc_feats=enc_feats)
 

@@ -105,12 +105,12 @@ def measure_rank_accept(drafter, d_params, verifier, v_params, prompts,
     """
     import jax
     import jax.numpy as jnp
-    from repro.models.cache import init_cache
+    from repro.models.cache import make_kv_cache
 
     B = prompts.shape[0]
     L = int(lengths.max()) + iters + 8
-    vcache = init_cache(verifier.cfg, B, L)
-    dcache = init_cache(drafter.cfg, B, L)
+    vcache = make_kv_cache(verifier.cfg).init(B, L)
+    dcache = make_kv_cache(drafter.cfg).init(B, L)
     v_logits, vcache, _ = verifier.prefill(v_params, prompts, lengths, vcache)
     d_logits, dcache, _ = drafter.prefill(d_params, prompts, lengths, dcache)
 

@@ -114,6 +114,29 @@ def verify_attention(q, k, v, kv_pos, q_pos, lengths, k_new, v_new,
                                 interpret=_interpret())
 
 
+def verify_attention_paged(q, k, v, kv_pos, table, q_pos, lengths, k_new,
+                           v_new, tree_mask, *, k_scale=None, v_scale=None):
+    """Fused verify over a **paged** cache (see
+    tree_attention.verify_attention_paged for the full contract).
+
+    k/v: the shared page pool [P, page_len, KV, dh] (+ scales
+    [P, page_len, KV, G] when int8); kv_pos [P, page_len]; table [B, T]
+    per-slot page table. No padding path: the pool's page axis IS the block
+    axis (one page == one kv-block), so alignment is structural. The skip
+    granularity is page_len — small pages trade early-out precision against
+    grid length, exactly the contiguous block_s trade-off.
+    """
+    if (k_scale is None) != (v_scale is None):
+        raise ValueError("pass both k_scale and v_scale, or neither")
+    if k_scale is not None:
+        return _ta.verify_attention_paged_int8(
+            q, k, v, k_scale, v_scale, kv_pos, table, q_pos, lengths, k_new,
+            v_new, tree_mask, interpret=_interpret())
+    return _ta.verify_attention_paged(q, k, v, kv_pos, table, q_pos,
+                                      lengths, k_new, v_new, tree_mask,
+                                      interpret=_interpret())
+
+
 def flash_prefill(q, k, v, *, block_q: int = 256, block_k: int = 256):
     """Causal flash attention with wedge skipping (see flash_prefill.py).
 

@@ -309,6 +309,93 @@ def _verify_call(q, k, v, kv_pos, q_pos, lengths, k_new, v_new, tree_mask,
         B, W, H, dh)
 
 
+def _verify_call_paged(q, k_pool, v_pool, pos_pool, table, q_pos, lengths,
+                       k_new, v_new, tree_mask, scales, *, interpret: bool):
+    """Paged-pool variant of ``_verify_call``: same kernel body, but the
+    kv-block axis walks each slot's **page table** instead of a contiguous
+    row. The table joins ``lengths`` as a second scalar-prefetch operand so
+    the block index map can resolve ``virtual block -> pool page`` on the
+    scalar core before the DMA is issued; the length clamp then degenerates
+    dead virtual blocks onto the last live page exactly as the contiguous
+    path does (repeat -> no re-fetch). One page == one kv-block, so the
+    early-out skip granularity is ``page_len``.
+    """
+    B, W, H, dh = q.shape
+    page_len, KV = k_pool.shape[1], k_pool.shape[2]
+    Tp = table.shape[1]      # pages per slot == virtual kv-blocks
+    Tn = k_new.shape[1]      # in-flight tree nodes
+    assert H % KV == 0, (H, KV)
+    G = H // KV
+    scale = 1.0 / (dh ** 0.5)
+    qt = q.reshape(B, W, KV, G, dh).transpose(0, 2, 3, 1, 4).reshape(
+        B, KV, G * W, dh)
+    lengths = lengths.astype(jnp.int32)
+    table = table.astype(jnp.int32)
+
+    def live(lens, b):
+        # last virtual block holding committed tokens (>= 0)
+        return jnp.maximum(pl.cdiv(lens[b], page_len), 1) - 1
+
+    def page_ix(b, h, kb, lens, tbl):
+        # scalar-prefetched page-table lookup; dead/tree blocks clamp onto
+        # the last live page (repeated index -> Pallas skips the copy).
+        # Reset slots point every row at the trash page, also harmless.
+        return (tbl[b, jnp.minimum(kb, live(lens, b))], 0, h, 0)
+
+    def pos_ix(b, h, kb, lens, tbl):
+        return (tbl[b, jnp.minimum(kb, live(lens, b))], 0)
+
+    kernel = functools.partial(_verify_kernel, scale=scale, n_kb=Tp,
+                               block_s=page_len, g=G, w=W, t=Tn,
+                               quantized=scales is not None)
+
+    def paged_kernel(len_ref, tbl_ref, *refs):
+        del tbl_ref  # consumed by the index maps only
+        kernel(len_ref, *refs)
+
+    in_specs = [
+        pl.BlockSpec((1, 1, G * W, dh),
+                     lambda b, h, kb, lens, tbl: (b, h, 0, 0)),
+        pl.BlockSpec((1, page_len, 1, dh), page_ix),
+        pl.BlockSpec((1, page_len, 1, dh), page_ix),
+    ]
+    args = [qt, k_pool, v_pool]
+    if scales is not None:
+        gs = scales[0].shape[-1]
+        in_specs += [pl.BlockSpec((1, page_len, 1, gs), page_ix),
+                     pl.BlockSpec((1, page_len, 1, gs), page_ix)]
+        args += list(scales)
+    in_specs += [
+        pl.BlockSpec((1, page_len), pos_ix),
+        pl.BlockSpec((1, W), lambda b, h, kb, lens, tbl: (b, 0)),
+        pl.BlockSpec((1, Tn, 1, dh), lambda b, h, kb, lens, tbl: (b, 0, h, 0)),
+        pl.BlockSpec((1, Tn, 1, dh), lambda b, h, kb, lens, tbl: (b, 0, h, 0)),
+        pl.BlockSpec((1, W, Tn), lambda b, h, kb, lens, tbl: (b, 0, 0)),
+    ]
+    args += [pos_pool, q_pos, k_new, v_new, tree_mask]
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, KV, Tp + 1),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, 1, G * W, dh),
+                               lambda b, h, kb, lens, tbl: (b, h, 0, 0)),
+        scratch_shapes=[
+            _vmem((G * W, 1), jnp.float32),
+            _vmem((G * W, 1), jnp.float32),
+            _vmem((G * W, dh), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        paged_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, KV, G * W, dh), q.dtype),
+        interpret=interpret,
+    )(lengths, table, *args)
+    return out.reshape(B, KV, G, W, dh).transpose(0, 3, 1, 2, 4).reshape(
+        B, W, H, dh)
+
+
 @functools.partial(jax.jit, static_argnames=("block_s", "interpret"))
 def verify_attention(q: jax.Array, k: jax.Array, v: jax.Array,
                      kv_pos: jax.Array, q_pos: jax.Array, lengths: jax.Array,
@@ -343,3 +430,35 @@ def verify_attention_int8(q: jax.Array, k: jax.Array, v: jax.Array,
     return _verify_call(q, k, v, kv_pos, q_pos, lengths, k_new, v_new,
                         tree_mask, (k_scale, v_scale), block_s=block_s,
                         interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def verify_attention_paged(q: jax.Array, k: jax.Array, v: jax.Array,
+                           kv_pos: jax.Array, table: jax.Array,
+                           q_pos: jax.Array, lengths: jax.Array,
+                           k_new: jax.Array, v_new: jax.Array,
+                           tree_mask: jax.Array, *,
+                           interpret: bool = True) -> jax.Array:
+    """``verify_attention`` over a **paged** cache: k/v are the shared page
+    pool ``[P, page_len, KV, dh]`` (kv_pos ``[P, page_len]``) and ``table``
+    ``[B, T]`` maps each slot's virtual kv-block to its pool page. Both
+    ``lengths`` and ``table`` are scalar-prefetched so the indirection is
+    resolved in the index map — the kernel body is byte-identical to the
+    contiguous hot path with ``block_s = page_len``."""
+    return _verify_call_paged(q, k, v, kv_pos, table, q_pos, lengths, k_new,
+                              v_new, tree_mask, None, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def verify_attention_paged_int8(q: jax.Array, k: jax.Array, v: jax.Array,
+                                k_scale: jax.Array, v_scale: jax.Array,
+                                kv_pos: jax.Array, table: jax.Array,
+                                q_pos: jax.Array, lengths: jax.Array,
+                                k_new: jax.Array, v_new: jax.Array,
+                                tree_mask: jax.Array, *,
+                                interpret: bool = True) -> jax.Array:
+    """Paged verify over an int8 pool (scales ``[P, page_len, KV, G]``)."""
+    assert k.dtype == jnp.int8 and v.dtype == jnp.int8, (k.dtype, v.dtype)
+    return _verify_call_paged(q, k, v, kv_pos, table, q_pos, lengths, k_new,
+                              v_new, tree_mask, (k_scale, v_scale),
+                              interpret=interpret)

@@ -23,7 +23,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs import SHAPES, InputShape, get_config
 from repro.configs.base import ModelConfig
-from repro.models.cache import cache_logical_axes, init_cache
+from repro.models.cache import cache_logical_axes, make_kv_cache
 from repro.models.model import Model
 from repro.sharding import specs as sh
 from repro.training.optimizer import OptConfig
@@ -162,7 +162,7 @@ def build_prefill(case: Case, mesh):
     enc_abs = _enc_feats_abs(cfg, B)
 
     def prefill_step(params, tokens, lengths, enc_feats=None):
-        cache = init_cache(cfg, B, S + 8, dtype=dtype)
+        cache = make_kv_cache(cfg).init(B, S + 8, dtype=dtype)
         from repro.models.cache import shard_cache
         cache = shard_cache(cache)
         logits, cache, h_last = model.prefill(params, tokens, lengths, cache,
@@ -191,8 +191,8 @@ def build_decode(case: Case, mesh):
     B, S = shape.global_batch, shape.seq_len
     pshard = sh.param_shardings(model.param_defs(), mesh)
     params_abs = model.abstract(dtype)
-    cache_abs = init_cache(cfg, B, _cache_len(cfg, S + 8), dtype=dtype,
-                           abstract=True)
+    cache_abs = make_kv_cache(cfg).init(B, _cache_len(cfg, S + 8),
+                                        dtype=dtype, abstract=True)
     cshard = _cache_shardings(cfg, cache_abs, mesh, B)
     bspec = batch_spec(mesh, B)
     token_abs = jax.ShapeDtypeStruct((B,), jnp.int32)
@@ -218,8 +218,8 @@ def build_tree_verify(case: Case, mesh, num_nodes: int = 64,
     B, S = shape.global_batch, shape.seq_len
     pshard = sh.param_shardings(model.param_defs(), mesh)
     params_abs = model.abstract(dtype)
-    cache_abs = init_cache(cfg, B, _cache_len(cfg, S + num_nodes + 8),
-                           dtype=dtype, abstract=True)
+    cache_abs = make_kv_cache(cfg).init(
+        B, _cache_len(cfg, S + num_nodes + 8), dtype=dtype, abstract=True)
     cshard = _cache_shardings(cfg, cache_abs, mesh, B)
     bspec = batch_spec(mesh, B)
     W = num_nodes

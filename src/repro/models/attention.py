@@ -257,19 +257,25 @@ def fused_dispatch_ok(cfg: ModelConfig, *, mesh_active: bool) -> bool:
 
 
 def _fused_verify_path(q, entry, cfg, q_pos, lengths, k_new, v_new,
-                       tree_mask):
+                       tree_mask, table=None):
     """Route one cached-attention call through the fused verify kernel.
 
     The kernel owns the committed-prefix mask (computed in VMEM from
     entry["pos"]/q_pos/lengths), the length-aware kv-block skip, and the
     tree-scratch segment — nothing is repeated, concatenated or
-    materialized here."""
+    materialized here. With a page table the kernel reads the pool
+    directly: the scalar-prefetched table turns the length-clamped block
+    index into a page id, so paged storage costs no gather."""
     from repro.kernels import ops as kernel_ops
     B, W = q.shape[:2]
     if tree_mask is None:  # plain decode: each token attends to itself only
         tree_mask = jnp.broadcast_to(jnp.eye(W, dtype=bool)[None],
                                      (B, W, W))
-    ek, ev, ks, vs = cache_lib.entry_kernel_kv(entry)
+    ek, ev, ks, vs = cache_lib.KVCache.entry_kernel_kv(entry)
+    if table is not None:
+        return kernel_ops.verify_attention_paged(
+            q, ek, ev, entry["pos"], table, q_pos, lengths, k_new, v_new,
+            tree_mask, k_scale=ks, v_scale=vs)
     # the wrapper's own kv-block default (256) sets the skip granularity;
     # cfg.attn_chunk stays the *prefill* block knob — at max_target_len=512
     # it would make the whole cache one block and disable the early-out
@@ -282,19 +288,26 @@ def cached_attention(q: jax.Array, entry: Dict, cfg: ModelConfig,
                      q_pos: jax.Array, lengths: jax.Array,
                      k_new: Optional[jax.Array] = None,
                      v_new: Optional[jax.Array] = None,
-                     tree_mask: Optional[jax.Array] = None) -> jax.Array:
+                     tree_mask: Optional[jax.Array] = None,
+                     table: Optional[jax.Array] = None) -> jax.Array:
     """Attention of W query tokens against the committed cache plus (for tree
     verification) the W in-flight tree tokens.
 
     q: [B, W, H, Dh]; q_pos: [B, W] absolute positions; lengths: [B];
     k_new/v_new: [B, W, KV, Dh] the queries' own K/V (tree scratch);
-    tree_mask: [B, W, W] ancestor-or-self visibility (None for plain decode).
+    tree_mask: [B, W, W] ancestor-or-self visibility (None for plain decode);
+    table: [B, T] page table when the entry is a paged pool (None for the
+    contiguous layout).
 
     Hot path (cfg.verify_kernel): the fused GQA-native Pallas kernel, which
     reads the cache un-repeated at its storage dtype and skips kv-blocks
-    past the committed length. Falls back to the XLA einsum paths (the
-    selectable oracle) under a mesh (Pallas calls aren't SPMD-partitioned),
-    with sliding windows (ring-buffer slots), or when k_new is absent.
+    past the committed length (paged pools are read through the
+    scalar-prefetched table, no gather). Falls back to the XLA einsum paths
+    (the selectable oracle) under a mesh (Pallas calls aren't
+    SPMD-partitioned), with sliding windows (ring-buffer slots), or when
+    k_new is absent — a paged entry is first flattened to a virtual
+    contiguous view by `gather_entry`, so both oracles stay byte-identical
+    to the contiguous math.
     """
     B, W, H, Dh = q.shape
     G = cfg.num_q_per_kv
@@ -302,10 +315,12 @@ def cached_attention(q: jax.Array, entry: Dict, cfg: ModelConfig,
     if k_new is not None and fused_dispatch_ok(
             cfg, mesh_active=shard_lib.current_mesh() is not None):
         return _fused_verify_path(q, entry, cfg, q_pos, lengths, k_new,
-                                  v_new, tree_mask)
+                                  v_new, tree_mask, table=table)
+    if table is not None:
+        entry = cache_lib.make_kv_cache(cfg).gather_entry(entry, table)
     # int8 caches dequantize here (per-layer slice, inside the block scan,
     # so XLA cannot hoist a whole-stack fp32 copy); fp caches pass through
-    ek, ev = cache_lib.entry_kv(entry)
+    ek, ev = cache_lib.KVCache.entry_kv(entry)
 
     if cfg.gqa_grouped and G > 1:
         # §Perf: contract against the cache in KV-head space — the cache is
@@ -393,6 +408,7 @@ def attention_layer(p: Dict, x: jax.Array, cfg: ModelConfig, *, mode: str,
                     lengths: Optional[jax.Array] = None,
                     tree_mask: Optional[jax.Array] = None,
                     seq_valid: Optional[jax.Array] = None,
+                    table: Optional[jax.Array] = None,
                     ) -> Tuple[jax.Array, Optional[Dict], Optional[Tuple]]:
     """One self-attention layer in the given mode.
 
@@ -425,14 +441,15 @@ def attention_layer(p: Dict, x: jax.Array, cfg: ModelConfig, *, mode: str,
     if mode == "prefill":
         out = _full(q, k, v, True)
         valid = None if seq_valid is None else seq_valid
-        new_entry = cache_lib.write_tokens(cache_entry, k, v, positions, cfg,
-                                           valid=valid)
+        new_entry = cache_lib.make_kv_cache(cfg).write_tokens(
+            cache_entry, k, v, positions, valid=valid, table=table)
         return _out_proj(p, out, cfg), new_entry, None
 
     if mode in ("decode", "tree"):
         out = cached_attention(q, cache_entry, cfg, positions, lengths,
                                k_new=k, v_new=v,
-                               tree_mask=tree_mask if mode == "tree" else None)
+                               tree_mask=tree_mask if mode == "tree" else None,
+                               table=table)
         return _out_proj(p, out, cfg), cache_entry, (k, v)
 
     raise ValueError(mode)
@@ -443,6 +460,7 @@ def attention_tree_extend(p: Dict, x: jax.Array, cfg: ModelConfig, *,
                           cache_entry: Dict, lengths: jax.Array,
                           scratch_k: jax.Array, scratch_v: jax.Array,
                           offset: int, ext_mask: jax.Array,
+                          table: Optional[jax.Array] = None,
                           ) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """Drafter-side incremental tree growth: Q new nodes are appended to the
     per-layer tree scratch ([B, N, KV, Dh]) at a *static* offset, then attend
@@ -460,7 +478,8 @@ def attention_tree_extend(p: Dict, x: jax.Array, cfg: ModelConfig, *,
     scratch_k = jax.lax.dynamic_update_slice_in_dim(scratch_k, k, offset, axis=1)
     scratch_v = jax.lax.dynamic_update_slice_in_dim(scratch_v, v, offset, axis=1)
     out = cached_attention(q, cache_entry, cfg, positions, lengths,
-                           k_new=scratch_k, v_new=scratch_v, tree_mask=ext_mask)
+                           k_new=scratch_k, v_new=scratch_v, tree_mask=ext_mask,
+                           table=table)
     return _out_proj(p, out, cfg), scratch_k, scratch_v
 
 

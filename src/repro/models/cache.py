@@ -1,8 +1,10 @@
-"""Static-shape decode caches.
+"""Static-shape decode caches behind the ``KVCache`` interface.
 
-The cache is a plain pytree so it can be jit-carried, donated and sharded.
+Two layouts implement the same protocol, selected by
+``ModelConfig.cache_layout`` (``make_kv_cache(cfg)`` returns the strategy):
 
-Layout (per attention layer, stacked over scan blocks):
+**Contiguous** (``ContiguousCache``) — per attention layer, stacked over
+scan blocks:
     k, v : [num_blocks, B, S_cache, KV, Dh]   (seq dim sharded over `model`)
     pos  : [num_blocks, B, S_cache] int32     absolute position held in the
                                               slot, -1 if empty
@@ -14,23 +16,49 @@ Global:
 
 Sliding-window archs use a ring buffer: S_cache == window and slots are
 addressed ``pos % window``; full-attention archs use S_cache == max target
-length with slot == pos. Both cases are handled by `slot_for`.
+length with slot == pos.
 
-Quantized caches (``init_cache(..., kv_dtype=jnp.int8)``) store the K/V
-payload as int8 with per-slot, per-head fp32 absmax scales alongside
-(sub-grouped along the head dim, G = head_dim/KV_GROUP scales per head):
-    k_scale, v_scale : [num_blocks, B, S_cache, KV, G]
-Tokens are quantized once at write time (`write_tokens`/`commit_region`)
-and dequantized at read time (`entry_kv`), so a committed token always
-dequantizes to the same values — the per-slot ops (`slot_update`,
-`slot_slice`, `reset_slot`) move/clear payload and scales together and the
-round-trip is exact. Cross-attention K/V (ck/cv) stays at the cache dtype:
-it is written once per request and read every step, so quantizing it saves
-little and would touch the encoder path.
+**Paged** (``PagedCache``) — a fixed page pool plus a per-slot page table,
+so HBM is priced by *live* tokens instead of ``max_target_len`` and
+identical prompt prefixes are stored once:
+    k, v : [num_blocks, n_pages, page_len, KV, Dh]
+    pos  : [num_blocks, n_pages, page_len] int32  (-1 if empty)
+Global:
+    length: [B] int32
+    table : [B, T] int32   T = max_target_len // page_len; row r of slot b
+                           names the pool page backing virtual positions
+                           [r*page_len, (r+1)*page_len)
+
+Page 0 is the **trash page**: unmapped table rows point at it, so garbage
+writes from parked or mid-prefill slots land there harmlessly, and reads of
+unmapped rows are hidden by the visibility masks (the XLA oracle path
+additionally applies an identity mask ``pos == virtual_index`` after the
+gather). The invariant that makes recycling safe is *free pages are always
+clean*: a page's ``pos`` lanes are -1 at pool init and are re-cleared (via
+``clear_pages``) whenever its refcount drops to zero, before it can be
+remapped. All shapes are static — a fixed pool and a fixed-width table —
+so page churn never recompiles anything.
+
+Cross-request prefix sharing is page-granular copy-on-write: ``PrefixStore``
+keys *full* prompt pages by a chain hash, admission maps resident pages into
+the new slot's table (refcounted, prefill skipped for those rows) and the
+first divergent page stays private. Shared pages are never written because
+writes only target positions at or beyond the committed length, which the
+admission path pins past the shared rows.
+
+Quantized caches (``kv_dtype=jnp.int8``) store the K/V payload as int8 with
+per-slot, per-head fp32 absmax scales alongside (sub-grouped along the head
+dim, G = head_dim/KV_GROUP scales per head). Tokens are quantized once at
+write time (``write_tokens``/``commit_region``) and dequantized at read
+time (``entry_kv``), so a committed token always dequantizes to the same
+values in either layout. Cross-attention K/V (ck/cv) stays at the cache
+dtype.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from collections import OrderedDict
+from functools import lru_cache
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -40,7 +68,24 @@ from repro.configs.base import ModelConfig
 from repro.quant.kv import dequant_kv, kv_scale_groups, quantize_kv
 from repro.sharding import shard, sharding_for
 
+__all__ = [
+    "Cache",
+    "ContiguousCache",
+    "KVCache",
+    "PageState",
+    "PagedCache",
+    "PrefixStore",
+    "cache_logical_axes",
+    "cache_shardings",
+    "make_kv_cache",
+    "place_cache",
+    "shard_cache",
+    "visible_mask",
+]
+
 Cache = Dict[str, Any]
+
+TRASH_PAGE = 0
 
 
 def cache_seq_len(cfg: ModelConfig, target_len: int) -> int:
@@ -49,6 +94,7 @@ def cache_seq_len(cfg: ModelConfig, target_len: int) -> int:
     return target_len
 
 
+# ------------------------------------------------------- entry builders ----
 def _attn_entry(cfg: ModelConfig, batch: int, s_cache: int, dtype,
                 kv_dtype=None) -> Dict:
     kv, dh = cfg.num_kv_heads, cfg.head_dim
@@ -88,6 +134,31 @@ def _attn_entry_abstract(cfg: ModelConfig, batch: int, s_cache: int, dtype,
     }
 
 
+def _paged_attn_entry(cfg: ModelConfig, n_pages: int, page_len: int, dtype,
+                      kv_dtype=None, abstract: bool = False) -> Dict:
+    """One attention layer's slice of the page pool. ``pos`` starts at -1
+    everywhere — the 'free pages are clean' invariant at birth."""
+    kv, dh = cfg.num_kv_heads, cfg.head_dim
+    if abstract:
+        mk = lambda s, dt, fill: jax.ShapeDtypeStruct(s, dt)  # noqa: E731
+    else:
+        mk = lambda s, dt, fill: jnp.full(s, fill, dt)  # noqa: E731
+    if kv_dtype is not None and jnp.dtype(kv_dtype) == jnp.int8:
+        g = kv_scale_groups(dh)
+        return {
+            "k": mk((n_pages, page_len, kv, dh), jnp.int8, 0),
+            "v": mk((n_pages, page_len, kv, dh), jnp.int8, 0),
+            "k_scale": mk((n_pages, page_len, kv, g), jnp.float32, 1.0),
+            "v_scale": mk((n_pages, page_len, kv, g), jnp.float32, 1.0),
+            "pos": mk((n_pages, page_len), jnp.int32, -1),
+        }
+    return {
+        "k": mk((n_pages, page_len, kv, dh), dtype, 0),
+        "v": mk((n_pages, page_len, kv, dh), dtype, 0),
+        "pos": mk((n_pages, page_len), jnp.int32, -1),
+    }
+
+
 def _ssm_entry(cfg: ModelConfig, batch: int, dtype) -> Dict:
     h, p, n = cfg.ssm_num_heads, cfg.ssm_head_dim, cfg.ssm_state_size
     conv_dim = cfg.ssm_d_inner + 2 * cfg.ssm_num_groups * cfg.ssm_state_size
@@ -113,48 +184,37 @@ def _cross_entry(cfg: ModelConfig, batch: int, dtype, abstract: bool) -> Dict:
     return {"ck": mk((batch, t, kv, dh), dtype), "cv": mk((batch, t, kv, dh), dtype)}
 
 
-def init_cache(cfg: ModelConfig, batch: int, target_len: int,
-               dtype=jnp.float32, abstract: bool = False,
-               kv_dtype=None) -> Cache:
-    """Build the full cache pytree (stacked over scan blocks).
-
-    ``kv_dtype=jnp.int8`` stores attention K/V as int8 with per-slot,
-    per-head fp32 scales (see module docstring); None keeps ``dtype``.
-    """
-    s_cache = cache_seq_len(cfg, target_len)
-    lpb, nb = cfg.layers_per_block, cfg.num_blocks
-
-    def block_entry(block_idx: int) -> Dict:
-        entry = {}
-        for j in range(lpb):
-            i = block_idx * lpb + j
-            if cfg.layer_mixer(i) == "attn":
-                e = (_attn_entry_abstract if abstract else _attn_entry)(
-                    cfg, batch, s_cache, dtype, kv_dtype=kv_dtype)
-                if cfg.is_encoder_decoder:
-                    e.update(_cross_entry(cfg, batch, dtype, abstract))
-            else:
-                e = (_ssm_entry_abstract if abstract else _ssm_entry)(cfg, batch, dtype)
-            entry[f"layer{j}"] = e
-        return entry
-
-    # every block has identical structure (period == layers_per_block), so
-    # stack block 0's structure nb times
-    proto = block_entry(0)
+def _stack_blocks(cfg: ModelConfig, proto: Dict, abstract: bool) -> Dict:
+    """Stack one block's entry structure over the scan-block axis."""
+    nb = cfg.num_blocks
     if abstract:
-        blocks = jax.tree.map(
+        return jax.tree.map(
             lambda s: jax.ShapeDtypeStruct((nb,) + s.shape, s.dtype), proto)
-    else:
-        blocks = jax.tree.map(lambda a: jnp.broadcast_to(a[None], (nb,) + a.shape), proto)
-        blocks = jax.tree.map(jnp.array, blocks)  # materialize
-
-    length = (jax.ShapeDtypeStruct((batch,), jnp.int32) if abstract
-              else jnp.zeros((batch,), jnp.int32))
-    return {"blocks": blocks, "length": length}
+    blocks = jax.tree.map(lambda a: jnp.broadcast_to(a[None], (nb,) + a.shape), proto)
+    return jax.tree.map(jnp.array, blocks)  # materialize
 
 
-def _leaf_axes(path: Tuple, leaf) -> Tuple:
+# --------------------------------------------------- sharding rules --------
+def _is_paged(cache: Any) -> bool:
+    return isinstance(cache, dict) and "table" in cache
+
+
+def _leaf_axes(path: Tuple, leaf, paged: bool = False) -> Tuple:
     leafname = getattr(path[-1], "key", str(path[-1]))
+    if paged:
+        # the page axis is replicated (any slot on any data shard may read
+        # any page); kv heads / head dim shard exactly as contiguous
+        if leafname in ("k", "v"):
+            return ("layers", None, None, "kv_heads", "head_dim_shard")[-leaf.ndim:]
+        if leafname in ("k_scale", "v_scale"):
+            return ("layers", None, None, "kv_heads", None)[-leaf.ndim:]
+        if leafname == "pos":
+            return ("layers", None, None)[-leaf.ndim:]
+        if leafname == "table":
+            return ("batch", None)[-leaf.ndim:]
+        if leafname == "length":
+            return ("batch",)
+        raise ValueError(leafname)
     if leafname in ("k", "v", "ck", "cv"):
         return ("layers", "batch", "cache_seq", "kv_heads", "head_dim_shard")[-leaf.ndim:]
     if leafname in ("k_scale", "v_scale"):
@@ -175,23 +235,26 @@ def _leaf_axes(path: Tuple, leaf) -> Tuple:
 
 def cache_logical_axes(cache: Cache):
     """(path, axes) pairs for every cache leaf — used for jit shardings."""
+    paged = _is_paged(cache)
     return jax.tree_util.tree_map_with_path(
-        lambda p, x: _leaf_axes(p, x), cache,
+        lambda p, x: _leaf_axes(p, x, paged), cache,
         is_leaf=lambda x: hasattr(x, "ndim") and not isinstance(x, dict))
 
 
 def shard_cache(cache: Cache) -> Cache:
     """Apply sharding constraints to every cache leaf."""
+    paged = _is_paged(cache)
     return jax.tree_util.tree_map_with_path(
-        lambda p, x: shard(x, *_leaf_axes(p, x)), cache)
+        lambda p, x: shard(x, *_leaf_axes(p, x, paged)), cache)
 
 
 def cache_shardings(cache: Cache, mesh=None) -> Cache:
     """NamedSharding pytree for a (concrete or abstract) cache — the eager
     counterpart of `shard_cache`, for `jax.device_put` placement of a
     host-built cache and for explicit jit in/out shardings."""
+    paged = _is_paged(cache)
     return jax.tree_util.tree_map_with_path(
-        lambda p, x: sharding_for(_leaf_axes(p, x), x.shape, mesh), cache,
+        lambda p, x: sharding_for(_leaf_axes(p, x, paged), x.shape, mesh), cache,
         is_leaf=lambda x: hasattr(x, "ndim") and not isinstance(x, dict))
 
 
@@ -206,49 +269,30 @@ def place_cache(cache: Cache, mesh=None) -> Cache:
                         is_leaf=lambda x: x is None)
 
 
-# ------------------------------------------------- per-slot management ----
-# Continuous batching refills one batch slot while the others keep decoding.
-# Every leaf's batch axis is recovered from `_leaf_axes`, so these work for
-# attention, SSM, cross-attention and `length` leaves alike, and stay
-# jit-compatible with a *traced* slot index (one compiled executable serves
-# every slot).
-
-def batch_axis(path: Tuple, leaf) -> int:
-    """Index of the batch axis for a cache leaf at `path`."""
-    return _leaf_axes(path, leaf).index("batch")
+# ------------------------------------------- contiguous per-slot ops -------
+def _batch_axis(path: Tuple, leaf) -> int:
+    return _leaf_axes(path, leaf, paged=False).index("batch")
 
 
-def slot_slice(cache: Cache, slot) -> Cache:
-    """Extract batch slot `slot` as a batch-1 cache (same structure)."""
+def _slot_slice(cache: Cache, slot) -> Cache:
     return jax.tree_util.tree_map_with_path(
         lambda p, x: jax.lax.dynamic_slice_in_dim(
-            x, slot, 1, axis=batch_axis(p, x)), cache)
+            x, slot, 1, axis=_batch_axis(p, x)), cache)
 
 
-def slot_update(cache: Cache, slot, slot_cache: Cache) -> Cache:
-    """Overwrite batch slot `slot` of `cache` with the content of the
-    batch-1 `slot_cache`, leaving every other slot untouched."""
-
+def _slot_update(cache: Cache, slot, slot_cache: Cache) -> Cache:
     def upd(path, big, small):
-        ax = batch_axis(path, big)
+        ax = _batch_axis(path, big)
         return jax.lax.dynamic_update_index_in_dim(
             big, jnp.take(small, 0, axis=ax).astype(big.dtype), slot, axis=ax)
 
     return jax.tree_util.tree_map_with_path(upd, cache, slot_cache)
 
 
-def reset_slot(cache: Cache, slot) -> Cache:
-    """Clear batch slot `slot`: committed length -> 0, positions -> -1 (so
-    `visible_mask` hides every stale entry), SSM state/conv -> 0. Floating
-    K/V payloads are left in place — unreachable once pos/length are
-    cleared — but the fill is per-leaf, not one shared value: int8 K/V
-    payloads reset to 0 and their scales to 1.0 (the empty-slot neutral
-    pair), never 0-scales, which would survive as a degenerate dequant if a
-    later write were ever partial."""
-
+def _reset_slot_contiguous(cache: Cache, slot) -> Cache:
     def upd(path, leaf):
         name = getattr(path[-1], "key", str(path[-1]))
-        ax = batch_axis(path, leaf)
+        ax = _batch_axis(path, leaf)
         if name in ("k", "v", "ck", "cv"):
             if not jnp.issubdtype(leaf.dtype, jnp.integer):
                 return leaf
@@ -266,66 +310,33 @@ def reset_slot(cache: Cache, slot) -> Cache:
     return jax.tree_util.tree_map_with_path(upd, cache)
 
 
-def slot_for(pos: jax.Array, s_cache: int, sliding_window: int) -> jax.Array:
+def _slot_for(pos: jax.Array, s_cache: int, sliding_window: int) -> jax.Array:
     """Map absolute positions to cache slots (ring buffer under SWA)."""
     if sliding_window:
         return pos % s_cache
     return pos
 
 
-def is_quantized_entry(entry: Dict) -> bool:
-    """True when an attention cache entry holds int8 K/V + scales."""
+def _is_quantized_entry(entry: Dict) -> bool:
     return "k_scale" in entry
 
 
-def entry_kv(entry: Dict) -> Tuple[jax.Array, jax.Array]:
-    """The entry's K/V at compute precision — dequantized fp32 views for an
-    int8 entry, the stored arrays otherwise."""
-    if is_quantized_entry(entry):
-        return (dequant_kv(entry["k"], entry["k_scale"]),
-                dequant_kv(entry["v"], entry["v_scale"]))
-    return entry["k"], entry["v"]
-
-
-def entry_kernel_kv(entry: Dict):
-    """The entry's K/V in the fused verify kernel's contract: the raw
-    **un-repeated** ``[B, S_cache, KV, Dh]`` arrays exactly as stored —
-    still int8 for a quantized entry, with their fp32 scale groups
-    alongside (``(k, v, k_scale, v_scale)``; scales are None for fp).
-
-    The kernel dequantizes tiles in VMEM and repeats nothing, so handing it
-    the storage layout directly is what keeps the verify megastep's HBM
-    traffic at the cache's true byte size (no materialized fp32 copy, no
-    ``repeat_kv`` G× blow-up)."""
-    return (entry["k"], entry["v"],
-            entry.get("k_scale"), entry.get("v_scale"))
-
-
-def write_tokens(entry: Dict, k_new: jax.Array, v_new: jax.Array,
-                 positions: jax.Array, cfg: ModelConfig,
-                 valid: Optional[jax.Array] = None) -> Dict:
-    """Write S_new tokens into an attention cache entry.
-
-    k_new/v_new: [B, S_new, KV, Dh]; positions: [B, S_new] absolute positions;
-    valid: [B, S_new] bool (False entries are not written). On a quantized
-    entry the tokens are quantized here — the single rounding point — and
-    payload + scales are scattered to the same slots.
-    """
+def _write_tokens_contiguous(entry: Dict, k_new: jax.Array, v_new: jax.Array,
+                             positions: jax.Array, cfg: ModelConfig,
+                             valid: Optional[jax.Array] = None) -> Dict:
     s_cache = entry["k"].shape[1]
-    slots = slot_for(positions, s_cache, cfg.sliding_window)  # [B, S_new]
+    slots = _slot_for(positions, s_cache, cfg.sliding_window)  # [B, S_new]
     if valid is None:
         valid = positions >= 0
-    # scatter along the slot axis; invalid entries routed to slot 0 with
-    # a no-op via where-merge below would clobber — instead route invalid
-    # writes to an out-of-range slot and rely on mode="drop".
-    slots = jnp.where(valid, slots, s_cache)  # s_cache is out of range -> drop
+    # invalid writes are routed to an out-of-range slot and dropped
+    slots = jnp.where(valid, slots, s_cache)
     b_idx = jnp.arange(k_new.shape[0])[:, None]
 
     def scat(store, val):
         return store.at[b_idx, slots].set(val, mode="drop")
 
     out = dict(entry)  # preserves ck/cv (and anything future) untouched
-    if is_quantized_entry(entry):
+    if _is_quantized_entry(entry):
         qk, ks = quantize_kv(k_new)
         qv, vs = quantize_kv(v_new)
         out["k"] = scat(entry["k"], qk)
@@ -339,16 +350,80 @@ def write_tokens(entry: Dict, k_new: jax.Array, v_new: jax.Array,
     return out
 
 
-def commit_region(entry: Dict, k_nodes: jax.Array, v_nodes: jax.Array,
-                  node_idx: jax.Array, lengths: jax.Array, accept_len: jax.Array,
-                  cfg: ModelConfig) -> Dict:
-    """Commit accepted tree nodes into the cache.
+# -------------------------------------------------- paged entry ops --------
+def _write_tokens_paged(entry: Dict, k_new: jax.Array, v_new: jax.Array,
+                        positions: jax.Array, table: jax.Array,
+                        valid: Optional[jax.Array] = None) -> Dict:
+    """Scatter S_new tokens through the page table into the pool.
 
-    k_nodes/v_nodes: [B, W, KV, Dh] tree-node K/V from verification;
-    node_idx: [B, A_max] indices into the W tree nodes forming the accepted
-    path (position j holds the node committed at lengths+j);
-    accept_len: [B] number of accepted nodes.
+    Positions outside the virtual range [0, T*page_len) are dropped
+    entirely (routed to an out-of-range page id); positions whose table row
+    is unmapped land in the trash page — both are invisible to readers, so
+    garbage megasteps over parked or mid-prefill slots stay harmless.
+    Shared (refcount > 1) pages are never hit here because callers only
+    write at or beyond the committed length, which admission pins past the
+    shared rows.
     """
+    n_pages, page_len = entry["k"].shape[0], entry["k"].shape[1]
+    t_rows = table.shape[1]
+    if valid is None:
+        valid = positions >= 0
+    valid = valid & (positions >= 0) & (positions < t_rows * page_len)
+    row = jnp.clip(positions // page_len, 0, t_rows - 1)
+    b_idx = jnp.arange(positions.shape[0])[:, None]
+    page = jnp.where(valid, table[b_idx, row], n_pages)  # OOR -> drop
+    off = jnp.where(valid, positions % page_len, 0)
+
+    def scat(store, val):
+        return store.at[page, off].set(val, mode="drop")
+
+    out = dict(entry)
+    if _is_quantized_entry(entry):
+        qk, ks = quantize_kv(k_new)
+        qv, vs = quantize_kv(v_new)
+        out["k"] = scat(entry["k"], qk)
+        out["v"] = scat(entry["v"], qv)
+        out["k_scale"] = scat(entry["k_scale"], ks)
+        out["v_scale"] = scat(entry["v_scale"], vs)
+    else:
+        out["k"] = scat(entry["k"], k_new)
+        out["v"] = scat(entry["v"], v_new)
+    out["pos"] = scat(entry["pos"], jnp.where(valid, positions, -1))
+    return out
+
+
+def _gather_entry(entry: Dict, table: jax.Array) -> Dict:
+    """Materialize a contiguous-shaped virtual view of a paged entry.
+
+    Gathers ``pool[table]`` and flattens pages into a [B, T*page_len, ...]
+    entry, then applies the identity mask ``pos == virtual_index`` so
+    trash-page aliasing and cross-slot page reuse can never surface a stale
+    position: an entry is kept only where its recorded absolute position is
+    exactly the virtual slot it was gathered into. The result feeds the
+    unchanged XLA oracle attention path (`visible_mask` applies on top).
+    """
+    b, t_rows = table.shape
+    page_len = entry["k"].shape[1]
+
+    def g(x):
+        y = jnp.take(x, table, axis=0)  # [B, T, page_len, ...]
+        return y.reshape((b, t_rows * page_len) + x.shape[2:])
+
+    out = dict(entry)
+    out["k"], out["v"] = g(entry["k"]), g(entry["v"])
+    if _is_quantized_entry(entry):
+        out["k_scale"], out["v_scale"] = g(entry["k_scale"]), g(entry["v_scale"])
+    pos = g(entry["pos"])
+    virt = jnp.arange(t_rows * page_len, dtype=pos.dtype)[None, :]
+    out["pos"] = jnp.where(pos == virt, pos, jnp.int32(-1))
+    return out
+
+
+def _commit_nodes(entry: Dict, k_nodes: jax.Array, v_nodes: jax.Array,
+                  node_idx: jax.Array, lengths: jax.Array,
+                  accept_len: jax.Array):
+    """Shared gather for commit_region: accepted tree nodes -> (k, v,
+    positions, valid) ready for write_tokens in either layout."""
     b = k_nodes.shape[0]
     a_max = node_idx.shape[1]
     b_idx = jnp.arange(b)[:, None]
@@ -356,7 +431,22 @@ def commit_region(entry: Dict, k_nodes: jax.Array, v_nodes: jax.Array,
     gathered_v = v_nodes[b_idx, node_idx]
     positions = lengths[:, None] + jnp.arange(a_max)[None, :]
     valid = jnp.arange(a_max)[None, :] < accept_len[:, None]
-    return write_tokens(entry, gathered_k, gathered_v, positions, cfg, valid=valid)
+    return gathered_k, gathered_v, positions, valid
+
+
+def _clear_pages(cache: Cache, page_ids: jax.Array) -> Cache:
+    """Reset ``pos`` to -1 for the given pool pages in every attention
+    entry — the device half of the 'free pages are always clean' invariant
+    (payload and scales can stay: an entry is unreachable once its position
+    lane is -1). ``page_ids`` may repeat and may include the trash page."""
+    def upd(path, leaf):
+        name = getattr(path[-1], "key", str(path[-1]))
+        if name == "pos":
+            return leaf.at[:, page_ids].set(-1)
+        return leaf
+
+    return {**cache,
+            "blocks": jax.tree_util.tree_map_with_path(upd, cache["blocks"])}
 
 
 def visible_mask(entry_pos: jax.Array, q_pos: jax.Array, lengths: jax.Array,
@@ -374,13 +464,491 @@ def visible_mask(entry_pos: jax.Array, q_pos: jax.Array, lengths: jax.Array,
     return m
 
 
-# ----------------------------------------------------- byte accounting ----
-def cache_nbytes(cfg: ModelConfig, batch: int, target_len: int,
-                 dtype=jnp.float32, kv_dtype=None) -> int:
-    """Device bytes one cache pytree holds (payload + scales + pos + SSM +
-    length), computed on the abstract cache so no buffers materialize. This
-    is what serving capacity accounting divides an HBM budget by."""
-    c = init_cache(cfg, batch, target_len, dtype=dtype, abstract=True,
-                   kv_dtype=kv_dtype)
-    return int(sum(int(np.prod(x.shape)) * jnp.dtype(x.dtype).itemsize
-                   for x in jax.tree.leaves(c)))
+# ------------------------------------------------------ KVCache API --------
+class KVCache:
+    """Layout strategy for the decode cache.
+
+    Stateless (holds only the config); every method is jit-traceable and
+    operates on plain cache pytrees, so one strategy object serves every
+    executable. Obtain one via ``make_kv_cache(cfg)``.
+    """
+
+    layout: str = ""
+
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+
+    # ---- entry helpers shared by both layouts
+    @staticmethod
+    def is_quantized_entry(entry: Dict) -> bool:
+        """True when an attention cache entry holds int8 K/V + scales."""
+        return _is_quantized_entry(entry)
+
+    @staticmethod
+    def entry_kv(entry: Dict) -> Tuple[jax.Array, jax.Array]:
+        """The entry's K/V at compute precision — dequantized fp32 views
+        for an int8 entry, the stored arrays otherwise."""
+        if _is_quantized_entry(entry):
+            return (dequant_kv(entry["k"], entry["k_scale"]),
+                    dequant_kv(entry["v"], entry["v_scale"]))
+        return entry["k"], entry["v"]
+
+    @staticmethod
+    def entry_kernel_kv(entry: Dict):
+        """The entry's K/V in the fused verify kernel's contract: the raw
+        **un-repeated** arrays exactly as stored — still int8 for a
+        quantized entry, with their fp32 scale groups alongside
+        (``(k, v, k_scale, v_scale)``; scales are None for fp)."""
+        return (entry["k"], entry["v"],
+                entry.get("k_scale"), entry.get("v_scale"))
+
+    # ---- construction
+    def init(self, batch: int, target_len: int, dtype=jnp.float32,
+             abstract: bool = False, kv_dtype=None, pages: int = 0) -> Cache:
+        raise NotImplementedError
+
+    def nbytes(self, batch: int, target_len: int, dtype=jnp.float32,
+               kv_dtype=None, pages: int = 0) -> int:
+        """Device bytes one cache pytree holds (payload + scales + pos +
+        SSM + length + table), computed on the abstract cache so no buffers
+        materialize. This is what serving capacity accounting divides an
+        HBM budget by."""
+        c = self.init(batch, target_len, dtype=dtype, abstract=True,
+                      kv_dtype=kv_dtype, pages=pages)
+        return int(sum(int(np.prod(x.shape)) * jnp.dtype(x.dtype).itemsize
+                       for x in jax.tree.leaves(c)))
+
+    # ---- per-entry ops (model layers)
+    def gather_entry(self, entry: Dict, table) -> Dict:
+        raise NotImplementedError
+
+    def write_tokens(self, entry: Dict, k_new, v_new, positions,
+                     valid=None, table=None) -> Dict:
+        raise NotImplementedError
+
+    def commit_region(self, entry: Dict, k_nodes, v_nodes, node_idx,
+                      lengths, accept_len, table=None) -> Dict:
+        """Commit accepted tree nodes into the cache.
+
+        k_nodes/v_nodes: [B, W, KV, Dh] tree-node K/V from verification;
+        node_idx: [B, A_max] indices into the W tree nodes forming the
+        accepted path (position j holds the node committed at lengths+j);
+        accept_len: [B] number of accepted nodes.
+        """
+        k, v, positions, valid = _commit_nodes(
+            entry, k_nodes, v_nodes, node_idx, lengths, accept_len)
+        return self.write_tokens(entry, k, v, positions, valid=valid,
+                                 table=table)
+
+    # ---- per-slot ops (engine)
+    def slot_view(self, cache: Cache, slot) -> Cache:
+        raise NotImplementedError
+
+    def merge_slot(self, cache: Cache, slot, view: Cache) -> Cache:
+        raise NotImplementedError
+
+    def reset_slot(self, cache: Cache, slot) -> Cache:
+        raise NotImplementedError
+
+
+class ContiguousCache(KVCache):
+    """Per-slot ``[B, S_cache, KV, Dh]`` storage — slot == batch row."""
+
+    layout = "contiguous"
+
+    def init(self, batch: int, target_len: int, dtype=jnp.float32,
+             abstract: bool = False, kv_dtype=None, pages: int = 0) -> Cache:
+        """Build the full cache pytree (stacked over scan blocks).
+
+        ``kv_dtype=jnp.int8`` stores attention K/V as int8 with per-slot,
+        per-head fp32 scales (see module docstring); None keeps ``dtype``.
+        ``pages`` is accepted for interface parity and ignored.
+        """
+        cfg = self.cfg
+        s_cache = cache_seq_len(cfg, target_len)
+        lpb = cfg.layers_per_block
+
+        entry = {}
+        for j in range(lpb):
+            if cfg.layer_mixer(j) == "attn":
+                e = (_attn_entry_abstract if abstract else _attn_entry)(
+                    cfg, batch, s_cache, dtype, kv_dtype=kv_dtype)
+                if cfg.is_encoder_decoder:
+                    e.update(_cross_entry(cfg, batch, dtype, abstract))
+            else:
+                e = (_ssm_entry_abstract if abstract else _ssm_entry)(
+                    cfg, batch, dtype)
+            entry[f"layer{j}"] = e
+
+        blocks = _stack_blocks(cfg, entry, abstract)
+        length = (jax.ShapeDtypeStruct((batch,), jnp.int32) if abstract
+                  else jnp.zeros((batch,), jnp.int32))
+        return {"blocks": blocks, "length": length}
+
+    def gather_entry(self, entry: Dict, table=None) -> Dict:
+        return entry  # storage already addressed by absolute position
+
+    def write_tokens(self, entry: Dict, k_new, v_new, positions,
+                     valid=None, table=None) -> Dict:
+        """Write S_new tokens into an attention cache entry.
+
+        k_new/v_new: [B, S_new, KV, Dh]; positions: [B, S_new] absolute
+        positions; valid: [B, S_new] bool (False entries are not written).
+        On a quantized entry the tokens are quantized here — the single
+        rounding point — and payload + scales scatter to the same slots.
+        """
+        return _write_tokens_contiguous(entry, k_new, v_new, positions,
+                                        self.cfg, valid=valid)
+
+    def slot_view(self, cache: Cache, slot) -> Cache:
+        """Extract batch slot `slot` as a batch-1 cache (same structure)."""
+        return _slot_slice(cache, slot)
+
+    def merge_slot(self, cache: Cache, slot, view: Cache) -> Cache:
+        """Write the batch-1 `view` back over slot `slot`, leaving every
+        other slot untouched."""
+        return _slot_update(cache, slot, view)
+
+    def reset_slot(self, cache: Cache, slot) -> Cache:
+        """Clear batch slot `slot`: committed length -> 0, positions -> -1
+        (so `visible_mask` hides every stale entry), SSM state/conv -> 0.
+        Floating K/V payloads are left in place — unreachable once
+        pos/length are cleared — but the fill is per-leaf: int8 payloads
+        reset to 0 and their scales to 1.0 (the empty-slot neutral pair),
+        never 0-scales."""
+        return _reset_slot_contiguous(cache, slot)
+
+
+class PagedCache(KVCache):
+    """Fixed page pool + per-slot page table (see module docstring).
+
+    Supports full-attention decoder-only stacks: a ring buffer would remap
+    virtual rows (sliding window), SSM state is not positional, and the
+    encoder cross-cache is write-once — all three keep the contiguous
+    layout.
+    """
+
+    layout = "paged"
+
+    def __init__(self, cfg: ModelConfig):
+        super().__init__(cfg)
+        if cfg.sliding_window:
+            raise NotImplementedError(
+                "paged cache: sliding-window ring buffers not supported")
+        if cfg.is_encoder_decoder:
+            raise NotImplementedError(
+                "paged cache: encoder-decoder cross caches not supported")
+        if any(cfg.layer_mixer(i) == "ssm" for i in range(cfg.num_layers)):
+            raise NotImplementedError(
+                "paged cache: SSM state is not positional storage")
+        if cfg.page_len < 1:
+            raise ValueError(f"page_len must be >= 1, got {cfg.page_len}")
+        self.page_len = cfg.page_len
+
+    # ---- geometry
+    def pages_per_slot(self, target_len: int) -> int:
+        if target_len % self.page_len:
+            raise ValueError(
+                f"page_len={self.page_len} must divide target_len={target_len}")
+        return target_len // self.page_len
+
+    def default_pages(self, batch: int, target_len: int) -> int:
+        """Full coverage — every slot can map its whole virtual range —
+        plus the trash page. Smaller pools trade capacity for HBM and rely
+        on admission/eviction keeping live tokens under the pool."""
+        return batch * self.pages_per_slot(target_len) + 1
+
+    def page_nbytes(self, dtype=jnp.float32, kv_dtype=None) -> int:
+        """Bytes one pool page holds across all layers (K+V payload,
+        scales, pos)."""
+        cfg = self.cfg
+        kv, dh = cfg.num_kv_heads, cfg.head_dim
+        quant = kv_dtype is not None and jnp.dtype(kv_dtype) == jnp.int8
+        item = jnp.dtype(jnp.int8 if quant else dtype).itemsize
+        n = 2 * self.page_len * kv * dh * item
+        if quant:
+            n += 2 * self.page_len * kv * kv_scale_groups(dh) * 4
+        n += self.page_len * 4  # pos
+        return cfg.num_layers * n
+
+    # ---- construction
+    def init(self, batch: int, target_len: int, dtype=jnp.float32,
+             abstract: bool = False, kv_dtype=None, pages: int = 0) -> Cache:
+        """Build the pool + table pytree. ``pages=0`` sizes the pool for
+        full coverage (``default_pages``). Page 0 is the trash page; the
+        table starts all-trash (nothing mapped) and ``pos`` starts -1
+        everywhere (free pages are clean)."""
+        cfg = self.cfg
+        t_rows = self.pages_per_slot(target_len)
+        n_pages = pages or self.default_pages(batch, target_len)
+        lpb = cfg.layers_per_block
+
+        entry = {f"layer{j}": _paged_attn_entry(
+            cfg, n_pages, self.page_len, dtype, kv_dtype=kv_dtype,
+            abstract=abstract) for j in range(lpb)}
+        blocks = _stack_blocks(cfg, entry, abstract)
+        if abstract:
+            length = jax.ShapeDtypeStruct((batch,), jnp.int32)
+            table = jax.ShapeDtypeStruct((batch, t_rows), jnp.int32)
+        else:
+            length = jnp.zeros((batch,), jnp.int32)
+            table = jnp.full((batch, t_rows), TRASH_PAGE, jnp.int32)
+        return {"blocks": blocks, "length": length, "table": table}
+
+    def make_page_state(self, batch: int, target_len: int,
+                        pages: int = 0) -> "PageState":
+        return PageState(batch, self.pages_per_slot(target_len),
+                         pages or self.default_pages(batch, target_len),
+                         self.page_len)
+
+    # ---- per-entry ops
+    def gather_entry(self, entry: Dict, table) -> Dict:
+        return _gather_entry(entry, table)
+
+    def write_tokens(self, entry: Dict, k_new, v_new, positions,
+                     valid=None, table=None) -> Dict:
+        if table is None:
+            raise ValueError("paged write_tokens needs the slot page table")
+        return _write_tokens_paged(entry, k_new, v_new, positions, table,
+                                   valid=valid)
+
+    # ---- per-slot ops
+    def slot_view(self, cache: Cache, slot) -> Cache:
+        """Batch-1 view of slot `slot`: the *shared* pool blocks plus the
+        slot's table row and length. Writes through the view hit only the
+        slot's own pages (plus the trash page), so `merge_slot` can adopt
+        the view's pool wholesale."""
+        return {
+            "blocks": cache["blocks"],
+            "length": jax.lax.dynamic_slice_in_dim(cache["length"], slot, 1),
+            "table": jax.lax.dynamic_slice_in_dim(cache["table"], slot, 1,
+                                                  axis=0),
+        }
+
+    def merge_slot(self, cache: Cache, slot, view: Cache) -> Cache:
+        return {
+            "blocks": view["blocks"],
+            "length": jax.lax.dynamic_update_index_in_dim(
+                cache["length"], view["length"][0], slot, 0),
+            "table": jax.lax.dynamic_update_index_in_dim(
+                cache["table"], view["table"][0], slot, 0),
+        }
+
+    def reset_slot(self, cache: Cache, slot) -> Cache:
+        """Unmap slot `slot`: length -> 0, table row -> trash. Freed pages
+        are pos-cleared separately via `clear_pages` (the host allocator
+        knows which pages actually dropped to refcount zero — shared pages
+        must survive)."""
+        t_rows = cache["table"].shape[1]
+        return {
+            "blocks": cache["blocks"],
+            "length": jax.lax.dynamic_update_index_in_dim(
+                cache["length"], jnp.int32(0), slot, 0),
+            "table": jax.lax.dynamic_update_index_in_dim(
+                cache["table"], jnp.full((t_rows,), TRASH_PAGE, jnp.int32),
+                slot, 0),
+        }
+
+    def clear_pages(self, cache: Cache, page_ids) -> Cache:
+        return _clear_pages(cache, page_ids)
+
+
+@lru_cache(maxsize=None)
+def make_kv_cache(cfg: ModelConfig) -> KVCache:
+    """The layout strategy for ``cfg`` (keyed by ``cfg.cache_layout``)."""
+    if cfg.cache_layout == "paged":
+        return PagedCache(cfg)
+    if cfg.cache_layout == "contiguous":
+        return ContiguousCache(cfg)
+    raise ValueError(f"unknown cache_layout: {cfg.cache_layout!r}")
+
+
+# ---------------------------------------------- host-side page manager ----
+class PageState:
+    """Host-side allocator mirroring the device page table (numpy only —
+    never traced). The engine owns one per DecodeState and shares it
+    between the drafter and verifier caches: both models commit identical
+    positions, so one table serves both pools.
+
+    Invariants it maintains:
+      * ``table[slot, r]`` names a real page for r < ``mapped[slot]`` and
+        the trash page beyond;
+      * every page on the free list has been (or is pending being)
+        pos-cleared on device — drain ``pending_clear`` before the next
+        dispatch;
+      * ``refcount`` counts slot mappings plus PrefixStore references; a
+        page is recycled only at zero.
+    """
+
+    def __init__(self, batch: int, pages_per_slot: int, n_pages: int,
+                 page_len: int):
+        if n_pages < 2:
+            raise ValueError("paged pool needs >= 2 pages (trash + 1)")
+        self.batch = batch
+        self.pages_per_slot = pages_per_slot
+        self.n_pages = n_pages
+        self.page_len = page_len
+        self.table = np.full((batch, pages_per_slot), TRASH_PAGE, np.int32)
+        self.refcount = np.zeros(n_pages, np.int64)
+        self.refcount[TRASH_PAGE] = 1  # pinned forever
+        self.free: List[int] = list(range(n_pages - 1, 0, -1))
+        self.mapped = np.zeros(batch, np.int64)   # table rows in use per slot
+        self.host_len = np.zeros(batch, np.int64)  # committed-length mirror
+        self.live = np.zeros(batch, bool)  # slots whose tokens matter
+        self.pending_clear: List[int] = []  # freed pages awaiting device clear
+        self.pending_prompt: Dict[int, List[int]] = {}  # slot -> prompt held
+        #   from admission (adopt) until the final prefill chunk registers it
+        self.peak_pages_in_use = 0
+        self.store = PrefixStore(self)
+
+    @property
+    def pages_in_use(self) -> int:
+        return self.n_pages - 1 - len(self.free)
+
+    def _alloc(self) -> int:
+        if not self.free:
+            # reclaim cold prefix pages before declaring exhaustion
+            self.store.evict(1)
+        if not self.free:
+            raise RuntimeError(
+                f"page pool exhausted ({self.n_pages} pages, "
+                f"{self.pages_in_use} in use) — raise cache_pages or lower "
+                f"concurrency")
+        pid = self.free.pop()
+        self.refcount[pid] = 1
+        self.peak_pages_in_use = max(self.peak_pages_in_use, self.pages_in_use)
+        return pid
+
+    def ensure(self, slot: int, tokens: int) -> bool:
+        """Map enough pages for `slot` to hold `tokens` committed tokens.
+        Returns True when the table changed (device refresh needed)."""
+        need = min(-(-int(tokens) // self.page_len), self.pages_per_slot)
+        changed = False
+        while self.mapped[slot] < need:
+            self.table[slot, int(self.mapped[slot])] = self._alloc()
+            self.mapped[slot] += 1
+            changed = True
+        return changed
+
+    def release(self, slot: int) -> None:
+        """Unmap every page of `slot`. Pages whose refcount drops to zero
+        return to the free list and are queued for a device pos-clear."""
+        for r in range(int(self.mapped[slot])):
+            pid = int(self.table[slot, r])
+            self.refcount[pid] -= 1
+            if self.refcount[pid] == 0:
+                self.free.append(pid)
+                self.pending_clear.append(pid)
+        self.table[slot, :] = TRASH_PAGE
+        self.mapped[slot] = 0
+        self.host_len[slot] = 0
+        self.live[slot] = False
+        self.pending_prompt.pop(slot, None)
+
+
+class PrefixStore:
+    """Cross-request prefix page registry (host side).
+
+    Keys are chain hashes of page-aligned prompt prefixes: page r's key
+    folds page r-1's key with page r's tokens, so a hit at page r implies
+    the whole prefix [0, (r+1)*page_len) matches. Only FULL prompt pages
+    are registered or shared; the page containing a divergence point stays
+    private to its slot (copy-on-write at page granularity).
+
+    The store holds its own reference on every registered page, so shared
+    pages survive slot resets. Eviction is LRU; an evicted page is actually
+    freed (and queued for a device pos-clear) only once no live slot maps
+    it.
+    """
+
+    def __init__(self, pages: PageState):
+        self.pages = pages
+        self._by_hash: "OrderedDict[int, int]" = OrderedDict()  # hash -> pid
+        self._hash_of_page: Dict[int, int] = {}
+        # metrics
+        self.lookups = 0
+        self.hits = 0
+        self.hit_tokens = 0
+        self.prompt_tokens = 0
+
+    @staticmethod
+    def _chain(tokens: Sequence[int], page_len: int) -> List[int]:
+        out: List[int] = []
+        h = 0
+        for r in range(len(tokens) // page_len):
+            h = hash((h, tuple(int(t) for t in
+                               tokens[r * page_len:(r + 1) * page_len])))
+            out.append(h)
+        return out
+
+    def lookup(self, tokens: Sequence[int]) -> Tuple[int, List[int]]:
+        """Longest registered chain prefix -> (hit_pages, page_ids)."""
+        ids: List[int] = []
+        for h in self._chain(tokens, self.pages.page_len):
+            pid = self._by_hash.get(h)
+            if pid is None:
+                break
+            ids.append(pid)
+        return len(ids), ids
+
+    def adopt(self, slot: int, tokens: Sequence[int]) -> int:
+        """Map the longest resident prefix into `slot` (which must be
+        freshly released) and return the hit length in tokens. The hit is
+        capped below the full prompt so at least one prompt token is always
+        re-prefilled — the root logits need the last prompt token run."""
+        plen = len(tokens)
+        page_len = self.pages.page_len
+        self.lookups += 1
+        self.prompt_tokens += plen
+        n, ids = self.lookup(tokens)
+        while n and n * page_len >= plen:
+            n -= 1
+        ids = ids[:n]
+        if not n:
+            return 0
+        st = self.pages
+        for r, pid in enumerate(ids):
+            st.table[slot, r] = pid
+            st.refcount[pid] += 1
+            self._by_hash.move_to_end(self._hash_of_page[pid])
+        st.mapped[slot] = n
+        self.hits += 1
+        self.hit_tokens += n * page_len
+        return n * page_len
+
+    def register(self, slot: int, tokens: Sequence[int]) -> None:
+        """Publish `slot`'s full prompt pages after the prompt is fully
+        committed. Already-registered hashes are refreshed (LRU); new ones
+        take a store-owned reference on the slot's page."""
+        st = self.pages
+        for r, h in enumerate(self._chain(tokens, st.page_len)):
+            if h in self._by_hash:
+                self._by_hash.move_to_end(h)
+                continue
+            pid = int(st.table[slot, r])
+            if pid == TRASH_PAGE or pid in self._hash_of_page:
+                continue
+            self._by_hash[h] = pid
+            self._hash_of_page[pid] = h
+            st.refcount[pid] += 1
+
+    def evict(self, want_free: int = 1) -> int:
+        """Drop LRU entries until `want_free` pages have actually been
+        freed or the store is empty. Returns the number freed (freed pages
+        are queued on ``pending_clear``)."""
+        st = self.pages
+        freed = 0
+        while self._by_hash and freed < want_free:
+            _, pid = self._by_hash.popitem(last=False)
+            del self._hash_of_page[pid]
+            st.refcount[pid] -= 1
+            if st.refcount[pid] == 0:
+                st.free.append(pid)
+                st.pending_clear.append(pid)
+                freed += 1
+        return freed
+
+    @property
+    def hit_rate(self) -> float:
+        """Fraction of prompt tokens skipped via resident prefix pages."""
+        return self.hit_tokens / max(self.prompt_tokens, 1)

@@ -32,9 +32,20 @@ from repro.models.layers import (apply_lm_head, apply_norm, embed_defs,
 from repro.models.params import ParamDef, abstract_params, init_params, stacked
 
 
+def _with_blocks(cache: Dict, new_blocks, length) -> Dict:
+    """Rebuild a cache dict around new blocks/length, preserving the page
+    table (a paged cache's table leaf rides through every executable
+    unchanged — only the host allocator rewrites it)."""
+    out = {"blocks": new_blocks, "length": length}
+    if "table" in cache:
+        out["table"] = cache["table"]
+    return out
+
+
 class Model:
     def __init__(self, cfg: ModelConfig):
         self.cfg = cfg
+        self.kv = cache_lib.make_kv_cache(cfg)
 
     # ------------------------------------------------------------ params --
     def param_defs(self) -> Dict[str, Any]:
@@ -180,7 +191,8 @@ class Model:
         seq_valid = positions < lengths[:, None]
         h = embed_tokens(params["embed"], tokens, cfg, positions)
         ctx = {"positions": positions, "inv_freq": self._inv_freq(),
-               "seq_valid": seq_valid, "lengths": lengths}
+               "seq_valid": seq_valid, "lengths": lengths,
+               "table": cache.get("table")}
         if cfg.is_encoder_decoder:
             ctx["enc_out"] = self.encode(params, enc_feats)
         h, aux, new_blocks, _ = self._run_blocks(params, h, "prefill", ctx, cache)
@@ -191,7 +203,8 @@ class Model:
         logits = self.logits(params, h_last)
         # `+ 0` forces a fresh buffer so donating the cache later can never
         # invalidate the caller's `lengths` array
-        new_cache = {"blocks": new_blocks, "length": lengths.astype(jnp.int32) + 0}
+        new_cache = _with_blocks(cache, new_blocks,
+                                 lengths.astype(jnp.int32) + 0)
         return logits, new_cache, h_last
 
     # ------------------------------------------------------------ decode --
@@ -202,10 +215,10 @@ class Model:
         positions = lengths[:, None]  # [B, 1]
         h = embed_tokens(params["embed"], token[:, None], cfg, positions)
         ctx = {"positions": positions, "inv_freq": self._inv_freq(),
-               "lengths": lengths}
+               "lengths": lengths, "table": cache.get("table")}
         h, aux, new_blocks, _ = self._run_blocks(params, h, "decode", ctx, cache)
         logits = self.logits(params, h[:, 0])
-        new_cache = {"blocks": new_blocks, "length": lengths + 1}
+        new_cache = _with_blocks(cache, new_blocks, lengths + 1)
         return logits, new_cache, h[:, 0]
 
     # ------------------------------------------------------- tree verify --
@@ -224,7 +237,7 @@ class Model:
         h = embed_tokens(params["embed"], tree_tokens, cfg, positions)
         ctx = {"positions": positions, "inv_freq": self._inv_freq(),
                "lengths": lengths, "tree_mask": tree_mask,
-               "tree_paths": tree_paths}
+               "tree_paths": tree_paths, "table": cache.get("table")}
         h, aux, _, scratch = self._run_blocks(params, h, "tree", ctx, cache)
         logits = self.logits(params, h)
         return logits, scratch, h
@@ -253,6 +266,7 @@ class Model:
         """
         cfg = self.cfg
         lengths = cache["length"]
+        table = cache.get("table")
         positions = lengths[:, None] + depths_new
         h = embed_tokens(params["embed"], new_tokens, cfg, positions)
         inv_freq = self._inv_freq()
@@ -271,7 +285,7 @@ class Model:
                     lp["attn"], x, cfg, positions=positions, inv_freq=inv_freq,
                     cache_entry=entry, lengths=lengths,
                     scratch_k=sc["k"], scratch_v=sc["v"], offset=offset,
-                    ext_mask=ext_mask)
+                    ext_mask=ext_mask, table=table)
                 h = h + out
                 new_sb[f"layer{j}"] = {"k": sk, "v": sv}
                 if "mlp" in lp:
@@ -295,15 +309,16 @@ class Model:
         buffers) into the drafter's cache."""
         cfg = self.cfg
         lengths = cache["length"]
+        table = cache.get("table")
 
         def per_block(cb, sb):
-            return {f"layer{j}": cache_lib.commit_region(
+            return {f"layer{j}": self.kv.commit_region(
                 cb[f"layer{j}"], sb[f"layer{j}"]["k"], sb[f"layer{j}"]["v"],
-                node_idx, lengths, accept_len, cfg)
+                node_idx, lengths, accept_len, table=table)
                 for j in range(cfg.layers_per_block)}
 
         new_blocks = jax.vmap(per_block)(cache["blocks"], scratch)
-        return {"blocks": new_blocks, "length": lengths + accept_len}
+        return _with_blocks(cache, new_blocks, lengths + accept_len)
 
     # ------------------------------------------------------------ commit --
     def commit(self, cache: Dict, scratch: Dict, node_idx: jax.Array,
@@ -315,6 +330,7 @@ class Model:
         """
         cfg = self.cfg
         lengths = cache["length"]
+        table = cache.get("table")
         B = node_idx.shape[0]
         b_idx = jnp.arange(B)
 
@@ -326,9 +342,9 @@ class Model:
                 if sc is None:
                     new_cb[key] = entry
                 elif "k" in sc:  # attention layer
-                    new_cb[key] = cache_lib.commit_region(
+                    new_cb[key] = self.kv.commit_region(
                         entry, sc["k"], sc["v"], node_idx, lengths,
-                        accept_len, cfg)
+                        accept_len, table=table)
                 else:            # ssm layer: adopt last accepted node's state
                     last = node_idx[b_idx, jnp.maximum(accept_len - 1, 0)]
                     new_state = sc["node_states"][b_idx, last]
@@ -344,7 +360,7 @@ class Model:
             return new_cb
 
         new_blocks = jax.vmap(per_block)(cache["blocks"], scratch)
-        return {"blocks": new_blocks, "length": lengths + accept_len}
+        return _with_blocks(cache, new_blocks, lengths + accept_len)
 
 
 @functools.lru_cache(maxsize=64)

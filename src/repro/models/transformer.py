@@ -64,12 +64,14 @@ def apply_block(bp: Dict, h: jax.Array, cfg: ModelConfig, mode: str,
                 lp["attn"], x, cfg, mode=amode,
                 positions=ctx["positions"], inv_freq=ctx.get("inv_freq"),
                 cache_entry=entry, lengths=ctx.get("lengths"),
-                tree_mask=ctx.get("tree_mask"), seq_valid=ctx.get("seq_valid"))
+                tree_mask=ctx.get("tree_mask"), seq_valid=ctx.get("seq_valid"),
+                table=ctx.get("table"))
             if mode == "decode" and not encoder:
                 # single confirmed token: write through immediately
                 from repro.models import cache as cache_lib
-                new_entry = cache_lib.write_tokens(
-                    entry, kv[0], kv[1], ctx["positions"], cfg)
+                new_entry = cache_lib.make_kv_cache(cfg).write_tokens(
+                    entry, kv[0], kv[1], ctx["positions"],
+                    table=ctx.get("table"))
                 kv = None
             h = h + out
             if cfg.is_encoder_decoder and not encoder:

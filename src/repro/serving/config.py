@@ -28,6 +28,7 @@ CHOICES: Dict[str, tuple] = {
     "quantize": ("none", "int8-kv", "int8-kv+w8"),
     "verify_kernel": ("auto", "fused", "xla"),
     "overload": ("park", "shed"),
+    "cache_layout": ("contiguous", "paged"),
 }
 
 _HELP: Dict[str, str] = {
@@ -43,6 +44,13 @@ _HELP: Dict[str, str] = {
     "mesh": "device mesh: DxM (data x model) or 'host'; default unsharded",
     "quantize": "int8-kv: int8 KV caches; +w8 adds int8 weight-only params",
     "verify_kernel": "verify attention hot path: fused Pallas | xla | auto",
+    "cache_layout": "KV cache layout: contiguous per-slot stripes or a "
+                    "paged pool with per-slot page tables and cross-request "
+                    "prefix sharing",
+    "page_len": "paged layout: tokens per page (0 = layout default; must "
+                "divide max_target_len)",
+    "cache_pages": "paged layout: page-pool size (0 = full coverage — every "
+                   "slot can grow to max_target_len)",
     "replicas": "frontend mode: number of engine replicas behind the router",
     "slo_s": "frontend mode: per-request deadline in seconds after submit "
              "(0 = no SLO)",
@@ -83,6 +91,9 @@ class ServeConfig:
     mesh: Optional[str] = None
     quantize: str = "none"
     verify_kernel: str = "auto"
+    cache_layout: str = "contiguous"
+    page_len: int = 0
+    cache_pages: int = 0
     prompt_pad: int = 24
     # chunked prefill lane ("" = off, monolithic prefill)
     prefill_chunk: str = ""
@@ -210,7 +221,10 @@ class ServeConfig:
             depth_options=depths,
             config=EngineConfig(temperature=self.temperature, plan=self.plan,
                                 quant=QuantConfig.parse(self.quantize),
-                                verify_kernel=self.verify_kernel),
+                                verify_kernel=self.verify_kernel,
+                                cache_layout=self.cache_layout,
+                                page_len=self.page_len or None,
+                                cache_pages=self.cache_pages),
             mesh=mesh)
 
     def build_server(self, engine, telemetry=None):

@@ -48,7 +48,6 @@ leaning deeper when prefill taxes every step.
 """
 from __future__ import annotations
 
-import warnings
 from collections import deque
 from dataclasses import dataclass, field
 from typing import Callable, Deque, Dict, List, Optional, Sequence, Tuple
@@ -114,6 +113,12 @@ class ServingMetrics:
     mesh_devices: int = 1        # devices the engine's mesh spans (1 = unsharded)
     quant_mode: str = "none"     # engine QuantConfig mode string
     kv_bytes_per_slot: int = 0   # both caches' bytes ONE slot pins
+    # paged layout: prefix-store admission outcomes (0 under contiguous)
+    prefix_lookups: int = 0
+    prefix_hits: int = 0
+    prefix_hit_tokens: int = 0   # prompt tokens whose prefill was skipped
+    prefix_prompt_tokens: int = 0
+    peak_pages_in_use: int = 0   # high-water pool occupancy (pages)
     latencies: BoundedSeries = field(default_factory=_series(
         "serving_request_latency_seconds", "request submit -> finish"))
     # adaptive scheduling: the bucket each step ran, and per-bucket rollups
@@ -148,7 +153,8 @@ class ServingMetrics:
             s.hist = registry.register(s.hist)  # type: ignore[assignment]
         for name in ("tokens_out", "admissions", "refills", "parks",
                      "completed", "truncated_prompts", "prefill_chunks",
-                     "prefill_chunk_tokens",
+                     "prefill_chunk_tokens", "prefix_lookups", "prefix_hits",
+                     "prefix_hit_tokens", "peak_pages_in_use",
                      "recompiles_after_warmup", "bucket_switches", "steps"):
             registry.callback_gauge(
                 f"serving_{name}", lambda n=name: float(getattr(self, n)),
@@ -171,6 +177,12 @@ class ServingMetrics:
             "prefill_chunks": self.prefill_chunks,
             "prefill_chunk_tokens": self.prefill_chunk_tokens,
             "recompiles_after_warmup": self.recompiles_after_warmup,
+            "prefix_lookups": self.prefix_lookups,
+            "prefix_hits": self.prefix_hits,
+            "prefix_hit_tokens": self.prefix_hit_tokens,
+            "prefix_hit_rate": (self.prefix_hit_tokens
+                                / max(self.prefix_prompt_tokens, 1)),
+            "peak_pages_in_use": self.peak_pages_in_use,
             "mesh_devices": self.mesh_devices,
             "quant_mode": self.quant_mode,
             "kv_bytes_per_slot": self.kv_bytes_per_slot,
@@ -188,12 +200,21 @@ class ServingMetrics:
         }
 
 
-def slots_at_budget(engine: SpeculativeEngine, cache_byte_budget: int) -> int:
+def slots_at_budget(engine: SpeculativeEngine, cache_byte_budget: int,
+                    live_tokens: Optional[int] = None) -> int:
     """Max concurrent decode slots a fixed cache-byte budget sustains on
     this engine — HBM capacity planning for the slot pool. An int8-KV
     engine fits ~2-4x the slots of its fp32 twin at the same budget (the
-    headline of the quantized path; asserted in the quant_sweep bench)."""
-    per_slot = engine.cache_bytes_per_slot()["total"]
+    headline of the quantized path; asserted in the quant_sweep bench).
+
+    ``live_tokens`` reprices a slot by its OCCUPANCY rather than capacity:
+    a contiguous slot pins its full ``max_target_len`` stripe regardless,
+    but a paged slot pins only ceil(live_tokens / page_len) pages — this is
+    where the paged layout's slots-per-HBM-byte advantage shows up (the
+    ``slots_at_fixed_hbm_ratio`` metric in the paged_sweep bench)."""
+    per_slot = (engine.cache_bytes_per_slot(live_tokens)["total"]
+                if live_tokens is not None
+                else engine.cache_bytes_per_slot()["total"])
     return int(cache_byte_budget) // max(per_slot, 1)
 
 
@@ -545,6 +566,20 @@ class ContinuousServer:
             c = self._pick_chunk(remaining)
             if spent and spent + c > budget:
                 break
+            if (cur["pos"] == 0 and not cur.get("adopted")
+                    and getattr(self.engine, "paged", False)):
+                # paged prefix sharing: adopt resident prompt pages NOW —
+                # after the budget check, immediately before the slot's
+                # FIRST chunk dispatches. Adopting any earlier would let a
+                # garbage megastep run between adoption and the length pin,
+                # scribbling over shared pages (see engine.adopt_prefix).
+                cur["adopted"] = True
+                hit = self.engine.adopt_prefix(
+                    self.state, slot, cur["toks"], cur["plen"])
+                if hit:
+                    cur["pos"] = hit
+                    remaining = cur["plen"] - cur["pos"]
+                    c = self._pick_chunk(remaining)
             valid = min(remaining, c)
             chunk = np.zeros(c, np.int32)
             chunk[:valid] = cur["toks"][cur["pos"]:cur["pos"] + valid]
@@ -641,6 +676,7 @@ class ContinuousServer:
                   if r is not None and i not in self._prefill]
         if not active:
             self._note_recompiles()  # chunk dispatches above must be seen
+            self._note_paged()
             return self._just_finished
         if self.controller is not None:
             # occupancy-aware online bucket selection; every ladder bucket
@@ -699,7 +735,22 @@ class ContinuousServer:
             toks = res.tokens[i]
             self._credit(i, toks[toks >= 0])
         self._note_recompiles()
+        self._note_paged()
         return self._just_finished
+
+    def _note_paged(self) -> None:
+        """Refresh the paged-layout gauges (prefix-store admission outcomes
+        and the page pool's high-water mark) from the engine's PageState.
+        No-op for contiguous engines and the scheduler tests' fakes."""
+        ps = getattr(self.state, "pages", None)
+        if ps is None:
+            return
+        m = self.metrics
+        m.prefix_lookups = ps.store.lookups
+        m.prefix_hits = ps.store.hits
+        m.prefix_hit_tokens = ps.store.hit_tokens
+        m.prefix_prompt_tokens = ps.store.prompt_tokens
+        m.peak_pages_in_use = ps.peak_pages_in_use
 
     def _note_recompiles(self) -> None:
         """Refresh the zero-recompile signal. The executable counter is the
@@ -722,8 +773,8 @@ class ContinuousServer:
               ) -> Dict[int, RequestHandle]:
         """Serve until the queue drains and every slot retires; returns the
         completed :class:`RequestHandle` objects keyed by uid. This is the
-        canonical drain loop — ``run()`` is its deprecated dict-returning
-        compatibility wrapper."""
+        canonical drain loop; completed ``Request`` objects stay reachable
+        through ``self.done`` for callers that want the raw records."""
         if self._compile_base is None:
             self.warmup()
         steps = 0
@@ -733,17 +784,3 @@ class ContinuousServer:
             if max_steps is not None and steps >= max_steps:
                 break
         return {u: h for u, h in self.handles.items() if h.done()}
-
-    def run(self, max_steps: Optional[int] = None) -> Dict[int, Request]:
-        """Deprecated: serve until drained and return mutated ``Request``s.
-
-        The redesigned lifecycle API is ``submit() -> RequestHandle`` plus
-        ``serve()``; this wrapper keeps the historical ``Dict[int, Request]``
-        contract for existing callers."""
-        warnings.warn(
-            "ContinuousServer.run() is deprecated: submit() now returns a "
-            "RequestHandle and serve() drains the pool returning handles; "
-            "the Dict[int, Request] return survives only as a compatibility "
-            "shim", DeprecationWarning, stacklevel=2)
-        self.serve(max_steps=max_steps)
-        return self.done

@@ -234,7 +234,7 @@ def _hybrid_cfg():
 
 def _filled_cache(cfg, batch, fill):
     import jax.numpy as jnp
-    cache = cache_lib.init_cache(cfg, batch, 32)
+    cache = cache_lib.make_kv_cache(cfg).init(batch, 32)
     return __import__("jax").tree.map(
         lambda a: jnp.full(a.shape, fill, a.dtype), cache)
 
@@ -247,29 +247,31 @@ def _assert_tree_equal(a, b, msg=""):
 
 def test_slot_update_touches_only_the_slot():
     cfg = _hybrid_cfg()
+    kv = cache_lib.make_kv_cache(cfg)
     big = _filled_cache(cfg, 3, 3)
     small = _filled_cache(cfg, 1, 5)
-    upd = cache_lib.slot_update(big, 1, small)
-    _assert_tree_equal(cache_lib.slot_slice(upd, 1), small, "slot not written")
+    upd = kv.merge_slot(big, 1, small)
+    _assert_tree_equal(kv.slot_view(upd, 1), small, "slot not written")
     for other in (0, 2):
-        _assert_tree_equal(cache_lib.slot_slice(upd, other),
-                           cache_lib.slot_slice(big, other),
+        _assert_tree_equal(kv.slot_view(upd, other),
+                           kv.slot_view(big, other),
                            f"slot {other} disturbed")
 
 
 def test_reset_slot_clears_positions_and_state():
     cfg = _hybrid_cfg()
+    kv = cache_lib.make_kv_cache(cfg)
     big = _filled_cache(cfg, 3, 3)
-    rst = cache_lib.reset_slot(big, 1)
-    s1 = cache_lib.slot_slice(rst, 1)
+    rst = kv.reset_slot(big, 1)
+    s1 = kv.slot_view(rst, 1)
     assert int(np.asarray(s1["length"])[0]) == 0
     blk = s1["blocks"]["layer0"]
     assert (np.asarray(blk["pos"]) == -1).all()      # stale slots invisible
     ssm = s1["blocks"]["layer1"]
     assert (np.asarray(ssm["state"]) == 0).all()
     assert (np.asarray(ssm["conv"]) == 0).all()
-    _assert_tree_equal(cache_lib.slot_slice(rst, 0),
-                       cache_lib.slot_slice(big, 0), "slot 0 disturbed")
+    _assert_tree_equal(kv.slot_view(rst, 0),
+                       kv.slot_view(big, 0), "slot 0 disturbed")
 
 
 # ------------------------------------- quantized (int8+scales) slot ops ----
@@ -278,7 +280,7 @@ def _quantized_filled_cache(cfg, batch, seed=0):
     quantizing write path, plus non-trivial SSM/length leaves."""
     import jax
     import jax.numpy as jnp
-    cache = cache_lib.init_cache(cfg, batch, 32, kv_dtype=jnp.int8)
+    cache = cache_lib.make_kv_cache(cfg).init(batch, 32, kv_dtype=jnp.int8)
     keys = jax.random.split(jax.random.PRNGKey(seed), 4)
     k = jax.random.normal(keys[0], (batch, 8, cfg.num_kv_heads, cfg.head_dim))
     v = jax.random.normal(keys[1], (batch, 8, cfg.num_kv_heads, cfg.head_dim))
@@ -293,7 +295,7 @@ def _quantized_filled_cache(cfg, batch, seed=0):
     cache = jax.tree_util.tree_map_with_path(upd, cache)
     blk = cache["blocks"]["layer0"]
     entry = jax.tree.map(lambda a: a[0], blk)
-    written = cache_lib.write_tokens(entry, k, v, pos, cfg)
+    written = cache_lib.make_kv_cache(cfg).write_tokens(entry, k, v, pos)
     cache["blocks"]["layer0"] = jax.tree.map(lambda a: a[None], written)
     cache["length"] = jnp.full((batch,), 8, jnp.int32)
     return cache
@@ -303,13 +305,14 @@ def test_quantized_slot_update_and_slice_roundtrip_exactly():
     """slot_update / slot_slice on an int8+scales cache: payload AND scales
     move together bit-exactly, other slots untouched."""
     cfg = _hybrid_cfg()
+    kv = cache_lib.make_kv_cache(cfg)
     big = _quantized_filled_cache(cfg, 3, seed=0)
     small = _quantized_filled_cache(cfg, 1, seed=1)
-    upd = cache_lib.slot_update(big, 1, small)
-    _assert_tree_equal(cache_lib.slot_slice(upd, 1), small, "slot not written")
+    upd = kv.merge_slot(big, 1, small)
+    _assert_tree_equal(kv.slot_view(upd, 1), small, "slot not written")
     for other in (0, 2):
-        _assert_tree_equal(cache_lib.slot_slice(upd, other),
-                           cache_lib.slot_slice(big, other),
+        _assert_tree_equal(kv.slot_view(upd, other),
+                           kv.slot_view(big, other),
                            f"slot {other} disturbed")
     blk = upd["blocks"]["layer0"]
     assert np.asarray(blk["k"]).dtype == np.int8
@@ -321,9 +324,10 @@ def test_quantized_reset_slot_per_leaf_fills():
     empty-slot neutral pair, NOT a shared zero fill), pos -> -1; the other
     slots keep their exact quantized content."""
     cfg = _hybrid_cfg()
+    kv = cache_lib.make_kv_cache(cfg)
     big = _quantized_filled_cache(cfg, 3)
-    rst = cache_lib.reset_slot(big, 1)
-    s1 = cache_lib.slot_slice(rst, 1)
+    rst = kv.reset_slot(big, 1)
+    s1 = kv.slot_view(rst, 1)
     entry = s1["blocks"]["layer0"]
     assert (np.asarray(entry["k"]) == 0).all()
     assert (np.asarray(entry["v"]) == 0).all()
@@ -332,10 +336,10 @@ def test_quantized_reset_slot_per_leaf_fills():
     assert (np.asarray(entry["pos"]) == -1).all()
     assert int(np.asarray(s1["length"])[0]) == 0
     # and the neutral pair dequantizes to exact zeros
-    ek, ev = cache_lib.entry_kv(entry)
+    ek, ev = cache_lib.KVCache.entry_kv(entry)
     assert (np.asarray(ek) == 0).all() and (np.asarray(ev) == 0).all()
-    _assert_tree_equal(cache_lib.slot_slice(rst, 0),
-                       cache_lib.slot_slice(big, 0), "slot 0 disturbed")
+    _assert_tree_equal(kv.slot_view(rst, 0),
+                       kv.slot_view(big, 0), "slot 0 disturbed")
 
 
 def test_quantized_continuous_serving_zero_recompiles(tb):

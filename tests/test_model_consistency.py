@@ -9,7 +9,7 @@ import pytest
 
 from repro.configs import ASSIGNED, get_reduced_config
 from repro.models import Model
-from repro.models.cache import init_cache
+from repro.models.cache import make_kv_cache
 
 
 def chain_paths(W: int) -> np.ndarray:
@@ -42,7 +42,7 @@ def test_modes_consistent(arch):
         return m.logits(params, h)
 
     ref = ref_logits_for(tokens, lengths)
-    cache = init_cache(cfg, B, 64)
+    cache = make_kv_cache(cfg).init(B, 64)
     pl_logits, cache, _ = m.prefill(params, tokens, lengths, cache, enc_feats=enc)
     assert not bool(jnp.any(jnp.isnan(pl_logits)))
     for b in range(B):

@@ -1,0 +1,261 @@
+"""Paged KV cache: token-exactness vs the contiguous layout (fused and XLA
+verify, fp32 and int8-kv), copy-on-write prefix sharing with mid-page
+divergence, serving-level exactness under slot churn and chunked prefill,
+the zero-recompile contract across page churn and bucket switches, the
+page-granular HBM repricing, and the host-side PageState/PrefixStore
+bookkeeping invariants.
+"""
+import numpy as np
+import pytest
+
+from repro.core.buckets import buckets_for_depths, parse_buckets
+from repro.core.egt import egt_spec
+from repro.core.engine import EngineConfig, SpeculativeEngine
+from repro.models.cache import PageState, TRASH_PAGE
+from repro.quant import QuantConfig
+from repro.serving.continuous import ContinuousServer, slots_at_budget
+from repro.serving.controller import BucketController
+from repro.serving.server import Request
+from repro.serving.testbed import Testbed, TestbedSpec, build_testbed
+
+SPEC, VERIFY_V = egt_spec(3, 2), 5
+PAGE_LEN = 8
+
+
+@pytest.fixture(scope="module")
+def tb() -> Testbed:
+    return build_testbed(TestbedSpec(train_steps=160))
+
+
+def _engine(tb, depths=(3,), **cfg_kw) -> SpeculativeEngine:
+    return SpeculativeEngine(tb.drafter, tb.d_params, tb.verifier,
+                             tb.v_params,
+                             buckets=buckets_for_depths(depths, width=2,
+                                                        verify_frac=0.75),
+                             depth_options=depths,
+                             config=EngineConfig(**cfg_kw))
+
+
+def _paged_kw(**extra):
+    return dict(cache_layout="paged", page_len=PAGE_LEN, **extra)
+
+
+def _prompt(tb, n, seed=0):
+    rng = np.random.default_rng(seed)
+    return rng.integers(1, tb.spec.vocab, size=n).astype(np.int32)
+
+
+def _pad(prompt, width=16):
+    out = np.zeros(width, np.int32)
+    out[:len(prompt)] = prompt
+    return out
+
+
+def _decode_tokens(eng, state, slots, steps=3):
+    out = {s: [] for s in slots}
+    for _ in range(steps):
+        state, res = eng.decode_step(state, spec=SPEC, verify_v=VERIFY_V)
+        for s in slots:
+            t = res.tokens[s]
+            out[s].extend(t[t >= 0].tolist())
+    return state, out
+
+
+# ------------------------------------------- layout-exactness (engine) ----
+@pytest.mark.parametrize("kernel", ["fused", "xla"])
+@pytest.mark.parametrize("quant", ["none", "int8-kv"])
+def test_paged_greedy_token_exact(tb, kernel, quant):
+    """Greedy decode on the paged layout must match the contiguous layout
+    token-for-token — the pool + page-table indirection is pure storage,
+    on both verify hot paths and both KV dtypes."""
+    kw = dict(verify_kernel=kernel, quant=QuantConfig.parse(quant))
+    prompt = _prompt(tb, 13, seed=0)
+
+    eng_c = _engine(tb, **kw)
+    st_c = eng_c.init_decode_state(2)
+    st_c = eng_c.prefill_into_slot(st_c, 1, _pad(prompt), 13)
+    _, ref = _decode_tokens(eng_c, st_c, [1])
+
+    eng_p = _engine(tb, **_paged_kw(**kw))
+    assert eng_p.paged
+    st_p = eng_p.init_decode_state(2)
+    st_p = eng_p.prefill_into_slot(st_p, 1, _pad(prompt), 13)
+    _, got = _decode_tokens(eng_p, st_p, [1])
+    assert got == ref, f"paged diverged under {kernel}/{quant}"
+
+
+def test_paged_slot_churn_and_chunked_prefill_exact(tb):
+    """Reset a slot, re-prefill it through fixed-width chunks with garbage
+    megasteps interleaved (the serving regime): the recycled pages must be
+    clean and the continuation identical to a contiguous engine doing the
+    same dance."""
+    p0, p1 = _prompt(tb, 13, seed=1), _prompt(tb, 11, seed=2)
+
+    def dance(eng):
+        st = eng.init_decode_state(2)
+        st = eng.prefill_into_slot(st, 0, _pad(p0), 13)
+        st, _ = _decode_tokens(eng, st, [0], steps=2)
+        st = eng.reset_state_slot(st, 0)       # churn: pages recycle
+        pos, C = 0, 4
+        while pos < len(p1):                   # chunked re-prefill
+            valid = min(C, len(p1) - pos)
+            chunk = np.zeros(C, np.int32)
+            chunk[:valid] = p1[pos:pos + valid]
+            st = eng.prefill_chunk_into_slot(st, 0, chunk, pos, valid,
+                                             pos + valid >= len(p1))
+            pos += valid
+            if pos < len(p1):                  # garbage megastep between
+                st, _ = _decode_tokens(eng, st, [], steps=1)
+        _, toks = _decode_tokens(eng, st, [0])
+        return toks[0]
+
+    assert dance(_engine(tb, **_paged_kw())) == dance(_engine(tb))
+
+
+# ------------------------------------------------ copy-on-write sharing ---
+def test_cow_shared_page_mid_page_divergence_exact(tb):
+    """Two prompts share their first page (8 tokens) then diverge inside
+    the second page. The second admission adopts the shared page (skipping
+    its prefill); its writes past the divergence must land in private
+    pages — both slots' decodes match their contiguous references."""
+    shared = _prompt(tb, 10, seed=3)
+    a = np.concatenate([shared, _prompt(tb, 3, seed=4)])   # 13 tokens
+    b = np.concatenate([shared, _prompt(tb, 3, seed=5)])   # same first 10
+
+    eng_c = _engine(tb)
+    st_c = eng_c.init_decode_state(2)
+    st_c = eng_c.prefill_into_slot(st_c, 0, _pad(a), 13)
+    st_c = eng_c.prefill_into_slot(st_c, 1, _pad(b), 13)
+    _, ref = _decode_tokens(eng_c, st_c, [0, 1])
+
+    eng_p = _engine(tb, **_paged_kw())
+    st_p = eng_p.init_decode_state(2)
+    st_p = eng_p.prefill_into_slot(st_p, 0, _pad(a), 13)
+    st_p = eng_p.prefill_into_slot(st_p, 1, _pad(b), 13)
+    ps = st_p.pages
+    # slot 1 adopted slot 0's first page; the divergent page stays private
+    assert ps.store.hits == 1 and ps.store.hit_tokens == PAGE_LEN
+    assert ps.table[0, 0] == ps.table[1, 0] != TRASH_PAGE
+    assert ps.table[0, 1] != ps.table[1, 1]
+    assert ps.refcount[ps.table[0, 0]] >= 2
+    _, got = _decode_tokens(eng_p, st_p, [0, 1])
+    assert got[0] == ref[0], "sharer's writes corrupted the shared page"
+    assert got[1] == ref[1], "adopted prefix decoded differently"
+
+
+# ----------------------------------------------- serving-level exactness --
+def _shared_prefix_requests(tb, n, prefix_pages=2):
+    rng = np.random.default_rng(6)
+    prefix = rng.integers(1, tb.spec.vocab,
+                          size=prefix_pages * PAGE_LEN).astype(np.int32)
+    return [Request(uid=uid,
+                    prompt=np.concatenate(
+                        [prefix, rng.integers(1, tb.spec.vocab,
+                                              size=4 + uid % 3)
+                         .astype(np.int32)]),
+                    max_new=12)
+            for uid in range(n)]
+
+
+def _serve(tb, chunks=None, n=6, **cfg_kw):
+    eng = _engine(tb, **cfg_kw)
+    srv = ContinuousServer(eng, batch_size=2, prompt_pad=24, spec=SPEC,
+                           verify_v=VERIFY_V, prefill_chunks=chunks)
+    srv.warmup()
+    for r in _shared_prefix_requests(tb, n):
+        srv.submit(r)
+    srv.serve()
+    return ({u: srv.done[u].result.tolist() for u in srv.done},
+            srv.metrics.summary())
+
+
+@pytest.mark.parametrize("chunks", [None, (4, 8)],
+                         ids=["monolithic", "chunked"])
+def test_paged_serving_shared_prefix_token_exact(tb, chunks):
+    """Continuous serving over shared-prefix traffic (3x slot churn):
+    outputs identical to the contiguous server, prefix pages actually hit,
+    and not one executable is built after warmup despite page churn."""
+    ref, _ = _serve(tb, chunks=chunks)
+    got, m = _serve(tb, chunks=chunks, **_paged_kw())
+    assert got == ref
+    assert m["completed"] == 6 and m["refills"] >= 4
+    assert m["prefix_hits"] > 0 and m["prefix_hit_tokens"] > 0
+    assert 0.0 < m["prefix_hit_rate"] < 1.0
+    assert m["peak_pages_in_use"] > 0
+    assert m["recompiles_after_warmup"] == 0, m
+
+
+def test_paged_adaptive_bucket_switches_zero_recompiles(tb):
+    """Bucket switches on a paged engine replay warmup-compiled megasteps
+    — page churn, chunked prefill and ladder switching together leave the
+    compile counter untouched."""
+    ladder = parse_buckets("2x2x4,4x2x7")
+    eng = _engine(tb, depths=(2, 4), **_paged_kw())
+    srv = ContinuousServer(eng, batch_size=2, prompt_pad=24, buckets=ladder,
+                           controller=BucketController(ladder,
+                                                       profile=eng.profile),
+                           prefill_chunks=(4, 8))
+    srv.warmup()
+    for r in _shared_prefix_requests(tb, 6):
+        srv.submit(r)
+    srv.serve()
+    m = srv.metrics.summary()
+    assert m["completed"] == 6
+    assert m["recompiles_after_warmup"] == 0, m
+
+
+# --------------------------------------------------- capacity repricing ---
+def test_paged_repricing_and_slots_at_budget(tb):
+    """A paged slot is priced by OCCUPIED pages, not capacity: at low live
+    length the paged layout fits strictly more slots into the same HBM
+    budget than the contiguous layout (> 1.5x here), and the repricing is
+    monotone in live_tokens up to the contiguous full-capacity price."""
+    eng_c = _engine(tb)
+    eng_p = _engine(tb, **_paged_kw())
+    full_c = eng_c.cache_bytes_per_slot()["total"]
+    lo_p = eng_p.cache_bytes_per_slot(live_tokens=PAGE_LEN)["total"]
+    hi_p = eng_p.cache_bytes_per_slot(live_tokens=2 * PAGE_LEN)["total"]
+    assert lo_p < hi_p <= eng_p.cache_bytes_per_slot()["total"]
+    budget = 64 * full_c
+    assert slots_at_budget(eng_c, budget) == 64
+    ratio = slots_at_budget(eng_p, budget, live_tokens=PAGE_LEN) / 64
+    assert ratio > 1.5, f"paged capacity win only {ratio:.2f}x"
+
+
+# --------------------------------------------- host-side page accounting --
+def test_page_state_and_prefix_store_invariants():
+    """Pure-host unit test of the allocator + store: adoption is capped
+    below the full prompt, the store's own references keep shared pages
+    alive across slot release, and eviction frees only refcount-0 pages."""
+    ps = PageState(batch=2, pages_per_slot=4, n_pages=10, page_len=4)
+    toks = list(range(100, 116))                   # 16 tokens = 4 full pages
+    assert ps.store.adopt(0, toks) == 0            # empty store: no hit
+    ps.ensure(0, 16)
+    assert ps.mapped[0] == 4 and ps.pages_in_use == 4
+    ps.live[0] = True
+    ps.host_len[0] = 16
+    ps.store.register(0, toks)
+
+    # full-prompt hit is capped: 3 of 4 pages adopt, the last re-prefills
+    assert ps.store.adopt(1, toks) == 12
+    assert ps.mapped[1] == 3
+    assert (ps.table[0, :3] == ps.table[1, :3]).all()
+    shared = int(ps.table[0, 0])
+    assert ps.refcount[shared] == 3                # slot0 + store + slot1
+
+    ps.release(0)                                  # store refs keep pages
+    assert ps.refcount[shared] == 2
+    assert not ps.pending_clear                    # nothing actually freed
+    assert (ps.table[0] == TRASH_PAGE).all() and ps.mapped[0] == 0
+
+    freed = ps.store.evict(10)                     # drop the whole store
+    # slot 1 still maps 3 pages; only the 4th (unmapped) page frees now
+    assert freed == 1 and len(ps.pending_clear) == 1
+    assert ps.refcount[shared] == 1                # slot1's mapping remains
+    ps.release(1)
+    assert ps.pages_in_use == 0
+    assert sorted(ps.pending_clear) == sorted(set(ps.pending_clear))
+
+    # a fresh adopt after total eviction sees nothing
+    assert ps.store.adopt(0, toks) == 0
+    assert ps.store.hit_rate == pytest.approx(12 / 48)

@@ -8,7 +8,7 @@ import pytest
 from repro.configs import get_reduced_config
 from repro.models import Model
 from repro.models import moe as moe_mod
-from repro.models.cache import init_cache
+from repro.models.cache import make_kv_cache
 from repro.models.params import init_params
 
 
@@ -26,7 +26,8 @@ def test_gqa_grouped_matches_baseline(arch):
     np.testing.assert_allclose(np.asarray(h0), np.asarray(h1),
                                rtol=3e-4, atol=3e-4)
     lengths = jnp.full((B,), S, jnp.int32)
-    c0, c1 = init_cache(cfg0, B, 64), init_cache(cfg1, B, 64)
+    c0 = make_kv_cache(cfg0).init(B, 64)
+    c1 = make_kv_cache(cfg1).init(B, 64)
     l0, c0, _ = m0.prefill(params, toks, lengths, c0)
     l1, c1, _ = m1.prefill(params, toks, lengths, c1)
     np.testing.assert_allclose(np.asarray(l0), np.asarray(l1),

@@ -36,6 +36,25 @@ def test_expected_surface_is_pinned():
     }
 
 
+def test_cache_api_surface_is_pinned():
+    # the KVCache redesign collapsed the free-function cache surface
+    # (init_cache / slot_update / slot_slice / write_tokens / ...) behind
+    # the strategy objects; only the curated names below are public now
+    from repro.models import cache
+    assert cache.__all__ == sorted(cache.__all__)
+    for name in cache.__all__:
+        assert hasattr(cache, name), f"__all__ exports missing {name}"
+    assert set(cache.__all__) == {
+        "Cache", "ContiguousCache", "KVCache", "PageState", "PagedCache",
+        "PrefixStore", "cache_logical_axes", "cache_shardings",
+        "make_kv_cache", "place_cache", "shard_cache", "visible_mask",
+    }
+    for gone in ("init_cache", "slot_update", "slot_slice", "write_tokens",
+                 "commit_region", "cache_nbytes", "entry_kv",
+                 "entry_kernel_kv"):
+        assert not hasattr(cache, gone), f"legacy cache API leaked: {gone}"
+
+
 # ----------------------------------------------------- ServeConfig ---------
 def test_serveconfig_argv_roundtrip_defaults_and_overrides():
     assert ServeConfig().to_argv() == []          # defaults -> empty argv

@@ -106,13 +106,14 @@ def test_quantize_kv_roundtrip_bound():
 def test_quantized_cache_write_then_read_is_deterministic():
     cfg = ModelConfig(name="q", num_layers=2, d_model=64, num_heads=2,
                       num_kv_heads=2, head_dim=32, d_ff=128, vocab_size=32)
-    c = cache_lib.init_cache(cfg, 2, 64, kv_dtype=jnp.int8)
+    kv = cache_lib.make_kv_cache(cfg)
+    c = kv.init(2, 64, kv_dtype=jnp.int8)
     entry = jax.tree.map(lambda a: a[0], c["blocks"])["layer0"]
     k = jax.random.normal(jax.random.PRNGKey(2), (2, 3, 2, 32))
     v = jax.random.normal(jax.random.PRNGKey(3), (2, 3, 2, 32))
     pos = jnp.broadcast_to(jnp.arange(3)[None], (2, 3)).astype(jnp.int32)
-    written = cache_lib.write_tokens(entry, k, v, pos, cfg)
-    ek, ev = cache_lib.entry_kv(written)
+    written = kv.write_tokens(entry, k, v, pos)
+    ek, ev = cache_lib.KVCache.entry_kv(written)
     # the single rounding happens at write time: reading back equals the
     # direct quantize->dequantize of the input, bit-exactly
     np.testing.assert_array_equal(np.asarray(ek[:, :3]),
@@ -125,8 +126,9 @@ def test_quantized_cache_write_then_read_is_deterministic():
 
 def test_cache_nbytes_quantized_ratio(tb):
     cfg = tb.verifier.cfg
-    fp = cache_lib.cache_nbytes(cfg, 1, 512)
-    q8 = cache_lib.cache_nbytes(cfg, 1, 512, kv_dtype=jnp.int8)
+    kv = cache_lib.make_kv_cache(cfg)
+    fp = kv.nbytes(1, 512)
+    q8 = kv.nbytes(1, 512, kv_dtype=jnp.int8)
     assert fp / q8 >= 2.0, (fp, q8)
 
 
@@ -177,8 +179,8 @@ def test_int8_cache_shardings_place_scales_on_mesh():
         np.array(jax.devices()[:2]).reshape(1, 2), ("data", "model"))
     cfg = ModelConfig(name="qmesh", num_layers=2, d_model=128, num_heads=2,
                       num_kv_heads=2, head_dim=64, d_ff=256, vocab_size=32)
-    abstract = cache_lib.init_cache(cfg, 2, 64, abstract=True,
-                                    kv_dtype=jnp.int8)
+    abstract = cache_lib.make_kv_cache(cfg).init(2, 64, abstract=True,
+                                                 kv_dtype=jnp.int8)
     sh = cache_lib.cache_shardings(abstract, mesh)
     blk = sh["blocks"]["layer0"]
     # seq axis (index 2 on stacked [layers, B, S, ...] leaves) -> model
@@ -186,7 +188,7 @@ def test_int8_cache_shardings_place_scales_on_mesh():
     assert blk["k_scale"].spec[2] == "model"
     assert blk["v_scale"].spec[2] == "model"
     # and a concrete quantized cache actually places without error
-    concrete = cache_lib.init_cache(cfg, 2, 64, kv_dtype=jnp.int8)
+    concrete = cache_lib.make_kv_cache(cfg).init(2, 64, kv_dtype=jnp.int8)
     placed = cache_lib.place_cache(concrete, mesh)
     scale_leaf = placed["blocks"]["layer0"]["k_scale"]
     assert scale_leaf.sharding.spec[2] == "model"

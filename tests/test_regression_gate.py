@@ -66,6 +66,13 @@ GOOD_CURRENT = {
             "chunked": {"recompiles_after_warmup": 0},
         },
     },
+    "paged_sweep": {
+        "token_exact": 1.0,
+        "prefix_hit_rate": 0.66,
+        "slots_at_fixed_hbm_ratio": 16.0,
+        "contiguous": {"recompiles_after_warmup": 0},
+        "paged": {"recompiles_after_warmup": 0},
+    },
 }
 
 
@@ -155,6 +162,20 @@ def test_gate_fails_on_chunked_prefill_hard_bounds():
                      ("throughput_ratio", 1.0)):
         cur = copy.deepcopy(GOOD_CURRENT)
         cur["chunked_prefill_sweep"][key] = bad
+        fails = compare(_baseline(), cur)
+        assert any(key in f and "hard bound" in f for f in fails), (key, fails)
+
+
+def test_gate_fails_on_paged_cache_hard_bounds():
+    """The paged cache's absolute contracts: greedy decode token-exact vs
+    the contiguous layout, the prefix store must actually hit, and the
+    high-water HBM ratio must clear 1.5x — landing AT a bound is a loss."""
+    for key, bad in (("token_exact", 0.0),
+                     ("prefix_hit_rate", 0.0),            # == 0 is NOT > 0
+                     ("slots_at_fixed_hbm_ratio", 1.5),   # == 1.5 fails too
+                     ("slots_at_fixed_hbm_ratio", 1.2)):
+        cur = copy.deepcopy(GOOD_CURRENT)
+        cur["paged_sweep"][key] = bad
         fails = compare(_baseline(), cur)
         assert any(key in f and "hard bound" in f for f in fails), (key, fails)
 

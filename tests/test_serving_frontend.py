@@ -111,20 +111,16 @@ def test_handle_sync_streaming_yields_committed_tokens_in_order():
     assert streamed == [int(t) for t in h.request.result]
 
 
-def test_serve_returns_done_handles_and_run_is_deprecated_shim():
+def test_serve_returns_done_handles_and_raw_requests_stay_reachable():
     srv = _fake_server()
     hs = {u: srv.submit(_req(u)) for u in range(3)}
     done = srv.serve()
     assert sorted(done) == [0, 1, 2]
     assert all(done[u] is hs[u] and hs[u].done() for u in hs)
-
-    srv2 = _fake_server()
-    for u in range(3):
-        srv2.submit(_req(u))
-    with pytest.warns(DeprecationWarning, match="RequestHandle"):
-        legacy = srv2.run()
-    assert sorted(legacy) == [0, 1, 2]           # Dict[int, Request] shim
-    assert all(legacy[u].result is not None for u in legacy)
+    # the run() compatibility shim is gone; raw Requests live on srv.done
+    assert not hasattr(srv, "run")
+    assert sorted(srv.done) == [0, 1, 2]
+    assert all(srv.done[u].result is not None for u in srv.done)
 
 
 # ------------------------------------------------------------- Router ------

@@ -157,8 +157,8 @@ def test_continuous_serving_sharded_exact_with_zero_recompiles(tb, mesh):
         srv.warmup()
         for r in _requests(tb, 3 * BATCH):
             srv.submit(r)
-        done = srv.run()
-        return done, srv.metrics.summary()
+        srv.serve()
+        return srv.done, srv.metrics.summary()
 
     ref, _ = run(None)
     done, m = run(mesh)
@@ -187,7 +187,7 @@ def test_mesh_shape_stability_smoke(tb):
         srv.warmup()
         for r in _requests(tb, 4, seed=3):
             srv.submit(r)
-        srv.run()
+        srv.serve()
         m = srv.metrics.summary()
         assert m["completed"] == 4, (shape, m)
         assert m["recompiles_after_warmup"] == 0, (shape, m)

@@ -14,7 +14,7 @@ from repro.core.egt import egt_spec
 from repro.core.engine import EngineConfig, SpeculativeEngine
 from repro.kernels import ops, ref
 from repro.models import Model
-from repro.models.cache import init_cache
+from repro.models.cache import make_kv_cache
 from repro.serving.testbed import Testbed, TestbedSpec, build_testbed
 
 S_CACHE = 256
@@ -126,7 +126,8 @@ def test_model_kernel_path_matches_xla(arch):
     toks = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0,
                               cfg_x.vocab_size)
     lengths = jnp.full((B,), S, jnp.int32)
-    c_x, c_k = init_cache(cfg_x, B, 64), init_cache(cfg_k, B, 64)
+    c_x = make_kv_cache(cfg_x).init(B, 64)
+    c_k = make_kv_cache(cfg_k).init(B, 64)
     l_x, c_x, _ = m_x.prefill(params, toks, lengths, c_x)
     l_k, c_k, _ = m_k.prefill(params, toks, lengths, c_k)
     np.testing.assert_allclose(np.asarray(l_x), np.asarray(l_k),
