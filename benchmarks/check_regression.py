@@ -66,6 +66,10 @@ GATED_METRICS: Tuple[Tuple[str, str], ...] = (
     # pool's high-water usage must stay far under the contiguous pin
     ("paged_sweep.prefix_hit_rate", "higher"),
     ("paged_sweep.slots_at_fixed_hbm_ratio", "higher"),
+    # chaos sweep (emulated clock, seeded fault schedule): goodput paid
+    # under faults — backoff, replays and degraded steps cost emulated
+    # time, and that cost must not silently grow
+    ("fault_sweep.goodput_under_faults", "higher"),
 )
 DEFAULT_THRESHOLD = 0.10
 
@@ -111,7 +115,21 @@ HARD_BOUNDS: Tuple[Tuple[str, str, float], ...] = (
     ("paged_sweep.token_exact", "==", 1.0),
     ("paged_sweep.prefix_hit_rate", ">", 0.0),
     ("paged_sweep.slots_at_fixed_hbm_ratio", ">", 1.5),
+    # fault tolerance: every request served through the seeded chaos
+    # schedule must finish with the exact tokens of the fault-free run,
+    # nothing may be lost or shed, recovery must not cost a compile, and
+    # the faulted drive itself must be byte-reproducible
+    ("fault_sweep.replay_token_exact", "==", 1.0),
+    ("fault_sweep.lost_requests", "==", 0.0),
+    ("fault_sweep.recompiles_after_recovery", "==", 0.0),
+    ("fault_sweep.deterministic", "==", 1.0),
 )
+
+# fault counters walked like recompile counters (any depth, any sweep): a
+# fault_sweep artifact whose schedule injected faults but whose replica
+# counters never moved means the injection silently missed the serving
+# path — the chaos gate would be passing vacuously
+FAULT_COUNTERS: Tuple[str, ...] = ("faults_seen", "replays")
 
 
 def lookup(blob: Dict, dotted: str) -> Any:
@@ -123,17 +141,24 @@ def lookup(blob: Dict, dotted: str) -> Any:
     return cur
 
 
-def _walk_recompiles(node: Any, path: str, out: List[Tuple[str, int]]):
+def _walk_counter(node: Any, path: str, name: str,
+                  out: List[Tuple[str, int]]):
+    """Collect every occurrence of counter ``name`` anywhere in the
+    artifact (same traversal the recompile invariant uses)."""
     if isinstance(node, dict):
         for k, v in node.items():
             p = f"{path}.{k}" if path else str(k)
-            if k == "recompiles_after_warmup":
+            if k == name:
                 out.append((p, int(v)))
             else:
-                _walk_recompiles(v, p, out)
+                _walk_counter(v, p, name, out)
     elif isinstance(node, list):  # sweeps recorded as row lists still count
         for i, v in enumerate(node):
-            _walk_recompiles(v, f"{path}[{i}]", out)
+            _walk_counter(v, f"{path}[{i}]", name, out)
+
+
+def _walk_recompiles(node: Any, path: str, out: List[Tuple[str, int]]):
+    _walk_counter(node, path, "recompiles_after_warmup", out)
 
 
 def compare(baseline: Dict, current: Dict,
@@ -172,6 +197,28 @@ def compare(baseline: Dict, current: Dict,
     for path, val in recompiles:
         if val != 0:
             failures.append(f"{path}: {val} recompiles after warmup (must be 0)")
+    if "fault_sweep" in current:
+        # the chaos artifact must carry live fault counters: walked like
+        # recompiles so new replica rows are picked up automatically
+        fs = current["fault_sweep"]
+        try:
+            injected = int(lookup(fs, "faults_injected"))
+        except KeyError:
+            injected = 0
+            failures.append("fault_sweep.faults_injected: missing — the "
+                            "chaos schedule went unmeasured")
+        for name in FAULT_COUNTERS:
+            hits: List[Tuple[str, int]] = []
+            _walk_counter(fs, "fault_sweep", name, hits)
+            if not hits:
+                failures.append(
+                    f"fault_sweep carries no '{name}' counters — replica "
+                    f"fault accounting went unmeasured")
+            elif injected > 0 and sum(v for _, v in hits) == 0:
+                failures.append(
+                    f"fault_sweep injected {injected} faults but every "
+                    f"'{name}' counter is 0 — injection silently missed "
+                    f"the serving path")
     for key, op, bound in HARD_BOUNDS:
         try:
             val = float(lookup(current, key))

@@ -62,6 +62,7 @@ from repro.serving.config import ServeConfig
 from repro.serving.continuous import ContinuousServer, slots_at_budget
 from repro.serving.controller import BucketController
 from repro.serving.emulation import drive_trace
+from repro.serving.faults import FaultEvent, FaultPlan
 from repro.serving.frontend import drive_frontend_trace
 from repro.serving.server import BatchedServer, Request
 from repro.telemetry import EmulatedClock, Telemetry, validate_chrome_trace
@@ -814,6 +815,118 @@ def frontend_sweep(tb, n: int, rate_hz: float = 0.25,
     }
 
 
+FAULT_SEEDS = (101, 202, 303)
+
+
+def _fault_plan(seed: int) -> FaultPlan:
+    """One deterministic chaos schedule per seed: every fault kind fires
+    once, at a seeded jitter inside its own window, alternating replicas.
+    The windows are disjoint so recovery from one fault is underway (or
+    done) before the next lands — the sweep measures fail->replay->recover
+    cycles, not a pile-up that sheds the whole trace."""
+    rng = np.random.default_rng(seed)
+    t = lambda lo, hi: float(rng.uniform(lo, hi))        # noqa: E731
+    return FaultPlan([
+        FaultEvent(t(4.0, 8.0), "crash", 0),
+        FaultEvent(t(10.0, 14.0), "hang", 1, duration_s=2.0),
+        FaultEvent(t(16.0, 20.0), "nan", 0),
+        FaultEvent(t(22.0, 26.0), "pool_exhaust", 1, duration_s=3.0,
+                   pages=2),
+        FaultEvent(t(28.0, 30.0), "error", 0, duration_s=0.5),
+    ], seed=seed)
+
+
+def fault_sweep(tb, n: int = 10, rate_hz: float = 0.3,
+                deadline_s: float = 40.0,
+                seeds: Tuple[int, ...] = FAULT_SEEDS) -> Dict:
+    """Chaos gate: the 2-replica front-end under a seeded fault schedule
+    (crash, hang, NaN logits, paged-pool exhaustion, transient error) vs
+    the fault-free drive of the byte-identical trace.
+
+    Hard-bounded in check_regression.py:
+
+      * ``replay_token_exact`` — every request completes with the exact
+        tokens of the fault-free run (greedy decode + verifier gating make
+        the replayed prefix resume deterministically), for every seed;
+      * ``lost_requests`` — nothing is shed or dropped across any
+        fail->evacuate->replay->recover cycle;
+      * ``recompiles_after_recovery`` — replays re-enter the warmed
+        prefill-chunk lanes; a fault must never cost a compile;
+      * ``deterministic`` — the faulted drive re-run with an identically
+        rebuilt plan produces the byte-identical artifact.
+
+    ``goodput_under_faults`` (mean over seeds) is baseline-gated: faults
+    cost real emulated time (backoff, replays), and that cost must not
+    silently grow."""
+    profile = emulated_profile()
+
+    def front():
+        # paged layout so pool_exhaust has a free list to steal from;
+        # step_timeout must cover the hang budget; one extra retry of
+        # headroom over the single-replay schedule
+        cfg = ServeConfig(server="frontend", replicas=2, batch=2,
+                          depth=SPEC.depth, width=SPEC.width, prompt_pad=12,
+                          prefill_chunk="4,8", cache_layout="paged",
+                          page_len=8, retry_budget=3, step_timeout=2.0)
+        return cfg.build_frontend(tb, profile=profile)
+
+    out: Dict = {"config": {"n": n, "rate_hz": rate_hz,
+                            "deadline_s": deadline_s, "seeds": list(seeds),
+                            "fault_kinds": ["crash", "hang", "nan",
+                                            "pool_exhaust", "error"]},
+                 "seeds": {}}
+    blob = lambda r: json.dumps(r, sort_keys=True, default=float)  # noqa: E731
+    exact, det, lost, recompiles = [], [], 0, 0
+    goodput, clean_goodput, injected, replays = [], [], 0, 0
+    for seed in seeds:
+        mk = lambda: make_slo_trace(tb, n, rate_hz, deadline_s=deadline_s,  # noqa: E731
+                                    seed=seed)
+        clean = drive_frontend_trace(front(), mk(), profile)
+        faulty = drive_frontend_trace(front(), mk(), profile,
+                                      faults=_fault_plan(seed))
+        rerun = drive_frontend_trace(front(), mk(), profile,
+                                     faults=_fault_plan(seed))
+        reps = faulty["router"]["replicas"]
+        row = {
+            "clean": {k: clean[k] for k in
+                      ("completed", "goodput_under_slo", "makespan_s",
+                       "results_digest")},
+            "faulty": {k: faulty[k] for k in
+                       ("completed", "sheds", "faults", "replica_failures",
+                        "replays", "goodput_under_slo", "makespan_s",
+                        "results_digest")},
+            "faults": faulty["faults"],
+            "replicas": reps,
+            "token_exact": float(faulty["results_digest"]
+                                 == clean["results_digest"]),
+            "deterministic": float(blob(faulty) == blob(rerun)),
+            # shed counts as lost: the gate's contract is that no fault
+            # schedule may cost a request its completion
+            "lost_requests": faulty["submitted"] - faulty["completed"],
+        }
+        out["seeds"][str(seed)] = row
+        exact.append(row["token_exact"])
+        det.append(row["deterministic"])
+        lost += row["lost_requests"]
+        recompiles = max(recompiles, max(
+            int(r["recompiles_after_warmup"]) for r in reps.values()))
+        goodput.append(faulty["goodput_under_slo"])
+        clean_goodput.append(clean["goodput_under_slo"])
+        injected += faulty["faults"]["faults_injected"]
+        replays += faulty["replays"]
+    out.update({
+        "replay_token_exact": min(exact),
+        "deterministic": min(det),
+        "lost_requests": int(lost),
+        "recompiles_after_recovery": int(recompiles),
+        "goodput_under_faults": float(np.mean(goodput)),
+        "clean_goodput": float(np.mean(clean_goodput)),
+        "faults_injected": int(injected),
+        "replays": int(replays),
+    })
+    return out
+
+
 def sweep_meshes(tb, n: int, rate_hz: float, max_new: int, batch: int,
                  prompt_pad: int,
                  shapes: Optional[List[Tuple[int, int]]] = None,
@@ -874,6 +987,10 @@ def run(quick: bool = True, mesh_sweep: bool = True):
     # async front-end: scale-out router vs scale-up single replica on
     # goodput under SLO (emulated clock; drain/scale-up event mid-trace)
     out["frontend_sweep"] = frontend_sweep(tb, n)
+    # chaos gate: seeded crash/hang/NaN/pool-exhaust/error schedule against
+    # the 2-replica front-end — token-exact replay, zero lost requests,
+    # zero recompiles through fail->recover (emulated clock)
+    out["fault_sweep"] = fault_sweep(tb)
     # chunked prefill lane vs monolithic head-of-line stall on a bimodal
     # short/long prompt trace (emulated clock) + greedy exactness check
     out["chunked_prefill_sweep"] = chunked_prefill_sweep(tb, n)
@@ -884,13 +1001,32 @@ def run(quick: bool = True, mesh_sweep: bool = True):
     return out
 
 
+def _print_faults(fl: Dict) -> None:
+    print(f"faults [{','.join(map(str, fl['config']['seeds']))}]: "
+          f"token_exact={fl['replay_token_exact']:.0f}  "
+          f"lost={fl['lost_requests']}  "
+          f"deterministic={fl['deterministic']:.0f}  "
+          f"recompiles={fl['recompiles_after_recovery']}  "
+          f"injected={fl['faults_injected']}  replays={fl['replays']}  "
+          f"goodput {fl['goodput_under_faults']:.3f} "
+          f"(clean {fl['clean_goodput']:.3f})")
+
+
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true",
                     help="bigger trace (48 requests, 2 arrival rates)")
     ap.add_argument("--no-mesh-sweep", action="store_true",
                     help="skip the data×model mesh-shape sweep")
+    ap.add_argument("--faults-only", action="store_true",
+                    help="run only the chaos fault_sweep and write "
+                         "results/fig_faults.json (the CI chaos job)")
     cli = ap.parse_args()
+    if cli.faults_only:
+        fl = fault_sweep(common.testbed())
+        common.save("fig_faults", {"fault_sweep": fl})
+        _print_faults(fl)
+        raise SystemExit(0)
     res = run(quick=not cli.full, mesh_sweep=not cli.no_mesh_sweep)
     for rate, r in res["servers"].items():
         c, b = r["continuous"], r["batched"]
@@ -970,3 +1106,5 @@ if __name__ == "__main__":
               f"deterministic={fs['deterministic']:.0f}  "
               f"repins={r['router']['repins']}  "
               f"affinity_hits={r['router']['affinity_hits']}")
+    if res.get("fault_sweep"):
+        _print_faults(res["fault_sweep"])

@@ -792,6 +792,15 @@ class SpeculativeEngine:
             times[b.key()] = res.iter_time
         return state, times
 
+    # one-shot fault injection: the next decode_step raises NumericalFault
+    # exactly as if the verifier had emitted non-finite logits
+    _poison_numerical = False
+
+    def poison_next_step(self) -> None:
+        """Arm a one-shot NumericalFault on the next decode_step (fault
+        injection for the serving recovery path — no graph change)."""
+        self._poison_numerical = True
+
     def decode_step(self, state: DecodeState,
                     spec: Optional[DraftSpec] = None,
                     verify_v: Optional[int] = None,
@@ -826,12 +835,13 @@ class SpeculativeEngine:
                     # fused has no host-visible stage boundaries by design:
                     # one span from dispatch to the accept-length sync
                     tr.begin("device", track="engine")
-                (dcache, vcache, bonus, toks, alen, h_last) = step(
+                (dcache, vcache, bonus, toks, alen, h_last, finite) = step(
                     self.d_params, self.v_params, state.dcache, state.vcache,
                     state.root, sk)
             else:
                 parts = self._get_staged_parts(use_spec, use_v)
-                (dcache, vcache, bonus, toks, alen, h_last) = self._run_staged(
+                (dcache, vcache, bonus, toks, alen, h_last,
+                 finite) = self._run_staged(
                     parts, state.dcache, state.vcache, state.root, sk,
                     tracer=tr)
         alen_np = np.asarray(alen)
@@ -858,6 +868,18 @@ class SpeculativeEngine:
         if tr is not None:
             tr.end(track="engine")  # host bookkeeping
             tr.end(track="engine", accept_mean=float(alen_np.mean()))
+        finite_np = np.asarray(finite)
+        if self._poison_numerical or not finite_np.all():
+            self._poison_numerical = False
+            bad = np.flatnonzero(~finite_np)
+            slots = bad.tolist() if bad.size else list(range(B))
+            # lazy import: errors lives above the engine in the package graph
+            from repro.serving.errors import NumericalFault
+            # carry the post-step state: the inputs were donated, so the
+            # caller MUST reassign before touching its old buffers
+            raise NumericalFault(
+                f"non-finite verifier logits in slots {slots}",
+                state=new_state, slots=slots)
         return new_state, res
 
     def slot_lengths(self, state: DecodeState) -> np.ndarray:
@@ -919,8 +941,11 @@ class SpeculativeEngine:
                 axis=1)[:, 0]
             dcache, vcache, bonus, h_last = self._constrain_state(
                 dcache, vcache, acc.bonus, h_last)
+            # in-graph numerical health: any NaN/Inf in the verifier logits
+            # marks the slot — the host boundary turns it into NumericalFault
+            finite = jnp.all(jnp.isfinite(t_logits), axis=(1, 2))
             return (dcache, vcache, bonus, out_tokens, acc.accept_len,
-                    h_last)
+                    h_last, finite)
 
         return jax.jit(step, donate_argnums=(2, 3))
 
@@ -1004,6 +1029,7 @@ class SpeculativeEngine:
         with _sp("verify"):
             sub, select_idx, t_logits, scratch, h_nodes = parts["verify"](
                 self.v_params, vcache, res)
+            finite = jnp.all(jnp.isfinite(t_logits), axis=(1, 2))
         with _sp("accept"):
             if (self.cfg.plan == "staged"
                     and self.cfg.resolve_accept() == "greedy"):
@@ -1030,7 +1056,7 @@ class SpeculativeEngine:
             # staged parts (and a later fused megastep) never see a drifting
             # sharding
             bonus = self._put(jnp.asarray(bonus), "batch")
-        return dcache, vcache, bonus, out_tokens, accept_len, h_last
+        return dcache, vcache, bonus, out_tokens, accept_len, h_last, finite
 
     def _get_staged_parts(self, spec: DraftSpec, verify_v: int):
         key = ("staged", spec, verify_v, self._cfg_key)

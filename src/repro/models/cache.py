@@ -810,10 +810,13 @@ class PageState:
             # reclaim cold prefix pages before declaring exhaustion
             self.store.evict(1)
         if not self.free:
-            raise RuntimeError(
-                f"page pool exhausted ({self.n_pages} pages, "
-                f"{self.pages_in_use} in use) — raise cache_pages or lower "
-                f"concurrency")
+            # lazy import: errors lives above cache in the package graph and
+            # this module must stay importable without repro.serving
+            from repro.serving.errors import PoolExhausted
+            raise PoolExhausted(
+                n_pages=self.n_pages, pages_in_use=self.pages_in_use,
+                prefix_pages=len(self.store._hash_of_page),
+                peak_pages=self.peak_pages_in_use)
         pid = self.free.pop()
         self.refcount[pid] = 1
         self.peak_pages_in_use = max(self.peak_pages_in_use, self.pages_in_use)
@@ -821,13 +824,29 @@ class PageState:
 
     def ensure(self, slot: int, tokens: int) -> bool:
         """Map enough pages for `slot` to hold `tokens` committed tokens.
-        Returns True when the table changed (device refresh needed)."""
+        Returns True when the table changed (device refresh needed).
+        Transactional: on exhaustion mid-grow the pages already taken are
+        unwound (they were never written, so they go straight back on the
+        free list in their original order) — a parked admission must not
+        leak pages into a slot that will not run."""
         need = min(-(-int(tokens) // self.page_len), self.pages_per_slot)
         changed = False
-        while self.mapped[slot] < need:
-            self.table[slot, int(self.mapped[slot])] = self._alloc()
-            self.mapped[slot] += 1
-            changed = True
+        added: List[int] = []
+        base = int(self.mapped[slot])
+        try:
+            while self.mapped[slot] < need:
+                pid = self._alloc()
+                added.append(pid)
+                self.table[slot, int(self.mapped[slot])] = pid
+                self.mapped[slot] += 1
+                changed = True
+        except Exception:
+            for pid in reversed(added):
+                self.refcount[pid] = 0
+                self.free.append(pid)
+            self.table[slot, base:base + len(added)] = TRASH_PAGE
+            self.mapped[slot] = base
+            raise
         return changed
 
     def release(self, slot: int) -> None:
@@ -870,6 +889,7 @@ class PrefixStore:
         self.hits = 0
         self.hit_tokens = 0
         self.prompt_tokens = 0
+        self.adopt_denied = 0
 
     @staticmethod
     def _chain(tokens: Sequence[int], page_len: int) -> List[int]:
@@ -900,6 +920,11 @@ class PrefixStore:
         page_len = self.pages.page_len
         self.lookups += 1
         self.prompt_tokens += plen
+        if not self.pages.free:
+            # pool under pressure: sharing more pages would pin them against
+            # eviction, so deny the adoption and let the prompt re-prefill
+            self.adopt_denied += 1
+            return 0
         n, ids = self.lookup(tokens)
         while n and n * page_len >= plen:
             n -= 1

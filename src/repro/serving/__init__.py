@@ -12,6 +12,10 @@ The stable surface of ``repro.serving`` is exactly ``__all__`` below —
   continuous replicas behind a session-affine SLO-aware :class:`Router`
   with :class:`AdmissionConfig`-controlled admission; emulated-clock runs
   go through :func:`drive_frontend_trace`.
+* **fault tolerance** — typed step errors (:class:`ServingError` and its
+  subclasses), deterministic fault injection (:class:`FaultPlan` of
+  :class:`FaultEvent` rows), and :class:`RecoveryConfig`-tuned replica
+  failure recovery with token-exact replay (see ``serving/frontend.py``).
 * **configuration** — :class:`ServeConfig` is the one CLI/JSON-
   round-trippable config the launcher and the benchmarks both build from.
 
@@ -21,8 +25,13 @@ Anything not exported here (``repro.serving.emulation`` internals, the
 from repro.serving.config import ServeConfig
 from repro.serving.continuous import ContinuousServer, ServingMetrics
 from repro.serving.controller import BucketController
+from repro.serving.errors import (NoReplicaAvailable, NumericalFault,
+                                  PoolExhausted, ReplicaError, ServingError,
+                                  StepTimeout)
+from repro.serving.faults import FaultEvent, FaultPlan
 from repro.serving.frontend import (AdmissionConfig, FrontendMetrics,
-                                    ServingFrontend, drive_frontend_trace)
+                                    RecoveryConfig, ServingFrontend,
+                                    drive_frontend_trace)
 from repro.serving.handle import RequestHandle
 from repro.serving.router import Replica, Router, RouterMetrics
 from repro.serving.sampling import mask_padded_vocab, sample
@@ -33,15 +42,24 @@ __all__ = [
     "BatchedServer",
     "BucketController",
     "ContinuousServer",
+    "FaultEvent",
+    "FaultPlan",
     "FrontendMetrics",
+    "NoReplicaAvailable",
+    "NumericalFault",
+    "PoolExhausted",
+    "RecoveryConfig",
     "Replica",
+    "ReplicaError",
     "Request",
     "RequestHandle",
     "Router",
     "RouterMetrics",
     "ServeConfig",
+    "ServingError",
     "ServingFrontend",
     "ServingMetrics",
+    "StepTimeout",
     "drive_frontend_trace",
     "mask_padded_vocab",
     "sample",

@@ -58,6 +58,13 @@ _HELP: Dict[str, str] = {
     "overload": "frontend mode: park (hold under backpressure) or shed "
                 "requests past the admission bound",
     "affinity": "frontend mode: pin sessions to replicas",
+    "retry_budget": "frontend mode: token-exact replays per request after "
+                    "replica failures before a terminal shed",
+    "step_timeout": "frontend mode: wall watchdog per replica step in "
+                    "seconds (0 = disabled); emulated hangs are charged "
+                    "this budget",
+    "watchdog": "frontend mode: consecutive transient step errors before "
+                "a replica is failed and its work replayed",
     "depth": "pinned speculation depth (continuous mode)",
     "width": "pinned speculation width (continuous mode)",
     "prompt_pad": "static prompt slot width (tokens)",
@@ -104,6 +111,10 @@ class ServeConfig:
     max_queue: int = 64
     overload: str = "park"
     affinity: bool = True
+    # frontend fault tolerance (see serving/frontend.py RecoveryConfig)
+    retry_budget: int = 2
+    step_timeout: float = 0.0
+    watchdog: int = 3
     # observability
     log_level: str = "INFO"
     log_json: bool = False
@@ -255,7 +266,8 @@ class ServeConfig:
     def build_frontend(self, tb, profile=None, mesh=None):
         """The async multi-replica topology: ``replicas`` pinned continuous
         engines behind a session-affine SLO-aware router."""
-        from repro.serving.frontend import AdmissionConfig, ServingFrontend
+        from repro.serving.frontend import (AdmissionConfig, RecoveryConfig,
+                                            ServingFrontend)
         if self.server != "frontend":
             raise ValueError("build_frontend needs server='frontend'")
         spec, verify_v = self.pinned_spec()
@@ -275,5 +287,9 @@ class ServeConfig:
                                     slo_s=self.slo_s)
         from repro.serving.router import Router
         router = Router(servers, profile=profile, affinity=self.affinity)
+        recovery = RecoveryConfig(retry_budget=self.retry_budget,
+                                  step_timeout_s=self.step_timeout,
+                                  watchdog=self.watchdog)
         return ServingFrontend(servers, profile=profile,
-                               admission=admission, router=router)
+                               admission=admission, router=router,
+                               recovery=recovery)

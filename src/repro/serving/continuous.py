@@ -58,6 +58,7 @@ from repro.core.buckets import Bucket, ladder_headroom, validate_ladder
 from repro.core.egt import DraftSpec, egt_spec
 from repro.core.engine import DecodeState, SpeculativeEngine
 from repro.serving.controller import BucketController
+from repro.serving.errors import NumericalFault, PoolExhausted
 from repro.serving.handle import RequestHandle
 from repro.serving.server import Request, cut_at_eos, pad_prompt
 from repro.telemetry import (BoundedSeries, Clock, EmulatedClock, Histogram,
@@ -110,6 +111,11 @@ class ServingMetrics:
     prefill_chunks: int = 0      # chunk executables dispatched by the lane
     prefill_chunk_tokens: int = 0  # chunk widths summed (incl. tail padding)
     recompiles_after_warmup: int = 0
+    # fault tolerance: typed-failure outcomes at this server's boundaries
+    pool_parks: int = 0          # admissions/chunks parked on PoolExhausted
+    numerical_faults: int = 0    # NumericalFault raised through step()
+    evacuations: int = 0         # incomplete requests pulled by evacuate()
+    degraded_steps: int = 0      # steps run with degradation forced on
     mesh_devices: int = 1        # devices the engine's mesh spans (1 = unsharded)
     quant_mode: str = "none"     # engine QuantConfig mode string
     kv_bytes_per_slot: int = 0   # both caches' bytes ONE slot pins
@@ -155,7 +161,9 @@ class ServingMetrics:
                      "completed", "truncated_prompts", "prefill_chunks",
                      "prefill_chunk_tokens", "prefix_lookups", "prefix_hits",
                      "prefix_hit_tokens", "peak_pages_in_use",
-                     "recompiles_after_warmup", "bucket_switches", "steps"):
+                     "recompiles_after_warmup", "bucket_switches", "steps",
+                     "pool_parks", "numerical_faults", "evacuations",
+                     "degraded_steps"):
             registry.callback_gauge(
                 f"serving_{name}", lambda n=name: float(getattr(self, n)),
                 f"ServingMetrics.{name}")
@@ -177,6 +185,10 @@ class ServingMetrics:
             "prefill_chunks": self.prefill_chunks,
             "prefill_chunk_tokens": self.prefill_chunk_tokens,
             "recompiles_after_warmup": self.recompiles_after_warmup,
+            "pool_parks": self.pool_parks,
+            "numerical_faults": self.numerical_faults,
+            "evacuations": self.evacuations,
+            "degraded_steps": self.degraded_steps,
             "prefix_lookups": self.prefix_lookups,
             "prefix_hits": self.prefix_hits,
             "prefix_hit_tokens": self.prefix_hit_tokens,
@@ -347,6 +359,7 @@ class ContinuousServer:
         self._exec_base: int = 0
         self._just_finished: List[Request] = []
         self.warmed_buckets: set = set()  # bucket keys compiled at warmup
+        self._degraded = False  # graceful-degradation flag (front-end set)
 
     # ---------------------------------------------------------- lifecycle --
     def set_clock(self, clock: Clock) -> None:
@@ -379,11 +392,17 @@ class ContinuousServer:
         redesigned lifecycle API (``done()``/``result()``/``tokens``/token
         streaming). ``handle`` lets a front-end that created the handle at
         admission time (before routing picked this server) reuse it."""
-        req.t_submit = req.t_submit or self.clock.now()
+        if req.t_submit is None:    # preserved across recovery resubmissions
+            req.t_submit = self.clock.now()
         h = handle if handle is not None else RequestHandle(req)
         h._pump = self._pump_once
         self.handles[req.uid] = h
-        user_stream = req.stream
+        # remember the TRUE user callback across resubmissions: a replayed
+        # request arrives with req.stream already set to a previous server's
+        # _chain, and chaining on top of that would double-deliver every
+        # chunk into the handle
+        user_stream = getattr(req, "_user_stream", req.stream)
+        req._user_stream = user_stream
 
         def _chain(uid, toks, _h=h, _user=user_stream):
             _h._on_tokens(toks)
@@ -439,6 +458,40 @@ class ContinuousServer:
         self._compile_base = self.engine._compile_count
         self._exec_base = self.engine.executable_count()
 
+    def set_degraded(self, flag: bool) -> None:
+        """Force graceful degradation on or off: an adaptive server floors
+        its controller at the shallowest warmed bucket (the cheapest
+        compiled step); pinned servers just count degraded steps."""
+        self._degraded = bool(flag)
+        if self.controller is not None:
+            self.controller.degraded = bool(flag)
+
+    def evacuate(self) -> List[Tuple[Request, Optional[RequestHandle]]]:
+        """Pull every incomplete request off this server for re-admission
+        elsewhere: queued requests first (FIFO), then occupied slots in slot
+        order — a deterministic order, so emulated fault drives replay
+        byte-identically. Each occupied slot is parked (its pages release,
+        its cache entries become invisible); mid-prefill cursors are
+        dropped. Completed requests stay in ``done``/``handles`` for the
+        front-end to drain."""
+        out: List[Tuple[Request, Optional[RequestHandle]]] = []
+        for req in list(self.queue):
+            out.append((req, self.handles.pop(req.uid, None)))
+        self.queue.clear()
+        for i in range(self.batch_size):
+            req = self.slots[i]
+            if req is None:
+                continue
+            out.append((req, self.handles.pop(req.uid, None)))
+            self._park(i)
+            self._buffers[i] = []
+        self._prefill.clear()
+        self._prefill_order.clear()
+        self.metrics.evacuations += len(out)
+        if self._ev is not None and out:
+            self._ev.emit("evacuation", requests=len(out))
+        return out
+
     def _park(self, slot: int):
         """Empty an idle slot (length 0, stale entries invisible); it keeps
         decoding garbage, which is cheaper than breaking the batch shape."""
@@ -460,12 +513,27 @@ class ContinuousServer:
                 continue
             if self.queue:
                 req = self.queue.popleft()
-                toks, plen = pad_prompt(req, self.prompt_pad)
-                if req.truncated:
-                    self.metrics.truncated_prompts += 1
-                    if self._ev is not None:
-                        self._ev.emit("truncation", uid=req.uid,
-                                      prompt_pad=self.prompt_pad)
+                if req.replay_prefix is not None:
+                    # token-exact replay after a replica failure: prefill the
+                    # effective prompt + already-delivered tokens; greedy
+                    # decode then reproduces the original continuation. The
+                    # chunk lane handles any prefix length with the warmed
+                    # chunk executables; the monolithic path reuses its
+                    # prompt_pad executable whenever the prefix still fits.
+                    full = np.asarray(req.replay_prefix, np.int32).reshape(-1)
+                    plen = len(full)
+                    if not self.chunked and plen <= self.prompt_pad:
+                        toks = np.zeros(self.prompt_pad, np.int32)
+                        toks[:plen] = full
+                    else:
+                        toks = full
+                else:
+                    toks, plen = pad_prompt(req, self.prompt_pad)
+                    if req.truncated:
+                        self.metrics.truncated_prompts += 1
+                        if self._ev is not None:
+                            self._ev.emit("truncation", uid=req.uid,
+                                          prompt_pad=self.prompt_pad)
                 req.t_start = self.clock.now()     # before engine work, like
                 t0 = req.t_start                   # BatchedServer.step
                 if self._tr is not None:
@@ -479,8 +547,20 @@ class ContinuousServer:
                     self.state = self.engine.reset_state_slot(self.state, i)
                     self._slot_len[i] = 0
                 else:
-                    self.state = self.engine.prefill_into_slot(
-                        self.state, i, toks, plen)
+                    try:
+                        self.state = self.engine.prefill_into_slot(
+                            self.state, i, toks, plen)
+                    except PoolExhausted:
+                        # park the admission: requeue at the front and stop
+                        # admitting this step — slots retiring later free
+                        # pages, and the next step retries in arrival order
+                        self.metrics.pool_parks += 1
+                        if self._tr is not None:
+                            self._tr.end(track=f"req:{req.uid}")
+                            self._tr.begin("queued", track=f"req:{req.uid}",
+                                           uid=req.uid)
+                        self.queue.appendleft(req)
+                        break
                     if not self._defer_timing:
                         self.metrics.prefill_times.append(
                             self.clock.now() - t0)
@@ -584,8 +664,15 @@ class ContinuousServer:
             chunk = np.zeros(c, np.int32)
             chunk[:valid] = cur["toks"][cur["pos"]:cur["pos"] + valid]
             final = cur["pos"] + valid >= cur["plen"]
-            self.state = self.engine.prefill_chunk_into_slot(
-                self.state, slot, chunk, cur["pos"], valid, final)
+            try:
+                self.state = self.engine.prefill_chunk_into_slot(
+                    self.state, slot, chunk, cur["pos"], valid, final)
+            except PoolExhausted:
+                # the page allocator raises BEFORE the chunk dispatches, so
+                # state and cursors are untouched: park the lane for this
+                # step (decode keeps running) and retry when pages free up
+                self.metrics.pool_parks += 1
+                break
             self._last_chunks.append(c)
             spent += c
             cur["pos"] += valid
@@ -693,8 +780,30 @@ class ContinuousServer:
             self.spec, self.verify_v = egt_spec(b.depth, b.width), b.verify
             if self._ev is not None and self.controller.switches > sw0:
                 self._ev.emit("bucket_switch", **self.controller.last_switch)
-        self.state, res = self.engine.decode_step(
-            self.state, spec=self.spec, verify_v=self.verify_v)
+        if self._degraded:
+            self.metrics.degraded_steps += 1
+        try:
+            self.state, res = self.engine.decode_step(
+                self.state, spec=self.spec, verify_v=self.verify_v)
+        except NumericalFault as e:
+            # the megastep's inputs were DONATED: adopt the carried post-
+            # step state before unwinding, or every later dispatch touches
+            # dead buffers. The front-end's boundary fails this replica and
+            # replays its in-flight work token-exactly.
+            if e.state is not None:
+                self.state = e.state
+            self.metrics.numerical_faults += 1
+            self._note_recompiles()
+            self._note_paged()
+            raise
+        except PoolExhausted:
+            # decode needed growth pages and none were free (the allocator
+            # raises before dispatch, so state is intact): surface it typed;
+            # the front-end treats it as transient backpressure
+            self.metrics.pool_parks += 1
+            self._note_recompiles()
+            self._note_paged()
+            raise
         adv = np.asarray(res.accept_len, np.int64)
         if self._prefill:
             # mid-prefill slots ran garbage this megastep; their committed

@@ -55,6 +55,11 @@ class BucketController:
         self.current: Optional[Bucket] = None
         self.switches = 0
         self._dwell = 0
+        # graceful degradation: when True (set by the front-end past the
+        # overload knee or with a replica down), choose() floors the ladder
+        # at its shallowest warmed bucket — the cheapest compiled step, the
+        # closest thing to plain decode that cannot recompile
+        self.degraded = False
         # why the most recent switch happened (scores, occupancy, dwell) —
         # surfaced as a structured `bucket_switch` event by the server
         self.last_switch: Optional[Dict[str, object]] = None
@@ -141,6 +146,18 @@ class BucketController:
 
     def choose(self, n_active: int = 1, lane_cost: float = 0.0) -> Bucket:
         """Bucket for the next megastep, with hysteresis on the incumbent."""
+        if self.degraded:
+            floor = min(self.ladder,
+                        key=lambda b: (b.depth, b.width, b.verify))
+            if self.current is not None and self.current.key() != floor.key():
+                self.last_switch = {
+                    "from": "x".join(map(str, self.current.key())),
+                    "to": "x".join(map(str, floor.key())),
+                    "n_active": n_active, "reason": "degraded",
+                }
+                self.switches += 1
+            self.current, self._dwell = floor, 0
+            return self.current
         scores = {b.key(): self.score(b, n_active, lane_cost)
                   for b in self.ladder}
         best = max(self.ladder, key=lambda b: scores[b.key()])  # first wins ties
@@ -168,6 +185,7 @@ class BucketController:
             "ladder": [list(b.key()) for b in self.ladder],
             "current": list(self.current.key()) if self.current else None,
             "switches": self.switches,
+            "degraded": self.degraded,
             "aal_estimates": {str(k): v for k, v in
                               self.aal.estimates(
                                   [b.key() for b in self.ladder]).items()},

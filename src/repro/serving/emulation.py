@@ -79,6 +79,19 @@ def charged_step(server: ContinuousServer, profile: LatencyProfile,
     return cost, finished
 
 
+def fault_step_cost(server: ContinuousServer,
+                    profile: LatencyProfile) -> float:
+    """Nominal emulated cost of a step that died mid-flight: the profile
+    latency of the server's current bucket at its current occupancy. Used
+    by the front-end's fault boundary — a failed step never returns, so
+    ``charged_step`` cannot price it, but the emulated clock must still
+    move or a crash would be free."""
+    d, w = server.spec.depth, server.spec.width
+    v = server.verify_v
+    occ = max(1, sum(1 for r in server.slots if r is not None))
+    return step_latency(profile, d, w, v, batch=occ)
+
+
 def drive_trace(server: ContinuousServer, trace, profile: LatencyProfile
                 ) -> Dict:
     """Replay ``trace`` ([(arrival_emu_s, Request)] sorted by arrival) on

@@ -1,0 +1,101 @@
+"""Typed failure hierarchy for the serving stack.
+
+Every fault the runtime can survive is a :class:`ServingError` subclass, so
+the front-end's exception boundary can classify with ``isinstance`` instead
+of string-matching, and callers outside the boundary (tests, operators) get
+a stable contract for what each failure means:
+
+* :class:`ReplicaError` — a replica step raised.  ``fatal`` distinguishes
+  crashes (fail the replica immediately) from transient blips (count them
+  against the consecutive-error watchdog and retry in place).
+* :class:`StepTimeout` — a megastep exceeded the watchdog budget.  Always
+  fatal: the replica is wedged from the router's point of view even if the
+  thread eventually returns.
+* :class:`NumericalFault` — the verifier produced non-finite logits.  Fatal
+  by construction: the committed caches may hold garbage past the last
+  delivered token, so the only safe recovery is evacuate-and-replay.  The
+  engine attaches the post-step ``state`` so the server can reassign its
+  donated buffers before the boundary unwinds.
+* :class:`PoolExhausted` — the paged KV pool has no free page.  Transient:
+  the server parks admissions and the prefill lane until pages free up; the
+  attached pool stats let the operator tell "too many slots" from "prefix
+  store hoarding".
+* :class:`NoReplicaAvailable` — routing found no ACTIVE replica.  The
+  front-end queues-and-waits up to a configured bound before shedding with
+  this as the typed reason.
+
+This module must stay stdlib-only: ``models/cache.py`` and
+``core/engine.py`` import it lazily at raise sites, below the serving
+package in the import graph.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Sequence
+
+
+class ServingError(Exception):
+    """Base class for every recoverable serving-stack failure."""
+
+
+class ReplicaError(ServingError):
+    """A replica's step raised.  ``fatal=False`` marks a transient blip."""
+
+    def __init__(self, msg: str, *, fatal: bool = True):
+        super().__init__(msg)
+        self.fatal = bool(fatal)
+
+
+class StepTimeout(ReplicaError):
+    """A megastep exceeded the watchdog budget (always fatal)."""
+
+    def __init__(self, msg: str, *, timeout_s: float = 0.0):
+        super().__init__(msg, fatal=True)
+        self.timeout_s = float(timeout_s)
+
+
+class NumericalFault(ReplicaError):
+    """Non-finite verifier logits.  Carries the post-step engine state so the
+    server can reassign its donated cache buffers before re-raising."""
+
+    def __init__(self, msg: str, *, state: Any = None,
+                 slots: Sequence[int] = ()):
+        super().__init__(msg, fatal=True)
+        self.state = state
+        self.slots = tuple(int(s) for s in slots)
+
+
+class PoolExhausted(ServingError):
+    """The paged KV pool has no free page.  Attaches pool stats so the park
+    path and the operator can tell apart the two exhaustion modes."""
+
+    def __init__(self, *, n_pages: int, pages_in_use: int, prefix_pages: int,
+                 peak_pages: int, detail: str = ""):
+        self.n_pages = int(n_pages)
+        self.pages_in_use = int(pages_in_use)
+        self.prefix_pages = int(prefix_pages)
+        self.peak_pages = int(peak_pages)
+        # more than half the busy pages pinned by the prefix store points at
+        # hoarding; otherwise the pool is simply oversubscribed by live slots
+        if self.prefix_pages * 2 > self.pages_in_use:
+            why = (f"prefix store hoarding ({self.prefix_pages} refcounted "
+                   f"prefix pages) — lower prefix retention or raise "
+                   f"cache_pages")
+        else:
+            why = (f"too many slots for the pool — raise cache_pages or "
+                   f"lower concurrency")
+        msg = (f"page pool exhausted ({self.n_pages} pages, "
+               f"{self.pages_in_use} in use, peak {self.peak_pages}): {why}")
+        if detail:
+            msg = f"{msg} [{detail}]"
+        super().__init__(msg)
+
+
+class NoReplicaAvailable(ServingError):
+    """Routing found no ACTIVE replica to place a request on."""
+
+    def __init__(self, msg: str = "no active replica to route to",
+                 *, waited_s: Optional[float] = None):
+        if waited_s is not None:
+            msg = f"{msg} (waited {waited_s:.3g}s)"
+        super().__init__(msg)
+        self.waited_s = waited_s

@@ -1,0 +1,222 @@
+"""Deterministic fault injection for the serving stack.
+
+A :class:`FaultPlan` is a seeded, time-ordered list of :class:`FaultEvent`
+entries — replica crashes, step hangs, transient step exceptions, NaN/Inf
+verifier logits, and paged-pool exhaustion — that the front-end applies at
+trace timestamps on the **emulated clock** (`ServingFrontend.serve_trace`
+consumes events as their timestamps come due, so two drives of the same
+plan against the same trace are byte-identical).  For the wall-clock
+asyncio path, :class:`WallFaultInjector` monkeypatches each replica
+server's ``step`` so the same plan fires at wall offsets from ``start()``.
+
+The plan only *describes* faults; all recovery semantics (health model,
+evacuation, token-exact replay) live in ``serving/frontend.py``.  Fault
+kinds:
+
+========== ===============================================================
+kind       effect at the step boundary
+========== ===============================================================
+crash      the step raises a fatal :class:`ReplicaError`; no work happens
+hang       the step burns ``duration_s`` (or the watchdog budget) and
+           raises :class:`StepTimeout`
+error      the step raises a *transient* :class:`ReplicaError` (counts
+           against the consecutive-error watchdog, retried in place)
+nan        the engine's next megastep raises :class:`NumericalFault`
+           (via ``poison_next_step`` — same path as real non-finite
+           logits)
+pool_      ``duration_s`` worth of free pages vanish from the replica's
+exhaust    paged pool, so allocations hit :class:`PoolExhausted`; pages
+           are returned when the window closes
+========== ===============================================================
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.serving.errors import ReplicaError, StepTimeout
+
+KINDS = ("crash", "hang", "error", "nan", "pool_exhaust")
+
+
+@dataclass(frozen=True)
+class FaultEvent:
+    """One scheduled fault: fire at (or after) time ``t`` on ``replica``."""
+    t: float                 # seconds on the driving clock
+    kind: str                # one of KINDS
+    replica: int             # target replica index
+    duration_s: float = 0.0  # hang length / pool-theft window
+    pages: int = 0           # pool_exhaust: pages stolen (0 = every free page)
+
+    def __post_init__(self):
+        if self.kind not in KINDS:
+            raise ValueError(f"unknown fault kind {self.kind!r}; "
+                             f"expected one of {KINDS}")
+
+
+class FaultPlan:
+    """A time-ordered fault schedule.  ``pop_due`` hands each event out
+    exactly once, at the first step of its target replica at or after the
+    event's timestamp — fully deterministic given the plan and the clock."""
+
+    def __init__(self, events: Sequence[FaultEvent] = (),
+                 seed: Optional[int] = None):
+        self.seed = seed
+        self.events: List[FaultEvent] = sorted(events, key=lambda e: e.t)
+        self._pending: List[FaultEvent] = list(self.events)
+        self.injected: Dict[str, int] = {k: 0 for k in KINDS}
+
+    @classmethod
+    def seeded(cls, seed: int, horizon_s: float, replicas: int,
+               n_faults: int = 4,
+               kinds: Sequence[str] = ("crash", "hang", "error", "nan"),
+               ) -> "FaultPlan":
+        """Sample ``n_faults`` events uniformly over ``[0, horizon_s)`` —
+        same seed, same plan, always."""
+        rng = np.random.default_rng(seed)
+        events = [
+            FaultEvent(t=float(rng.uniform(0.0, horizon_s)),
+                       kind=str(rng.choice(list(kinds))),
+                       replica=int(rng.integers(0, replicas)),
+                       duration_s=float(rng.uniform(0.5, 2.0)))
+            for _ in range(n_faults)
+        ]
+        return cls(events, seed=seed)
+
+    @property
+    def faults_injected(self) -> int:
+        return sum(self.injected.values())
+
+    def pop_due(self, replica: int, now: float) -> Optional[FaultEvent]:
+        """The earliest not-yet-fired event for ``replica`` with
+        ``t <= now``, or None.  At most one event per call: a step boundary
+        absorbs one fault."""
+        for i, ev in enumerate(self._pending):
+            if ev.t > now:
+                return None  # _pending is time-sorted
+            if ev.replica == replica:
+                self.injected[ev.kind] += 1
+                return self._pending.pop(i)
+        return None
+
+    def reset(self) -> None:
+        """Re-arm every event (for a second deterministic drive)."""
+        self._pending = list(self.events)
+        self.injected = {k: 0 for k in KINDS}
+
+    def summary(self) -> Dict:
+        return {"seed": self.seed,
+                "events": len(self.events),
+                "injected": dict(self.injected),
+                "faults_injected": self.faults_injected}
+
+
+# ---------------------------------------------------------------- wall shim
+class WallFaultInjector:
+    """Monkeypatch shim for the asyncio (wall-clock) path.
+
+    Wraps each replica server's ``step`` so plan events fire at wall
+    offsets from :meth:`start`.  ``hang`` sleeps through the front-end's
+    watchdog budget before raising; ``pool_exhaust`` steals the replica's
+    free pages and returns them when the window closes (checked at each
+    subsequent step of that replica).  Use as a context manager::
+
+        with WallFaultInjector(frontend.router.replicas, plan):
+            asyncio.run(frontend.run_until_drained())
+    """
+
+    def __init__(self, replicas: Sequence, plan: FaultPlan,
+                 clock: Callable[[], float] = time.monotonic):
+        self.replicas = list(replicas)
+        self.plan = plan
+        self._clock = clock
+        self._t0: Optional[float] = None
+        self._orig: Dict[int, Callable] = {}
+        self._stolen: Dict[int, List[Tuple[float, List[int]]]] = {}
+
+    def start(self) -> None:
+        self._t0 = self._clock()
+        for rep in self.replicas:
+            self._orig[rep.idx] = rep.server.step
+            rep.server.step = self._wrap(rep)
+
+    def stop(self) -> None:
+        for rep in self.replicas:
+            orig = self._orig.pop(rep.idx, None)
+            if orig is not None:
+                rep.server.step = orig
+        # return any pages still held when the run ends
+        for idx, windows in self._stolen.items():
+            ps = self._pages(self.replicas[idx])
+            if ps is not None:
+                for _, pages in windows:
+                    ps.free.extend(pages)
+        self._stolen.clear()
+
+    def __enter__(self) -> "WallFaultInjector":
+        self.start()
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.stop()
+
+    @staticmethod
+    def _pages(rep):
+        return getattr(getattr(rep.server, "state", None), "pages", None)
+
+    def _wrap(self, rep):
+        orig = self._orig[rep.idx]
+
+        def step():
+            now = self._clock() - self._t0
+            self._restore(rep, now)
+            ev = self.plan.pop_due(rep.idx, now)
+            if ev is not None:
+                if ev.kind == "crash":
+                    raise ReplicaError(
+                        f"injected crash on replica {rep.idx}")
+                if ev.kind == "hang":
+                    time.sleep(ev.duration_s)
+                    raise StepTimeout(
+                        f"injected hang on replica {rep.idx}",
+                        timeout_s=ev.duration_s)
+                if ev.kind == "error":
+                    raise ReplicaError(
+                        f"injected transient error on replica {rep.idx}",
+                        fatal=False)
+                if ev.kind == "nan":
+                    poison = getattr(rep.server.engine, "poison_next_step",
+                                     None)
+                    if callable(poison):
+                        poison()
+                elif ev.kind == "pool_exhaust":
+                    self._steal(rep, ev, now)
+            return orig()
+
+        return step
+
+    def _steal(self, rep, ev: FaultEvent, now: float) -> None:
+        ps = self._pages(rep)
+        if ps is None:
+            return
+        take = ev.pages or len(ps.free)
+        stolen = [ps.free.pop() for _ in range(min(take, len(ps.free)))]
+        self._stolen.setdefault(rep.idx, []).append(
+            (now + (ev.duration_s or 1.0), stolen))
+
+    def _restore(self, rep, now: float) -> None:
+        windows = self._stolen.get(rep.idx)
+        if not windows:
+            return
+        keep = []
+        for until, pages in windows:
+            if now >= until:
+                ps = self._pages(rep)
+                if ps is not None:
+                    ps.free.extend(pages)
+            else:
+                keep.append((until, pages))
+        self._stolen[rep.idx] = keep

@@ -43,9 +43,12 @@ import numpy as np
 
 from repro.core.objective import LatencyProfile
 from repro.serving.continuous import ContinuousServer
-from repro.serving.emulation import charged_step
+from repro.serving.emulation import charged_step, fault_step_cost
+from repro.serving.errors import (NoReplicaAvailable, NumericalFault,
+                                  ReplicaError, ServingError, StepTimeout)
+from repro.serving.faults import FaultEvent, FaultPlan
 from repro.serving.handle import RequestHandle
-from repro.serving.router import RETIRED, Replica, Router
+from repro.serving.router import FAILED, Replica, Router
 from repro.serving.server import Request
 from repro.telemetry import Clock, EmulatedClock, WallClock
 
@@ -62,6 +65,19 @@ class AdmissionConfig:
 
 
 @dataclass
+class RecoveryConfig:
+    """Failure-recovery knobs for the front-end's fault boundary."""
+    retry_budget: int = 2          # replays per request before a terminal shed
+    step_timeout_s: float = 0.0    # wall watchdog per step() (0 = disabled);
+    #                                emulated hangs are charged this budget
+    watchdog: int = 3              # consecutive transient errors -> FAILED
+    backoff_s: float = 2.0         # first FAILED->RECOVERING backoff
+    backoff_max_s: float = 60.0    # exponential backoff ceiling
+    no_replica_timeout_s: float = 30.0  # queue-and-wait bound with no
+    #                                     active replica before shedding
+
+
+@dataclass
 class FrontendMetrics:
     """Request- and token-level service counters (SLO accounting)."""
     submitted: int = 0
@@ -71,6 +87,11 @@ class FrontendMetrics:
     sheds: int = 0
     shed_overload: int = 0
     shed_infeasible: int = 0
+    shed_retry: int = 0           # replay budget exhausted
+    shed_no_replica: int = 0      # waited out no_replica_timeout_s
+    faults: int = 0               # typed step errors absorbed at the boundary
+    replica_failures: int = 0     # replicas driven to FAILED
+    replays: int = 0              # evacuated requests re-admitted elsewhere
     deadline_misses: int = 0      # completed, but last token was late
     tokens_delivered: int = 0
     tokens_in_slo: int = 0
@@ -91,6 +112,11 @@ class FrontendMetrics:
                 "completed": self.completed, "parks": self.parks,
                 "sheds": self.sheds, "shed_overload": self.shed_overload,
                 "shed_infeasible": self.shed_infeasible,
+                "shed_retry": self.shed_retry,
+                "shed_no_replica": self.shed_no_replica,
+                "faults": self.faults,
+                "replica_failures": self.replica_failures,
+                "replays": self.replays,
                 "deadline_misses": self.deadline_misses,
                 "tokens_delivered": self.tokens_delivered,
                 "tokens_in_slo": self.tokens_in_slo,
@@ -120,11 +146,13 @@ class ServingFrontend:
                  profile: Optional[LatencyProfile] = None,
                  admission: Optional[AdmissionConfig] = None,
                  router: Optional[Router] = None,
-                 clock: Optional[Clock] = None):
+                 clock: Optional[Clock] = None,
+                 recovery: Optional[RecoveryConfig] = None):
         self.router = router if router is not None else Router(
             servers, profile=profile)
         self.profile = profile
         self.admission = admission or AdmissionConfig()
+        self.recovery = recovery or RecoveryConfig()
         self.clock: Clock = clock or WallClock()
         self.metrics = FrontendMetrics()
         # front queue: (-priority, deadline-or-inf, seq) -> handle
@@ -132,6 +160,9 @@ class ServingFrontend:
         self._seq = 0
         self._live: Dict[int, _Live] = {}
         self._all: Dict[int, RequestHandle] = {}   # every handle ever issued
+        self._no_active_since: Optional[float] = None
+        # emulated pool_exhaust faults: replica idx -> [(restore_at, pages)]
+        self._stolen: Dict[int, List[Tuple[float, List[int]]]] = {}
 
     # ---------------------------------------------------------- admission --
     def submit(self, req: Request, session: Optional[str] = None,
@@ -142,7 +173,8 @@ class ServingFrontend:
         it. Higher ``priority`` dispatches first; ``deadline_s`` is seconds
         from now (defaults to the admission config's SLO, 0 = none)."""
         now = self.clock.now()
-        req.t_submit = req.t_submit or now
+        if req.t_submit is None:    # preserved across recovery resubmissions
+            req.t_submit = now
         handle = RequestHandle(req)
         handle.session = session
         handle.priority = priority
@@ -155,10 +187,22 @@ class ServingFrontend:
 
         if len(self._pending) >= self.admission.max_pending:
             if self.admission.on_overload == "shed":
-                self._shed(handle, "overload")
-                self.metrics.shed_overload += 1
-                return handle
-            self.metrics.parks += 1     # park: hold it, count backpressure
+                # shed by PRIORITY, not by arrival: if the newcomer outranks
+                # the worst parked entry (lowest priority, then latest
+                # deadline, then latest arrival — exactly the heap order
+                # reversed), evict that victim and admit the newcomer
+                victim = max(self._pending) if self._pending else None
+                if victim is not None and -float(priority) < victim[0]:
+                    self._pending.remove(victim)
+                    heapq.heapify(self._pending)
+                    self._shed(victim[3], "overload")
+                    self.metrics.shed_overload += 1
+                else:
+                    self._shed(handle, "overload")
+                    self.metrics.shed_overload += 1
+                    return handle
+            else:
+                self.metrics.parks += 1  # park: hold it, count backpressure
         heapq.heappush(self._pending,
                        (-float(priority),
                         handle.deadline if handle.deadline is not None
@@ -172,6 +216,9 @@ class ServingFrontend:
         handle._mark_shed(reason)
         self.metrics.sheds += 1
         self.metrics.tokens_lost += int(handle.request.max_new)
+        live = self._live.get(handle.uid)
+        if live is not None:        # shed after dispatch (retry budget,
+            live.finished = True    # no-replica): close the delivery cursor
         if handle._aqueue is not None:
             handle._aqueue.put_nowait(None)
 
@@ -205,7 +252,11 @@ class ServingFrontend:
             if tr is not None:   # span edge: this request -> its replica
                 tr.instant(f"routed→replica:{rep.idx}",
                            track=f"req:{handle.uid}", replica=rep.idx)
-            self._live[handle.uid] = _Live(handle)
+            if handle.uid not in self._live:
+                # replayed handles keep their _Live: the chunks_seen cursor
+                # is what guarantees already-delivered tokens are never
+                # re-delivered after a token-exact replay
+                self._live[handle.uid] = _Live(handle)
             self.metrics.dispatched += 1
             n += 1
         return n
@@ -235,6 +286,11 @@ class ServingFrontend:
                     h._aqueue.put_nowait(chunk)
             if h.done():
                 live.finished = True
+                if h.retries and not h.shed:
+                    # the finishing server only saw the replayed tail; the
+                    # handle's chunk log is the full stream — patch the
+                    # request result so digests cover every delivered token
+                    h.request.result = np.asarray(h.tokens, np.int64)
                 self.metrics.completed += 1
                 self.metrics.latencies.append(t - h.request.t_submit)
                 if live.deadline is not None and t > live.deadline:
@@ -246,11 +302,198 @@ class ServingFrontend:
         return (not self._pending
                 and not any(r.has_work() for r in self.router.live()))
 
+    # ------------------------------------------------------ fault boundary --
+    def _on_step_error(self, rep: Replica, exc: Exception,
+                       now: float) -> None:
+        """Typed exception boundary around one replica step. Fatal faults
+        (crash, watchdog timeout, numerical corruption) fail the replica
+        immediately; transient ones count against the consecutive-error
+        watchdog and fail it once the budget is burned."""
+        rep.faults_seen += 1
+        self.metrics.faults += 1
+        fatal = isinstance(exc, (StepTimeout, NumericalFault)) or (
+            isinstance(exc, ReplicaError) and exc.fatal)
+        if not fatal:
+            rep.consecutive_errors += 1
+            if rep.consecutive_errors >= self.recovery.watchdog:
+                fatal = True
+        if fatal:
+            self._fail_replica(rep, now, reason=type(exc).__name__)
+
+    def _fail_replica(self, rep: Replica, now: float,
+                      reason: str = "") -> None:
+        """FAIL a replica: evacuate every queued/in-flight request and
+        replay each one (token-exact) on the surviving pool; schedule the
+        exponential-backoff recovery. The replica's executable cache stays
+        warm, so rejoining later costs zero compiles."""
+        self.router.fail(rep.idx)
+        self.metrics.replica_failures += 1
+        rep.failed_at = now
+        rep.consecutive_errors = 0
+        back = min(self.recovery.backoff_s * (2 ** max(0, rep.failures - 1)),
+                   self.recovery.backoff_max_s)
+        rep.recover_at = now + back
+        tr = rep.server._tr
+        if tr is not None:   # MTTR span: closed by _maybe_recover
+            tr.begin("failed", track=f"replica:{rep.idx}", reason=reason)
+        for req, handle in rep.server.evacuate():
+            self._replay(req, handle, rep)
+        self._dispatch()
+
+    def _replay(self, req: Request, handle: Optional[RequestHandle],
+                rep: Replica) -> None:
+        """Re-admit one evacuated request with token-exact replay: the
+        effective prompt becomes original-prompt + already-delivered tokens
+        (re-prefilled through the chunk lane, adopting resident prefix
+        pages where shared), and ``max_new`` shrinks by exactly the tokens
+        delivered since the last replay — so the continuation the verifier
+        commits is byte-identical to the fault-free run."""
+        if handle is None or handle.shed or handle.done():
+            return
+        if handle.retries >= self.recovery.retry_budget:
+            handle.error = ReplicaError(
+                f"retry budget ({self.recovery.retry_budget}) exhausted "
+                f"after replica {rep.idx} failed")
+            self._shed(handle, "retry-budget")
+            self.metrics.shed_retry += 1
+            return
+        handle.retries += 1
+        rep.replays += 1
+        self.metrics.replays += 1
+        delivered = handle.tokens
+        if delivered:
+            pad = rep.server.prompt_pad
+            prompt = np.asarray(req.prompt, np.int32).reshape(-1)[:pad]
+            req.replay_prefix = np.concatenate(
+                [prompt, np.asarray(delivered, np.int32)])
+            d = len(delivered)
+            req.max_new = int(req.max_new) - (d - handle._replay_base)
+            handle._replay_base = d
+        heapq.heappush(self._pending,
+                       (-float(handle.priority or 0),
+                        handle.deadline if handle.deadline is not None
+                        else float("inf"),
+                        self._seq, handle))
+        self._seq += 1
+
+    def _maybe_recover(self, now: float) -> None:
+        """Readmit FAILED replicas whose backoff has elapsed."""
+        for rep in self.router.replicas:
+            if (rep.state == FAILED and rep.recover_at is not None
+                    and now >= rep.recover_at):
+                self.router.recover(rep.idx)
+                if rep.failed_at is not None:
+                    rep.mttr_total += now - rep.failed_at
+                    rep.failed_at = None
+                tr = rep.server._tr
+                if tr is not None:
+                    tr.end(track=f"replica:{rep.idx}")
+                self._no_active_since = None   # capacity is back
+
+    def _check_no_replica(self, now: float) -> None:
+        """Queue-and-wait when no replica is active, bounded by
+        ``no_replica_timeout_s`` — then shed the front queue with a typed
+        :class:`NoReplicaAvailable` on each handle."""
+        if self.router.active():
+            self._no_active_since = None
+            return
+        if not self._pending:
+            return
+        if self._no_active_since is None:
+            self._no_active_since = now
+            return
+        waited = now - self._no_active_since
+        if waited < self.recovery.no_replica_timeout_s:
+            return
+        while self._pending:
+            _, _, _, handle = heapq.heappop(self._pending)
+            if handle.shed:
+                continue
+            handle.error = NoReplicaAvailable(waited_s=waited)
+            self._shed(handle, "no-replica")
+            self.metrics.shed_no_replica += 1
+        self._no_active_since = None
+
+    def _update_degraded(self) -> None:
+        """Graceful degradation: with a replica down or the pool past the
+        overload knee, pin every live controller to its shallowest warmed
+        bucket (the cheapest compiled step — cannot recompile)."""
+        flag = (any(r.state == FAILED for r in self.router.replicas)
+                or self.router.occupancy() > 1.0)
+        for rep in self.router.live():
+            rep.server.set_degraded(flag)
+
+    # ---- emulated pool_exhaust faults: steal/restore free pages ----------
+    @staticmethod
+    def _page_state(rep: Replica):
+        return getattr(getattr(rep.server, "state", None), "pages", None)
+
+    def _steal_pages(self, rep: Replica, ev: FaultEvent,
+                     now: float) -> None:
+        ps = self._page_state(rep)
+        if ps is None:
+            return
+        take = ev.pages or len(ps.free)
+        stolen = [ps.free.pop() for _ in range(min(take, len(ps.free)))]
+        self._stolen.setdefault(rep.idx, []).append(
+            (now + (ev.duration_s or 1.0), stolen))
+
+    def _restore_stolen(self, now: float) -> None:
+        for idx, windows in list(self._stolen.items()):
+            keep = []
+            for until, pages in windows:
+                if now >= until:
+                    ps = self._page_state(self.router.replicas[idx])
+                    if ps is not None:
+                        ps.free.extend(pages)
+                else:
+                    keep.append((until, pages))
+            if keep:
+                self._stolen[idx] = keep
+            else:
+                self._stolen.pop(idx)
+
+    def _emulated_step(self, rep: Replica, profile: LatencyProfile,
+                       fault: Optional[FaultEvent]
+                       ) -> Tuple[float, Optional[Exception]]:
+        """One profile-charged replica step with optional fault injection.
+        Returns ``(emulated cost, error-or-None)`` — a failed step still
+        costs emulated time (a crash is instant, a hang burns the watchdog
+        budget, a mid-step fault burns the nominal step latency)."""
+        if fault is not None:
+            now = self.clock.now()
+            if fault.kind == "crash":
+                return 0.0, ReplicaError(
+                    f"injected crash on replica {rep.idx}")
+            if fault.kind == "hang":
+                budget = (self.recovery.step_timeout_s
+                          or fault.duration_s or 1.0)
+                return budget, StepTimeout(
+                    f"injected hang on replica {rep.idx}", timeout_s=budget)
+            if fault.kind == "error":
+                return fault.duration_s, ReplicaError(
+                    f"injected transient error on replica {rep.idx}",
+                    fatal=False)
+            if fault.kind == "nan":
+                poison = getattr(rep.server.engine, "poison_next_step", None)
+                if callable(poison):
+                    poison()
+            elif fault.kind == "pool_exhaust":
+                self._steal_pages(rep, fault, now)
+        try:
+            cost, _ = charged_step(rep.server, profile, advance_clock=False)
+            return cost, None
+        except ServingError as e:
+            return fault_step_cost(rep.server, profile), e
+
     # ---------------------------------------------------- wall-clock mode --
     async def run_until_drained(self, poll_s: float = 0.001) -> Dict:
         """Serve until every submitted request completes (live wall-clock
         mode): one executor lane per replica runs the blocking ``step()``
-        off the event loop while submissions keep landing."""
+        off the event loop while submissions keep landing. Every step runs
+        inside the typed fault boundary — a raising or watchdog-late step
+        fails its replica, evacuates + replays its work, and the lane keeps
+        polling until the replica's backoff readmits it."""
         loop = asyncio.get_running_loop()
         pool = ThreadPoolExecutor(
             max_workers=max(1, len(self.router.replicas)),
@@ -260,11 +503,47 @@ class ServingFrontend:
                 if rep.server._compile_base is None:
                     await loop.run_in_executor(pool, rep.server.warmup)
 
+            async def wall_step(rep: Replica):
+                fut = loop.run_in_executor(pool, rep.server.step)
+                timeout = self.recovery.step_timeout_s or None
+                if timeout is None:
+                    await fut
+                    return
+                try:
+                    await asyncio.wait_for(asyncio.shield(fut), timeout)
+                except asyncio.TimeoutError:
+                    # the blocking thread cannot be killed: wait it out so
+                    # its committed chunks are kept, then declare the
+                    # replica wedged — the watchdog verdict stands even
+                    # though the step eventually returned
+                    try:
+                        await fut
+                    except Exception:
+                        pass
+                    raise StepTimeout(
+                        f"step on replica {rep.idx} exceeded the "
+                        f"{timeout:.3g}s watchdog", timeout_s=timeout)
+
             async def lane(rep: Replica):
                 while True:
+                    now = self.clock.now()
+                    self._maybe_recover(now)
+                    self._check_no_replica(now)
                     self._dispatch()
-                    if rep.state != RETIRED and rep.has_work():
-                        await loop.run_in_executor(pool, rep.server.step)
+                    self._update_degraded()
+                    if rep.steppable() and rep.has_work():
+                        try:
+                            await wall_step(rep)
+                        except ServingError as e:
+                            self._drain_handles(rep)   # committed chunks
+                            self._on_step_error(rep, e, self.clock.now())
+                            continue
+                        except Exception as e:  # untyped: same boundary
+                            self._drain_handles(rep)
+                            self._on_step_error(rep, ReplicaError(repr(e)),
+                                                self.clock.now())
+                            continue
+                        rep.consecutive_errors = 0
                         self._drain_handles(rep)
                         self.router.reap()
                     elif self._drained():
@@ -279,17 +558,20 @@ class ServingFrontend:
 
     # ------------------------------------------------------ emulated mode --
     async def serve_trace(self, trace, profile: LatencyProfile,
-                          events: Sequence[Tuple[float, str, int]] = ()
-                          ) -> Dict:
+                          events: Sequence[Tuple[float, str, int]] = (),
+                          faults: Optional[FaultPlan] = None) -> Dict:
         """Deterministic emulated drive: replay ``trace`` (arrival-sorted
         ``(t, Request)`` or ``(t, Request, extras)`` rows, extras =
         ``{"deadline_s", "session", "priority"}``) against the replica
-        pool on ONE shared ``EmulatedClock``. Per round every replica with
-        work runs one profile-charged step in the executor lane; the clock
-        advances by the MAX of the concurrent step costs (replicas run in
-        parallel in the topology this emulates). ``events`` injects
-        ``(t, "drain"|"scale_down"|"scale_up", replica_idx)`` lifecycle
-        transitions at emulated times."""
+        pool on ONE shared ``EmulatedClock``. Per round every steppable
+        replica with work runs one profile-charged step in the executor
+        lane; the clock advances by the MAX of the concurrent step costs
+        (replicas run in parallel in the topology this emulates).
+        ``events`` injects ``(t, "drain"|"scale_down"|"scale_up"|"fail"|
+        "recover", replica_idx)`` lifecycle transitions at emulated times;
+        ``faults`` is a :class:`FaultPlan` whose events fire at each target
+        replica's first step at-or-after their timestamps — the same plan
+        against the same trace is byte-deterministic."""
         clock = (self.clock if isinstance(self.clock, EmulatedClock)
                  else EmulatedClock())
         self.clock = clock
@@ -306,6 +588,8 @@ class ServingFrontend:
         while (arrivals or todo or self._pending
                or any(r.has_work() for r in self.router.live())):
             now = clock.now()
+            self._restore_stolen(now)
+            self._maybe_recover(now)
             while todo and todo[0][0] <= now:
                 _, kind, idx = todo.pop(0)
                 getattr(self.router, kind)(idx)
@@ -314,32 +598,55 @@ class ServingFrontend:
                 self.submit(req, session=extra.get("session"),
                             priority=extra.get("priority", 0),
                             deadline_s=extra.get("deadline_s"))
+            self._check_no_replica(now)
             self._dispatch()
+            self._update_degraded()
             workers = [r for r in self.router.replicas
-                       if r.state != RETIRED and r.has_work()]
+                       if r.steppable() and r.has_work()]
             if not workers:
+                # idle: jump to whichever state change comes first — the
+                # next arrival/event, a FAILED replica's backoff expiry, a
+                # stolen-page restore, or the no-replica shed deadline
                 horizon = [t for t, *_ in arrivals[:1]] + \
                           [t for t, *_ in todo[:1]]
+                horizon += [r.recover_at for r in self.router.replicas
+                            if r.state == FAILED and r.recover_at is not None]
+                horizon += [until for ws in self._stolen.values()
+                            for until, _ in ws]
+                if self._no_active_since is not None:
+                    horizon.append(self._no_active_since
+                                   + self.recovery.no_replica_timeout_s)
                 if not horizon:
                     break
-                clock.advance_to(min(horizon))
+                clock.advance_to(max(min(horizon), now + 1e-9))
                 continue
-            costs = []
+            costs, stepped = [], []
             for rep in workers:      # sequential awaits: deterministic
-                cost, _ = await loop.run_in_executor(
-                    None, functools.partial(charged_step, rep.server,
-                                            profile, advance_clock=False))
+                fault = (faults.pop_due(rep.idx, now)
+                         if faults is not None else None)
+                cost, err = await loop.run_in_executor(
+                    None, functools.partial(self._emulated_step, rep,
+                                            profile, fault))
                 busy[rep.idx] += cost
                 costs.append(cost)
+                stepped.append((rep, err))
             clock.advance(max(costs))
-            for rep in workers:
+            for rep, err in stepped:
+                # deliver committed chunks BEFORE any evacuation — a fault
+                # must never claw back tokens the step already committed
                 self._drain_handles(rep)
+                if err is None:
+                    rep.consecutive_errors = 0
+                else:
+                    self._on_step_error(rep, err, clock.now())
             self.router.reap()
         out = self.summary()
         out["makespan_s"] = clock.now()
         out["busy_s"] = {str(k): v for k, v in busy.items()}
         out["throughput_tok_s"] = (self.metrics.tokens_delivered
                                    / max(out["makespan_s"], 1e-9))
+        if faults is not None:
+            out["faults"] = faults.summary()
         return out
 
     # ------------------------------------------------------------ results --
@@ -363,8 +670,9 @@ class ServingFrontend:
 
 def drive_frontend_trace(frontend: ServingFrontend, trace,
                          profile: LatencyProfile,
-                         events: Sequence[Tuple[float, str, int]] = ()
-                         ) -> Dict:
+                         events: Sequence[Tuple[float, str, int]] = (),
+                         faults: Optional[FaultPlan] = None) -> Dict:
     """Sync entry point for benchmarks/tests: run the front-end's emulated
     drive to completion on a private event loop."""
-    return asyncio.run(frontend.serve_trace(trace, profile, events=events))
+    return asyncio.run(frontend.serve_trace(trace, profile, events=events,
+                                            faults=faults))

@@ -45,6 +45,10 @@ class RequestHandle:
         self.priority: int = 0
         self.deadline: Optional[float] = None
         self._aqueue = None  # asyncio.Queue, attached by the front-end
+        # failure recovery (managed by ServingFrontend)
+        self.retries: int = 0        # replays consumed from the retry budget
+        self.error: Optional[Exception] = None  # typed terminal failure
+        self._replay_base = 0        # tokens delivered as of the last replay
 
     # ------------------------------------------------------------- state --
     @property

@@ -35,11 +35,14 @@ from typing import Dict, List, Optional, Sequence
 
 from repro.core.objective import LatencyProfile, step_latency
 from repro.serving.continuous import ContinuousServer
+from repro.serving.errors import NoReplicaAvailable
 
 # replica lifecycle states
 ACTIVE = "active"
 DRAINING = "draining"
 RETIRED = "retired"
+FAILED = "failed"          # crashed/wedged: evacuated, awaiting backoff
+RECOVERING = "recovering"  # backoff elapsed, rejoining the pool
 
 
 class Replica:
@@ -50,6 +53,15 @@ class Replica:
         self.server = server
         self.state = ACTIVE
         self.routed = 0          # requests this replica admitted, lifetime
+        # ---- health model (driven by the front-end's step boundary)
+        self.consecutive_errors = 0  # transient errors since last good step
+        self.faults_seen = 0     # typed step errors observed, lifetime
+        self.failures = 0        # times this replica entered FAILED
+        self.replays = 0         # in-flight requests evacuated + replayed
+        self.recoveries = 0      # FAILED -> ACTIVE round trips
+        self.failed_at: Optional[float] = None
+        self.recover_at: Optional[float] = None  # backoff expiry
+        self.mttr_total = 0.0    # summed FAILED->ACTIVE downtime, seconds
 
     # ------------------------------------------------------------- load --
     def in_flight(self) -> int:
@@ -73,11 +85,20 @@ class Replica:
     def accepting(self) -> bool:
         return self.state == ACTIVE
 
+    def steppable(self) -> bool:
+        """May this replica's step() be driven? FAILED replicas are wedged
+        until recovery; RETIRED ones are gone."""
+        return self.state in (ACTIVE, DRAINING, RECOVERING)
+
     def summary(self) -> Dict:
         m = self.server.metrics.summary()
         return {"state": self.state, "routed": self.routed,
                 "steps": m["steps"], "completed": m["completed"],
                 "tokens": m["tokens"], "occupancy": m["occupancy"],
+                "faults_seen": self.faults_seen, "failures": self.failures,
+                "replays": self.replays, "recoveries": self.recoveries,
+                "mttr_s": self.mttr_total,
+                "pool_parks": m["pool_parks"],
                 "recompiles_after_warmup": m["recompiles_after_warmup"]}
 
 
@@ -90,12 +111,15 @@ class RouterMetrics:
     drains: int = 0
     scale_downs: int = 0
     scale_ups: int = 0
+    fails: int = 0            # replicas marked FAILED
+    recoveries: int = 0       # replicas readmitted to ACTIVE after FAILED
 
     def summary(self) -> Dict:
         return {"routed": {str(k): v for k, v in sorted(self.routed.items())},
                 "affinity_hits": self.affinity_hits, "repins": self.repins,
                 "drains": self.drains, "scale_downs": self.scale_downs,
-                "scale_ups": self.scale_ups}
+                "scale_ups": self.scale_ups, "fails": self.fails,
+                "recoveries": self.recoveries}
 
 
 class Router:
@@ -118,7 +142,9 @@ class Router:
         return [r for r in self.replicas if r.accepting()]
 
     def live(self) -> List[Replica]:
-        return [r for r in self.replicas if r.state != RETIRED]
+        """Replicas holding or able to take work — FAILED ones are out of
+        the pool (their work was evacuated) until they recover."""
+        return [r for r in self.replicas if r.state not in (RETIRED, FAILED)]
 
     def total_slots(self) -> int:
         return sum(r.server.batch_size for r in self.active())
@@ -154,8 +180,10 @@ class Router:
     def _best(self) -> Replica:
         pool = self.active()
         if not pool:
-            raise RuntimeError("no active replica to route to "
-                               "(all draining/retired)")
+            # typed: the front-end queues-and-waits on this (bounded by
+            # RecoveryConfig.no_replica_timeout_s) instead of crashing submit
+            raise NoReplicaAvailable(
+                "no active replica to route to (all draining/retired/failed)")
         # load before idx in the tie-break: below the saturation knee the
         # modeled wait is FLAT in occupancy, and an idx-only tie-break
         # would pile every session onto replica 0
@@ -220,6 +248,33 @@ class Router:
         if rep.state != ACTIVE:
             rep.state = ACTIVE
             self.metrics.scale_ups += 1
+        return rep
+
+    # ------------------------------------------------------ fail/recover --
+    def fail(self, idx: int) -> Replica:
+        """Mark replica ``idx`` FAILED: it stops accepting AND stepping.
+        The caller (front-end) evacuates its work and schedules the
+        backoff; the executable cache stays warm for recovery."""
+        rep = self.replicas[idx]
+        if rep.state not in (RETIRED, FAILED):
+            rep.state = FAILED
+            rep.failures += 1
+            self.metrics.fails += 1
+        return rep
+
+    def recover(self, idx: int) -> Replica:
+        """Readmit a FAILED replica to ACTIVE (through RECOVERING). Like
+        ``scale_up``, the warmup-compiled executables are still cached, so
+        rejoining costs zero compiles."""
+        rep = self.replicas[idx]
+        if rep.state == FAILED:
+            rep.state = RECOVERING
+        if rep.state == RECOVERING:
+            rep.state = ACTIVE
+            rep.consecutive_errors = 0
+            rep.recover_at = None
+            rep.recoveries += 1
+            self.metrics.recoveries += 1
         return rep
 
     def reap(self) -> List[int]:

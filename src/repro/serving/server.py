@@ -26,9 +26,18 @@ class Request:
     stream: Optional[Callable[[int, np.ndarray], None]] = None
     # stream(uid, tokens) is called with each emitted chunk (continuous mode)
     truncated: bool = False     # prompt exceeded prompt_pad and was cut
-    t_submit: float = 0.0
+    # None (not 0.0) until first stamped: a trace arrival AT t=0.0 must not
+    # be mistaken for "unstamped" and re-stamped on a recovery resubmission
+    t_submit: Optional[float] = None
     t_start: float = 0.0        # first prefill (admission to a slot / batch)
     t_finish: float = 0.0
+    # failure recovery: effective prompt + already-delivered tokens. When
+    # set, admission prefills THIS instead of the prompt — greedy decode
+    # then continues the original stream token-exactly (the verifier gates
+    # every token, so re-prefilling the delivered prefix reproduces the
+    # next token deterministically). max_new must already be decremented by
+    # the delivered count; t_submit is preserved (no SLO reset on replay).
+    replay_prefix: Optional[np.ndarray] = None
 
 
 def pad_prompt(req: Request, prompt_pad: int):
@@ -62,7 +71,8 @@ class BatchedServer:
         self.done: Dict[int, Request] = {}
 
     def submit(self, req: Request):
-        req.t_submit = req.t_submit or time.perf_counter()
+        if req.t_submit is None:
+            req.t_submit = time.perf_counter()
         self.queue.append(req)
 
     def _make_batch(self, reqs: List[Request]):

@@ -1,0 +1,512 @@
+"""Fault tolerance: deterministic fault injection, typed step errors,
+replica failure recovery with token-exact replay, and graceful degradation.
+
+Recovery-policy logic (health model, evacuation + replay, retry budgets,
+no-replica timeout, shed-by-priority) runs on a position-deterministic fake
+engine — the token at sequence position x is always the same, so any replay
+bug (double delivery, budget drift, lost tokens) breaks the digest even
+host-only. The acceptance criteria (token-exact replay through a crash on
+the real chunked engine, NaN detection on real verifier logits, paged-pool
+exhaustion parks) run on the real testbed at the bottom of the file.
+"""
+import numpy as np
+import pytest
+
+from repro.core.buckets import buckets_for_depths
+from repro.core.egt import egt_spec
+from repro.core.engine import EngineConfig, SpeculativeEngine
+from repro.core.objective import LatencyProfile
+from repro.models.cache import PageState
+from repro.serving import (ContinuousServer, FaultEvent, FaultPlan,
+                           NoReplicaAvailable, NumericalFault, PoolExhausted,
+                           RecoveryConfig, ReplicaError, Request, Router,
+                           ServingError, ServingFrontend, StepTimeout,
+                           drive_frontend_trace)
+from repro.serving.controller import BucketController
+from repro.serving.router import ACTIVE, FAILED
+from repro.serving.testbed import Testbed, TestbedSpec, build_testbed
+
+PROF = LatencyProfile.synthetic(base_verify=1.0, slope=1.0, draft_frac=0.1,
+                                saturate_at=16, overhead=0.2)
+
+
+# ------------------------------------------------------- typed errors ------
+def test_error_hierarchy_and_fatality():
+    assert issubclass(ReplicaError, ServingError)
+    assert issubclass(StepTimeout, ServingError)
+    assert issubclass(NumericalFault, ServingError)
+    assert issubclass(PoolExhausted, ServingError)
+    assert issubclass(NoReplicaAvailable, ServingError)
+    assert ReplicaError("boom").fatal
+    assert not ReplicaError("blip", fatal=False).fatal
+    assert StepTimeout("late", timeout_s=2.0).timeout_s == 2.0
+
+
+def test_pool_exhausted_distinguishes_slots_from_hoarding():
+    slots = PoolExhausted(n_pages=8, pages_in_use=7, prefix_pages=1,
+                          peak_pages=7)
+    assert "too many slots" in str(slots)
+    hoard = PoolExhausted(n_pages=8, pages_in_use=7, prefix_pages=6,
+                          peak_pages=7)
+    assert "prefix store hoarding" in str(hoard)
+    for e in (slots, hoard):            # stats ride on the exception
+        assert e.n_pages == 8 and e.pages_in_use == 7
+        assert e.peak_pages == 7
+
+
+def test_no_replica_available_carries_wait():
+    e = NoReplicaAvailable(waited_s=3.5)
+    assert e.waited_s == 3.5
+
+
+# --------------------------------------------------------- fault plans -----
+def test_fault_plan_seeded_is_deterministic_and_validates_kinds():
+    a = FaultPlan.seeded(7, horizon_s=30.0, replicas=3)
+    b = FaultPlan.seeded(7, horizon_s=30.0, replicas=3)
+    assert [(e.t, e.kind, e.replica) for e in a.events] == \
+           [(e.t, e.kind, e.replica) for e in b.events]
+    assert all(0.0 <= e.t < 30.0 and 0 <= e.replica < 3 for e in a.events)
+    with pytest.raises(ValueError):
+        FaultEvent(1.0, "meteor", 0)
+
+
+def test_fault_plan_pop_due_fires_each_event_once_in_time_order():
+    plan = FaultPlan([FaultEvent(5.0, "crash", 0),
+                      FaultEvent(2.0, "error", 0),
+                      FaultEvent(3.0, "hang", 1)])
+    assert plan.pop_due(0, 1.0) is None          # nothing due yet
+    ev = plan.pop_due(0, 10.0)
+    assert ev.kind == "error"                    # earliest due event first
+    assert plan.pop_due(1, 2.5) is None          # replica 1's event not due
+    assert plan.pop_due(1, 3.0).kind == "hang"
+    assert plan.pop_due(0, 10.0).kind == "crash"
+    assert plan.pop_due(0, 99.0) is None         # each event fires once
+    assert plan.faults_injected == 3
+    plan.reset()                                 # re-armed for a second drive
+    assert plan.faults_injected == 0
+    assert plan.pop_due(0, 10.0).kind == "error"
+
+
+# ------------------------------------------------------ router lifecycle ---
+class _FakeState:
+    def __init__(self, batch_size):
+        self.root = np.zeros(batch_size, np.int64)
+        self.pos = np.zeros(batch_size, np.int64)
+
+
+class _FakeResult:
+    def __init__(self, tokens, accept_len, bucket):
+        self.tokens = tokens
+        self.accept_len = accept_len
+        self.bucket = bucket
+        self.iter_time = 1e-5
+
+    def mean_accept(self, slots=None):
+        a = self.accept_len if slots is None else self.accept_len[slots]
+        return float(np.mean(a)) if np.size(a) else 0.0
+
+
+def _V(x):
+    return 7000 + int(x)
+
+
+class _ReplayEngine:
+    """Position-deterministic fake: the committed token at sequence
+    position x is always ``_V(x)`` regardless of replica, step count, or
+    history — re-prefilling prompt+delivered MUST continue the identical
+    sequence, mirroring the greedy-verifier determinism the real replay
+    contract rests on."""
+
+    class cfg:
+        max_target_len = 4096
+
+    _compile_count = 0
+    profile = None
+
+    def init_decode_state(self, batch_size):
+        return _FakeState(batch_size)
+
+    def prefill_into_slot(self, state, slot, tokens, length):
+        state.pos[slot] = length
+        state.root[slot] = _V(length)
+        return state
+
+    def reset_state_slot(self, state, slot):
+        state.pos[slot] = 0
+        state.root[slot] = 0
+        return state
+
+    def decode_step(self, state, spec=None, verify_v=None):
+        B = len(state.root)
+        toks = np.full((B, 2), -1, np.int64)
+        for i in range(B):
+            state.pos[i] += 1
+            toks[i, 0] = _V(state.pos[i])
+        return state, _FakeResult(toks, np.ones(B, np.int64),
+                                  (spec.depth, spec.width, verify_v))
+
+    def executable_count(self):
+        return 0
+
+    def mesh_info(self):
+        return {"devices": 1, "shape": None}
+
+
+def _fake_server(batch=2):
+    return ContinuousServer(_ReplayEngine(), batch_size=batch, prompt_pad=4,
+                            spec=egt_spec(2, 2))
+
+
+def _req(uid, max_new=6):
+    return Request(uid=uid, prompt=np.array([1, 2, 3]), max_new=max_new)
+
+
+def test_router_fail_recover_lifecycle_and_typed_no_replica():
+    router = Router([_fake_server(), _fake_server()])
+    router.fail(0)
+    assert router.replicas[0].state == FAILED
+    assert router.replicas[0].failures == 1
+    assert router.metrics.fails == 1
+    assert [r.idx for r in router.live()] == [1]      # out of the pool
+    assert not router.replicas[0].steppable()
+    router.fail(1)
+    with pytest.raises(NoReplicaAvailable):
+        router._best()
+    router.fail(0)                     # idempotent: already FAILED
+    assert router.replicas[0].failures == 1
+    router.recover(0)
+    assert router.replicas[0].state == ACTIVE
+    assert router.replicas[0].recoveries == 1
+    assert router.metrics.recoveries == 1
+    rep, _ = router.submit(_req(0))
+    assert rep.idx == 0
+
+
+def test_submit_with_no_active_replica_parks_instead_of_raising():
+    fe = ServingFrontend([_fake_server()],
+                         recovery=RecoveryConfig(no_replica_timeout_s=5.0))
+    fe.router.fail(0)
+    h = fe.submit(_req(0))             # queue-and-wait, not a crash
+    assert not h.shed and len(fe._pending) == 1
+
+
+# -------------------------------------------------- controller degradation --
+def test_controller_degraded_floors_at_shallowest_bucket():
+    ladder = buckets_for_depths((2, 4, 8), width=2, verify_frac=0.75)
+    ctrl = BucketController(ladder, profile=PROF)
+    deep = ctrl.choose(n_active=1)
+    assert deep.depth > 2              # idle pool prefers a deeper tree
+    ctrl.degraded = True
+    floor = ctrl.choose(n_active=1)
+    assert floor.depth == 2            # pinned to the cheapest compiled step
+    assert ctrl.summary()["degraded"] is True
+    assert ctrl.last_switch["reason"] == "degraded"
+    ctrl.degraded = False
+    assert ctrl.choose(n_active=1).key() in {b.key() for b in ladder}
+
+
+# -------------------------------------------- fake-frontend fault recovery --
+def _frontend(replicas=2, batch=2, **rec):
+    servers = [_fake_server(batch) for _ in range(replicas)]
+    return ServingFrontend(servers, profile=PROF,
+                           recovery=RecoveryConfig(**rec))
+
+
+def _trace(n=6, max_new=6, deadline_s=None, start=0.0):
+    rows = []
+    for uid in range(n):
+        extra = {} if deadline_s is None else {"deadline_s": deadline_s}
+        rows.append((start + float(uid), _req(uid, max_new=max_new), extra))
+    return rows
+
+
+def _expected_tokens(req, max_new=6):
+    # pass the ORIGINAL budget: replay decrements req.max_new in place by
+    # exactly the tokens already delivered
+    plen = min(len(req.prompt), 4)     # prompt_pad=4 in _fake_server
+    return [_V(plen + i) for i in range(max_new)]
+
+
+def test_crash_evacuates_replays_token_exact_and_recovers():
+    clean = drive_frontend_trace(_frontend(), _trace(), PROF)
+    plan = FaultPlan([FaultEvent(2.0, "crash", 0)])
+    fe = _frontend(backoff_s=2.0)
+    out = drive_frontend_trace(fe, _trace(), PROF, faults=plan)
+    assert out["faults"]["injected"]["crash"] == 1
+    assert out["replica_failures"] == 1
+    assert out["replays"] >= 1
+    assert out["completed"] == 6 and out["sheds"] == 0
+    # token-exact: every request's delivered stream is byte-identical to
+    # the fault-free run, with zero duplicates and zero gaps
+    assert out["results_digest"] == clean["results_digest"]
+    for h in fe.handles().values():
+        assert h.tokens == _expected_tokens(h.request)
+    # the failed replica healed: backoff elapsed, MTTR accounted
+    rep = fe.router.replicas[0]
+    assert rep.state == ACTIVE and rep.recoveries == 1
+    assert rep.mttr_total >= 2.0
+
+
+def test_faulted_drive_is_byte_deterministic():
+    plan_a = FaultPlan([FaultEvent(2.0, "crash", 0),
+                        FaultEvent(6.0, "error", 1)])
+    a = drive_frontend_trace(_frontend(), _trace(), PROF, faults=plan_a)
+    plan_a.reset()
+    b = drive_frontend_trace(_frontend(), _trace(), PROF, faults=plan_a)
+    assert a["results_digest"] == b["results_digest"]
+    assert a["makespan_s"] == b["makespan_s"]
+
+
+def test_transient_errors_retry_in_place_until_watchdog_fails_replica():
+    # two transient errors: absorbed in place, replica stays ACTIVE
+    plan = FaultPlan([FaultEvent(1.0, "error", 0, duration_s=0.5),
+                      FaultEvent(2.0, "error", 0, duration_s=0.5)])
+    fe = _frontend(watchdog=3)
+    out = drive_frontend_trace(fe, _trace(), PROF, faults=plan)
+    assert out["faults"]["faults_injected"] == 2
+    assert out["replica_failures"] == 0
+    assert out["completed"] == 6
+    assert fe.router.replicas[0].faults_seen == 2
+    # three consecutive transients: the watchdog declares the replica dead
+    plan = FaultPlan([FaultEvent(1.0, "error", 0, duration_s=0.5)
+                      for _ in range(3)])
+    fe = _frontend(watchdog=3)
+    out = drive_frontend_trace(fe, _trace(), PROF, faults=plan)
+    assert out["replica_failures"] == 1
+    assert out["completed"] == 6 and out["sheds"] == 0
+
+
+def test_hang_is_charged_and_fails_the_replica_with_backoff():
+    plan = FaultPlan([FaultEvent(2.0, "hang", 0, duration_s=4.0)])
+    fe = _frontend(step_timeout_s=3.0, backoff_s=2.0)
+    out = drive_frontend_trace(fe, _trace(), PROF, faults=plan)
+    assert out["replica_failures"] == 1
+    assert out["completed"] == 6
+    rep = fe.router.replicas[0]
+    assert rep.failures == 1 and rep.recoveries == 1
+    # the hang burned the watchdog budget on the emulated clock
+    assert out["busy_s"]["0"] >= 3.0
+
+
+def test_backoff_doubles_across_repeated_failures():
+    plan = FaultPlan([FaultEvent(1.0, "crash", 0),
+                      FaultEvent(8.0, "crash", 0)])
+    fe = _frontend(backoff_s=2.0, backoff_max_s=60.0)
+    drive_frontend_trace(fe, _trace(n=8, max_new=8), PROF, faults=plan)
+    rep = fe.router.replicas[0]
+    if rep.failures == 2:              # second crash needs replica 0 rearmed
+        # failure #1 backs off 2s, failure #2 backs off 4s
+        assert rep.mttr_total >= 2.0 + 4.0
+
+
+def test_retry_budget_exhaustion_sheds_with_typed_error():
+    plan = FaultPlan([FaultEvent(2.0, "crash", 0)])
+    fe = _frontend(replicas=1, retry_budget=0, backoff_s=1.0)
+    out = drive_frontend_trace(fe, _trace(n=3), PROF, faults=plan)
+    assert out["shed_retry"] >= 1
+    assert out["completed"] + out["sheds"] == out["submitted"]
+    shed = [h for h in fe.handles().values()
+            if h.shed and h.shed_reason == "retry-budget"]
+    assert shed and all(isinstance(h.error, ReplicaError) for h in shed)
+
+
+def test_no_replica_timeout_sheds_pending_with_typed_error():
+    plan = FaultPlan([FaultEvent(1.0, "crash", 0)])
+    fe = _frontend(replicas=1, retry_budget=3, backoff_s=500.0,
+                   no_replica_timeout_s=5.0)
+    out = drive_frontend_trace(fe, _trace(n=4), PROF, faults=plan)
+    assert out["shed_no_replica"] >= 1
+    assert out["completed"] + out["sheds"] == out["submitted"]
+    shed = [h for h in fe.handles().values()
+            if h.shed and h.shed_reason == "no-replica"]
+    assert shed
+    for h in shed:
+        assert isinstance(h.error, NoReplicaAvailable)
+        assert h.error.waited_s >= 5.0
+
+
+def test_overload_sheds_by_priority_not_arrival():
+    from repro.serving import AdmissionConfig
+    fe = ServingFrontend([_fake_server(batch=1)],
+                         admission=AdmissionConfig(max_pending=1,
+                                                   on_overload="shed"))
+    h0 = fe.submit(_req(0))                       # into the replica
+    hlow = fe.submit(_req(1), priority=0)         # parked
+    hhigh = fe.submit(_req(2), priority=5)        # outranks hlow: evicts it
+    assert hlow.shed and hlow.shed_reason == "overload"
+    assert not hhigh.shed
+    hmid = fe.submit(_req(3), priority=1)         # outranked by hhigh: shed
+    assert hmid.shed and not hhigh.shed and not h0.shed
+    assert fe.metrics.shed_overload == 2
+
+
+def test_degradation_flag_follows_failures_and_overload():
+    fe = _frontend(replicas=2)
+    fe._update_degraded()
+    assert fe.router.replicas[1].server.controller is None  # pinned spec
+    assert not fe.router.replicas[1].server._degraded
+    fe.router.fail(0)
+    fe._update_degraded()
+    assert fe.router.replicas[1].server._degraded
+    fe.router.recover(0)
+    fe._update_degraded()
+    assert not fe.router.replicas[1].server._degraded
+
+
+# ---------------------------------------------------- host page-pool edge --
+def test_page_state_exhaustion_raises_typed_with_stats():
+    ps = PageState(batch=2, pages_per_slot=4, n_pages=3, page_len=4)
+    ps.ensure(0, 8)                    # both usable pages
+    with pytest.raises(PoolExhausted) as ei:
+        ps.ensure(1, 4)
+    e = ei.value
+    assert e.n_pages == 3 and e.pages_in_use == 2 and e.prefix_pages == 0
+    assert "too many slots" in str(e)
+    ps.release(0)                      # pages return; the pool self-heals
+    assert ps.ensure(1, 4)
+
+
+def test_prefix_adoption_denied_when_pool_has_no_free_pages():
+    ps = PageState(batch=2, pages_per_slot=4, n_pages=4, page_len=4)
+    prompt = list(range(100, 108))     # two full pages
+    ps.ensure(0, 8)
+    ps.store.register(0, prompt)
+    assert ps.store.lookup(prompt)[0] == 2
+    ps.ensure(1, 4)                    # last free page gone
+    assert not ps.free
+    got = ps.store.adopt(1, prompt)
+    assert got == 0                    # denied, not a crash
+    assert ps.store.adopt_denied == 1
+
+
+# ==================================================== real-testbed tests ===
+SPEC, VERIFY_V = egt_spec(3, 2), 5
+
+
+@pytest.fixture(scope="module")
+def tb() -> Testbed:
+    return build_testbed(TestbedSpec(train_steps=160))
+
+
+def _engine(tb, **cfg_kw) -> SpeculativeEngine:
+    return SpeculativeEngine(tb.drafter, tb.d_params, tb.verifier,
+                             tb.v_params, profile=PROF,
+                             buckets=buckets_for_depths((3,), width=2,
+                                                        verify_frac=0.75),
+                             depth_options=(3,),
+                             config=EngineConfig(**cfg_kw))
+
+
+def _real_frontend(tb, replicas=2, batch=2, **rec):
+    servers = [ContinuousServer(_engine(tb), batch_size=batch, prompt_pad=12,
+                                spec=SPEC, verify_v=VERIFY_V,
+                                prefill_chunks=(4, 8))
+               for _ in range(replicas)]
+    return ServingFrontend(servers, profile=PROF,
+                           recovery=RecoveryConfig(**rec))
+
+
+def _real_trace(tb, n=6, max_new=12, deadline_s=120.0):
+    rng = np.random.default_rng(11)
+    rows = []
+    for uid in range(n):
+        prompt = rng.integers(1, tb.spec.vocab, size=8).astype(np.int32)
+        rows.append((float(uid), Request(uid=uid, prompt=prompt,
+                                         max_new=max_new),
+                     {"deadline_s": deadline_s}))
+    return rows
+
+
+def test_real_crash_and_hang_replay_token_exact_zero_recompiles(tb):
+    """The tentpole acceptance criterion on the real engine: crash one
+    replica and hang the other mid-trace — every completed request's
+    delivered tokens must be byte-identical to the fault-free run (the
+    replayed prefix re-prefills through the warm chunk lane), nothing is
+    lost, the drive is deterministic, and the fail->recover cycle costs
+    zero recompiles."""
+    clean = drive_frontend_trace(_real_frontend(tb), _real_trace(tb), PROF)
+
+    def plan():
+        return FaultPlan([FaultEvent(3.0, "crash", 0),
+                          FaultEvent(9.0, "hang", 1, duration_s=2.0)])
+
+    fe = _real_frontend(tb, retry_budget=3, step_timeout_s=2.0,
+                        backoff_s=2.0)
+    out = drive_frontend_trace(fe, _real_trace(tb), PROF, faults=plan())
+    assert out["faults"]["faults_injected"] == 2
+    assert out["replica_failures"] >= 1 and out["replays"] >= 1
+    assert out["completed"] == out["submitted"] and out["sheds"] == 0
+    assert out["results_digest"] == clean["results_digest"]
+    for rs in out["router"]["replicas"].values():
+        assert rs["recompiles_after_warmup"] == 0
+    fe2 = _real_frontend(tb, retry_budget=3, step_timeout_s=2.0,
+                         backoff_s=2.0)
+    out2 = drive_frontend_trace(fe2, _real_trace(tb), PROF, faults=plan())
+    assert out2["results_digest"] == out["results_digest"]
+
+
+def test_real_poisoned_step_raises_numerical_fault_carrying_state(tb):
+    srv = ContinuousServer(_engine(tb), batch_size=2, prompt_pad=12,
+                           spec=SPEC, verify_v=VERIFY_V)
+    srv.submit(Request(uid=0, prompt=_real_trace(tb, n=1)[0][1].prompt,
+                       max_new=8))
+    srv.step()                         # admission + first megastep
+    srv.engine.poison_next_step()
+    with pytest.raises(NumericalFault) as ei:
+        srv.step()
+    assert ei.value.state is not None  # donated buffers carried out
+    assert srv.metrics.numerical_faults == 1
+    assert srv.state is ei.value.state  # server adopted the live state
+
+
+def test_real_nonfinite_verifier_logits_detected(tb):
+    """Genuine NaNs (not the poison flag): NaN out the verifier params —
+    same shapes/dtypes, so no recompile — and the finite guard on the real
+    logits must raise with the offending slots."""
+    import jax
+    import jax.numpy as jnp
+    eng = _engine(tb)
+    state = eng.init_decode_state(2)
+    prompt = _real_trace(tb, n=1)[0][1].prompt
+    toks = np.zeros(12, np.int32)
+    toks[:len(prompt)] = prompt
+    state = eng.prefill_into_slot(state, 0, toks, len(prompt))
+    eng.v_params = jax.tree_util.tree_map(
+        lambda x: jnp.full_like(x, jnp.nan) if jnp.issubdtype(
+            x.dtype, jnp.floating) else x, eng.v_params)
+    with pytest.raises(NumericalFault) as ei:
+        eng.decode_step(state, spec=SPEC, verify_v=VERIFY_V)
+    assert ei.value.slots            # names the corrupted slots
+
+
+def test_real_nan_fault_recovers_token_exact_through_frontend(tb):
+    clean = drive_frontend_trace(_real_frontend(tb), _real_trace(tb), PROF)
+    plan = FaultPlan([FaultEvent(4.0, "nan", 0)])
+    fe = _real_frontend(tb, retry_budget=3, backoff_s=2.0)
+    out = drive_frontend_trace(fe, _real_trace(tb), PROF, faults=plan)
+    assert out["faults"]["injected"]["nan"] == 1
+    assert out["replica_failures"] == 1
+    assert out["completed"] == out["submitted"] and out["sheds"] == 0
+    assert out["results_digest"] == clean["results_digest"]
+    for rs in out["router"]["replicas"].values():
+        assert rs["recompiles_after_warmup"] == 0
+
+
+def test_real_pool_exhaustion_parks_admission_then_drains(tb):
+    """A paged engine whose pool cannot hold two concurrent prompts must
+    park the second admission (typed, counted) and finish it once the
+    first retires and releases its pages — no crash, nothing lost."""
+    # 6 usable pages: one slot fits (4 prompt pages + decode growth), two
+    # concurrent admissions do not — the second must hit the typed
+    # allocator error at admission, where the server parks it
+    eng = _engine(tb, cache_layout="paged", page_len=8, cache_pages=7)
+    srv = ContinuousServer(eng, batch_size=2, prompt_pad=32,
+                           spec=SPEC, verify_v=VERIFY_V)
+    rng = np.random.default_rng(3)
+    for uid in range(2):
+        prompt = rng.integers(1, tb.spec.vocab, size=29).astype(np.int32)
+        srv.submit(Request(uid=uid, prompt=prompt, max_new=2))
+    done = srv.serve()
+    assert sorted(done) == [0, 1]
+    assert srv.metrics.pool_parks >= 1
+    assert srv.metrics.summary()["recompiles_after_warmup"] == 0

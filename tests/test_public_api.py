@@ -29,10 +29,12 @@ def test_expected_surface_is_pinned():
     # the redesigned API: additions here are deliberate, removals breaking
     assert set(serving.__all__) == {
         "AdmissionConfig", "BatchedServer", "BucketController",
-        "ContinuousServer", "FrontendMetrics", "Replica", "Request",
+        "ContinuousServer", "FaultEvent", "FaultPlan", "FrontendMetrics",
+        "NoReplicaAvailable", "NumericalFault", "PoolExhausted",
+        "RecoveryConfig", "Replica", "ReplicaError", "Request",
         "RequestHandle", "Router", "RouterMetrics", "ServeConfig",
-        "ServingFrontend", "ServingMetrics", "drive_frontend_trace",
-        "mask_padded_vocab", "sample",
+        "ServingError", "ServingFrontend", "ServingMetrics", "StepTimeout",
+        "drive_frontend_trace", "mask_padded_vocab", "sample",
     }
 
 

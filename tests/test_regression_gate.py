@@ -73,6 +73,22 @@ GOOD_CURRENT = {
         "contiguous": {"recompiles_after_warmup": 0},
         "paged": {"recompiles_after_warmup": 0},
     },
+    "fault_sweep": {
+        "replay_token_exact": 1.0,
+        "deterministic": 1.0,
+        "lost_requests": 0,
+        "recompiles_after_recovery": 0,
+        "goodput_under_faults": 0.8,
+        "clean_goodput": 0.95,
+        "faults_injected": 15,
+        "replays": 6,
+        "seeds": {"101": {"replicas": {
+            "0": {"faults_seen": 3, "replays": 2,
+                  "recompiles_after_warmup": 0},
+            "1": {"faults_seen": 2, "replays": 1,
+                  "recompiles_after_warmup": 0},
+        }}},
+    },
 }
 
 
@@ -178,6 +194,55 @@ def test_gate_fails_on_paged_cache_hard_bounds():
         cur["paged_sweep"][key] = bad
         fails = compare(_baseline(), cur)
         assert any(key in f and "hard bound" in f for f in fails), (key, fails)
+
+
+def test_gate_fails_on_fault_sweep_hard_bounds():
+    """The chaos gate's absolute contracts: token-exact replay, byte
+    determinism, zero lost requests, zero recompiles through recovery."""
+    for key, bad in (("replay_token_exact", 0.0),
+                     ("deterministic", 0.0),
+                     ("lost_requests", 1),
+                     ("recompiles_after_recovery", 2)):
+        cur = copy.deepcopy(GOOD_CURRENT)
+        cur["fault_sweep"][key] = bad
+        fails = compare(_baseline(), cur)
+        assert any(key in f and "hard bound" in f for f in fails), (key, fails)
+
+
+def test_gate_fails_when_fault_counters_unmeasured():
+    """fault_sweep present but no faults_seen/replays counters anywhere
+    means replica fault accounting went unmeasured — fail, not vacuous."""
+    cur = copy.deepcopy(GOOD_CURRENT)
+    cur["fault_sweep"] = json.loads(
+        json.dumps(cur["fault_sweep"])
+        .replace("faults_seen", "faults_gone")
+        .replace("replays", "replays_gone"))
+    fails = compare(_baseline(), cur)
+    assert any("faults_seen" in f and "unmeasured" in f for f in fails)
+    assert any("'replays'" in f and "unmeasured" in f for f in fails)
+
+
+def test_gate_fails_on_silently_swallowed_faults():
+    """A schedule that injected faults while every replica counter stayed
+    0 means the injection missed the serving path entirely."""
+    cur = copy.deepcopy(GOOD_CURRENT)
+    fs = cur["fault_sweep"]
+    fs["replays"] = 0
+    for rep in fs["seeds"]["101"]["replicas"].values():
+        rep["faults_seen"] = 0
+        rep["replays"] = 0
+    fails = compare(_baseline(), cur)
+    assert any("silently missed" in f for f in fails)
+    # ...but a schedule that injected nothing is allowed quiet counters
+    cur2 = copy.deepcopy(cur)
+    cur2["fault_sweep"]["faults_injected"] = 0
+    assert not any("silently missed" in f for f in compare(_baseline(), cur2))
+
+
+def test_gate_fails_on_goodput_under_faults_regression():
+    cur = copy.deepcopy(GOOD_CURRENT)
+    cur["fault_sweep"]["goodput_under_faults"] = 0.5   # -37% vs baseline
+    assert any("goodput_under_faults" in f for f in compare(_baseline(), cur))
 
 
 def test_gate_fails_on_chunked_p95_regression():

@@ -223,6 +223,75 @@ def test_priority_dispatch_order():
     assert hlow.replica is None        # still parked: capacity is one deep
 
 
+# ------------------------------------------- deadlines under re-routing ----
+def test_rerouted_request_keeps_original_deadline_emulated():
+    """A request evacuated off a crashed replica and replayed elsewhere is
+    the SAME request: t_submit and the deadline stay pinned to the original
+    admission, latency is measured from the original submit, and its tokens
+    are delivered exactly once."""
+    from repro.core.objective import LatencyProfile
+    from repro.serving import FaultEvent, FaultPlan, RecoveryConfig
+    prof = LatencyProfile.synthetic(base_verify=1.0, slope=1.0,
+                                    draft_frac=0.1, saturate_at=16,
+                                    overhead=0.2)
+    plan = FaultPlan([FaultEvent(2.0, "crash", 0)])
+    fe = ServingFrontend([_fake_server(), _fake_server()], profile=prof,
+                         recovery=RecoveryConfig(backoff_s=2.0))
+
+    def row(u):
+        r = _req(u, max_new=6)
+        r.t_submit = float(u)          # pre-stamped arrival time
+        return (float(u), r, {"deadline_s": 50.0})
+
+    out = drive_frontend_trace(fe, [row(u) for u in range(6)], prof,
+                               faults=plan)
+    assert out["replica_failures"] == 1 and out["replays"] >= 1
+    assert out["completed"] == 6 and out["sheds"] == 0
+    handles = fe.handles()
+    replayed = [h for h in handles.values() if h.retries > 0]
+    assert replayed
+    for u, h in handles.items():
+        assert h.request.t_submit == float(u)      # replay never re-stamps
+        assert h.deadline is not None
+        assert len(h.tokens) == 6                  # full budget, no dupes
+    # a replayed request completes ONCE, with latency from the original
+    # submit — so it spans the crash + re-route, not just the replay leg
+    assert fe.metrics.tokens_delivered == 36
+    assert len(fe.metrics.latencies) == 6
+    for h in replayed:
+        assert h.request.t_finish - h.request.t_submit >= 2.0 - float(
+            h.request.uid)
+
+
+def test_rerouted_request_keeps_original_deadline_asyncio():
+    """Same contract on the wall-clock asyncio path, with the fault
+    injected by the WallFaultInjector monkeypatch shim."""
+    from repro.serving import RecoveryConfig
+    from repro.serving.faults import FaultEvent, FaultPlan, WallFaultInjector
+    fe = ServingFrontend([_fake_server(), _fake_server()],
+                         recovery=RecoveryConfig(backoff_s=0.05))
+    hs = [fe.submit(_req(u, max_new=6), deadline_s=60.0) for u in range(5)]
+    t0 = [h.request.t_submit for h in hs]
+    d0 = [h.deadline for h in hs]
+    plan = FaultPlan([FaultEvent(0.0, "crash", 0)])
+    with WallFaultInjector(fe.router.replicas, plan):
+        summary = asyncio.run(fe.run_until_drained())
+    assert plan.faults_injected == 1
+    assert summary["replica_failures"] == 1
+    assert summary["completed"] == 5 and summary["sheds"] == 0
+    assert any(h.retries > 0 for h in hs)
+    for h, t, d in zip(hs, t0, d0):
+        assert h.request.t_submit == t
+        assert h.deadline == d
+        assert len(h.tokens) == 6
+    assert fe.metrics.tokens_delivered == 30
+    # the drain loop may finish before the backoff elapses; a later
+    # scheduler tick past recover_at flips the replica back to ACTIVE
+    rep = fe.router.replicas[0]
+    fe._maybe_recover(rep.recover_at + 1e-3)
+    assert rep.state == ACTIVE
+
+
 # ------------------------------------------------- asyncio wall-clock mode --
 def test_run_until_drained_completes_and_streams_async():
     fe = ServingFrontend([_fake_server(), _fake_server()])
